@@ -1,0 +1,90 @@
+//! End-to-end driver — proves all layers compose on a real workload.
+//!
+//! Exercises the full system exactly as a downstream user would:
+//!   1. open the PJRT runtime over the AOT artifacts (L2/L1 products);
+//!   2. calibrate on 256 random wiki-train sequences (PJRT gram executable);
+//!   3. compress llama-t with NSVD-I at 30% (the paper's headline setting);
+//!   4. evaluate perplexity on all eight test sets with the padded-rank
+//!      low-rank executable, next to the dense baseline and ASVD-I;
+//!   5. serve 200 batched scoring requests over the compressed model and
+//!      report latency/throughput.
+//!
+//! The output of this run is recorded in EXPERIMENTS.md §e2e.
+//!
+//! Run: `cargo run --release --example e2e_pipeline`
+
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::coordinator::server;
+use nsvd::data::corpus::{paper_label, Registry};
+use nsvd::util::timer::Timer;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let total = Timer::start();
+
+    println!("== [1/5] opening PJRT runtime ==");
+    let mut cfg = PipelineConfig::default_for_model("llama-t");
+    cfg.artifacts_dir = artifacts.clone();
+    cfg.eval_windows = 64;
+    let mut pipeline = Pipeline::new(cfg)?;
+    println!(
+        "model llama-t: d={} layers={} compressible params={}",
+        pipeline.model_cfg.d_model,
+        pipeline.model_cfg.n_layers,
+        pipeline.model_cfg.compressible_params()
+    );
+
+    println!("\n== [2/5] calibrating (256 wiki-train sequences) ==");
+    let t = Timer::start();
+    pipeline.calibrate()?;
+    println!("calibration done in {:.1}s", t.elapsed_s());
+
+    println!("\n== [3/5] compressing: dense baseline, ASVD-I, NSVD-I @30% ==");
+    let t = Timer::start();
+    let dense = pipeline.run_dense()?;
+    let asvd = pipeline.run(&CompressionSpec::new(Method::AsvdI, 0.30))?;
+    let nsvd = pipeline.run(&CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 })?;
+    println!("three evaluations done in {:.1}s", t.elapsed_s());
+
+    println!("\n== [4/5] perplexity across the eight domains ==");
+    println!("{:<16} {:>10} {:>10} {:>10}", "dataset", "Original", "ASVD-I", "NSVD-I");
+    for (i, r) in dense.results.iter().enumerate() {
+        println!(
+            "{:<16} {:>10.2} {:>10.2} {:>10.2}",
+            paper_label(&r.dataset),
+            r.ppl(),
+            asvd.results[i].ppl(),
+            nsvd.results[i].ppl()
+        );
+    }
+    println!(
+        "params: dense {} → compressed {} ({:.1}% removed)",
+        nsvd.dense_params,
+        nsvd.compressed_params,
+        (1.0 - nsvd.compressed_params as f64 / nsvd.dense_params as f64) * 100.0
+    );
+
+    println!("\n== [5/5] serving 200 batched scoring requests (compressed model) ==");
+    let cm = pipeline.compress(&CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 })?;
+    let rt = pipeline.runtime().expect("PJRT runtime");
+    let eval = rt.serve_evaluator("llama-t", &cm)?;
+    let registry = Registry::new(&artifacts);
+    let corpus = registry.load("alpaca", "test")?;
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    let producer = server::spawn_load(corpus.tokens.clone(), eval.seq(), 200, 0.0, req_tx);
+    let metrics = server::serve(&eval, req_rx, resp_tx, server::BatchPolicy::default())?;
+    producer.join().ok();
+    let responses: Vec<_> = resp_rx.iter().collect();
+    println!("{}", metrics.summary());
+    let mean_ppl =
+        responses.iter().map(|r| r.ppl).sum::<f64>() / responses.len().max(1) as f64;
+    println!("mean served ppl: {mean_ppl:.2} over {} responses", responses.len());
+
+    println!("\ne2e complete in {:.1}s", total.elapsed_s());
+    Ok(())
+}

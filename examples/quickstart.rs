@@ -1,0 +1,33 @@
+//! Quickstart: compress a model with NSVD-I and print perplexities.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::data::corpus::paper_label;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A pipeline over the AOT artifacts (run `make artifacts` first).
+    let mut config = PipelineConfig::default_for_model("llama-t");
+    config.eval_windows = 32; // keep the demo fast
+    let mut pipeline = Pipeline::new(config)?;
+
+    // 2. The paper's headline setting: NSVD-I, 30% compression, k1 = 0.95k.
+    let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 };
+
+    // 3. calibrate → decompose → evaluate on all eight datasets.
+    let report = pipeline.run(&spec)?;
+
+    println!(
+        "compressed {} with {} at {:.0}%: {} → {} params",
+        report.model,
+        report.method,
+        report.ratio * 100.0,
+        report.dense_params,
+        report.compressed_params
+    );
+    for r in &report.results {
+        println!("  {:<16} perplexity {:>8.2}", paper_label(&r.dataset), r.ppl());
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Serving throughput — the deployment payoff of compression.
+//!
+//! Compresses llama-t with NSVD-I at 30%, then drives the dynamic batcher
+//! with open-loop load at increasing request rates, reporting latency
+//! percentiles, batch fill, and throughput at each rate — the classic
+//! serving-system load curve.
+//!
+//! Run: `cargo run --release --example serving_throughput`
+
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::coordinator::server::{self, BatchPolicy};
+use nsvd::data::corpus::Registry;
+
+fn main() -> anyhow::Result<()> {
+    let config = PipelineConfig::default_for_model("llama-t");
+    let artifacts = config.artifacts_dir.clone();
+    let mut pipeline = Pipeline::new(config)?;
+    let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 };
+    println!("compressing llama-t (NSVD-I @30%)...");
+    let cm = pipeline.compress(&spec)?;
+    let rt = pipeline.runtime().expect("PJRT runtime required");
+    let eval = rt.serve_evaluator("llama-t", &cm)?;
+    let corpus = Registry::new(&artifacts).load("c4", "test")?;
+
+    println!(
+        "\n{:>9} | {:>9} {:>9} {:>9} | {:>9} {:>6}",
+        "load rps", "p50 ms", "p99 ms", "max ms", "thru rps", "fill"
+    );
+    for rate in [50.0, 100.0, 200.0, 0.0] {
+        let n = 160;
+        let (req_tx, req_rx) = std::sync::mpsc::channel();
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        let producer =
+            server::spawn_load(corpus.tokens.clone(), eval.seq(), n, rate, req_tx);
+        let metrics = server::serve(&eval, req_rx, resp_tx, BatchPolicy::default())?;
+        producer.join().ok();
+        let _responses: Vec<_> = resp_rx.iter().collect();
+        let lat = metrics.latency();
+        let label = if rate == 0.0 { "max".to_string() } else { format!("{rate:.0}") };
+        println!(
+            "{:>9} | {:>9.1} {:>9.1} {:>9.1} | {:>9.1} {:>6.2}",
+            label,
+            lat.p50 * 1e3,
+            lat.p99 * 1e3,
+            lat.max * 1e3,
+            metrics.throughput_rps(),
+            metrics.mean_batch_fill()
+        );
+    }
+    println!("\n('max' = closed-loop: producer enqueues as fast as possible →");
+    println!(" the batcher fills to the executable's batch size of 8)");
+    Ok(())
+}

@@ -1,0 +1,270 @@
+"""AOT driver: corpora → trained weights → HLO-text artifacts + manifest.
+
+Runs ONCE at ``make artifacts``; the Rust binary is self-contained afterwards.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the image's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per architecture (vicuna-t shares llama-t's):
+
+* ``{arch}_dense_b{B}``   — tokens + weights → (sum_nll, token_count)
+* ``{arch}_gram_b{B}``    — tokens + weights → (sum_nll, count, gram per tap)
+* ``{arch}_lowrank_b{B}`` — tokens + weights + padded nested factors →
+                            (sum_nll, token_count)
+
+Every lowered function takes a FLAT argument list (tokens first, then arrays
+in the manifest's recorded order) so the Rust side can marshal positionally.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import corpora, model, train
+from .weights_io import load_weights
+
+EVAL_BATCH = 8
+SERVE_BATCH = 1
+SEQ = 128
+
+MODELS = ["llama-t", "vicuna-t", "llama-s", "llama-m", "opt-t", "mistral-t"]
+ARCHS = ["llama-t", "llama-s", "llama-m", "opt-t", "mistral-t"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sources_digest() -> str:
+    """Hash of the compile-path sources; artifact staleness check."""
+    here = Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(here.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def factor_order(cfg) -> list[str]:
+    """Canonical ordering of compressible weights for the factor arg list."""
+    return sorted(model.linear_shapes(cfg).keys())
+
+
+def lower_dense(cfg, params, batch: int) -> str:
+    names = sorted(params.keys())
+
+    def fn(tokens, *arrays):
+        p = dict(zip(names, arrays))
+        return model.loss_fn(cfg, p, tokens)
+
+    tok_spec = jax.ShapeDtypeStruct((batch, SEQ), jnp.int32)
+    arg_specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    return to_hlo_text(jax.jit(fn).lower(tok_spec, *arg_specs))
+
+
+def lower_gram(cfg, params, batch: int) -> tuple[str, list[str]]:
+    names = sorted(params.keys())
+    taps = model.tap_names(cfg)
+
+    def fn(tokens, *arrays):
+        p = dict(zip(names, arrays))
+        sum_nll, count, grams, abssums = model.loss_and_grams_fn(cfg, p, tokens)
+        # Output order: scalars, then all Grams in tap order, then abs-sums.
+        return (sum_nll, count, *[grams[t] for t in taps],
+                *[abssums[t] for t in taps])
+
+    tok_spec = jax.ShapeDtypeStruct((batch, SEQ), jnp.int32)
+    arg_specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    return to_hlo_text(jax.jit(fn).lower(tok_spec, *arg_specs)), taps
+
+
+def lower_lowrank(cfg, params, batch: int) -> tuple[str, list[str], dict, list[str]]:
+    """Lower the factored forward.  The dense copies of the compressed
+    weights are NOT passed (jax prunes unused parameters from the lowered
+    module, which would break positional marshaling); only the residual
+    dense params (embeddings, norms, lm_head) are arguments."""
+    worder = factor_order(cfg)
+    names = [n for n in sorted(params.keys()) if n not in set(worder)]
+    shapes = model.linear_shapes(cfg)
+    ranks = {w: model.max_ranks(*shapes[w]) for w in worder}
+
+    def fn(tokens, *arrays):
+        p = dict(zip(names, arrays[: len(names)]))
+        fac_arrays = arrays[len(names):]
+        factors = {}
+        for wi, w in enumerate(worder):
+            factors[w] = tuple(fac_arrays[4 * wi: 4 * wi + 4])
+        return model.lowrank_loss_fn(cfg, p, factors, tokens)
+
+    tok_spec = jax.ShapeDtypeStruct((batch, SEQ), jnp.int32)
+    arg_specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    for w in worder:
+        n_in, n_out = shapes[w]
+        k1m, k2m = ranks[w]
+        arg_specs += [
+            jax.ShapeDtypeStruct((n_in, k1m), jnp.float32),
+            jax.ShapeDtypeStruct((k1m, n_out), jnp.float32),
+            jax.ShapeDtypeStruct((n_in, k2m), jnp.float32),
+            jax.ShapeDtypeStruct((k2m, n_out), jnp.float32),
+        ]
+    return to_hlo_text(jax.jit(fn).lower(tok_spec, *arg_specs)), worder, ranks, names
+
+
+def lower_serve(cfg, params, batch: int) -> tuple[str, list[str], dict, list[str]]:
+    """Serving executable: factored forward with per-row (nll, count) outputs
+    so the dynamic batcher can score independent requests in one call."""
+    worder = factor_order(cfg)
+    names = [n for n in sorted(params.keys()) if n not in set(worder)]
+    shapes = model.linear_shapes(cfg)
+    ranks = {w: model.max_ranks(*shapes[w]) for w in worder}
+
+    def fn(tokens, *arrays):
+        p = dict(zip(names, arrays[: len(names)]))
+        fac_arrays = arrays[len(names):]
+        factors = {w: tuple(fac_arrays[4 * wi: 4 * wi + 4])
+                   for wi, w in enumerate(worder)}
+        return model.lowrank_rowloss_fn(cfg, p, factors, tokens)
+
+    tok_spec = jax.ShapeDtypeStruct((batch, SEQ), jnp.int32)
+    arg_specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    for w in worder:
+        n_in, n_out = shapes[w]
+        k1m, k2m = ranks[w]
+        arg_specs += [
+            jax.ShapeDtypeStruct((n_in, k1m), jnp.float32),
+            jax.ShapeDtypeStruct((k1m, n_out), jnp.float32),
+            jax.ShapeDtypeStruct((n_in, k2m), jnp.float32),
+            jax.ShapeDtypeStruct((k2m, n_out), jnp.float32),
+        ]
+    return to_hlo_text(jax.jit(fn).lower(tok_spec, *arg_specs)), worder, ranks, names
+
+
+def build(out_dir: Path, force: bool = False) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    digest = _sources_digest()
+    if manifest_path.exists() and not force:
+        try:
+            old = json.loads(manifest_path.read_text())
+            if old.get("digest") == digest:
+                print("artifacts up to date (digest match); skipping")
+                return
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    print("== corpora ==", flush=True)
+    corp_manifest = corpora.build_all(out_dir / "corpora")
+
+    print("== training zoo ==", flush=True)
+    weights_dir = out_dir / "models"
+    missing = [m for m in MODELS if not (weights_dir / f"{m}.nsvdw").exists()]
+    if missing or force:
+        train.train_zoo(out_dir / "corpora", weights_dir)
+    else:
+        print("  all weights present; skipping training")
+
+    print("== lowering ==", flush=True)
+    artifacts: dict[str, dict] = {}
+    for arch in ARCHS:
+        cfg = model.CONFIGS[arch]
+        params = load_weights(weights_dir / f"{arch}.nsvdw")
+        names = sorted(params.keys())
+        batches = [EVAL_BATCH] + ([SERVE_BATCH] if arch == "llama-t" else [])
+        for b in batches:
+            key = f"{arch}_dense_b{b}"
+            path = out_dir / f"{key}.hlo.txt"
+            path.write_text(lower_dense(cfg, params, b))
+            artifacts[key] = {
+                "file": path.name, "kind": "dense", "arch": arch,
+                "batch": b, "seq": SEQ, "params": names,
+                "outputs": ["sum_nll", "count"],
+            }
+            print(f"  wrote {path.name}", flush=True)
+
+            key = f"{arch}_lowrank_b{b}"
+            path = out_dir / f"{key}.hlo.txt"
+            hlo, worder, ranks, lr_names = lower_lowrank(cfg, params, b)
+            path.write_text(hlo)
+            artifacts[key] = {
+                "file": path.name, "kind": "lowrank", "arch": arch,
+                "batch": b, "seq": SEQ, "params": lr_names,
+                "factor_order": worder,
+                "factor_ranks": {w: list(ranks[w]) for w in worder},
+                "outputs": ["sum_nll", "count"],
+            }
+            print(f"  wrote {path.name}", flush=True)
+
+        if arch == "llama-t":
+            key = f"{arch}_serve_b{EVAL_BATCH}"
+            path = out_dir / f"{key}.hlo.txt"
+            hlo, worder, ranks, sv_names = lower_serve(cfg, params, EVAL_BATCH)
+            path.write_text(hlo)
+            artifacts[key] = {
+                "file": path.name, "kind": "serve", "arch": arch,
+                "batch": EVAL_BATCH, "seq": SEQ, "params": sv_names,
+                "factor_order": worder,
+                "factor_ranks": {w: list(ranks[w]) for w in worder},
+                "outputs": ["row_nll", "row_count"],
+            }
+            print(f"  wrote {path.name}", flush=True)
+
+        key = f"{arch}_gram_b{EVAL_BATCH}"
+        path = out_dir / f"{key}.hlo.txt"
+        hlo, taps = lower_gram(cfg, params, EVAL_BATCH)
+        path.write_text(hlo)
+        artifacts[key] = {
+            "file": path.name, "kind": "gram", "arch": arch,
+            "batch": EVAL_BATCH, "seq": SEQ, "params": names,
+            "outputs": ["sum_nll", "count"], "taps": taps,
+        }
+        print(f"  wrote {path.name}", flush=True)
+
+    models_meta = {}
+    for name in MODELS:
+        cfg = model.CONFIGS[name]
+        models_meta[name] = {
+            "family": cfg.family, "arch": model.ARCH_OF[name],
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq, "window": cfg.window, "vocab": cfg.vocab,
+            "weights": f"models/{name}.nsvdw",
+            "linear_shapes": {k: list(v) for k, v in model.linear_shapes(cfg).items()},
+        }
+
+    manifest = {
+        "digest": digest,
+        "seq": SEQ,
+        "eval_batch": EVAL_BATCH,
+        "corpora": {k: {"train": Path(v["train"]).name,
+                        "test": Path(v["test"]).name,
+                        "kind": v["kind"]}
+                    for k, v in corp_manifest.items()},
+        "models": models_meta,
+        "artifacts": artifacts,
+    }
+    manifest_path.write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {manifest_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    build(Path(args.out_dir), force=args.force)
+
+
+if __name__ == "__main__":
+    main()

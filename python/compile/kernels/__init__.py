@@ -1,0 +1,10 @@
+"""L1 — Pallas kernels (build-time; lowered with interpret=True for CPU PJRT).
+
+Modules:
+
+* ``matmul``  — tiled matrix multiply (MXU-shaped blocks).
+* ``gram``    — streaming activation Gram accumulation ``XᵀX``.
+* ``lowrank`` — the paper's request-path hot-spot: the fused nested low-rank
+  apply ``y = (x P1) Q1 + (x P2) Q2`` (Eq. 6 of the paper).
+* ``ref``     — pure-jnp oracles used by the pytest correctness gate.
+"""

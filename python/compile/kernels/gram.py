@@ -1,0 +1,60 @@
+"""Streaming Gram accumulation Pallas kernel: ``XᵀX`` over row tiles.
+
+Calibration needs the activation Gram of every tap (paper §3: the whitening
+factor S comes from the Cholesky/eigendecomposition of ``X Xᵀ``; in our row
+convention that is ``XᵀX``).  The kernel streams [bm, N] activation tiles
+HBM→VMEM and accumulates the [N, N] Gram in the output block, which stays
+resident in VMEM across the grid (all grid steps map to output block (0, 0)).
+
+VMEM footprint: tile 128×N + Gram N×N; at N = 512 (largest tap) that is
+128·512·4 + 512·512·4 ≈ 1.3 MiB — well under budget.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, o_ref, a_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    x = x_ref[...]
+    o_ref[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+    # Column-wise Σ|x|: the ASVD-0 baseline scales by per-dim absolute means.
+    a_ref[...] += jnp.sum(jnp.abs(x), axis=0, keepdims=True)
+
+
+def gram(x: jax.Array, bm: int = 128) -> tuple[jax.Array, jax.Array]:
+    """``(XᵀX, Σ|x| per column)`` for x [M, N] → ([N, N], [1, N]),
+    accumulated over M in tiles of bm.
+
+    M is zero-padded up to a multiple of bm: unlike a plain matmul, the edge
+    tile CONTRIBUTES to the accumulator, so out-of-bounds garbage must be
+    masked — zero rows add exactly nothing to either accumulator.
+    """
+    m, n = x.shape
+    bm = min(bm, m)
+    if m % bm != 0:
+        pad = bm - m % bm
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        m += pad
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        _gram_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,52 @@
+"""Tiled matmul Pallas kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the M and N
+output dimensions in MXU-shaped blocks; the full K panel of each operand tile
+is staged in VMEM and contracted on the MXU.  The K dimension of our models is
+at most ``d_ff`` (≤ 512), so a [bm, K] × [K, bn] panel pair fits comfortably
+in VMEM (f32: 128·512·4 + 512·128·4 = 512 KiB ≪ 16 MiB).
+
+On CPU we must run interpret=True (the CPU PJRT plugin cannot execute Mosaic
+custom-calls); correctness is gated against ``ref.matmul_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One [bm, K] × [K, bn] contraction per grid cell, f32 accumulation.
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x: jax.Array, w: jax.Array, bm: int = 128, bn: int = 128) -> jax.Array:
+    """``x [M, K] @ w [K, N]`` with an (M/bm, N/bn) Pallas grid.
+
+    M and N need not be multiples of the block size; Pallas masks the edge
+    blocks.  K is kept whole per tile (small in this system).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {w.shape}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))

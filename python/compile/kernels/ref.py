@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the single source of truth for kernel correctness: pytest sweeps
+shapes/dtypes with hypothesis and asserts the Pallas outputs match these to
+tight tolerances (see python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain ``x @ w`` in f32 accumulation."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def gram_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``(XᵀX, Σ|x| per column)``: [M, N] → ([N, N], [1, N])."""
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf, jnp.sum(jnp.abs(xf), axis=0, keepdims=True)
+
+
+def nested_apply_ref(x, p1, q1, p2, q2) -> jnp.ndarray:
+    """Paper Eq. 6: ``O = W̃₁(Z̃₁X) + W̃₂(Z̃₂X)`` in row convention:
+    ``y = (x P1) Q1 + (x P2) Q2``."""
+    xf = x.astype(jnp.float32)
+    y1 = (xf @ p1.astype(jnp.float32)) @ q1.astype(jnp.float32)
+    y2 = (xf @ p2.astype(jnp.float32)) @ q2.astype(jnp.float32)
+    return y1 + y2

@@ -1,0 +1,379 @@
+"""L2 — JAX transformer families (build-time only; never on the request path).
+
+Three families mirror the paper's model zoo (LLaMA, OPT, Mistral):
+
+* ``llama``   — pre-norm, RMSNorm, SwiGLU MLP, rotary position embeddings.
+* ``opt``     — pre-norm, LayerNorm (scale+bias), ReLU MLP, learned absolute
+                position embeddings.
+* ``mistral`` — llama block with sliding-window causal attention.
+
+Each model is a pure function over a flat ``{name: array}`` parameter dict
+whose names match the NSVDW weight file keys read by the Rust side
+(`rust/src/model/weights.rs`).  All linear weights are stored **[in, out]**
+and applied as ``y = x @ W``; the Rust compressor treats the paper's
+``A = Wᵀ`` so its activation Gram is over the `in` dimension.
+
+Three forward variants are lowered AOT (see ``aot.py``):
+
+* ``loss_fn``           — dense forward → (sum_nll, token_count).
+* ``loss_and_grams_fn`` — dense forward that additionally returns the
+  per-tap activation Gram matrices ``XᵀX`` used for calibration and for the
+  Table 2 / Figure 1 similarity analysis.
+* ``lowrank_loss_fn``   — every compressible weight replaced by the nested
+  factor quadruple ``(P1, Q1, P2, Q2)`` (zero-padded to fixed max ranks so a
+  single fixed-shape PJRT executable serves every compression ratio); the
+  factored apply is the L1 Pallas kernel ``kernels.lowrank.nested_apply``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gram as gram_kernel
+from .kernels import lowrank as lowrank_kernel
+
+VOCAB = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "llama" | "opt" | "mistral"
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int = 128
+    window: int = 0  # sliding window (mistral); 0 = full causal
+    vocab: int = VOCAB
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    # LLaMA family at three scales (the paper's 7B/13B/30B axis).
+    "llama-t": ModelConfig("llama-t", "llama", 128, 4, 4, 256),
+    "llama-s": ModelConfig("llama-s", "llama", 160, 5, 5, 320),
+    "llama-m": ModelConfig("llama-m", "llama", 192, 6, 6, 384),
+    # Vicuna = LLaMA architecture + instruction fine-tune (same HLO artifact).
+    "vicuna-t": ModelConfig("vicuna-t", "llama", 128, 4, 4, 256),
+    "opt-t": ModelConfig("opt-t", "opt", 128, 4, 4, 384),
+    "mistral-t": ModelConfig("mistral-t", "mistral", 128, 4, 4, 256, window=32),
+}
+
+# Architecture key: vicuna-t shares llama-t's lowered artifacts.
+ARCH_OF = {name: ("llama-t" if name == "vicuna-t" else name) for name in CONFIGS}
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _linear_names(cfg: ModelConfig, i: int) -> list[str]:
+    """Names of the compressible linear weights in block i (paper's targets)."""
+    base = [f"blocks.{i}.attn.wq", f"blocks.{i}.attn.wk",
+            f"blocks.{i}.attn.wv", f"blocks.{i}.attn.wo"]
+    if cfg.family == "opt":
+        return base + [f"blocks.{i}.mlp.fc1", f"blocks.{i}.mlp.fc2"]
+    return base + [f"blocks.{i}.mlp.w_gate", f"blocks.{i}.mlp.w_up",
+                   f"blocks.{i}.mlp.w_down"]
+
+
+def linear_shapes(cfg: ModelConfig) -> dict[str, tuple[int, int]]:
+    """[in, out] shapes for every compressible weight of the model."""
+    d, f = cfg.d_model, cfg.d_ff
+    shapes: dict[str, tuple[int, int]] = {}
+    for i in range(cfg.n_layers):
+        for name in _linear_names(cfg, i):
+            leaf = name.rsplit(".", 1)[1]
+            if leaf in ("wq", "wk", "wv", "wo"):
+                shapes[name] = (d, d)
+            elif leaf in ("w_gate", "w_up", "fc1"):
+                shapes[name] = (d, f)
+            elif leaf in ("w_down", "fc2"):
+                shapes[name] = (f, d)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """Scaled-normal initialization; returns the flat name→array dict."""
+    params: dict[str, jax.Array] = {}
+    d = cfg.d_model
+
+    def norm_init(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    key, k_emb, k_head = jax.random.split(key, 3)
+    params["tok_emb"] = norm_init(k_emb, (cfg.vocab, d), 0.02)
+    params["lm_head"] = norm_init(k_head, (d, cfg.vocab), 0.02)
+    if cfg.family == "opt":
+        key, k_pos = jax.random.split(key)
+        params["pos_emb"] = norm_init(k_pos, (cfg.max_seq, d), 0.02)
+    shapes = linear_shapes(cfg)
+    for i in range(cfg.n_layers):
+        for name in _linear_names(cfg, i):
+            key, k = jax.random.split(key)
+            shape = shapes[name]
+            scale = 1.0 / math.sqrt(shape[0])
+            # Residual-path projections get the depth-scaled init.
+            if name.endswith(("wo", "w_down", "fc2")):
+                scale /= math.sqrt(2.0 * cfg.n_layers)
+            params[name] = norm_init(k, shape, scale)
+        params[f"blocks.{i}.attn_norm.w"] = jnp.ones((d,), jnp.float32)
+        params[f"blocks.{i}.mlp_norm.w"] = jnp.ones((d,), jnp.float32)
+        if cfg.family == "opt":
+            params[f"blocks.{i}.attn_norm.b"] = jnp.zeros((d,), jnp.float32)
+            params[f"blocks.{i}.mlp_norm.b"] = jnp.zeros((d,), jnp.float32)
+    params["final_norm.w"] = jnp.ones((d,), jnp.float32)
+    if cfg.family == "opt":
+        params["final_norm.b"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def _norm(cfg: ModelConfig, params, prefix: str, x: jax.Array) -> jax.Array:
+    if cfg.family == "opt":
+        return layernorm(x, params[f"{prefix}.w"], params[f"{prefix}.b"])
+    return rmsnorm(x, params[f"{prefix}.w"])
+
+
+def rope_tables(seq: int, head_dim: int) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables [seq, head_dim] (split-halves convention)."""
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.concatenate([jnp.cos(angles), jnp.cos(angles)], axis=-1)
+    sin = jnp.concatenate([jnp.sin(angles), jnp.sin(angles)], axis=-1)
+    return cos, sin
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, T, H, hd]; rotate-half with split-halves layout."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate([-x2, x1], axis=-1)
+    return x * cos[None, :, None, :] + rotated * sin[None, :, None, :]
+
+
+def causal_mask(seq: int, window: int) -> jax.Array:
+    """[T, T] additive mask: 0 allowed, -1e30 disallowed."""
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    allowed = j <= i
+    if window > 0:
+        allowed = allowed & (i - j < window)
+    return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention(cfg: ModelConfig, q, k, v, mask) -> jax.Array:
+    """q,k,v: [B, T, H, hd] → [B, T, H*hd]."""
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    logits = logits + mask[None, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    b, t = out.shape[0], out.shape[1]
+    return out.reshape(b, t, cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+# Calibration taps per block: each is the input activation of one or more
+# compressible linears (wq/wk/wv share attn_in, w_gate/w_up share mlp_in).
+def tap_names(cfg: ModelConfig) -> list[str]:
+    taps = []
+    for i in range(cfg.n_layers):
+        taps += [f"blocks.{i}.attn_in", f"blocks.{i}.attn_out_in",
+                 f"blocks.{i}.mlp_in", f"blocks.{i}.mlp_down_in"]
+    return taps
+
+
+def tap_for_linear(name: str) -> str:
+    """Map a compressible weight name to the tap that feeds it."""
+    block, leaf = name.rsplit(".", 2)[0], name.rsplit(".", 1)[1]
+    if leaf in ("wq", "wk", "wv"):
+        return f"{block}.attn_in"
+    if leaf == "wo":
+        return f"{block}.attn_out_in"
+    if leaf in ("w_gate", "w_up", "fc1"):
+        return f"{block}.mlp_in"
+    return f"{block}.mlp_down_in"  # w_down / fc2
+
+
+def _forward(cfg: ModelConfig, params, tokens, apply_linear, collect=None):
+    """Shared forward skeleton.
+
+    ``apply_linear(name, x2d)`` implements ``x @ W[name]`` (dense or factored);
+    ``collect(tap_name, x2d)`` records activations when not None.
+    """
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens]
+    if cfg.family == "opt":
+        x = x + params["pos_emb"][None, :t, :]
+    mask = causal_mask(t, cfg.window)
+    cos, sin = rope_tables(t, cfg.head_dim)
+    use_rope = cfg.family in ("llama", "mistral")
+
+    def lin(name, h2d):
+        if collect is not None:
+            collect(tap_for_linear(name), h2d)
+        return apply_linear(name, h2d)
+
+    for i in range(cfg.n_layers):
+        # --- attention ---
+        h = _norm(cfg, params, f"blocks.{i}.attn_norm", x)
+        h2 = h.reshape(b * t, cfg.d_model)
+        q = lin(f"blocks.{i}.attn.wq", h2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = lin(f"blocks.{i}.attn.wk", h2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = lin(f"blocks.{i}.attn.wv", h2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        if use_rope:
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        att = attention(cfg, q, k, v, mask)
+        att2 = att.reshape(b * t, cfg.d_model)
+        o = lin(f"blocks.{i}.attn.wo", att2).reshape(b, t, cfg.d_model)
+        x = x + o
+        # --- MLP ---
+        h = _norm(cfg, params, f"blocks.{i}.mlp_norm", x)
+        h2 = h.reshape(b * t, cfg.d_model)
+        if cfg.family == "opt":
+            u = jax.nn.relu(lin(f"blocks.{i}.mlp.fc1", h2))
+            m = lin(f"blocks.{i}.mlp.fc2", u)
+        else:
+            g = jax.nn.silu(lin(f"blocks.{i}.mlp.w_gate", h2))
+            u = lin(f"blocks.{i}.mlp.w_up", h2)
+            m = lin(f"blocks.{i}.mlp.w_down", g * u)
+        x = x + m.reshape(b, t, cfg.d_model)
+
+    if cfg.family == "opt":
+        x = layernorm(x, params["final_norm.w"], params["final_norm.b"])
+    else:
+        x = rmsnorm(x, params["final_norm.w"])
+    logits = x @ params["lm_head"]
+    return logits
+
+
+def _nll(logits: jax.Array, tokens: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Next-token sum NLL and token count over the batch."""
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    targets = tokens[:, 1:]
+    picked = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    sum_nll = -jnp.sum(picked)
+    count = jnp.array(targets.size, jnp.float32)
+    return sum_nll.astype(jnp.float32), count
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Dense forward → (sum_nll, token_count)."""
+    dense = lambda name, h2d: h2d @ params[name]
+    logits = _forward(cfg, params, tokens, dense)
+    return _nll(logits, tokens)
+
+
+def logits_fn(cfg: ModelConfig, params, tokens):
+    """Dense forward → logits [B, T, vocab] (used by parity tests/serving)."""
+    dense = lambda name, h2d: h2d @ params[name]
+    return _forward(cfg, params, tokens, dense)
+
+
+def loss_and_grams_fn(cfg: ModelConfig, params, tokens):
+    """Dense forward returning (sum_nll, count, grams, abssums) where
+    ``grams[tap]`` is ``XᵀX`` ([n, n]) and ``abssums[tap]`` is the per-column
+    ``Σ|x|`` ([1, n]), both accumulated over batch·seq rows by the L1 Pallas
+    kernel.  The Gram feeds ASVD-I/II whitening; the abs-sum feeds ASVD-0."""
+    grams: dict[str, jax.Array] = {}
+    abssums: dict[str, jax.Array] = {}
+
+    def collect(tap, h2d):
+        if tap not in grams:
+            grams[tap], abssums[tap] = gram_kernel.gram(h2d)
+
+    dense = lambda name, h2d: h2d @ params[name]
+    logits = _forward(cfg, params, tokens, dense, collect=collect)
+    sum_nll, count = _nll(logits, tokens)
+    return sum_nll, count, grams, abssums
+
+
+def lowrank_loss_fn(cfg: ModelConfig, params, factors, tokens):
+    """Forward with every compressible weight replaced by nested factors.
+
+    ``factors[name] = (P1 [n,k1m], Q1 [k1m,m], P2 [n,k2m], Q2 [k2m,m])``
+    zero-padded to the fixed max ranks; non-compressed params (embeddings,
+    norms, lm_head) come from ``params``.
+    """
+    def apply_linear(name, h2d):
+        if name in factors:
+            p1, q1, p2, q2 = factors[name]
+            return lowrank_kernel.nested_apply(h2d, p1, q1, p2, q2)
+        return h2d @ params[name]
+
+    logits = _forward(cfg, params, tokens, apply_linear)
+    return _nll(logits, tokens)
+
+
+def lowrank_rowloss_fn(cfg: ModelConfig, params, factors, tokens):
+    """Serving variant of the factored forward: per-ROW (sum_nll, count)
+    vectors [B] so the dynamic batcher can score independent requests in one
+    execution and discard padding rows."""
+    def apply_linear(name, h2d):
+        if name in factors:
+            p1, q1, p2, q2 = factors[name]
+            return lowrank_kernel.nested_apply(h2d, p1, q1, p2, q2)
+        return h2d @ params[name]
+
+    logits = _forward(cfg, params, tokens, apply_linear)
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    targets = tokens[:, 1:]
+    picked = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    row_nll = -jnp.sum(picked, axis=1)  # [B]
+    row_count = jnp.full((tokens.shape[0],), tokens.shape[1] - 1, jnp.float32)
+    return row_nll.astype(jnp.float32), row_count
+
+
+def max_ranks(n_in: int, n_out: int) -> tuple[int, int]:
+    """Padded factor ranks for a weight of shape [n_in, n_out].
+
+    ``k_budget(ρ) = (1-ρ)·m·n/(m+n)``; the largest k any experiment uses is
+    at the smallest ratio (10%).  k2 is at most (1-α_min)=0.25 of the budget.
+    Must match `rust/src/compress/ranks.rs`.
+    """
+    kmax = int((1.0 - 0.10) * n_in * n_out / (n_in + n_out))
+    k1max = max(1, kmax)
+    k2max = max(1, math.ceil(0.25 * kmax))
+    return k1max, k2max
+
+
+def zero_factors(cfg: ModelConfig) -> dict[str, tuple[jax.Array, ...]]:
+    """All-zero padded factor set (shape template for AOT lowering)."""
+    out = {}
+    for name, (n_in, n_out) in linear_shapes(cfg).items():
+        k1m, k2m = max_ranks(n_in, n_out)
+        out[name] = (
+            jnp.zeros((n_in, k1m), jnp.float32),
+            jnp.zeros((k1m, n_out), jnp.float32),
+            jnp.zeros((n_in, k2m), jnp.float32),
+            jnp.zeros((k2m, n_out), jnp.float32),
+        )
+    return out

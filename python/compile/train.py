@@ -1,0 +1,139 @@
+"""Build-time training of the tiny model zoo.
+
+The paper compresses pretrained LLMs; offline we must pretrain our own.  Each
+model is trained on a *mixture* of all eight domains (English-heavy, with
+CN/JP minorities — like real LLM pretraining mixes) so that it is competent
+everywhere, then CALIBRATED later on the wiki train split only.  That gap
+between the pretraining mixture and the calibration distribution is exactly
+what Tables 1/2 probe.
+
+Runs once at ``make artifacts``.  Adam + cosine schedule, pure-jnp forward
+(the Pallas kernels are for the lowered artifacts; training wants XLA's
+fused dense paths).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpora, model
+from .weights_io import save_weights
+
+SEQ = 128
+
+# Pretraining mixture: English domains in the lead, CN/JP minorities.
+MIX_WEIGHTS = {
+    "wiki": 0.14, "ptb": 0.11, "c4": 0.11, "snips": 0.10,
+    "alpaca": 0.10, "mctest": 0.10, "cmrc_cn": 0.17, "alpaca_jp": 0.17,
+}
+
+TRAIN_STEPS = {
+    "llama-t": 400, "llama-s": 300, "llama-m": 220,
+    "opt-t": 400, "mistral-t": 400, "vicuna-t": 150,
+}
+BATCH = {"llama-t": 16, "llama-s": 12, "llama-m": 8,
+         "opt-t": 16, "mistral-t": 16, "vicuna-t": 16}
+
+
+class MixtureSampler:
+    """Samples [batch, SEQ] windows from the domain mixture."""
+
+    def __init__(self, corpora_dir: Path, rng: np.random.Generator,
+                 weights: dict[str, float] | None = None):
+        self.rng = rng
+        self.weights = weights or MIX_WEIGHTS
+        self.streams = {}
+        for name in self.weights:
+            toks = corpora.read_tokens(corpora_dir / f"{name}.train.tok")
+            self.streams[name] = np.array(toks, dtype=np.int32)
+        self.names = list(self.weights)
+        self.probs = np.array([self.weights[n] for n in self.names])
+        self.probs = self.probs / self.probs.sum()
+
+    def batch(self, batch_size: int) -> np.ndarray:
+        out = np.zeros((batch_size, SEQ), dtype=np.int32)
+        picks = self.rng.choice(len(self.names), size=batch_size, p=self.probs)
+        for b, pi in enumerate(picks):
+            stream = self.streams[self.names[pi]]
+            start = self.rng.integers(0, len(stream) - SEQ)
+            out[b] = stream[start:start + SEQ]
+        return out
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.float32)}
+
+
+@partial(jax.jit, static_argnames=("cfg", "lr_max", "total_steps"))
+def train_step(cfg, params, opt, tokens, lr_max, total_steps):
+    def mean_loss(p):
+        sum_nll, count = model.loss_fn(cfg, p, tokens)
+        return sum_nll / count
+
+    loss, grads = jax.value_and_grad(mean_loss)(params)
+    t = opt["t"] + 1.0
+    # Cosine schedule with 20-step warmup.
+    warm = jnp.minimum(t / 20.0, 1.0)
+    progress = jnp.clip(t / total_steps, 0.0, 1.0)
+    lr = lr_max * warm * 0.5 * (1.0 + jnp.cos(math.pi * progress))
+    b1, b2, eps = 0.9, 0.98, 1e-8
+    new_m, new_v, new_p = {}, {}, {}
+    for k, g in grads.items():
+        m = b1 * opt["m"][k] + (1 - b1) * g
+        v = b2 * opt["v"][k] + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        new_m[k] = m
+        new_v[k] = v
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, {"m": new_m, "v": new_v, "t": t}, loss
+
+
+def train_model(name: str, corpora_dir: Path, out_dir: Path,
+                init_from: dict | None = None,
+                mixture: dict[str, float] | None = None,
+                steps: int | None = None, log_every: int = 50) -> dict:
+    cfg = model.CONFIGS[name]
+    steps = steps if steps is not None else TRAIN_STEPS[name]
+    batch = BATCH[name]
+    rng = np.random.default_rng(hash(name) % (2 ** 31))
+    sampler = MixtureSampler(corpora_dir, rng, mixture)
+    if init_from is not None:
+        params = {k: jnp.asarray(v) for k, v in init_from.items()}
+    else:
+        params = model.init_params(cfg, jax.random.PRNGKey(hash(name) % (2 ** 31)))
+    opt = adam_init(params)
+    t0 = time.time()
+    losses = []
+    for step in range(steps):
+        tokens = jnp.asarray(sampler.batch(batch))
+        params, opt, loss = train_step(cfg, params, opt, tokens,
+                                       lr_max=3e-3, total_steps=steps)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"  [{name}] step {step:4d}/{steps} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    out_path = out_dir / f"{name}.nsvdw"
+    save_weights(out_path, {k: np.asarray(v) for k, v in params.items()})
+    print(f"  [{name}] saved {out_path} (final loss {losses[-1]:.4f})", flush=True)
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+def train_zoo(corpora_dir: Path, out_dir: Path) -> None:
+    """Train the full model zoo (vicuna-t fine-tunes from llama-t)."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    llama_t = train_model("llama-t", corpora_dir, out_dir)
+    # Vicuna := llama-t + instruction-corpus fine-tune.
+    train_model("vicuna-t", corpora_dir, out_dir, init_from=llama_t,
+                mixture={"alpaca": 0.85, "wiki": 0.15})
+    for name in ("llama-s", "llama-m", "opt-t", "mistral-t"):
+        train_model(name, corpora_dir, out_dir)

@@ -1,0 +1,59 @@
+"""NSVDW — the weight interchange format between JAX training and Rust.
+
+Layout (little-endian):
+
+    magic   b"NSVDW001"
+    u32     n_tensors
+    repeat n_tensors times:
+        u16     name_len
+        bytes   name (utf-8)
+        u8      ndim
+        u32[ndim] dims
+        f32[prod(dims)] data, row-major (C order)
+
+Reader lives in rust/src/model/weights.rs and must match byte-for-byte.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"NSVDW001"
+
+
+def save_weights(path: Path, params: dict) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(params)))
+        for name in sorted(params):
+            arr = np.asarray(params[name], dtype=np.float32)
+            name_b = name.encode("utf-8")
+            f.write(struct.pack("<H", len(name_b)))
+            f.write(name_b)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def load_weights(path: Path) -> dict:
+    path = Path(path)
+    out = {}
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad NSVDW magic")
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            count = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * count), dtype="<f4")
+            out[name] = data.reshape(dims).copy()
+    return out

@@ -1,0 +1,63 @@
+"""AOT lowering smoke tests: HLO text is produced and structurally sound."""
+
+import jax
+import pytest
+
+from compile import aot, model
+from compile.weights_io import save_weights, load_weights
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tmp_path_factory):
+    cfg = model.CONFIGS["llama-t"]
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    path = tmp_path_factory.mktemp("w") / "llama-t.nsvdw"
+    save_weights(path, {k: v for k, v in params.items()})
+    return cfg, load_weights(path)
+
+
+def test_lower_dense_produces_hlo_text(tiny_params):
+    cfg, params = tiny_params
+    hlo = aot.lower_dense(cfg, params, batch=1)
+    assert "ENTRY" in hlo and "HloModule" in hlo
+    # One i32 token parameter + one f32 parameter per weight tensor.
+    assert hlo.count("parameter(") >= len(params) + 1
+
+
+def test_lower_gram_outputs_grams_and_abssums(tiny_params):
+    cfg, params = tiny_params
+    hlo, taps = aot.lower_gram(cfg, params, batch=1)
+    assert len(taps) == 4 * cfg.n_layers
+    assert "ENTRY" in hlo
+    # Output tuple: 2 scalars + gram + abssum per tap.
+    assert f"f32[{cfg.d_model},{cfg.d_model}]" in hlo
+
+
+def test_lower_lowrank_has_factor_parameters(tiny_params):
+    cfg, params = tiny_params
+    hlo, worder, ranks, names = aot.lower_lowrank(cfg, params, batch=1)
+    n_weights = len(model.linear_shapes(cfg))
+    assert len(worder) == n_weights
+    assert worder == sorted(worder)
+    # The dense copies of compressed weights are NOT parameters (jax would
+    # prune them and break positional marshaling on the rust side).
+    assert set(names).isdisjoint(set(worder))
+    assert len(names) == len(params) - n_weights
+    for w, (k1m, k2m) in ranks.items():
+        n_in, n_out = model.linear_shapes(cfg)[w]
+        assert (k1m, k2m) == model.max_ranks(n_in, n_out)
+    assert hlo.count("parameter(") >= len(names) + 4 * n_weights + 1
+
+
+def test_lower_serve_emits_row_outputs(tiny_params):
+    cfg, params = tiny_params
+    hlo, worder, _ranks, names = aot.lower_serve(cfg, params, batch=4)
+    assert "ENTRY" in hlo
+    assert set(names).isdisjoint(set(worder))
+    # Per-row outputs: two f32[4] vectors in the result tuple.
+    assert "f32[4]" in hlo
+
+
+def test_sources_digest_is_stable():
+    assert aot._sources_digest() == aot._sources_digest()
+    assert len(aot._sources_digest()) == 16

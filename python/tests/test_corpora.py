@@ -1,0 +1,106 @@
+"""Corpora substrate: determinism, byte-range separation, token file format."""
+
+import collections
+from pathlib import Path
+
+import pytest
+
+from compile import corpora
+
+
+def test_deterministic_generation():
+    spec = corpora.DOMAINS[0]
+    a = corpora.generate_domain(spec, 4096)
+    b = corpora.generate_domain(spec, 4096)
+    assert a == b
+
+
+def test_train_test_same_distribution_different_text():
+    spec = corpora.DOMAINS[0]
+    train = corpora.generate_domain(spec, 8192, stream_seed=spec.seed)
+    test = corpora.generate_domain(spec, 8192, stream_seed=spec.seed + 5000)
+    assert train != test
+    # Shared unigram structure: top bytes overlap heavily.
+    top = lambda data: set(b for b, _ in collections.Counter(data).most_common(20))
+    overlap = len(top(train) & top(test)) / 20.0
+    assert overlap > 0.7, f"train/test unigram overlap {overlap}"
+
+
+def test_english_domains_are_ascii():
+    for spec in corpora.DOMAINS:
+        if spec.kind != "english":
+            continue
+        data = corpora.generate_domain(spec, 4096)
+        assert all(b < 128 for b in data), spec.name
+
+
+def test_cjk_jp_occupy_high_byte_ranges():
+    """The multilingual mechanism: CN/JP corpora must be dominated by bytes
+    the English calibration set never produces (Table 2's <0.5 similarity)."""
+    for name in ("cmrc_cn", "alpaca_jp"):
+        spec = next(d for d in corpora.DOMAINS if d.name == name)
+        data = corpora.generate_domain(spec, 8192)
+        high = sum(1 for b in data if b >= 128)
+        assert high / len(data) > 0.8, f"{name}: high-byte share {high/len(data)}"
+
+
+def test_cn_and_jp_differ_in_lead_bytes():
+    cn = corpora.generate_domain(
+        next(d for d in corpora.DOMAINS if d.name == "cmrc_cn"), 8192)
+    jp = corpora.generate_domain(
+        next(d for d in corpora.DOMAINS if d.name == "alpaca_jp"), 8192)
+    # Hiragana/katakana live in the 0xE3 lead-byte plane; hanzi in 0xE4-0xE9.
+    cn_e3 = sum(1 for b in cn if b == 0xE3) / len(cn)
+    jp_e3 = sum(1 for b in jp if b == 0xE3) / len(jp)
+    assert jp_e3 > 0.15
+    assert cn_e3 < 0.05
+
+
+def test_domains_have_distinct_distributions():
+    """Each English domain should differ from wiki (the calibration domain)
+    but less than the CJK domains do (the Table 2 similarity ordering)."""
+    def hist(data):
+        c = collections.Counter(data)
+        total = sum(c.values())
+        return {b: c[b] / total for b in c}
+
+    def cosine(h1, h2):
+        keys = set(h1) | set(h2)
+        dot = sum(h1.get(k, 0) * h2.get(k, 0) for k in keys)
+        n1 = sum(v * v for v in h1.values()) ** 0.5
+        n2 = sum(v * v for v in h2.values()) ** 0.5
+        return dot / (n1 * n2)
+
+    wiki = hist(corpora.generate_domain(corpora.DOMAINS[0], 16384))
+    sims = {}
+    for spec in corpora.DOMAINS[1:]:
+        sims[spec.name] = cosine(wiki, hist(corpora.generate_domain(spec, 16384)))
+    for name in ("ptb", "c4", "snips", "alpaca", "mctest"):
+        assert sims[name] > 0.5, f"{name} sim {sims[name]}"
+    for name in ("cmrc_cn", "alpaca_jp"):
+        assert sims[name] < 0.3, f"{name} sim {sims[name]}"
+
+
+def test_token_file_roundtrip(tmp_path: Path):
+    toks = list(range(256)) * 3
+    path = tmp_path / "x.tok"
+    corpora.write_tokens(path, toks)
+    back = corpora.read_tokens(path)
+    assert back == toks
+
+
+def test_token_file_rejects_bad_magic(tmp_path: Path):
+    path = tmp_path / "bad.tok"
+    path.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        corpora.read_tokens(path)
+
+
+def test_build_all_writes_all_domains(tmp_path: Path):
+    manifest = corpora.build_all(tmp_path, train_bytes=2048, test_bytes=512)
+    assert set(manifest) == set(corpora.DOMAIN_NAMES)
+    for name, meta in manifest.items():
+        train = corpora.read_tokens(Path(meta["train"]))
+        test = corpora.read_tokens(Path(meta["test"]))
+        assert len(train) == 2048
+        assert len(test) == 512

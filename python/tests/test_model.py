@@ -1,0 +1,141 @@
+"""L2 model invariants: shapes, families, factored-forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _toks(b=2, t=32, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, t), 0, model.VOCAB)
+
+
+@pytest.mark.parametrize("name", list(model.CONFIGS))
+def test_forward_shapes_and_finite_loss(name):
+    cfg = model.CONFIGS[name]
+    params = model.init_params(cfg, jax.random.PRNGKey(1))
+    toks = _toks()
+    logits = model.logits_fn(cfg, params, toks)
+    assert logits.shape == (2, 32, cfg.vocab)
+    sum_nll, count = model.loss_fn(cfg, params, toks)
+    assert count == 2 * 31
+    mean = float(sum_nll) / float(count)
+    assert np.isfinite(mean)
+    # Random init ≈ uniform over 256 tokens → NLL near ln(256) ≈ 5.55.
+    assert 4.0 < mean < 7.0
+
+
+def test_causal_mask_blocks_future():
+    m = model.causal_mask(5, 0)
+    assert float(m[0, 1]) < -1e20
+    assert float(m[4, 0]) == 0.0
+    mw = model.causal_mask(5, 2)
+    assert float(mw[4, 1]) < -1e20  # outside window
+    assert float(mw[4, 3]) == 0.0
+
+
+def test_causality_property():
+    """Changing a future token must not change past logits."""
+    cfg = model.CONFIGS["llama-t"]
+    params = model.init_params(cfg, jax.random.PRNGKey(2))
+    toks = _toks(1, 16, seed=3)
+    logits_a = model.logits_fn(cfg, params, toks)
+    toks_b = toks.at[0, 10].set((toks[0, 10] + 7) % 256)
+    logits_b = model.logits_fn(cfg, params, toks_b)
+    np.testing.assert_allclose(
+        logits_a[0, :10], logits_b[0, :10], rtol=1e-5, atol=1e-5
+    )
+    assert not np.allclose(logits_a[0, 10:], logits_b[0, 10:])
+
+
+def test_rope_preserves_norm():
+    cos, sin = model.rope_tables(16, 32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, 2, 32))
+    y = model.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_sliding_window_differs_beyond_window():
+    cfg_m = model.CONFIGS["mistral-t"]
+    cfg_l = model.CONFIGS["llama-t"]
+    params = model.init_params(cfg_l, jax.random.PRNGKey(5))
+    toks = _toks(1, 128, seed=6)  # window=32 < T
+    la = model.logits_fn(cfg_l, params, toks)
+    lm = model.logits_fn(cfg_m, params, toks)
+    # Same weights, same block structure: only the mask differs, and only
+    # for positions ≥ window.
+    np.testing.assert_allclose(la[0, :32], lm[0, :32], rtol=1e-4, atol=1e-4)
+    assert not np.allclose(la[0, 100:], lm[0, 100:])
+
+
+def test_grams_match_direct_accumulation():
+    cfg = model.CONFIGS["llama-t"]
+    params = model.init_params(cfg, jax.random.PRNGKey(7))
+    toks = _toks(2, 32, seed=8)
+    _, _, grams, abssums = model.loss_and_grams_fn(cfg, params, toks)
+    assert set(grams) == set(model.tap_names(cfg))
+    for tap, g in grams.items():
+        n = g.shape[0]
+        assert g.shape == (n, n)
+        # Gram is symmetric PSD.
+        np.testing.assert_allclose(g, g.T, rtol=1e-4, atol=1e-3)
+        evals = np.linalg.eigvalsh(np.asarray(g))
+        assert evals.min() > -1e-2
+        assert abssums[tap].shape == (1, n)
+        assert float(abssums[tap].min()) >= 0.0
+
+
+def test_lowrank_forward_with_exact_factors_matches_dense():
+    """Factoring each weight exactly (full-rank SVD split) and padding to the
+    max ranks must reproduce the dense forward — the end-to-end validation of
+    the padded-rank executable trick."""
+    cfg = model.CONFIGS["llama-t"]
+    params = model.init_params(cfg, jax.random.PRNGKey(9))
+    toks = _toks(1, 16, seed=10)
+    shapes = model.linear_shapes(cfg)
+    factors = {}
+    for name, (n_in, n_out) in shapes.items():
+        w = np.asarray(params[name])
+        u, s, vt = np.linalg.svd(w, full_matrices=False)
+        k1m, k2m = model.max_ranks(n_in, n_out)
+        r = min(len(s), k1m)
+        p1 = np.zeros((n_in, k1m), np.float32)
+        q1 = np.zeros((k1m, n_out), np.float32)
+        p1[:, :r] = u[:, :r] * np.sqrt(s[:r])
+        q1[:r, :] = (vt[:r, :].T * np.sqrt(s[:r])).T
+        p2 = np.zeros((n_in, k2m), np.float32)
+        q2 = np.zeros((k2m, n_out), np.float32)
+        # Residual beyond k1m into stage 2 (if any).
+        r2 = min(len(s) - r, k2m)
+        if r2 > 0:
+            p2[:, :r2] = u[:, r:r + r2] * np.sqrt(s[r:r + r2])
+            q2[:r2, :] = (vt[r:r + r2, :].T * np.sqrt(s[r:r + r2])).T
+        factors[name] = tuple(jnp.asarray(a) for a in (p1, q1, p2, q2))
+    nll_lr, cnt_lr = model.lowrank_loss_fn(cfg, params, factors, toks)
+    nll_d, cnt_d = model.loss_fn(cfg, params, toks)
+    assert cnt_lr == cnt_d
+    # d=128 weights have rank ≤ 128 but k1m+k2m = 72 < 128, so exact equality
+    # is impossible; with random-init (near-isotropic) weights the truncation
+    # changes the loss slightly.  Use trained-weight-free tolerance: compare
+    # against the dense loss of the truncated reconstruction instead.
+    recon_params = dict(params)
+    for name in shapes:
+        p1, q1, p2, q2 = factors[name]
+        recon_params[name] = p1 @ q1 + p2 @ q2
+    nll_recon, _ = model.loss_fn(cfg, recon_params, toks)
+    np.testing.assert_allclose(float(nll_lr), float(nll_recon), rtol=1e-3)
+
+
+def test_max_ranks_match_rust_contract():
+    """Pin the rank formula (must match rust/src/compress/ranks.rs)."""
+    assert model.max_ranks(128, 128) == (57, 15)
+    assert model.max_ranks(128, 256) == (76, 19)
+    import math
+    k1m, k2m = model.max_ranks(384, 128)
+    assert k1m == int(0.9 * 384 * 128 / (384 + 128))
+    assert k2m == math.ceil(0.25 * k1m)

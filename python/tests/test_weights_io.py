@@ -1,0 +1,60 @@
+"""NSVDW interchange format: roundtrip + layout pinning for the Rust reader."""
+
+import struct
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile.weights_io import MAGIC, load_weights, save_weights
+
+
+def test_roundtrip(tmp_path: Path):
+    params = {
+        "a.w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([1.5], dtype=np.float32),
+        "c.scalar": np.float32(2.5),
+    }
+    path = tmp_path / "m.nsvdw"
+    save_weights(path, params)
+    back = load_weights(path)
+    assert set(back) == set(params)
+    np.testing.assert_array_equal(back["a.w"], params["a.w"])
+    np.testing.assert_array_equal(back["b"], params["b"])
+    assert float(back["c.scalar"]) == 2.5
+
+
+def test_binary_layout_is_pinned(tmp_path: Path):
+    """Byte-level pin so the Rust reader (model/weights.rs) cannot drift."""
+    params = {"w": np.array([[1.0, 2.0]], dtype=np.float32)}
+    path = tmp_path / "pin.nsvdw"
+    save_weights(path, params)
+    raw = path.read_bytes()
+    assert raw[:8] == MAGIC
+    (n,) = struct.unpack_from("<I", raw, 8)
+    assert n == 1
+    (name_len,) = struct.unpack_from("<H", raw, 12)
+    assert name_len == 1
+    assert raw[14:15] == b"w"
+    ndim = raw[15]
+    assert ndim == 2
+    dims = struct.unpack_from("<II", raw, 16)
+    assert dims == (1, 2)
+    vals = struct.unpack_from("<ff", raw, 24)
+    assert vals == (1.0, 2.0)
+    assert len(raw) == 24 + 8
+
+
+def test_names_are_sorted_on_disk(tmp_path: Path):
+    params = {"z": np.zeros(1, np.float32), "a": np.ones(1, np.float32)}
+    path = tmp_path / "s.nsvdw"
+    save_weights(path, params)
+    raw = path.read_bytes()
+    assert raw.find(b"\x01\x00a") < raw.find(b"\x01\x00z")
+
+
+def test_rejects_bad_magic(tmp_path: Path):
+    path = tmp_path / "bad.nsvdw"
+    path.write_bytes(b"WRONG!!!" + b"\x00" * 8)
+    with pytest.raises(ValueError):
+        load_weights(path)

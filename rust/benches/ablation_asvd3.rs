@@ -1,0 +1,30 @@
+//! §3 ablation bench: ASVD-II vs ASVD-III (Theorem 4 "failure trial").
+
+use nsvd::bench::{artifacts_dir, table_windows, Suite};
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::data::corpus::DOMAIN_NAMES;
+
+fn main() {
+    let mut suite = Suite::from_args("ablation_asvd3");
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = PipelineConfig::default_for_model("llama-t");
+    cfg.artifacts_dir = dir;
+    cfg.eval_windows = table_windows(suite.quick());
+    let mut pipeline = Pipeline::new(cfg).unwrap();
+    pipeline.calibrate().unwrap();
+    for method in [Method::AsvdII, Method::AsvdIII] {
+        let name = method.label().to_string();
+        let spec = CompressionSpec::new(method, 0.30);
+        let mut report = None;
+        suite.bench(&name, 1, || {
+            report = Some(pipeline.run(&spec).unwrap());
+        });
+        if let Some(r) = report {
+            for d in DOMAIN_NAMES {
+                suite.record_metric(&name, &format!("ppl_{d}"), r.ppl(d).unwrap_or(f64::NAN));
+            }
+        }
+    }
+    suite.finish();
+}

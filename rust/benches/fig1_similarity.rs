@@ -1,0 +1,23 @@
+//! Table 2 + Figure 1 regenerator-bench: activation similarity analysis.
+
+use nsvd::bench::{artifacts_dir, table_windows, Suite};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+
+fn main() {
+    let mut suite = Suite::from_args("fig1_similarity");
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = PipelineConfig::default_for_model("llama-t");
+    cfg.artifacts_dir = dir;
+    cfg.eval_windows = table_windows(suite.quick());
+    let mut pipeline = Pipeline::new(cfg).unwrap();
+    let mut reports = Vec::new();
+    suite.bench("similarity_all_domains", 1, || {
+        reports = pipeline.similarity_analysis().unwrap();
+    });
+    for r in &reports {
+        suite.record_metric("similarity_all_domains", &format!("mean_{}", r.dataset), r.mean);
+        suite.record_metric("similarity_all_domains", &format!("std_{}", r.dataset), r.std);
+        println!("Figure 1 [{}]:\n{}", r.dataset, r.ascii_histogram(10, 30));
+    }
+    suite.finish();
+}

@@ -1,0 +1,41 @@
+//! Perf: compress_layer throughput per method on a llama-t-shaped weight,
+//! and whole-model decomposition time.
+
+use nsvd::bench::Suite;
+use nsvd::compress::methods::{compress_layer, CompressionSpec, Method};
+use nsvd::compress::ranks;
+use nsvd::compress::whiten::CalibStats;
+use nsvd::linalg::matrix::Matrix;
+use nsvd::model::weights::Tensor;
+use nsvd::util::rng::Rng;
+
+fn stats(n: usize, rng: &mut Rng) -> CalibStats {
+    let x = Matrix::randn(4 * n, n, 1.0, rng);
+    let mut s = CalibStats::new(n);
+    s.gram = x.matmul_tn(&x);
+    s.abs_sum = (0..n).map(|j| (0..4 * n).map(|i| x[(i, j)].abs()).sum()).collect();
+    s.rows = 4 * n;
+    s
+}
+
+fn main() {
+    let mut suite = Suite::from_args("perf_decompose");
+    let mut rng = Rng::new(2);
+    let (n_in, n_out) = (128usize, 256usize); // llama-t MLP shape
+    let w = Tensor {
+        dims: vec![n_in, n_out],
+        data: Matrix::randn(n_in, n_out, 0.05, &mut rng).to_f32(),
+    };
+    let st = stats(n_in, &mut rng);
+    for method in [
+        Method::Svd, Method::Asvd0, Method::AsvdI, Method::AsvdII,
+        Method::AsvdIII, Method::NsvdI, Method::NsvdII, Method::NidI,
+    ] {
+        let spec = CompressionSpec { method, ratio: 0.30, alpha: 0.95 };
+        let plan = ranks::plan(n_out, n_in, 0.30, spec.effective_alpha());
+        suite.bench(&format!("layer_{}", method.label()), 3, || {
+            std::hint::black_box(compress_layer(&w, &st, &spec, &plan).unwrap());
+        });
+    }
+    suite.finish();
+}

@@ -1,0 +1,48 @@
+//! Perf: forward-pass engines — native f32 vs PJRT dense vs PJRT low-rank —
+//! in tokens/second at the eval batch shape.
+
+use nsvd::bench::{artifacts_dir, Suite};
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::data::batch::Batcher;
+use nsvd::data::corpus::Registry;
+use nsvd::eval::perplexity::EvalBackend;
+
+fn main() {
+    let mut suite = Suite::from_args("perf_forward");
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = PipelineConfig::default_for_model("llama-t");
+    cfg.artifacts_dir = dir.clone();
+    let mut pipeline = Pipeline::new(cfg).unwrap();
+    let registry = Registry::new(&dir);
+    let corpus = registry.load("wiki", "test").unwrap();
+    let batch = pipeline.batch();
+    let seq = pipeline.seq();
+    let tb = Batcher::new(batch, seq).eval_batches(&corpus, batch)[0].clone();
+    let tokens_per_iter = (batch * seq) as f64;
+
+    let rt = pipeline.runtime().unwrap();
+    let dense = rt.dense_evaluator("llama-t", batch).unwrap();
+    suite.bench_throughput("pjrt_dense_fwd", 10, tokens_per_iter, || {
+        std::hint::black_box(dense.loss(&tb).unwrap());
+    });
+
+    let cm = pipeline
+        .compress(&CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 })
+        .unwrap();
+    let rt = pipeline.runtime().unwrap();
+    let lowrank = rt.lowrank_evaluator("llama-t", batch, &cm).unwrap();
+    suite.bench_throughput("pjrt_lowrank_fwd", 10, tokens_per_iter, || {
+        std::hint::black_box(lowrank.loss(&tb).unwrap());
+    });
+
+    let backend = EvalBackend::Native {
+        cfg: &pipeline.model_cfg,
+        weights: &pipeline.weights,
+        compressed: None,
+    };
+    suite.bench_throughput("native_dense_fwd", 3, tokens_per_iter, || {
+        std::hint::black_box(backend.loss(&tb).unwrap());
+    });
+    suite.finish();
+}

@@ -1,0 +1,44 @@
+//! Perf: the linalg substrate's hot kernels across the sizes the
+//! decomposition path actually hits (d_model 128-256, d_ff up to 384).
+
+use nsvd::bench::Suite;
+use nsvd::linalg::chol::cholesky_psd;
+use nsvd::linalg::eig::sym_eig;
+use nsvd::linalg::id::interpolative;
+use nsvd::linalg::matrix::Matrix;
+use nsvd::linalg::qr::{qr_pivoted, qr_thin};
+use nsvd::linalg::svd::svd_thin;
+use nsvd::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::from_args("perf_linalg");
+    let mut rng = Rng::new(1);
+    for &n in &[128usize, 256, 384] {
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        suite.bench_throughput(&format!("matmul_{n}"), 5, flops, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        suite.bench(&format!("svd_{n}"), 3, || {
+            std::hint::black_box(svd_thin(&a));
+        });
+        let gram = a.matmul_nt(&a);
+        suite.bench(&format!("eig_{n}"), 3, || {
+            std::hint::black_box(sym_eig(&gram));
+        });
+        suite.bench(&format!("cholesky_{n}"), 5, || {
+            std::hint::black_box(cholesky_psd(&gram, 1e-8));
+        });
+        suite.bench(&format!("qr_{n}"), 5, || {
+            std::hint::black_box(qr_thin(&a));
+        });
+        suite.bench(&format!("qr_pivoted_{n}"), 3, || {
+            std::hint::black_box(qr_pivoted(&a));
+        });
+        suite.bench(&format!("id_k32_{n}"), 3, || {
+            std::hint::black_box(interpolative(&a, 32));
+        });
+    }
+    suite.finish();
+}

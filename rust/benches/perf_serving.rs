@@ -1,0 +1,48 @@
+//! Perf: serving loop — throughput and latency vs batcher wait policy.
+
+use nsvd::bench::{artifacts_dir, Suite};
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::coordinator::server::{self, BatchPolicy};
+use nsvd::data::corpus::Registry;
+
+fn main() {
+    let mut suite = Suite::from_args("perf_serving");
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = PipelineConfig::default_for_model("llama-t");
+    cfg.artifacts_dir = dir.clone();
+    let mut pipeline = Pipeline::new(cfg).unwrap();
+    let cm = pipeline
+        .compress(&CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 })
+        .unwrap();
+    let rt = pipeline.runtime().unwrap();
+    let eval = rt.serve_evaluator("llama-t", &cm).unwrap();
+    let corpus = Registry::new(&dir).load("c4", "test").unwrap();
+    let n = if suite.quick() { 40 } else { 160 };
+    for wait_ms in [0.5, 2.0, 8.0] {
+        let name = format!("closed_loop_wait{wait_ms}ms");
+        if !suite.enabled(&name) {
+            continue;
+        }
+        let mut thru = 0.0;
+        let mut p99 = 0.0;
+        suite.bench_throughput(&name, 1, n as f64, || {
+            let (req_tx, req_rx) = std::sync::mpsc::channel();
+            let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+            let producer =
+                server::spawn_load(corpus.tokens.clone(), eval.seq(), n, 0.0, req_tx);
+            let metrics = server::serve(
+                &eval, req_rx, resp_tx,
+                BatchPolicy { max_wait_s: wait_ms / 1e3 },
+            )
+            .unwrap();
+            producer.join().ok();
+            let _: Vec<_> = resp_rx.iter().collect();
+            thru = metrics.throughput_rps();
+            p99 = metrics.latency().p99;
+        });
+        suite.record_metric(&name, "throughput_rps", thru);
+        suite.record_metric(&name, "latency_p99_s", p99);
+    }
+    suite.finish();
+}

@@ -1,0 +1,41 @@
+//! Table 1 regenerator-bench: methods × ratios on llama-t.
+//!
+//! Times the full pipeline per (method, ratio) cell and records the
+//! perplexity metrics the table reports.  Rows are printed in the paper's
+//! layout by `nsvd table 1`; here we persist the raw numbers to
+//! target/bench-results/table1_ratios.json.
+
+use nsvd::bench::{artifacts_dir, table_windows, Suite};
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::data::corpus::DOMAIN_NAMES;
+
+fn main() {
+    let mut suite = Suite::from_args("table1_ratios");
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = PipelineConfig::default_for_model("llama-t");
+    cfg.artifacts_dir = dir;
+    cfg.eval_windows = table_windows(suite.quick());
+    let mut pipeline = Pipeline::new(cfg).unwrap();
+    pipeline.calibrate().unwrap();
+    let ratios: &[f64] = if suite.quick() { &[0.3] } else { &[0.1, 0.2, 0.3, 0.4, 0.5] };
+    for &ratio in ratios {
+        for method in Method::table1() {
+            let name = format!("{}_r{:02.0}", method.label(), ratio * 100.0);
+            if !suite.enabled(&name) {
+                continue;
+            }
+            let spec = CompressionSpec { method, ratio, alpha: 0.95 };
+            let mut report = None;
+            suite.bench(&name, 1, || {
+                report = Some(pipeline.run(&spec).unwrap());
+            });
+            if let Some(r) = report {
+                for d in DOMAIN_NAMES {
+                    suite.record_metric(&name, &format!("ppl_{d}"), r.ppl(d).unwrap_or(f64::NAN));
+                }
+            }
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,36 @@
+//! Table 3 regenerator-bench: NSVD-I k1 sweep at 30% on llama-t.
+
+use nsvd::bench::{artifacts_dir, table_windows, Suite};
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::data::corpus::DOMAIN_NAMES;
+
+fn main() {
+    let mut suite = Suite::from_args("table3_k1_sweep");
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = PipelineConfig::default_for_model("llama-t");
+    cfg.artifacts_dir = dir;
+    cfg.eval_windows = table_windows(suite.quick());
+    let mut pipeline = Pipeline::new(cfg).unwrap();
+    pipeline.calibrate().unwrap();
+    let alphas: &[f64] = if suite.quick() { &[0.95, 0.80] } else { &[0.99, 0.95, 0.90, 0.85, 0.80] };
+    // Reference baseline.
+    let asvd = pipeline.run(&CompressionSpec::new(Method::AsvdI, 0.30)).unwrap();
+    for d in DOMAIN_NAMES {
+        suite.record_metric("asvd_i_baseline", &format!("ppl_{d}"), asvd.ppl(d).unwrap_or(f64::NAN));
+    }
+    for &alpha in alphas {
+        let name = format!("nsvd_i_a{:.0}", alpha * 100.0);
+        let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha };
+        let mut report = None;
+        suite.bench(&name, 1, || {
+            report = Some(pipeline.run(&spec).unwrap());
+        });
+        if let Some(r) = report {
+            for d in DOMAIN_NAMES {
+                suite.record_metric(&name, &format!("ppl_{d}"), r.ppl(d).unwrap_or(f64::NAN));
+            }
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,34 @@
+//! Table 5 regenerator-bench: model families (vicuna/mistral/opt) at 30%.
+
+use nsvd::bench::{artifacts_dir, table_windows, Suite};
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::data::corpus::DOMAIN_NAMES;
+
+fn main() {
+    let mut suite = Suite::from_args("table5_families");
+    let Some(dir) = artifacts_dir() else { return };
+    let models: &[&str] =
+        if suite.quick() { &["opt-t"] } else { &["vicuna-t", "mistral-t", "opt-t"] };
+    for model in models {
+        let mut cfg = PipelineConfig::default_for_model(model);
+        cfg.artifacts_dir = dir.clone();
+        cfg.eval_windows = table_windows(suite.quick());
+        let mut pipeline = Pipeline::new(cfg).unwrap();
+        pipeline.calibrate().unwrap();
+        for (method, alpha) in [(Method::Asvd0, 1.0), (Method::AsvdI, 1.0), (Method::NsvdI, 0.95)] {
+            let name = format!("{model}_{}", method.label());
+            let spec = CompressionSpec { method, ratio: 0.30, alpha };
+            let mut report = None;
+            suite.bench(&name, 1, || {
+                report = Some(pipeline.run(&spec).unwrap());
+            });
+            if let Some(r) = report {
+                for d in DOMAIN_NAMES {
+                    suite.record_metric(&name, &format!("ppl_{d}"), r.ppl(d).unwrap_or(f64::NAN));
+                }
+            }
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,237 @@
+//! Criterion-free benchmark harness.
+//!
+//! `criterion` is unavailable offline, so `cargo bench` targets are declared
+//! with `harness = false` and drive this module instead.  It provides:
+//!
+//! * warmup + timed iterations with robust statistics ([`Bencher`]),
+//! * throughput annotation,
+//! * a `--filter` / `--quick` command line compatible with `cargo bench -- x`,
+//! * machine-readable JSON output next to human tables
+//!   (`target/bench-results/<suite>.json`) so EXPERIMENTS.md entries can be
+//!   regenerated.
+//!
+//! Paper-table benches print the reproduced table rows as part of the run.
+
+use crate::util::json::Json;
+use crate::util::timer::{Stats, Timer};
+
+/// Locate the artifacts directory for benches that need the real system.
+/// Returns `None` (benches print a SKIP notice) when `make artifacts` has
+/// not been run.
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Eval windows used by the paper-table benches; reduced in quick mode.
+pub fn table_windows(quick: bool) -> usize {
+    if quick {
+        16
+    } else {
+        48
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub stats: Stats,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<f64>,
+    /// Optional free-form metrics attached to this benchmark (e.g. the
+    /// perplexity numbers of the paper table the bench regenerates).
+    pub extra: Vec<(String, f64)>,
+}
+
+/// A benchmark suite: collects measurements, prints a table, writes JSON.
+pub struct Suite {
+    pub name: String,
+    filter: Option<String>,
+    quick: bool,
+    results: Vec<Measurement>,
+}
+
+impl Suite {
+    /// Parse `cargo bench` style args: any positional is a substring filter;
+    /// `--quick` cuts iteration counts (used by `cargo test --benches`).
+    pub fn from_args(name: &str) -> Suite {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let quick = argv.iter().any(|a| a == "--quick") || std::env::var("NSVD_BENCH_QUICK").is_ok();
+        let filter = argv
+            .iter()
+            .find(|a| !a.starts_with("--"))
+            .cloned();
+        Suite { name: name.to_string(), filter, quick, results: Vec::new() }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Should this benchmark run under the current filter?
+    pub fn enabled(&self, bench_name: &str) -> bool {
+        match &self.filter {
+            Some(f) => bench_name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Time `f`, which performs ONE iteration per call.
+    /// `iters` is scaled down in quick mode.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let iters = if self.quick { iters.clamp(1, 3) } else { iters.max(1) };
+        // Warmup: one iteration (compilation caches, page faults).
+        f();
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Timer::start();
+            f();
+            samples.push(t.elapsed_s());
+        }
+        let stats = Stats::from(&samples);
+        println!(
+            "bench {:<40} {}",
+            format!("{}::{}", self.name, name),
+            stats.display("s")
+        );
+        self.results.push(Measurement {
+            name: name.to_string(),
+            stats,
+            items: None,
+            extra: Vec::new(),
+        });
+    }
+
+    /// Like [`bench`] but annotates items/second throughput.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        iters: usize,
+        items_per_iter: f64,
+        mut f: F,
+    ) {
+        if !self.enabled(name) {
+            return;
+        }
+        self.bench(name, iters, &mut f);
+        if let Some(m) = self.results.last_mut() {
+            m.items = Some(items_per_iter);
+            if m.stats.mean > 0.0 {
+                println!(
+                    "      {:<40} throughput: {:.1} items/s",
+                    "", items_per_iter / m.stats.mean
+                );
+            }
+        }
+    }
+
+    /// Attach a named metric to the most recent measurement (or a standalone
+    /// record when no timing applies, e.g. accuracy rows of a paper table).
+    pub fn record_metric(&mut self, bench: &str, key: &str, value: f64) {
+        if let Some(m) = self.results.iter_mut().rev().find(|m| m.name == bench) {
+            m.extra.push((key.to_string(), value));
+        } else {
+            self.results.push(Measurement {
+                name: bench.to_string(),
+                stats: Stats::default(),
+                items: None,
+                extra: vec![(key.to_string(), value)],
+            });
+        }
+    }
+
+    /// Write results as JSON under `target/bench-results/` and finish.
+    pub fn finish(self) {
+        let mut arr = Vec::new();
+        for m in &self.results {
+            let mut o = Json::obj();
+            o.set("name", m.name.as_str())
+                .set("mean_s", m.stats.mean)
+                .set("std_s", m.stats.std)
+                .set("p50_s", m.stats.p50)
+                .set("p99_s", m.stats.p99)
+                .set("n", m.stats.n);
+            if let Some(items) = m.items {
+                o.set("items_per_iter", items);
+                if m.stats.mean > 0.0 {
+                    o.set("items_per_s", items / m.stats.mean);
+                }
+            }
+            if !m.extra.is_empty() {
+                let mut e = Json::obj();
+                for (k, v) in &m.extra {
+                    e.set(k, *v);
+                }
+                o.set("metrics", e);
+            }
+            arr.push(o);
+        }
+        let mut doc = Json::obj();
+        doc.set("suite", self.name.as_str()).set("results", Json::Arr(arr));
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("bench results written to {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut suite = Suite {
+            name: "t".into(),
+            filter: None,
+            quick: true,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        suite.bench("spin", 3, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(suite.results.len(), 1);
+        assert!(suite.results[0].stats.n >= 1);
+    }
+
+    #[test]
+    fn filter_gates_benches() {
+        let suite = Suite {
+            name: "t".into(),
+            filter: Some("svd".into()),
+            quick: true,
+            results: Vec::new(),
+        };
+        assert!(suite.enabled("nsvd_decompose"));
+        assert!(!suite.enabled("matmul"));
+    }
+
+    #[test]
+    fn record_metric_creates_standalone_entry() {
+        let mut suite = Suite {
+            name: "t".into(),
+            filter: None,
+            quick: true,
+            results: Vec::new(),
+        };
+        suite.record_metric("table1/wiki", "ppl", 7.07);
+        assert_eq!(suite.results.len(), 1);
+        assert_eq!(suite.results[0].extra[0].1, 7.07);
+    }
+}

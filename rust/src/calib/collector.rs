@@ -1,0 +1,201 @@
+//! Per-tap calibration statistics accumulation.
+//!
+//! The paper's protocol: 256 random sequences from the WikiText-2 train
+//! split flow through the dense model; every compressible linear's input
+//! activations are reduced to a Gram matrix `XᵀX` and an abs-sum vector.
+//! Streaming accumulation (Gram of stacked rows = sum of per-batch Grams) is
+//! pinned by a python-side test and re-verified here.
+
+use crate::compress::whiten::CalibStats;
+use crate::model::config::ModelConfig;
+use crate::model::forward::{self, NoOverride};
+use crate::model::weights::Weights;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Per-tap statistics for a model.
+#[derive(Clone, Debug, Default)]
+pub struct TapStats {
+    pub taps: BTreeMap<String, CalibStats>,
+}
+
+impl TapStats {
+    /// Stats for the tap feeding weight `name`.
+    pub fn for_linear(&self, name: &str) -> Option<&CalibStats> {
+        self.taps.get(&ModelConfig::tap_for_linear(name))
+    }
+
+    pub fn merge(&mut self, other: &TapStats) {
+        for (tap, stats) in &other.taps {
+            self.taps
+                .entry(tap.clone())
+                .and_modify(|s| s.merge(stats))
+                .or_insert_with(|| stats.clone());
+        }
+    }
+
+    /// Accumulate one raw activation block `x [rows, dim]` into a tap.
+    pub fn accumulate(&mut self, tap: &str, x: &[f32], rows: usize, dim: usize) {
+        let stats = self
+            .taps
+            .entry(tap.to_string())
+            .or_insert_with(|| CalibStats::new(dim));
+        assert_eq!(stats.dim(), dim, "tap {tap} dim changed");
+        for r in 0..rows {
+            let row = &x[r * dim..(r + 1) * dim];
+            for i in 0..dim {
+                let xi = row[i] as f64;
+                stats.abs_sum[i] += xi.abs();
+                // Upper triangle then mirror (Gram is symmetric).
+                for j in i..dim {
+                    stats.gram[(i, j)] += xi * row[j] as f64;
+                }
+            }
+        }
+        for i in 0..dim {
+            for j in (i + 1)..dim {
+                let v = stats.gram[(i, j)];
+                stats.gram[(j, i)] = v;
+            }
+        }
+        stats.rows += rows;
+    }
+
+    /// Accumulate pre-reduced Gram/abs-sum blocks (the PJRT artifact path:
+    /// the gram executable returns per-batch reductions).
+    pub fn accumulate_reduced(
+        &mut self,
+        tap: &str,
+        gram_block: &[f32],
+        abs_block: &[f32],
+        rows: usize,
+        dim: usize,
+    ) {
+        let stats = self
+            .taps
+            .entry(tap.to_string())
+            .or_insert_with(|| CalibStats::new(dim));
+        assert_eq!(gram_block.len(), dim * dim);
+        assert_eq!(abs_block.len(), dim);
+        for i in 0..dim {
+            stats.abs_sum[i] += abs_block[i] as f64;
+            for j in 0..dim {
+                stats.gram[(i, j)] += gram_block[i * dim + j] as f64;
+            }
+        }
+        stats.rows += rows;
+    }
+}
+
+/// Collect calibration stats with the native forward (fallback path and the
+/// parity oracle for the PJRT gram executable).
+pub fn collect_native(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    batches: &[crate::data::batch::TokenBatch],
+) -> Result<TapStats> {
+    let mut stats = TapStats::default();
+    for tb in batches {
+        // Note: padding rows would pollute the Gram; calibration batches are
+        // always full (asserted here).
+        assert_eq!(tb.valid_rows, tb.batch, "calibration batches must be full");
+        // A tap fires once per linear it feeds (attn_in feeds wq/wk/wv); the
+        // activation is identical, so record it ONCE per batch — mirrors the
+        // `if tap not in grams` guard in model.loss_and_grams_fn.
+        let mut seen: std::collections::BTreeSet<String> = Default::default();
+        let mut sink = |tap: &str, x: &[f32], rows: usize, dim: usize| {
+            if seen.insert(tap.to_string()) {
+                stats.accumulate(tap, x, rows, dim);
+            }
+        };
+        forward::forward_logits(
+            cfg, weights, &NoOverride, &tb.tokens, tb.batch, tb.seq, Some(&mut sink),
+        )?;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batch::Batcher;
+    use crate::data::corpus::Corpus;
+    use crate::model::forward::random_weights;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accumulate_matches_reduced_path() {
+        let mut rng = Rng::new(1);
+        let dim = 6;
+        let rows = 10;
+        let x: Vec<f32> = (0..rows * dim).map(|_| rng.normal() as f32).collect();
+        // Raw accumulation.
+        let mut raw = TapStats::default();
+        raw.accumulate("t", &x, rows, dim);
+        // Reduced accumulation from an externally computed Gram.
+        let mut gram = vec![0.0f32; dim * dim];
+        let mut abs = vec![0.0f32; dim];
+        for r in 0..rows {
+            for i in 0..dim {
+                abs[i] += x[r * dim + i].abs();
+                for j in 0..dim {
+                    gram[i * dim + j] += x[r * dim + i] * x[r * dim + j];
+                }
+            }
+        }
+        let mut red = TapStats::default();
+        red.accumulate_reduced("t", &gram, &abs, rows, dim);
+        let a = &raw.taps["t"];
+        let b = &red.taps["t"];
+        assert_eq!(a.rows, b.rows);
+        assert!(a.gram.dist(&b.gram) < 1e-3);
+        for (x, y) in a.abs_sum.iter().zip(&b.abs_sum) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn collect_native_produces_all_taps() {
+        let mut cfg = crate::model::config::ModelConfig::builtin("llama-t").unwrap();
+        cfg.n_layers = 2;
+        cfg.linear_shapes
+            .retain(|(n, _, _)| n.contains("blocks.0") || n.contains("blocks.1"));
+        let w = random_weights(&cfg, 2);
+        let corpus = Corpus {
+            name: "c".into(),
+            tokens: (0..4096).map(|i| (i % 251) as u8).collect(),
+        };
+        let mut rng = Rng::new(3);
+        let batches = Batcher::new(4, 32).calibration_batches(&corpus, 8, &mut rng);
+        let stats = collect_native(&cfg, &w, &batches).unwrap();
+        assert_eq!(stats.taps.len(), 8); // 4 taps × 2 layers
+        for (tap, s) in &stats.taps {
+            assert_eq!(s.rows, 8 * 32, "tap {tap}");
+            // Gram PSD-ish: diagonal non-negative.
+            for d in s.gram.diagonal() {
+                assert!(d >= 0.0);
+            }
+        }
+        // for_linear resolves through the tap map.
+        assert!(stats.for_linear("blocks.0.attn.wq").is_some());
+        assert!(stats.for_linear("blocks.1.mlp.w_down").is_some());
+    }
+
+    #[test]
+    fn merge_is_additive_in_rows() {
+        let mut rng = Rng::new(4);
+        let x1: Vec<f32> = (0..5 * 4).map(|_| rng.normal() as f32).collect();
+        let x2: Vec<f32> = (0..7 * 4).map(|_| rng.normal() as f32).collect();
+        let mut a = TapStats::default();
+        a.accumulate("t", &x1, 5, 4);
+        let mut b = TapStats::default();
+        b.accumulate("t", &x2, 7, 4);
+        let mut whole = TapStats::default();
+        let mut xall = x1.clone();
+        xall.extend_from_slice(&x2);
+        whole.accumulate("t", &xall, 12, 4);
+        a.merge(&b);
+        assert_eq!(a.taps["t"].rows, 12);
+        assert!(a.taps["t"].gram.dist(&whole.taps["t"].gram) < 1e-4);
+    }
+}

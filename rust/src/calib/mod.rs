@@ -1,0 +1,13 @@
+//! Calibration: activation Gram collection and similarity analysis.
+//!
+//! * [`collector`] — accumulates per-tap [`crate::compress::whiten::CalibStats`]
+//!   over calibration batches, either through the PJRT gram artifact (primary)
+//!   or the native forward's tap sink (fallback / parity).
+//! * [`similarity`] — Table 2 / Figure 1: cosine similarity between the
+//!   calibration activation profile and each evaluation set's profile.
+
+pub mod collector;
+pub mod similarity;
+
+pub use collector::TapStats;
+pub use similarity::{SimilarityReport, similarity_stats};

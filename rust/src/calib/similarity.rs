@@ -1,0 +1,158 @@
+//! Activation-similarity analysis — Table 2 and Figure 1.
+//!
+//! The paper measures cosine similarity between the activations induced by
+//! the calibration set and by each evaluation set.  We reduce each tap's
+//! activations to its RMS profile `√(diag(XᵀX)/rows)` (the per-dimension
+//! energy signature); per-tap cosine similarities between the calibration
+//! profile and the eval profile give a distribution over taps, whose
+//! mean/std is Table 2 and whose histogram is Figure 1.
+
+use super::collector::TapStats;
+use crate::util::timer::Stats;
+
+/// Similarity distribution of one evaluation set vs the calibration set.
+#[derive(Clone, Debug)]
+pub struct SimilarityReport {
+    pub dataset: String,
+    /// Per-tap cosine similarities (one entry per tap, model order).
+    pub per_tap: Vec<f64>,
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Cosine similarity between two non-negative profiles.
+pub fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+/// Compare an evaluation set's tap stats against the calibration stats.
+///
+/// The per-tap feature is the full normalized Gram `G/‖G‖_F` (not just its
+/// diagonal): two domains whose activations carry energy in the same
+/// *dimensions* but along different *directions* still read as dissimilar —
+/// this is the structure the whitening transform actually consumes.
+pub fn similarity_stats(dataset: &str, calib: &TapStats, eval: &TapStats) -> SimilarityReport {
+    let mut per_tap = Vec::new();
+    for (tap, cal_stats) in &calib.taps {
+        if let Some(eval_stats) = eval.taps.get(tap) {
+            let a = normalized_gram(cal_stats);
+            let b = normalized_gram(eval_stats);
+            per_tap.push(cosine(&a, &b));
+        }
+    }
+    let s = Stats::from(&per_tap);
+    SimilarityReport { dataset: dataset.to_string(), per_tap, mean: s.mean, std: s.std }
+}
+
+/// Flattened Frobenius-normalized Gram of a tap.
+fn normalized_gram(stats: &crate::compress::whiten::CalibStats) -> Vec<f64> {
+    let norm = stats.gram.fro_norm().max(1e-30);
+    stats.gram.data.iter().map(|&v| v / norm).collect()
+}
+
+impl SimilarityReport {
+    /// Histogram over [0, 1] with `bins` buckets — the Figure 1 series.
+    pub fn histogram(&self, bins: usize) -> Vec<usize> {
+        let mut h = vec![0usize; bins];
+        for &s in &self.per_tap {
+            let idx = ((s.clamp(0.0, 1.0)) * bins as f64) as usize;
+            h[idx.min(bins - 1)] += 1;
+        }
+        h
+    }
+
+    /// ASCII rendering of the histogram (Figure 1 as text).
+    pub fn ascii_histogram(&self, bins: usize, width: usize) -> String {
+        let h = self.histogram(bins);
+        let max = h.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &count) in h.iter().enumerate() {
+            let lo = i as f64 / bins as f64;
+            let hi = (i + 1) as f64 / bins as f64;
+            let bar = "█".repeat(count * width / max);
+            out.push_str(&format!("{lo:.2}-{hi:.2} |{bar:<width$}| {count}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::whiten::CalibStats;
+
+    fn stats_with_profile(profile: &[f64], rows: usize) -> CalibStats {
+        let n = profile.len();
+        let mut s = CalibStats::new(n);
+        for i in 0..n {
+            s.gram[(i, i)] = profile[i] * profile[i] * rows as f64;
+            s.abs_sum[i] = profile[i] * rows as f64;
+        }
+        s.rows = rows;
+        s
+    }
+
+    fn tapstats(profiles: &[(&str, Vec<f64>)]) -> TapStats {
+        let mut t = TapStats::default();
+        for (name, p) in profiles {
+            t.taps.insert(name.to_string(), stats_with_profile(p, 10));
+        }
+        t
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn identical_profiles_give_similarity_one() {
+        let cal = tapstats(&[("a", vec![1.0, 2.0, 3.0]), ("b", vec![2.0, 2.0, 1.0])]);
+        let rep = similarity_stats("self", &cal, &cal);
+        assert_eq!(rep.per_tap.len(), 2);
+        assert!((rep.mean - 1.0).abs() < 1e-9);
+        assert!(rep.std < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_profiles_give_low_similarity() {
+        let cal = tapstats(&[("a", vec![5.0, 5.0, 0.0, 0.0])]);
+        let ood = tapstats(&[("a", vec![0.0, 0.0, 5.0, 5.0])]);
+        let rep = similarity_stats("ood", &cal, &ood);
+        assert!(rep.mean < 0.05, "mean {}", rep.mean);
+    }
+
+    #[test]
+    fn histogram_bins_cover_range() {
+        let rep = SimilarityReport {
+            dataset: "t".into(),
+            per_tap: vec![0.05, 0.5, 0.51, 0.95, 1.0],
+            mean: 0.6,
+            std: 0.3,
+        };
+        let h = rep.histogram(10);
+        assert_eq!(h.iter().sum::<usize>(), 5);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[5], 2);
+        assert_eq!(h[9], 2); // 0.95 and the clamped 1.0
+        let ascii = rep.ascii_histogram(10, 20);
+        assert!(ascii.lines().count() == 10);
+    }
+
+    #[test]
+    fn missing_taps_are_skipped() {
+        let cal = tapstats(&[("a", vec![1.0, 1.0]), ("b", vec![1.0, 2.0])]);
+        let eval = tapstats(&[("a", vec![1.0, 1.0])]);
+        let rep = similarity_stats("partial", &cal, &eval);
+        assert_eq!(rep.per_tap.len(), 1);
+    }
+}

@@ -1,0 +1,245 @@
+//! Factored layer representation and the padded marshaling contract.
+//!
+//! A compressed weight `W [n_in, n_out]` (python storage convention) is held
+//! as four f32 factors applied row-wise:
+//!
+//! ```text
+//!   y = (x @ P1) @ Q1 + (x @ P2) @ Q2
+//!   P1 [n_in, k1]  Q1 [k1, n_out]   — stage 1 (activation-aware)
+//!   P2 [n_in, k2]  Q2 [k2, n_out]   — stage 2 (residual; empty for ASVD)
+//! ```
+//!
+//! In the paper's column convention (`A = Wᵀ`), `Q1ᵀ = W̃₁`, `P1ᵀ = Z̃₁`, so
+//! this is exactly Eq. 6.  `pad_to` zero-extends the factors to the fixed
+//! executable ranks — the zero block contributes nothing to the product,
+//! which test `padding_is_semantically_invisible` pins.
+
+use crate::linalg::matrix::Matrix;
+use crate::model::forward::LinearOverride;
+use crate::model::weights::Tensor;
+use std::collections::BTreeMap;
+
+/// One compressed linear layer (f32 factors, runtime representation).
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub k1: usize,
+    pub k2: usize,
+    /// Row-major f32 factor data.
+    pub p1: Vec<f32>, // [n_in, k1]
+    pub q1: Vec<f32>, // [k1, n_out]
+    pub p2: Vec<f32>, // [n_in, k2]
+    pub q2: Vec<f32>, // [k2, n_out]
+}
+
+impl CompressedLayer {
+    /// Build from f64 factor matrices (decomposition output).
+    /// `p1` is [n_in, k1], `q1` [k1, n_out], `p2` [n_in, k2], `q2` [k2, n_out].
+    pub fn from_matrices(p1: &Matrix, q1: &Matrix, p2: &Matrix, q2: &Matrix) -> CompressedLayer {
+        assert_eq!(p1.cols, q1.rows);
+        assert_eq!(p2.cols, q2.rows);
+        assert_eq!(p1.rows, p2.rows);
+        assert_eq!(q1.cols, q2.cols);
+        CompressedLayer {
+            n_in: p1.rows,
+            n_out: q1.cols,
+            k1: p1.cols,
+            k2: p2.cols,
+            p1: p1.to_f32(),
+            q1: q1.to_f32(),
+            p2: p2.to_f32(),
+            q2: q2.to_f32(),
+        }
+    }
+
+    /// Stored parameter count.
+    pub fn params(&self) -> usize {
+        (self.n_in + self.n_out) * (self.k1 + self.k2)
+    }
+
+    /// Native apply: `x [rows, n_in] → y [rows, n_out]`.
+    pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        use crate::model::forward::matmul_raw;
+        let h1 = matmul_raw(x, rows, self.n_in, &self.p1, self.k1);
+        let mut y = matmul_raw(&h1, rows, self.k1, &self.q1, self.n_out);
+        if self.k2 > 0 {
+            let h2 = matmul_raw(x, rows, self.n_in, &self.p2, self.k2);
+            let y2 = matmul_raw(&h2, rows, self.k2, &self.q2, self.n_out);
+            for (a, b) in y.iter_mut().zip(&y2) {
+                *a += b;
+            }
+        }
+        y
+    }
+
+    /// Reconstruct the dense weight `W̃ = P1 Q1 + P2 Q2` as a Tensor
+    /// (for error metrics and the native-forward materialized path).
+    pub fn reconstruct(&self) -> Tensor {
+        use crate::model::forward::matmul_raw;
+        let mut w = matmul_raw(&self.p1, self.n_in, self.k1, &self.q1, self.n_out);
+        if self.k2 > 0 {
+            let w2 = matmul_raw(&self.p2, self.n_in, self.k2, &self.q2, self.n_out);
+            for (a, b) in w.iter_mut().zip(&w2) {
+                *a += b;
+            }
+        }
+        Tensor { dims: vec![self.n_in, self.n_out], data: w }
+    }
+
+    /// Zero-pad factors to `(k1_max, k2_max)` — the executable's fixed shape.
+    pub fn pad_to(&self, k1_max: usize, k2_max: usize) -> CompressedLayer {
+        assert!(self.k1 <= k1_max && self.k2 <= k2_max,
+            "ranks ({}, {}) exceed padded maxima ({k1_max}, {k2_max})", self.k1, self.k2);
+        let pad_cols = |src: &[f32], rows: usize, from: usize, to: usize| {
+            let mut out = vec![0.0f32; rows * to];
+            for r in 0..rows {
+                out[r * to..r * to + from].copy_from_slice(&src[r * from..(r + 1) * from]);
+            }
+            out
+        };
+        let pad_rows = |src: &[f32], from: usize, to: usize, cols: usize| {
+            let mut out = vec![0.0f32; to * cols];
+            out[..from * cols].copy_from_slice(&src[..from * cols]);
+            out
+        };
+        CompressedLayer {
+            n_in: self.n_in,
+            n_out: self.n_out,
+            k1: k1_max,
+            k2: k2_max,
+            p1: pad_cols(&self.p1, self.n_in, self.k1, k1_max),
+            q1: pad_rows(&self.q1, self.k1, k1_max, self.n_out),
+            p2: pad_cols(&self.p2, self.n_in, self.k2, k2_max),
+            q2: pad_rows(&self.q2, self.k2, k2_max, self.n_out),
+        }
+    }
+}
+
+/// A full compressed model: per-weight factored layers.
+#[derive(Clone, Debug, Default)]
+pub struct CompressedModel {
+    pub layers: BTreeMap<String, CompressedLayer>,
+}
+
+impl CompressedModel {
+    pub fn insert(&mut self, name: &str, layer: CompressedLayer) {
+        self.layers.insert(name.to_string(), layer);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&CompressedLayer> {
+        self.layers.get(name)
+    }
+
+    /// Total stored parameters across factored layers.
+    pub fn params(&self) -> usize {
+        self.layers.values().map(|l| l.params()).sum()
+    }
+}
+
+impl LinearOverride for CompressedModel {
+    fn apply(&self, name: &str, x: &[f32], rows: usize, in_dim: usize) -> Option<Vec<f32>> {
+        self.layers.get(name).map(|layer| {
+            debug_assert_eq!(layer.n_in, in_dim);
+            layer.apply(x, rows)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_layer(n_in: usize, n_out: usize, k1: usize, k2: usize, rng: &mut Rng) -> CompressedLayer {
+        let p1 = Matrix::randn(n_in, k1, 1.0, rng);
+        let q1 = Matrix::randn(k1, n_out, 1.0, rng);
+        let p2 = Matrix::randn(n_in, k2, 1.0, rng);
+        let q2 = Matrix::randn(k2, n_out, 1.0, rng);
+        CompressedLayer::from_matrices(&p1, &q1, &p2, &q2)
+    }
+
+    #[test]
+    fn apply_matches_reconstructed_dense() {
+        check("apply == x @ reconstruct()", 15, |g| {
+            let mut rng = g.rng.fork(0);
+            let n_in = g.usize_in(2, 24);
+            let n_out = g.usize_in(2, 24);
+            let k1 = g.usize_in(1, 8);
+            let k2 = g.usize_in(0, 4);
+            let layer = random_layer(n_in, n_out, k1, k2, &mut rng);
+            let rows = g.usize_in(1, 10);
+            let x: Vec<f32> = (0..rows * n_in).map(|_| rng.normal() as f32).collect();
+            let y = layer.apply(&x, rows);
+            let w = layer.reconstruct();
+            let y_dense = crate::model::forward::matmul_raw(&x, rows, n_in, &w.data, n_out);
+            for (a, b) in y.iter().zip(&y_dense) {
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!("apply mismatch {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn padding_is_semantically_invisible() {
+        check("pad_to preserves the function", 15, |g| {
+            let mut rng = g.rng.fork(0);
+            let layer = random_layer(12, 10, 4, 2, &mut rng);
+            let padded = layer.pad_to(9, 5);
+            assert_eq!(padded.k1, 9);
+            assert_eq!(padded.k2, 5);
+            let rows = g.usize_in(1, 6);
+            let x: Vec<f32> = (0..rows * 12).map(|_| rng.normal() as f32).collect();
+            let y0 = layer.apply(&x, rows);
+            let y1 = padded.apply(&x, rows);
+            for (a, b) in y0.iter().zip(&y1) {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("padding changed output: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed padded maxima")]
+    fn pad_rejects_oversized_ranks() {
+        let mut rng = Rng::new(1);
+        let layer = random_layer(8, 8, 6, 2, &mut rng);
+        let _ = layer.pad_to(4, 2);
+    }
+
+    #[test]
+    fn params_accounting() {
+        let mut rng = Rng::new(2);
+        let layer = random_layer(100, 60, 10, 3, &mut rng);
+        assert_eq!(layer.params(), 160 * 13);
+        let mut model = CompressedModel::default();
+        model.insert("a", layer.clone());
+        model.insert("b", layer);
+        assert_eq!(model.params(), 2 * 160 * 13);
+    }
+
+    #[test]
+    fn zero_k2_layer_skips_stage2() {
+        let mut rng = Rng::new(3);
+        let layer = random_layer(6, 6, 3, 0, &mut rng);
+        let x: Vec<f32> = (0..12).map(|_| rng.normal() as f32).collect();
+        let y = layer.apply(&x, 2);
+        assert_eq!(y.len(), 12);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn linear_override_routes_by_name() {
+        let mut rng = Rng::new(4);
+        let mut model = CompressedModel::default();
+        model.insert("blocks.0.attn.wq", random_layer(8, 8, 2, 1, &mut rng));
+        let x = vec![1.0f32; 8];
+        assert!(model.apply("blocks.0.attn.wq", &x, 1, 8).is_some());
+        assert!(model.apply("blocks.0.attn.wk", &x, 1, 8).is_none());
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's compression methods.
+//!
+//! * [`ranks`]   — parameter budgeting: compression ratio → (k₁, k₂).
+//! * [`whiten`]  — activation-aware whitening transforms built from the
+//!                 calibration Gram (ASVD-0 diag, ASVD-I Cholesky, ASVD-II
+//!                 eigen, ASVD-III γ-scaled rotation).
+//! * [`methods`] — SVD / ASVD-0 / ASVD-I / ASVD-II / ASVD-III / NSVD-I/II /
+//!                 NID-I/II, all producing [`lowrank::CompressedLayer`]s.
+//! * [`lowrank`] — factored layer representation, padded marshaling for the
+//!                 fixed-shape PJRT executable, native apply + reconstruction.
+
+pub mod lowrank;
+pub mod methods;
+pub mod ranks;
+pub mod whiten;
+
+pub use lowrank::{CompressedLayer, CompressedModel};
+pub use methods::{compress_layer, CompressionSpec, Method};
+pub use ranks::RankPlan;

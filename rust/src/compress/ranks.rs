@@ -1,0 +1,217 @@
+//! Rank budgeting: compression ratio → per-layer (k₁, k₂).
+//!
+//! A dense weight of shape m×n stores `mn` parameters; a rank-k factor pair
+//! stores `(m+n)k`.  The paper's "compression ratio ρ" removes ρ of the
+//! parameters, so `k = ⌊(1-ρ)·mn/(m+n)⌋`, applied layer-wise (every
+//! compressible weight is compressed at the same ratio, as in SVD-LLM's
+//! protocol).  NSVD splits the same budget as `k₁ = round(α·k)`,
+//! `k₂ = k - k₁` (paper §4.2 sweeps α from 0.80 to 0.99).
+//!
+//! The padded maxima (`k1_max`, `k2_max`) must match
+//! `python/compile/model.py::max_ranks` — they define the fixed shapes of the
+//! low-rank PJRT executable.
+
+/// Rank plan for one weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RankPlan {
+    pub k: usize,
+    pub k1: usize,
+    pub k2: usize,
+}
+
+/// Total rank budget at compression ratio `ratio` for an m×n weight.
+pub fn k_budget(m: usize, n: usize, ratio: f64) -> usize {
+    let k = ((1.0 - ratio) * (m * n) as f64 / (m + n) as f64).floor() as usize;
+    k.max(1)
+}
+
+/// Split the budget: `k₁ = round(α·k)` (≥1), `k₂ = k - k₁`.
+/// `alpha = 1.0` reproduces the non-nested baselines (k₂ = 0).
+pub fn plan(m: usize, n: usize, ratio: f64, alpha: f64) -> RankPlan {
+    let k = k_budget(m, n, ratio);
+    let k1 = ((alpha * k as f64).round() as usize).clamp(1, k);
+    RankPlan { k, k1, k2: k - k1 }
+}
+
+/// Padded executable ranks; MUST match python `model.max_ranks(n_in, n_out)`.
+/// Note the python side passes (n_in, n_out) and the formula is symmetric.
+pub fn max_ranks(m: usize, n: usize) -> (usize, usize) {
+    let kmax = ((1.0 - 0.10) * (m * n) as f64 / (m + n) as f64) as usize;
+    let k1max = kmax.max(1);
+    let k2max = ((0.25 * kmax as f64).ceil() as usize).max(1);
+    (k1max, k2max)
+}
+
+/// Parameters stored by a nested factorization of an m×n weight.
+pub fn factored_params(m: usize, n: usize, plan: &RankPlan) -> usize {
+    (m + n) * (plan.k1 + plan.k2)
+}
+
+/// Achieved compression ratio of a plan (fraction of parameters removed).
+pub fn achieved_ratio(m: usize, n: usize, plan: &RankPlan) -> f64 {
+    1.0 - factored_params(m, n, plan) as f64 / (m * n) as f64
+}
+
+/// Global (adaptive) rank allocation — the extension the ASVD line of work
+/// motivates: instead of compressing every layer at the same ratio, spend a
+/// single global parameter budget where the whitened spectra say the mass
+/// is.
+///
+/// Greedy water-filling: each layer ℓ offers marginal gains
+/// `σ²_{ℓ,k+1} / cost_ℓ` where `cost_ℓ = (m_ℓ + n_ℓ)` parameters per rank
+/// unit (Theorem 2: keeping singular value σ removes exactly σ² of squared
+/// activation-weighted loss).  Ranks are granted to the best offer until the
+/// budget is spent.  Every layer keeps at least rank 1.
+pub fn allocate_global(
+    layers: &[(usize, usize, Vec<f64>)], // (m, n, whitened singular values desc)
+    ratio: f64,
+    alpha: f64,
+) -> Vec<RankPlan> {
+    let total_dense: usize = layers.iter().map(|(m, n, _)| m * n).sum();
+    let budget = ((1.0 - ratio) * total_dense as f64) as usize;
+    let mut ks: Vec<usize> = vec![1; layers.len()];
+    let mut spent: usize = layers.iter().map(|(m, n, _)| m + n).sum();
+    // Greedy: repeatedly grant one rank to the layer with the best
+    // marginal (loss removed per parameter spent).
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, (m, n, s)) in layers.iter().enumerate() {
+            let k = ks[i];
+            if k >= s.len() || k >= *m.min(n) {
+                continue;
+            }
+            let cost = m + n;
+            if spent + cost > budget {
+                continue;
+            }
+            let gain = s[k] * s[k] / cost as f64;
+            if best.map(|(_, g)| gain > g).unwrap_or(true) {
+                best = Some((i, gain));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                ks[i] += 1;
+                spent += layers[i].0 + layers[i].1;
+            }
+            None => break,
+        }
+    }
+    ks.iter()
+        .map(|&k| {
+            let k1 = ((alpha * k as f64).round() as usize).clamp(1, k);
+            RankPlan { k, k1, k2: k - k1 }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn budget_matches_hand_computation() {
+        // 128×128 at 30%: 0.7·16384/256 = 44.8 → 44.
+        assert_eq!(k_budget(128, 128, 0.30), 44);
+        // 10%: 57.6 → 57 (the padded k1max).
+        assert_eq!(k_budget(128, 128, 0.10), 57);
+    }
+
+    #[test]
+    fn max_ranks_match_python_contract() {
+        assert_eq!(max_ranks(128, 128), (57, 15));
+        assert_eq!(max_ranks(128, 256), (76, 19));
+        assert_eq!(max_ranks(256, 128), (76, 19)); // symmetric
+    }
+
+    #[test]
+    fn plan_splits_budget_exactly() {
+        check("k1 + k2 = k for all α", 50, |g| {
+            let m = g.usize_in(8, 512);
+            let n = g.usize_in(8, 512);
+            let ratio = g.f64_in(0.05, 0.6);
+            let alpha = *g.choose(&[0.80, 0.85, 0.90, 0.95, 0.99, 1.0]);
+            let p = plan(m, n, ratio, alpha);
+            if p.k1 + p.k2 != p.k {
+                return Err(format!("{p:?}"));
+            }
+            if p.k1 == 0 {
+                return Err("k1 must be ≥ 1".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn alpha_one_is_non_nested() {
+        let p = plan(128, 128, 0.30, 1.0);
+        assert_eq!(p.k2, 0);
+        assert_eq!(p.k1, p.k);
+    }
+
+    #[test]
+    fn achieved_ratio_is_close_to_requested() {
+        check("achieved ratio ≈ requested", 40, |g| {
+            let m = g.usize_in(64, 512);
+            let n = g.usize_in(64, 512);
+            let ratio = g.f64_in(0.1, 0.5);
+            let p = plan(m, n, ratio, 0.95);
+            let achieved = achieved_ratio(m, n, &p);
+            // Floor quantization costs at most (m+n)/(m·n) in ratio.
+            let quantum = (m + n) as f64 / (m * n) as f64;
+            if (achieved - ratio).abs() > quantum + 1e-9 {
+                return Err(format!("requested {ratio}, achieved {achieved}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn global_allocation_respects_budget_and_prefers_heavy_spectra() {
+        // Layer 0 has a flat spectrum (all directions matter); layer 1 decays
+        // fast (rank-2-ish).  Global allocation should give layer 0 more rank.
+        let flat: Vec<f64> = vec![1.0; 64];
+        let decayed: Vec<f64> = (0..64).map(|i| 2.0f64.powi(-(i as i32))).collect();
+        let layers = vec![(64usize, 64usize, flat), (64, 64, decayed)];
+        let plans = allocate_global(&layers, 0.5, 1.0);
+        let spent: usize = plans.iter().enumerate().map(|(i, p)| {
+            (layers[i].0 + layers[i].1) * p.k
+        }).sum();
+        let budget = ((1.0 - 0.5) * (2 * 64 * 64) as f64) as usize;
+        assert!(spent <= budget, "spent {spent} > budget {budget}");
+        assert!(plans[0].k > plans[1].k, "flat spectrum should win ranks: {plans:?}");
+        assert!(plans.iter().all(|p| p.k >= 1));
+    }
+
+    #[test]
+    fn global_allocation_matches_uniform_on_identical_layers() {
+        check("identical layers → near-uniform global ranks", 10, |g| {
+            let n = g.usize_in(16, 64);
+            let s: Vec<f64> = (0..n).map(|i| 1.0 / (i + 1) as f64).collect();
+            let layers = vec![(n, n, s.clone()), (n, n, s.clone()), (n, n, s)];
+            let plans = allocate_global(&layers, 0.4, 1.0);
+            let ks: Vec<usize> = plans.iter().map(|p| p.k).collect();
+            let spread = ks.iter().max().unwrap() - ks.iter().min().unwrap();
+            if spread > 1 {
+                return Err(format!("identical layers diverged: {ks:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plans_fit_within_padded_maxima() {
+        // Every experiment configuration must fit the padded executable.
+        for &(m, n) in &[(128usize, 128usize), (128, 256), (256, 128), (384, 128), (128, 384)] {
+            let (k1m, k2m) = max_ranks(m, n);
+            for &ratio in &[0.10, 0.20, 0.30, 0.40, 0.50] {
+                for &alpha in &[0.80, 0.85, 0.90, 0.95, 0.99, 1.0] {
+                    let p = plan(m, n, ratio, alpha);
+                    assert!(p.k1 <= k1m, "k1 {} > k1max {k1m} (m={m},n={n},ρ={ratio},α={alpha})", p.k1);
+                    assert!(p.k2 <= k2m, "k2 {} > k2max {k2m} (m={m},n={n},ρ={ratio},α={alpha})", p.k2);
+                }
+            }
+        }
+    }
+}

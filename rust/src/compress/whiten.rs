@@ -1,0 +1,330 @@
+//! Activation-aware whitening transforms (paper §3).
+//!
+//! Each variant supplies `S` (and its inverse action) with which the weight
+//! is transformed before truncated SVD: decompose `AS`, then un-whiten the
+//! right factor with `S⁻¹` (or `S⁺`).  Variants:
+//!
+//! * [`Whitener::Identity`] — plain SVD (no activation awareness).
+//! * [`Whitener::Diag`]     — ASVD-0: `S = diag(mean |xᵢ|)` (Yuan et al.).
+//! * [`Whitener::Chol`]     — ASVD-I / SVD-LLM: `S S ᵀ = XXᵀ` via Cholesky
+//!   (PSD-safe ridge, reported), Theorem 2.
+//! * [`Whitener::Eig`]      — ASVD-II: `S = P Λ^{1/2}` from the spectral
+//!   decomposition, pseudo-inverse for rank-deficient Grams, Theorem 3.
+//! * [`Whitener::EigGamma`] — ASVD-III (failure-trial ablation): `S = P·γ`
+//!   with `γ = max(Λ^{1/2})`, Theorem 4.
+
+use crate::linalg::chol::{cholesky_psd, invert_lower};
+use crate::linalg::eig::{sym_eig, SymEig};
+use crate::linalg::matrix::Matrix;
+
+/// Calibration statistics for one tap (accumulated over batches).
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    /// `Σ x xᵀ` over all calibration rows — [n, n].
+    pub gram: Matrix,
+    /// `Σ |x|` per dimension — length n.
+    pub abs_sum: Vec<f64>,
+    /// Number of accumulated rows.
+    pub rows: usize,
+}
+
+impl CalibStats {
+    pub fn new(n: usize) -> CalibStats {
+        CalibStats { gram: Matrix::zeros(n, n), abs_sum: vec![0.0; n], rows: 0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.gram.rows
+    }
+
+    /// Merge another accumulator (streaming/sharded collection).
+    pub fn merge(&mut self, other: &CalibStats) {
+        assert_eq!(self.dim(), other.dim());
+        self.gram = &self.gram + &other.gram;
+        for (a, b) in self.abs_sum.iter_mut().zip(&other.abs_sum) {
+            *a += b;
+        }
+        self.rows += other.rows;
+    }
+
+    /// Per-dimension mean absolute activation (the ASVD-0 scale).
+    pub fn abs_mean(&self) -> Vec<f64> {
+        let r = self.rows.max(1) as f64;
+        self.abs_sum.iter().map(|&s| s / r).collect()
+    }
+
+    /// RMS activation profile `√(diag(G)/rows)` — the similarity feature
+    /// used for Table 2 / Figure 1.
+    pub fn rms_profile(&self) -> Vec<f64> {
+        let r = self.rows.max(1) as f64;
+        self.gram.diagonal().iter().map(|&d| (d.max(0.0) / r).sqrt()).collect()
+    }
+}
+
+/// A whitening transform.
+pub enum Whitener {
+    Identity,
+    /// diag scale s (clamped away from zero) and its reciprocal.
+    Diag { s: Vec<f64> },
+    /// Lower-triangular Cholesky factor and the ridge that was added.
+    Chol { l: Matrix, ridge: f64 },
+    /// Spectral decomposition of the Gram.
+    Eig { eig: SymEig },
+    /// ASVD-III: rotation P scaled by γ = max eigenvalue^{1/2}.
+    EigGamma { eig: SymEig, gamma: f64 },
+}
+
+impl Whitener {
+    /// Build the whitener required by a method from calibration stats.
+    pub fn identity() -> Whitener {
+        Whitener::Identity
+    }
+
+    pub fn diag(stats: &CalibStats) -> Whitener {
+        let mut s = stats.abs_mean();
+        // Clamp: a dimension never activated in calibration must not blow up
+        // the inverse scale (same guard ASVD uses).
+        let max = s.iter().cloned().fold(0.0, f64::max).max(1e-12);
+        for v in s.iter_mut() {
+            *v = v.max(1e-6 * max);
+        }
+        Whitener::Diag { s }
+    }
+
+    pub fn cholesky(stats: &CalibStats) -> Whitener {
+        let (l, ridge) = cholesky_psd(&stats.gram, 1e-8);
+        Whitener::Chol { l, ridge }
+    }
+
+    pub fn eigen(stats: &CalibStats) -> Whitener {
+        Whitener::Eig { eig: sym_eig(&stats.gram) }
+    }
+
+    pub fn eigen_gamma(stats: &CalibStats) -> Whitener {
+        let eig = sym_eig(&stats.gram);
+        let gamma = eig.values.first().copied().unwrap_or(0.0).max(1e-30).sqrt();
+        Whitener::EigGamma { eig, gamma }
+    }
+
+    /// `A S` — the whitened matrix handed to the SVD (A is m×n, S n×n).
+    pub fn whiten(&self, a: &Matrix) -> Matrix {
+        match self {
+            Whitener::Identity => a.clone(),
+            Whitener::Diag { s } => a.scale_cols(s),
+            Whitener::Chol { l, .. } => a.matmul(l),
+            Whitener::Eig { eig } => a.matmul(&eig.sqrt_factor()),
+            Whitener::EigGamma { eig, gamma } => a.matmul(&eig.vectors).scale(*gamma),
+        }
+    }
+
+    /// Given the truncated right factor `Vᵀ_k` of the whitened matrix
+    /// (k×n, rows = right singular vectors), return `Vᵀ_k S⁻¹` — the
+    /// un-whitened right factor of the approximation of A.
+    pub fn unwhiten_rows(&self, vt: &Matrix) -> Matrix {
+        match self {
+            Whitener::Identity => vt.clone(),
+            Whitener::Diag { s } => {
+                let inv: Vec<f64> = s.iter().map(|&x| 1.0 / x).collect();
+                vt.scale_cols(&inv)
+            }
+            Whitener::Chol { l, .. } => vt.matmul(&invert_lower(l)),
+            // Tolerance matched to the Cholesky ridge scale (1e-8·mean diag):
+            // eigendirections carrying less relative mass are null-space, not
+            // signal — inverting them amplifies calibration noise into the
+            // un-whitened factors (visible as OOD perplexity blow-ups).
+            Whitener::Eig { eig } => vt.matmul(&eig.sqrt_factor_pinv(1e-8)),
+            Whitener::EigGamma { eig, gamma } => {
+                vt.matmul(&eig.vectors.transpose()).scale(1.0 / gamma)
+            }
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Whitener::Identity => "identity",
+            Whitener::Diag { .. } => "diag(abs-mean)",
+            Whitener::Chol { .. } => "cholesky",
+            Whitener::Eig { .. } => "eigen",
+            Whitener::EigGamma { .. } => "eigen-gamma",
+        }
+    }
+}
+
+/// Activation-weighted squared loss `‖E·X‖²_F = tr(E G Eᵀ)` where E = A - Ã
+/// is in the paper's row convention (E is m×n, G = XXᵀ is n×n).
+pub fn activation_loss_sq(err: &Matrix, gram: &Matrix) -> f64 {
+    let eg = err.matmul(gram);
+    eg.data.iter().zip(&err.data).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd_thin;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn ok(cond: bool, what: &str) -> Result<(), String> {
+        if cond {
+            Ok(())
+        } else {
+            Err(what.to_string())
+        }
+    }
+
+    /// Full-rank calibration stats from random activations; returns (stats, X).
+    fn random_stats(n: usize, samples: usize, rng: &mut Rng) -> (CalibStats, Matrix) {
+        let x = Matrix::randn(samples, n, 1.0, rng); // rows = activations
+        let mut stats = CalibStats::new(n);
+        stats.gram = x.matmul_tn(&x); // XᵀX in row convention = paper's XXᵀ
+        for i in 0..samples {
+            for j in 0..n {
+                stats.abs_sum[j] += x[(i, j)].abs();
+            }
+        }
+        stats.rows = samples;
+        (stats, x)
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut rng = Rng::new(1);
+        let (mut s1, _) = random_stats(6, 20, &mut rng);
+        let (s2, _) = random_stats(6, 30, &mut rng);
+        let g1 = s1.gram.clone();
+        s1.merge(&s2);
+        assert_eq!(s1.rows, 50);
+        assert!((&s1.gram - &g1).dist(&s2.gram) < 1e-12);
+    }
+
+    #[test]
+    fn whiten_unwhiten_roundtrip_identity() {
+        // For any whitener W: unwhiten_rows(whiten(A) 's Vᵀ) must satisfy
+        // U Σ (Vᵀ S⁻¹) = A when no truncation happens (full rank).
+        check("UΣVᵀS⁻¹ = A (no truncation)", 12, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(4, 12);
+            let n = g.usize_in(4, 12);
+            let (stats, _) = random_stats(n, n + 8, &mut rng); // full-rank gram
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            for w in [
+                Whitener::identity(),
+                Whitener::diag(&stats),
+                Whitener::cholesky(&stats),
+                Whitener::eigen(&stats),
+                Whitener::eigen_gamma(&stats),
+            ] {
+                let aw = w.whiten(&a);
+                let svd = svd_thin(&aw);
+                let vt = svd.v.transpose();
+                let right = w.unwhiten_rows(&vt);
+                let recon = svd.u.scale_cols(&svd.s).matmul(&right);
+                ok(
+                    recon.dist(&a) < 1e-6 * (1.0 + a.fro_norm()),
+                    &format!("{} roundtrip", w.kind()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn theorem2_truncation_loss_equals_sigma_tail() {
+        // ASVD-I/II core claim: with S from the Gram, the activation-weighted
+        // loss of rank-k truncation equals √(Σ_{i>k} σᵢ²) of AS.
+        check("‖(A-Ã)X‖_F = tail(σ)", 10, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(4, 10);
+            let n = g.usize_in(4, 10);
+            let (stats, _x) = random_stats(n, n + 10, &mut rng);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let k = g.usize_in(1, m.min(n));
+            for w in [Whitener::cholesky(&stats), Whitener::eigen(&stats)] {
+                let aw = w.whiten(&a);
+                let svd = svd_thin(&aw);
+                let trunc = svd.truncate(k);
+                let right = w.unwhiten_rows(&trunc.v.transpose());
+                let a_tilde = trunc.u.scale_cols(&trunc.s).matmul(&right);
+                let err = &a - &a_tilde;
+                let loss = activation_loss_sq(&err, &stats.gram).max(0.0).sqrt();
+                let tail = svd.tail_norm(k);
+                // Cholesky adds a tiny ridge → tolerance scaled to norms.
+                let tol = 1e-4 * (1.0 + svd.s[0]);
+                ok(
+                    (loss - tail).abs() < tol,
+                    &format!("{}: loss={loss:.6} tail={tail:.6}", w.kind()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chol_and_eig_give_equivalent_approximations() {
+        // Theorem 3(ii): ASVD-I and ASVD-II are equivalent on full-rank X.
+        let mut rng = Rng::new(2);
+        let (stats, _) = random_stats(8, 40, &mut rng);
+        let a = Matrix::randn(6, 8, 1.0, &mut rng);
+        let k = 3;
+        let mut recons = Vec::new();
+        for w in [Whitener::cholesky(&stats), Whitener::eigen(&stats)] {
+            let aw = w.whiten(&a);
+            let svd = svd_thin(&aw).truncate(k);
+            let right = w.unwhiten_rows(&svd.v.transpose());
+            recons.push(svd.u.scale_cols(&svd.s).matmul(&right));
+        }
+        assert!(
+            recons[0].dist(&recons[1]) < 1e-4 * (1.0 + recons[0].fro_norm()),
+            "chol vs eig dist {}",
+            recons[0].dist(&recons[1])
+        );
+    }
+
+    #[test]
+    fn eig_handles_rank_deficient_gram() {
+        // Calibration with fewer samples than dims: Gram is singular.  ASVD-II
+        // must still work (pseudo-inverse); ASVD-I needs its ridge.
+        let mut rng = Rng::new(3);
+        let (stats, _) = random_stats(10, 4, &mut rng); // rank ≤ 4
+        let a = Matrix::randn(5, 10, 1.0, &mut rng);
+        let w = Whitener::eigen(&stats);
+        let aw = w.whiten(&a);
+        let svd = svd_thin(&aw).truncate(3);
+        let right = w.unwhiten_rows(&svd.v.transpose());
+        let recon = svd.u.scale_cols(&svd.s).matmul(&right);
+        assert!(recon.data.iter().all(|v| v.is_finite()));
+        let wc = Whitener::cholesky(&stats);
+        if let Whitener::Chol { ridge, .. } = &wc {
+            assert!(*ridge > 0.0, "ridge must engage on singular gram");
+        }
+    }
+
+    #[test]
+    fn diag_whitener_clamps_dead_dimensions() {
+        let mut stats = CalibStats::new(4);
+        stats.rows = 10;
+        stats.abs_sum = vec![10.0, 0.0, 5.0, 20.0]; // dim 1 never fires
+        let w = Whitener::diag(&stats);
+        if let Whitener::Diag { s } = &w {
+            assert!(s[1] > 0.0);
+        }
+        let a = Matrix::identity(4);
+        let aw = w.whiten(&a);
+        assert!(aw.data.iter().all(|v| v.is_finite()));
+        let back = w.unwhiten_rows(&aw);
+        assert!(back.dist(&Matrix::identity(4)) < 1e-9);
+    }
+
+    #[test]
+    fn activation_loss_matches_direct_computation() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(30, 6, 1.0, &mut rng);
+        let gram = x.matmul_tn(&x);
+        let e = Matrix::randn(4, 6, 1.0, &mut rng);
+        // Direct: ‖E Xᵀ‖²_F (paper's EX with X = n×p = xᵀ).
+        let ext = e.matmul_nt(&x);
+        let direct = ext.fro_norm().powi(2);
+        let via_gram = activation_loss_sq(&e, &gram);
+        assert!((direct - via_gram).abs() < 1e-6 * (1.0 + direct));
+    }
+}

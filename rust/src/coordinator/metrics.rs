@@ -1,0 +1,88 @@
+//! Serving metrics: latency, queue wait, batch-size distribution.
+
+use crate::util::timer::Stats;
+
+/// Accumulates serving-side observations.
+#[derive(Clone, Debug, Default)]
+pub struct ServerMetrics {
+    /// End-to-end request latency (seconds).
+    pub latency_s: Vec<f64>,
+    /// Time spent queued before batching (seconds).
+    pub queue_wait_s: Vec<f64>,
+    /// Rows actually used per executed batch.
+    pub batch_fill: Vec<f64>,
+    /// Total requests completed.
+    pub completed: usize,
+    /// Total batches executed.
+    pub batches: usize,
+    /// Wall-clock of the serving window (seconds).
+    pub wall_s: f64,
+}
+
+impl ServerMetrics {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn latency(&self) -> Stats {
+        Stats::from(&self.latency_s)
+    }
+
+    pub fn queue_wait(&self) -> Stats {
+        Stats::from(&self.queue_wait_s)
+    }
+
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batch_fill.is_empty() {
+            0.0
+        } else {
+            self.batch_fill.iter().sum::<f64>() / self.batch_fill.len() as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let lat = self.latency();
+        format!(
+            "requests={} batches={} throughput={:.1} req/s mean_fill={:.2} \
+             latency p50={:.1}ms p99={:.1}ms max={:.1}ms",
+            self.completed,
+            self.batches,
+            self.throughput_rps(),
+            self.mean_batch_fill(),
+            lat.p50 * 1e3,
+            lat.p99 * 1e3,
+            lat.max * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_fill() {
+        let m = ServerMetrics {
+            latency_s: vec![0.01, 0.02],
+            queue_wait_s: vec![0.001, 0.002],
+            batch_fill: vec![8.0, 4.0],
+            completed: 12,
+            batches: 2,
+            wall_s: 2.0,
+        };
+        assert_eq!(m.throughput_rps(), 6.0);
+        assert_eq!(m.mean_batch_fill(), 6.0);
+        assert!(m.summary().contains("requests=12"));
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.throughput_rps(), 0.0);
+        assert_eq!(m.mean_batch_fill(), 0.0);
+    }
+}

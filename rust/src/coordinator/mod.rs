@@ -1,0 +1,19 @@
+//! L3 coordinator — the orchestration layer.
+//!
+//! * [`pipeline`]  — the post-training compression pipeline: calibrate →
+//!   whiten → decompose → rebuild → evaluate, with cached calibration.
+//! * [`scheduler`] — multi-job experiment scheduler over the worker pool
+//!   (used by the table regenerators to sweep ratios/methods).
+//! * [`server`]    — the serving loop: request queue, dynamic batcher over
+//!   the per-row serving executable, latency metrics.
+//! * [`reports`]   — renders the paper's tables (markdown + JSON).
+//! * [`metrics`]   — latency/throughput instrumentation.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod reports;
+pub mod scheduler;
+pub mod server;
+
+pub use pipeline::{Pipeline, PipelineConfig};
+pub use reports::Table;

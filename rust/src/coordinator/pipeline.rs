@@ -1,0 +1,287 @@
+//! The compression pipeline: calibrate → decompose → evaluate.
+//!
+//! Mirrors the paper's protocol:
+//! 1. sample 256 random sequences from the WikiText-2 (wiki) train split;
+//! 2. accumulate per-tap activation Grams through the dense model;
+//! 3. decompose every compressible weight with the requested method at the
+//!    requested ratio/α;
+//! 4. evaluate perplexity on the eight test sets.
+//!
+//! Calibration is computed once per `Pipeline` and shared across all
+//! method/ratio sweeps (the expensive part is the forward, not the SVDs).
+
+use crate::calib::collector::{collect_native, TapStats};
+use crate::calib::similarity::{similarity_stats, SimilarityReport};
+use crate::compress::lowrank::CompressedModel;
+use crate::compress::methods::{compress_layer_with, CompressionSpec};
+use crate::compress::whiten::Whitener;
+use crate::compress::ranks;
+use crate::data::batch::Batcher;
+use crate::data::corpus::{Corpus, Registry, DOMAIN_NAMES};
+use crate::eval::perplexity::{evaluate, EvalBackend, PerplexityResult};
+use crate::model::config::ModelConfig;
+use crate::model::weights::Weights;
+use crate::runtime::exec::Runtime;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    /// Calibration sample count (paper: 256 sequences).
+    pub calib_samples: usize,
+    /// Eval windows per dataset (rounded down to full batches on PJRT).
+    pub eval_windows: usize,
+    /// Use the PJRT executables (true) or the native forward (false).
+    pub use_pjrt: bool,
+    pub seed: u64,
+}
+
+impl PipelineConfig {
+    pub fn default_for_model(model: &str) -> PipelineConfig {
+        PipelineConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: model.to_string(),
+            calib_samples: 256,
+            eval_windows: 64,
+            use_pjrt: true,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Report from one full pipeline run.
+#[derive(Clone, Debug)]
+pub struct CompressionReport {
+    pub model: String,
+    pub method: String,
+    pub ratio: f64,
+    pub alpha: f64,
+    pub dense_params: usize,
+    pub compressed_params: usize,
+    pub results: Vec<PerplexityResult>,
+}
+
+impl CompressionReport {
+    pub fn ppl(&self, dataset: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.dataset == dataset).map(|r| r.ppl())
+    }
+}
+
+/// The pipeline: owns the runtime, weights, and cached calibration.
+pub struct Pipeline {
+    pub config: PipelineConfig,
+    pub model_cfg: ModelConfig,
+    pub weights: Weights,
+    rt: Option<Runtime>,
+    registry: Registry,
+    calib: Option<TapStats>,
+    /// (whitener kind, tap) → whitener — reused across layers AND across
+    /// sweep jobs (whiteners are ratio/α-independent; the eigendecomposition
+    /// of a d_ff-sized Gram costs seconds, so this dominates sweep setup).
+    whitener_cache: std::collections::HashMap<(String, String), std::rc::Rc<Whitener>>,
+}
+
+impl Pipeline {
+    pub fn new(config: PipelineConfig) -> Result<Pipeline> {
+        let rt = if config.use_pjrt {
+            Some(Runtime::open(&config.artifacts_dir).context("opening PJRT runtime")?)
+        } else {
+            None
+        };
+        let (model_cfg, weights) = match &rt {
+            Some(rt) => {
+                let cfg = rt.manifest.model(&config.model)?.clone();
+                let w = Weights::load(&rt.manifest.weights_path(&config.model)?)?;
+                (cfg, w)
+            }
+            None => {
+                // Native-only: manifest still describes models and weights.
+                let manifest =
+                    crate::runtime::artifacts::Manifest::load(&config.artifacts_dir)?;
+                let cfg = manifest.model(&config.model)?.clone();
+                let w = Weights::load(&manifest.weights_path(&config.model)?)?;
+                (cfg, w)
+            }
+        };
+        let registry = Registry::new(&config.artifacts_dir);
+        Ok(Pipeline {
+            config,
+            model_cfg,
+            weights,
+            rt,
+            registry,
+            calib: None,
+            whitener_cache: Default::default(),
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.rt.as_ref().map(|rt| rt.manifest.eval_batch).unwrap_or(8)
+    }
+
+    pub fn seq(&self) -> usize {
+        self.rt.as_ref().map(|rt| rt.manifest.seq).unwrap_or(self.model_cfg.max_seq)
+    }
+
+    /// Calibration stats (computed once, cached).
+    pub fn calibrate(&mut self) -> Result<&TapStats> {
+        if self.calib.is_none() {
+            let corpus = self.registry.calibration()?;
+            let stats = self.collect_stats(&corpus, self.config.calib_samples, true)?;
+            self.calib = Some(stats);
+        }
+        Ok(self.calib.as_ref().unwrap())
+    }
+
+    /// Collect tap stats over a corpus (random windows if `random`, else
+    /// sequential eval windows) — used for calibration AND similarity.
+    pub fn collect_stats(&self, corpus: &Corpus, windows: usize, random: bool) -> Result<TapStats> {
+        let batch = self.batch();
+        let seq = self.seq();
+        let batcher = Batcher::new(batch, seq);
+        let mut rng = Rng::new(self.config.seed);
+        let batches = if random {
+            batcher.calibration_batches(corpus, windows, &mut rng)
+        } else {
+            let mut bs = batcher.eval_batches(corpus, windows);
+            bs.retain(|tb| tb.valid_rows == tb.batch);
+            bs
+        };
+        match &self.rt {
+            Some(rt) => {
+                let runner = rt.gram_runner(&self.config.model)?;
+                let mut stats = TapStats::default();
+                for tb in &batches {
+                    runner.accumulate(tb, &mut stats)?;
+                }
+                Ok(stats)
+            }
+            None => collect_native(&self.model_cfg, &self.weights, &batches),
+        }
+    }
+
+    /// Decompose every compressible weight with `spec`.  Stage-1 whiteners
+    /// are cached per (method-class, tap): wq/wk/wv share one, and repeat
+    /// jobs in a sweep pay zero whitening cost.
+    pub fn compress(&mut self, spec: &CompressionSpec) -> Result<CompressedModel> {
+        self.calibrate()?;
+        let stats = self.calib.as_ref().unwrap();
+        let kind = spec.method.whitener_kind().to_string();
+        let mut cm = CompressedModel::default();
+        for (name, n_in, n_out) in &self.model_cfg.linear_shapes {
+            let tensor = self.weights.get(name)?;
+            let tap = crate::model::config::ModelConfig::tap_for_linear(name);
+            let tap_stats = stats
+                .taps
+                .get(&tap)
+                .ok_or_else(|| anyhow::anyhow!("no calibration stats for {name}"))?;
+            let whitener = self
+                .whitener_cache
+                .entry((kind.clone(), tap.clone()))
+                .or_insert_with(|| std::rc::Rc::new(spec.method.stage1_whitener(tap_stats)))
+                .clone();
+            let plan = ranks::plan(*n_out, *n_in, spec.ratio, spec.effective_alpha());
+            let layer = compress_layer_with(tensor, &whitener, spec, &plan)
+                .with_context(|| format!("compressing {name}"))?;
+            cm.insert(name, layer);
+        }
+        Ok(cm)
+    }
+
+    /// Evaluate a (possibly compressed) model on all eight test sets.
+    pub fn evaluate_all(&self, cm: Option<&CompressedModel>) -> Result<Vec<PerplexityResult>> {
+        let batch = self.batch();
+        let seq = self.seq();
+        let mut out = Vec::new();
+        // Build the evaluator once; reuse across datasets.
+        match (&self.rt, cm) {
+            (Some(rt), Some(cm)) => {
+                let eval = rt.lowrank_evaluator(&self.config.model, batch, cm)?;
+                for domain in DOMAIN_NAMES {
+                    let corpus = self.registry.load(domain, "test")?;
+                    out.push(evaluate(
+                        &EvalBackend::PjrtLowRank(&eval),
+                        &corpus, batch, seq, self.config.eval_windows,
+                    )?);
+                }
+            }
+            (Some(rt), None) => {
+                let eval = rt.dense_evaluator(&self.config.model, batch)?;
+                for domain in DOMAIN_NAMES {
+                    let corpus = self.registry.load(domain, "test")?;
+                    out.push(evaluate(
+                        &EvalBackend::PjrtDense(&eval),
+                        &corpus, batch, seq, self.config.eval_windows,
+                    )?);
+                }
+            }
+            (None, cm) => {
+                for domain in DOMAIN_NAMES {
+                    let corpus = self.registry.load(domain, "test")?;
+                    out.push(evaluate(
+                        &EvalBackend::Native {
+                            cfg: &self.model_cfg,
+                            weights: &self.weights,
+                            compressed: cm,
+                        },
+                        &corpus, batch, seq, self.config.eval_windows,
+                    )?);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Full run: calibrate → compress → evaluate all datasets.
+    pub fn run(&mut self, spec: &CompressionSpec) -> Result<CompressionReport> {
+        let cm = self.compress(spec)?;
+        let results = self.evaluate_all(Some(&cm))?;
+        Ok(CompressionReport {
+            model: self.config.model.clone(),
+            method: spec.method.label().to_string(),
+            ratio: spec.ratio,
+            alpha: spec.effective_alpha(),
+            dense_params: self.model_cfg.compressible_params(),
+            compressed_params: cm.params(),
+            results,
+        })
+    }
+
+    /// Dense (uncompressed) baseline row.
+    pub fn run_dense(&self) -> Result<CompressionReport> {
+        let results = self.evaluate_all(None)?;
+        Ok(CompressionReport {
+            model: self.config.model.clone(),
+            method: "Original".to_string(),
+            ratio: 0.0,
+            alpha: 1.0,
+            dense_params: self.model_cfg.compressible_params(),
+            compressed_params: self.model_cfg.compressible_params(),
+            results,
+        })
+    }
+
+    /// Table 2 / Figure 1: per-dataset activation similarity vs calibration.
+    pub fn similarity_analysis(&mut self) -> Result<Vec<SimilarityReport>> {
+        self.calibrate()?;
+        let windows = self.config.eval_windows;
+        // Borrow dance: clone the calibration stats handle before the loop.
+        let calib = self.calib.clone().unwrap();
+        let mut reports = Vec::new();
+        for domain in DOMAIN_NAMES {
+            let corpus = self.registry.load(domain, "test")?;
+            let eval_stats = self.collect_stats(&corpus, windows, false)?;
+            reports.push(similarity_stats(domain, &calib, &eval_stats));
+        }
+        Ok(reports)
+    }
+
+    /// Access the runtime (serving needs the serve executable).
+    pub fn runtime(&self) -> Option<&Runtime> {
+        self.rt.as_ref()
+    }
+}

@@ -1,0 +1,189 @@
+//! Table rendering: the paper's tables as markdown (+ JSON for benches).
+//!
+//! Layout mirrors the paper: one row per method, one column per dataset,
+//! best-per-column in bold, and blue-text relative improvement vs the best
+//! baseline rendered as `(±x.x%)`.
+
+use crate::data::corpus::{paper_label, DOMAIN_NAMES};
+use crate::util::json::Json;
+
+/// A generic table (headers + rows of strings).
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: Vec<String>) -> Table {
+        Table { title: title.to_string(), headers, rows: Vec::new() }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        s.push_str(&format!("|{}\n", "---|".repeat(self.headers.len())));
+        for row in &self.rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("title", self.title.as_str());
+        obj.set(
+            "headers",
+            Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        obj.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        obj
+    }
+}
+
+/// Format a perplexity like the paper (2 decimals, thousands unseparated).
+pub fn fmt_ppl(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.2}")
+    } else {
+        "inf".to_string()
+    }
+}
+
+/// One method's row of per-dataset perplexities.
+#[derive(Clone, Debug)]
+pub struct MethodRow {
+    pub label: String,
+    /// Perplexity per dataset, in `DOMAIN_NAMES` order.
+    pub ppl: Vec<f64>,
+    /// Is this row one of the NSVD/NID contributions (gets improvement %)?
+    pub is_ours: bool,
+}
+
+/// Render a paper-style method×dataset block.
+///
+/// `baseline`: index of the best-performing-baseline row used as the
+/// reference for the improvement percentages (the paper uses ASVD-I).
+/// The "Avg. Impro." column averages over all datasets EXCEPT wiki
+/// (the calibration domain), exactly as the paper does.
+pub fn render_method_block(title: &str, rows: &[MethodRow], baseline: usize) -> Table {
+    let mut headers = vec!["Method".to_string()];
+    headers.extend(DOMAIN_NAMES.iter().map(|d| paper_label(d).to_string()));
+    headers.push("Avg. Impro.".to_string());
+    let mut table = Table::new(title, headers);
+
+    // Best value per dataset for bolding.
+    let n = DOMAIN_NAMES.len();
+    let mut best = vec![f64::INFINITY; n];
+    for row in rows {
+        for (j, &p) in row.ppl.iter().enumerate() {
+            if p < best[j] {
+                best[j] = p;
+            }
+        }
+    }
+    for row in rows {
+        let mut cells = vec![row.label.clone()];
+        let mut improvements = Vec::new();
+        for (j, &p) in row.ppl.iter().enumerate() {
+            let mut cell = fmt_ppl(p);
+            if (p - best[j]).abs() < 1e-12 {
+                cell = format!("**{cell}**");
+            }
+            if row.is_ours {
+                let base = rows[baseline].ppl[j];
+                let delta = (p - base) / base * 100.0;
+                let arrow = if delta <= 0.0 { "↓" } else { "↑" };
+                cell.push_str(&format!(" ({arrow}{:.1}%)", delta.abs()));
+                if j > 0 {
+                    // Skip wiki (index 0 = calibration domain) in the average.
+                    improvements.push(-delta);
+                }
+            }
+            cells.push(cell);
+        }
+        if row.is_ours && !improvements.is_empty() {
+            let avg = improvements.iter().sum::<f64>() / improvements.len() as f64;
+            cells.push(format!("{avg:.1}%"));
+        } else {
+            cells.push("-".to_string());
+        }
+        table.push_row(cells);
+    }
+    table
+}
+
+/// Write a table to `target/reports/<slug>.md` and `.json`.
+pub fn save_table(table: &Table, slug: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/reports");
+    std::fs::create_dir_all(dir)?;
+    let md = dir.join(format!("{slug}.md"));
+    std::fs::write(&md, table.to_markdown())?;
+    std::fs::write(dir.join(format!("{slug}.json")), table.to_json().to_string_pretty())?;
+    Ok(md)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_structure() {
+        let mut t = Table::new("Demo", vec!["A".into(), "B".into()]);
+        t.push_row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| A | B |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_is_enforced() {
+        let mut t = Table::new("x", vec!["A".into()]);
+        t.push_row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn method_block_marks_best_and_improvement() {
+        let rows = vec![
+            MethodRow { label: "ASVD-I".into(), ppl: vec![10.0; 8], is_ours: false },
+            MethodRow {
+                label: "NSVD-I".into(),
+                ppl: vec![11.0, 9.0, 9.0, 9.0, 9.0, 9.0, 5.0, 5.0],
+                is_ours: true,
+            },
+        ];
+        let t = render_method_block("Table 1 (30%)", &rows, 0);
+        let md = t.to_markdown();
+        // NSVD best on 7 sets → bold; improvement annotations present.
+        assert!(md.contains("**9.00**"));
+        assert!(md.contains("(↓10.0%)"));
+        assert!(md.contains("(↑10.0%)")); // wiki got worse
+        // Avg improvement over non-wiki sets: (10+10+10+10+10+50+50)/7 = 21.4%.
+        assert!(md.contains("21.4%"), "md:\n{md}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Table::new("T", vec!["A".into()]);
+        t.push_row(vec!["x".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str().unwrap(), "T");
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

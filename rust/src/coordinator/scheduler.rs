@@ -1,0 +1,137 @@
+//! Experiment scheduler: sweeps (method × ratio × α) jobs over a pipeline.
+//!
+//! PJRT executables are not `Send` (the client is `Rc`-based), so jobs that
+//! execute on-device run sequentially on the owning thread; the scheduler's
+//! contribution is job bookkeeping — deterministic ordering, failure
+//! isolation, progress reporting — plus parallel decomposition for the
+//! CPU-bound SVD work when multiple cores exist.
+
+use super::pipeline::{CompressionReport, Pipeline};
+use crate::compress::methods::{CompressionSpec, Method};
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// One experiment cell.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub name: String,
+    pub spec: CompressionSpec,
+}
+
+impl Job {
+    pub fn new(method: Method, ratio: f64, alpha: f64) -> Job {
+        Job {
+            name: format!("{}@{:.0}%/α={alpha}", method.label(), ratio * 100.0),
+            spec: CompressionSpec { method, ratio, alpha },
+        }
+    }
+}
+
+/// Outcome of one job (reports keep going even if a cell fails).
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub job: Job,
+    pub elapsed_s: f64,
+    pub result: Result<CompressionReport>,
+}
+
+/// Run jobs sequentially over a pipeline, with progress logging.
+/// Calibration is shared (cached inside the pipeline), so the per-job cost
+/// is decomposition + evaluation only.
+pub fn run_jobs(pipeline: &mut Pipeline, jobs: &[Job]) -> Vec<JobOutcome> {
+    let mut outcomes = Vec::with_capacity(jobs.len());
+    for (i, job) in jobs.iter().enumerate() {
+        let t = Timer::start();
+        crate::info!(
+            "scheduler",
+            "[{}/{}] {} (model {})",
+            i + 1,
+            jobs.len(),
+            job.name,
+            pipeline.config.model
+        );
+        let result = pipeline.run(&job.spec);
+        let elapsed_s = t.elapsed_s();
+        if let Err(e) = &result {
+            crate::warnln!("scheduler", "{} FAILED: {e:#}", job.name);
+        }
+        outcomes.push(JobOutcome { job: job.clone(), elapsed_s, result });
+    }
+    outcomes
+}
+
+/// The standard sweeps of the paper's tables.
+pub mod sweeps {
+    use super::*;
+
+    /// Table 1: methods × ratios (α = 0.95 for NSVD rows).
+    pub fn table1(ratios: &[f64]) -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for &r in ratios {
+            for m in Method::table1() {
+                jobs.push(Job::new(m, r, 0.95));
+            }
+        }
+        jobs
+    }
+
+    /// Table 3: NSVD-I with α ∈ {0.99, 0.95, 0.90, 0.85, 0.80} at 30%.
+    pub fn table3() -> Vec<Job> {
+        [0.99, 0.95, 0.90, 0.85, 0.80]
+            .iter()
+            .map(|&a| Job::new(Method::NsvdI, 0.30, a))
+            .collect()
+    }
+
+    /// Table 4: NID-I with α ∈ {0.99, 0.95, 0.90} at 30%.
+    pub fn table4() -> Vec<Job> {
+        [0.99, 0.95, 0.90]
+            .iter()
+            .map(|&a| Job::new(Method::NidI, 0.30, a))
+            .collect()
+    }
+
+    /// Tables 5/6 per-model jobs: baselines + NSVD-I at 30%.
+    pub fn model_comparison() -> Vec<Job> {
+        vec![
+            Job::new(Method::Asvd0, 0.30, 1.0),
+            Job::new(Method::AsvdI, 0.30, 1.0),
+            Job::new(Method::NsvdI, 0.30, 0.95),
+        ]
+    }
+
+    /// §3 ablation: ASVD-II vs ASVD-III.
+    pub fn ablation() -> Vec<Job> {
+        vec![
+            Job::new(Method::AsvdII, 0.30, 1.0),
+            Job::new(Method::AsvdIII, 0.30, 1.0),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_sweep_has_methods_times_ratios() {
+        let jobs = sweeps::table1(&[0.1, 0.3]);
+        assert_eq!(jobs.len(), 12);
+        assert!(jobs[0].name.contains("SVD@10%"));
+    }
+
+    #[test]
+    fn table3_alphas() {
+        let jobs = sweeps::table3();
+        assert_eq!(jobs.len(), 5);
+        assert!(jobs.iter().all(|j| j.spec.method == Method::NsvdI));
+        assert!(jobs.iter().all(|j| (j.spec.ratio - 0.3).abs() < 1e-12));
+    }
+
+    #[test]
+    fn ablation_pairs_asvd_2_and_3() {
+        let jobs = sweeps::ablation();
+        assert_eq!(jobs[0].spec.method, Method::AsvdII);
+        assert_eq!(jobs[1].spec.method, Method::AsvdIII);
+    }
+}

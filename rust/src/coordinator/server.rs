@@ -1,0 +1,176 @@
+//! Serving loop: request queue → dynamic batcher → per-row scoring.
+//!
+//! The deployment story the paper motivates: the COMPRESSED model serves
+//! scoring requests.  Requests arrive on an mpsc channel from any number of
+//! producer threads; the serving loop (which owns the PJRT client — `Rc`
+//! inside, so single-threaded by construction) groups them into batches:
+//!
+//! * block for the first request;
+//! * drain more until the batch is full or `max_wait` elapses;
+//! * pad the remainder with copies of row 0 (per-row outputs → padding rows
+//!   are discarded, unlike the sum-reduced eval executables);
+//! * execute, deliver per-request responses, record metrics.
+
+use super::metrics::ServerMetrics;
+use crate::data::batch::TokenBatch;
+use crate::runtime::exec::ServeEvaluator;
+use crate::util::timer::Timer;
+use anyhow::Result;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// A scoring request: perplexity of one token window.
+#[derive(Clone, Debug)]
+pub struct ScoreRequest {
+    pub id: u64,
+    /// Exactly `seq` tokens (the producer is responsible for windowing).
+    pub tokens: Vec<u8>,
+    pub enqueued: Instant,
+}
+
+/// The response delivered to the requester.
+#[derive(Clone, Debug)]
+pub struct ScoreResponse {
+    pub id: u64,
+    pub nll: f64,
+    pub tokens: f64,
+    pub ppl: f64,
+    pub latency_s: f64,
+}
+
+/// Dynamic batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max time to wait for more requests after the first (seconds).
+    pub max_wait_s: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_wait_s: 0.002 }
+    }
+}
+
+/// Run the serving loop until the request channel closes.
+/// Returns the accumulated metrics.
+pub fn serve(
+    eval: &ServeEvaluator,
+    requests: Receiver<ScoreRequest>,
+    responses: Sender<ScoreResponse>,
+    policy: BatchPolicy,
+) -> Result<ServerMetrics> {
+    let batch = eval.batch();
+    let seq = eval.seq();
+    let mut metrics = ServerMetrics::default();
+    let wall = Timer::start();
+    loop {
+        // Block for the first request; channel closed → drain out.
+        let first = match requests.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + Duration::from_secs_f64(policy.max_wait_s);
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match requests.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Build the batch: pad with copies of row 0 (discarded afterwards).
+        let mut rows: Vec<&[u8]> = pending.iter().map(|r| r.tokens.as_slice()).collect();
+        while rows.len() < batch {
+            rows.push(pending[0].tokens.as_slice());
+        }
+        for r in &rows {
+            assert_eq!(r.len(), seq, "requests must be exactly seq tokens");
+        }
+        let tb = TokenBatch::from_rows(&rows, batch, seq);
+        let exec_t = Timer::start();
+        let scored = eval.score(&tb)?;
+        let _exec_s = exec_t.elapsed_s();
+        let now = Instant::now();
+        for (req, &(nll, cnt)) in pending.iter().zip(scored.iter()) {
+            let latency = now.duration_since(req.enqueued).as_secs_f64();
+            metrics.latency_s.push(latency);
+            metrics
+                .queue_wait_s
+                .push(latency - _exec_s.min(latency));
+            let _ = responses.send(ScoreResponse {
+                id: req.id,
+                nll,
+                tokens: cnt,
+                ppl: (nll / cnt.max(1.0)).exp(),
+                latency_s: latency,
+            });
+        }
+        metrics.completed += pending.len();
+        metrics.batches += 1;
+        metrics.batch_fill.push(pending.len() as f64);
+    }
+    metrics.wall_s = wall.elapsed_s();
+    Ok(metrics)
+}
+
+/// Offline load generator: emits `n` requests windowed from a corpus at
+/// roughly `rate_rps`, from a separate thread.  Returns the join handle.
+pub fn spawn_load(
+    tokens: Vec<u8>,
+    seq: usize,
+    n: usize,
+    rate_rps: f64,
+    tx: Sender<ScoreRequest>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let windows: Vec<Vec<u8>> = tokens
+            .chunks_exact(seq)
+            .map(|w| w.to_vec())
+            .collect();
+        if windows.is_empty() {
+            return;
+        }
+        let gap = if rate_rps > 0.0 {
+            Duration::from_secs_f64(1.0 / rate_rps)
+        } else {
+            Duration::ZERO
+        };
+        for i in 0..n {
+            let w = windows[i % windows.len()].clone();
+            let req = ScoreRequest { id: i as u64, tokens: w, enqueued: Instant::now() };
+            if tx.send(req).is_err() {
+                return;
+            }
+            if !gap.is_zero() {
+                std::thread::sleep(gap);
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_policy_default_is_small() {
+        assert!(BatchPolicy::default().max_wait_s < 0.05);
+    }
+
+    #[test]
+    fn load_generator_emits_n_requests() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let tokens: Vec<u8> = (0..1000).map(|i| (i % 256) as u8).collect();
+        let h = spawn_load(tokens, 100, 25, 0.0, tx);
+        h.join().unwrap();
+        let got: Vec<_> = rx.iter().collect();
+        assert_eq!(got.len(), 25);
+        assert!(got.iter().all(|r| r.tokens.len() == 100));
+        // Ids are sequential.
+        assert_eq!(got[24].id, 24);
+    }
+}

@@ -1,0 +1,133 @@
+//! Batching: fixed-shape [B, T] i32 token batches for the PJRT executables.
+
+use super::corpus::Corpus;
+use crate::util::rng::Rng;
+
+/// A [batch, seq] token batch in row-major i32 (the executables' input
+/// dtype) with the number of *valid* rows (the rest are padding rows whose
+/// loss contribution gets subtracted by the evaluator).
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub valid_rows: usize,
+}
+
+impl TokenBatch {
+    pub fn from_rows(rows: &[&[u8]], batch: usize, seq: usize) -> TokenBatch {
+        assert!(rows.len() <= batch);
+        let mut tokens = vec![0i32; batch * seq];
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), seq);
+            for (j, &t) in row.iter().enumerate() {
+                tokens[i * seq + j] = t as i32;
+            }
+        }
+        TokenBatch { batch, seq, tokens, valid_rows: rows.len() }
+    }
+}
+
+/// Deterministic batcher over a corpus.
+pub struct Batcher {
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, seq: usize) -> Batcher {
+        Batcher { batch, seq }
+    }
+
+    /// All non-overlapping windows, grouped into batches (evaluation).
+    /// The final partial batch is padded with zero rows.
+    pub fn eval_batches(&self, corpus: &Corpus, max_windows: usize) -> Vec<TokenBatch> {
+        let windows = corpus.windows(self.seq);
+        let take = windows.len().min(max_windows);
+        windows[..take]
+            .chunks(self.batch)
+            .map(|rows| TokenBatch::from_rows(rows, self.batch, self.seq))
+            .collect()
+    }
+
+    /// `n_samples` random windows (calibration protocol: the paper samples
+    /// 256 random sequences from the WikiText-2 train split).
+    pub fn calibration_batches(
+        &self,
+        corpus: &Corpus,
+        n_samples: usize,
+        rng: &mut Rng,
+    ) -> Vec<TokenBatch> {
+        assert!(corpus.len() >= self.seq, "corpus shorter than one window");
+        let rows: Vec<Vec<u8>> = (0..n_samples)
+            .map(|_| {
+                let start = rng.below(corpus.len() - self.seq + 1);
+                corpus.tokens[start..start + self.seq].to_vec()
+            })
+            .collect();
+        rows.chunks(self.batch)
+            .map(|chunk| {
+                let refs: Vec<&[u8]> = chunk.iter().map(|r| r.as_slice()).collect();
+                TokenBatch::from_rows(&refs, self.batch, self.seq)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus(n: usize) -> Corpus {
+        Corpus { name: "t".into(), tokens: (0..n).map(|i| (i % 251) as u8).collect() }
+    }
+
+    #[test]
+    fn eval_batches_cover_windows_in_order() {
+        let c = corpus(1000);
+        let b = Batcher::new(4, 64);
+        let batches = b.eval_batches(&c, usize::MAX);
+        // 1000/64 = 15 windows → 4 batches (4+4+4+3).
+        assert_eq!(batches.len(), 4);
+        assert_eq!(batches[0].valid_rows, 4);
+        assert_eq!(batches[3].valid_rows, 3);
+        assert_eq!(batches[0].tokens[0], 0);
+        assert_eq!(batches[0].tokens[64], 64 % 251);
+        // Padding rows are zero.
+        let last = &batches[3];
+        assert!(last.tokens[3 * 64..].iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn eval_batches_respect_max_windows() {
+        let c = corpus(10_000);
+        let b = Batcher::new(8, 32);
+        let batches = b.eval_batches(&c, 10);
+        let rows: usize = batches.iter().map(|b| b.valid_rows).sum();
+        assert_eq!(rows, 10);
+    }
+
+    #[test]
+    fn calibration_is_deterministic_given_seed() {
+        let c = corpus(5000);
+        let b = Batcher::new(8, 128);
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let b1 = b.calibration_batches(&c, 32, &mut r1);
+        let b2 = b.calibration_batches(&c, 32, &mut r2);
+        assert_eq!(b1.len(), b2.len());
+        for (x, y) in b1.iter().zip(&b2) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn calibration_samples_count() {
+        let c = corpus(4000);
+        let b = Batcher::new(8, 128);
+        let mut rng = Rng::new(7);
+        let batches = b.calibration_batches(&c, 256, &mut rng);
+        assert_eq!(batches.len(), 32);
+        assert!(batches.iter().all(|tb| tb.valid_rows == 8));
+    }
+}

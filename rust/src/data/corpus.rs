@@ -1,0 +1,158 @@
+//! Token-file reader (`NSVDTOK1` format) and the dataset registry.
+//!
+//! Format (little-endian): magic `NSVDTOK1`, u32 token count, then `count`
+//! bytes of token ids (byte-level vocabulary, 256 symbols).  Written once by
+//! `python/compile/corpora.py` at `make artifacts`; the same files feed both
+//! the JAX pretraining mixture and this evaluation path, so there is no
+//! python/rust data skew.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub const MAGIC: &[u8; 8] = b"NSVDTOK1";
+
+/// The eight evaluation domains, in the paper's table order.
+pub const DOMAIN_NAMES: [&str; 8] = [
+    "wiki", "ptb", "c4", "snips", "alpaca", "mctest", "cmrc_cn", "alpaca_jp",
+];
+
+/// Human-readable labels matching the paper's dataset columns.
+pub fn paper_label(domain: &str) -> &'static str {
+    match domain {
+        "wiki" => "WikiText-2",
+        "ptb" => "PTB",
+        "c4" => "C4",
+        "snips" => "SNIPS",
+        "alpaca" => "AlpacaEval",
+        "mctest" => "MCTest",
+        "cmrc_cn" => "CMRC (CN)",
+        "alpaca_jp" => "AlpacaEval (JP)",
+        _ => "?",
+    }
+}
+
+/// A loaded token stream.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub name: String,
+    pub tokens: Vec<u8>,
+}
+
+impl Corpus {
+    /// Read a `.tok` file.
+    pub fn load(name: &str, path: &Path) -> Result<Corpus> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading corpus {}", path.display()))?;
+        if raw.len() < 12 || &raw[..8] != MAGIC {
+            bail!("{}: bad NSVDTOK1 magic", path.display());
+        }
+        let count = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+        if raw.len() < 12 + count {
+            bail!(
+                "{}: truncated ({} of {} payload bytes)",
+                path.display(),
+                raw.len() - 12,
+                count
+            );
+        }
+        Ok(Corpus { name: name.to_string(), tokens: raw[12..12 + count].to_vec() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Non-overlapping windows of `seq` tokens (evaluation protocol).
+    pub fn windows(&self, seq: usize) -> Vec<&[u8]> {
+        self.tokens.chunks_exact(seq).collect()
+    }
+}
+
+/// Dataset registry over the artifacts directory: resolves `(domain, split)`
+/// to corpora lazily.
+pub struct Registry {
+    dir: PathBuf,
+}
+
+impl Registry {
+    pub fn new(artifacts_dir: &Path) -> Registry {
+        Registry { dir: artifacts_dir.join("corpora") }
+    }
+
+    pub fn load(&self, domain: &str, split: &str) -> Result<Corpus> {
+        let path = self.dir.join(format!("{domain}.{split}.tok"));
+        Corpus::load(domain, &path)
+    }
+
+    /// All eight evaluation test splits, in paper order.
+    pub fn eval_sets(&self) -> Result<Vec<Corpus>> {
+        DOMAIN_NAMES.iter().map(|d| self.load(d, "test")).collect()
+    }
+
+    /// The calibration source (wiki train split, per the paper's protocol).
+    pub fn calibration(&self) -> Result<Corpus> {
+        self.load("wiki", "train")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tok(path: &Path, toks: &[u8]) {
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&(toks.len() as u32).to_le_bytes());
+        raw.extend_from_slice(toks);
+        std::fs::write(path, raw).unwrap();
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("nsvd_corpus_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.tok");
+        let toks: Vec<u8> = (0..=255).cycle().take(1000).collect();
+        write_tok(&path, &toks);
+        let c = Corpus::load("x", &path).unwrap();
+        assert_eq!(c.tokens, toks);
+        assert_eq!(c.len(), 1000);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let dir = std::env::temp_dir().join("nsvd_corpus_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.tok");
+        std::fs::write(&bad, b"WRONGMAG\x10\x00\x00\x00").unwrap();
+        assert!(Corpus::load("bad", &bad).is_err());
+        let trunc = dir.join("trunc.tok");
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&100u32.to_le_bytes());
+        raw.extend_from_slice(&[1, 2, 3]);
+        std::fs::write(&trunc, raw).unwrap();
+        assert!(Corpus::load("trunc", &trunc).is_err());
+    }
+
+    #[test]
+    fn windows_are_non_overlapping_and_exact() {
+        let c = Corpus { name: "t".into(), tokens: (0..100).collect() };
+        let w = c.windows(32);
+        assert_eq!(w.len(), 3); // 100 / 32
+        assert_eq!(w[0][0], 0);
+        assert_eq!(w[1][0], 32);
+        assert_eq!(w[2][31], 95);
+    }
+
+    #[test]
+    fn paper_labels_cover_all_domains() {
+        for d in DOMAIN_NAMES {
+            assert_ne!(paper_label(d), "?", "missing label for {d}");
+        }
+    }
+}

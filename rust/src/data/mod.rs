@@ -1,0 +1,7 @@
+//! Corpora loading and batching (token files emitted by python/compile/corpora.py).
+
+pub mod batch;
+pub mod corpus;
+
+pub use batch::Batcher;
+pub use corpus::Corpus;

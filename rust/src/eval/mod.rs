@@ -1,0 +1,5 @@
+//! Evaluation: perplexity over the eight domains.
+
+pub mod perplexity;
+
+pub use perplexity::{EvalBackend, PerplexityResult, evaluate_native};

@@ -1,0 +1,40 @@
+//! # nsvd — Nested Activation-Aware Decomposition for LLM compression
+//!
+//! A full-system reproduction of *"Large Language Model Compression via the
+//! Nested Activation-Aware Decomposition"* (Lu et al., 2025) on a three-layer
+//! Rust + JAX + Pallas architecture:
+//!
+//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`)
+//! * **L2** — JAX model definitions lowered AOT to HLO text
+//!   (`python/compile/model.py`, `aot.py`)
+//! * **L3** — this crate: the post-training compression pipeline, the PJRT
+//!   runtime that executes the AOT artifacts, and the serving coordinator.
+//!
+//! The public API is organised bottom-up:
+//!
+//! * [`util`] — PRNG, JSON, CLI, threading, timing (offline substrate).
+//! * [`linalg`] — dense f64 linear algebra: QR, LQ, Cholesky, symmetric
+//!   eigendecomposition, SVD, interpolative decomposition.
+//! * [`data`] — byte-level corpora, splits, batching.
+//! * [`model`] — transformer configs, NSVDW weight loading, native forward.
+//! * [`compress`] — the paper's methods: SVD, ASVD-0/I/II/III, NSVD-I/II,
+//!   NID-I/II, rank budgeting, padded low-rank layers.
+//! * [`calib`] — activation Gram collection + similarity analysis.
+//! * [`eval`] — perplexity evaluation.
+//! * [`runtime`] — PJRT client, artifact registry, executors.
+//! * [`coordinator`] — pipeline orchestration, scheduler, serving, reports.
+//! * [`bench`] — the criterion-free benchmark harness used by `cargo bench`.
+
+pub mod bench;
+pub mod calib;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,202 @@
+//! Cholesky factorization with PSD-safe handling for empirical Grams.
+//!
+//! The ASVD-I / SVD-LLM whitening needs `S` with `S Sᵀ = X Xᵀ`.  Empirical
+//! Gram matrices are only positive *semi*-definite (rank-deficient when the
+//! calibration sample is small or features are correlated), so a plain
+//! Cholesky breaks down — exactly the weakness the paper's §3 cites when
+//! motivating the SVD-based ASVD-II.  We reproduce the standard fix used by
+//! SVD-LLM: retry with an increasing diagonal ridge until the factorization
+//! succeeds, and report the ridge that was needed.
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Strict Cholesky: `A = L Lᵀ` with L lower-triangular.
+/// Fails if `A` is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut d = a[(j, j)];
+        for k in 0..j {
+            d -= l[(j, k)] * l[(j, k)];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            bail!("matrix not positive definite at pivot {j} (d={d:.3e})");
+        }
+        let djj = d.sqrt();
+        l[(j, j)] = djj;
+        for i in (j + 1)..n {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            l[(i, j)] = s / djj;
+        }
+    }
+    Ok(l)
+}
+
+/// PSD-safe Cholesky: adds `ridge = eps * mean(diag)` and doubles it until
+/// the factorization succeeds.  Returns `(L, ridge_used)`.
+pub fn cholesky_psd(a: &Matrix, base_eps: f64) -> (Matrix, f64) {
+    let n = a.rows;
+    let mean_diag = (0..n).map(|i| a[(i, i)]).sum::<f64>().max(1e-30) / n as f64;
+    let mut eps = base_eps;
+    loop {
+        let mut aj = a.clone();
+        let ridge = eps * mean_diag;
+        for i in 0..n {
+            aj[(i, i)] += ridge;
+        }
+        if let Ok(l) = cholesky(&aj) {
+            return (l, ridge);
+        }
+        eps *= 10.0;
+        assert!(eps < 1.0, "cholesky_psd failed even with huge ridge");
+    }
+}
+
+/// Solve `L y = b` (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    y
+}
+
+/// Solve `U x = b` (back substitution), U upper-triangular.
+pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = u.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= u[(i, k)] * x[k];
+        }
+        x[i] = s / u[(i, i)];
+    }
+    x
+}
+
+/// Inverse of a lower-triangular matrix (column-by-column forward solves).
+pub fn invert_lower(l: &Matrix) -> Matrix {
+    let n = l.rows;
+    let mut inv = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        let col = solve_lower(l, &e);
+        inv.set_col(j, &col);
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn ok(cond: bool, what: &str) -> Result<(), String> {
+        if cond {
+            Ok(())
+        } else {
+            Err(what.to_string())
+        }
+    }
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        // B Bᵀ + n·I is safely positive definite.
+        let b = Matrix::randn(n, n, 1.0, rng);
+        let mut a = b.matmul_nt(&b);
+        for i in 0..n {
+            a[(i, i)] += n as f64 * 0.1 + 0.5;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs_spd() {
+        check("A = LLᵀ", 25, |g| {
+            let mut rng = g.rng.fork(0);
+            let n = g.usize_in(1, 20);
+            let a = random_spd(n, &mut rng);
+            let l = cholesky(&a).map_err(|e| e.to_string())?;
+            ok(l.matmul_nt(&l).dist(&a) < 1e-8 * (1.0 + a.fro_norm()), "LLᵀ=A")?;
+            for i in 0..n {
+                ok(l[(i, i)] > 0.0, "positive diagonal")?;
+                for j in (i + 1)..n {
+                    ok(l[(i, j)] == 0.0, "upper zero")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1, 3
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn cholesky_psd_handles_rank_deficient_gram() {
+        let mut rng = Rng::new(7);
+        // Gram of 3 samples in R^6: rank <= 3.
+        let x = Matrix::randn(6, 3, 1.0, &mut rng);
+        let gram = x.matmul_nt(&x);
+        assert!(cholesky(&gram).is_err(), "strict cholesky should fail");
+        let (l, ridge) = cholesky_psd(&gram, 1e-8);
+        assert!(ridge > 0.0);
+        // LLᵀ ≈ gram + ridge·I.
+        let recon = l.matmul_nt(&l);
+        let mut target = gram.clone();
+        for i in 0..6 {
+            target[(i, i)] += ridge;
+        }
+        assert!(recon.dist(&target) < 1e-7);
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        check("solve_lower/upper", 20, |g| {
+            let mut rng = g.rng.fork(0);
+            let n = g.usize_in(1, 15);
+            let a = random_spd(n, &mut rng);
+            let l = cholesky(&a).map_err(|e| e.to_string())?;
+            let b: Vec<f64> = rng.normal_vec(n);
+            let y = solve_lower(&l, &b);
+            let ly = l.matvec(&y);
+            for i in 0..n {
+                ok((ly[i] - b[i]).abs() < 1e-8, "Ly=b")?;
+            }
+            let u = l.transpose();
+            let x = solve_upper(&u, &b);
+            let ux = u.matvec(&x);
+            for i in 0..n {
+                ok((ux[i] - b[i]).abs() < 1e-8, "Ux=b")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invert_lower_gives_inverse() {
+        let mut rng = Rng::new(8);
+        let a = random_spd(8, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let linv = invert_lower(&l);
+        assert!(l.matmul(&linv).dist(&Matrix::identity(8)) < 1e-8);
+        assert!(linv.matmul(&l).dist(&Matrix::identity(8)) < 1e-8);
+    }
+}

@@ -1,0 +1,215 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! ASVD-II whitens with `S = P Λ^{1/2}` where `P Λ Pᵀ` is the spectral
+//! decomposition of the Gram `X Xᵀ`.  Jacobi is the right tool here: the
+//! Grams are small (n ≤ a few hundred), symmetric PSD, and Jacobi delivers
+//! high relative accuracy on the small eigenvalues that decide whether a
+//! pseudo-inverse is needed — precisely the regime the paper's §3 discusses.
+
+use super::matrix::Matrix;
+
+/// Result of a symmetric eigendecomposition `A = P Λ Pᵀ`.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    /// Eigenvalues in non-increasing order.
+    pub values: Vec<f64>,
+    /// Column `j` of `vectors` is the eigenvector for `values[j]`.
+    pub vectors: Matrix,
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Sweeps rotate away off-diagonal mass until `off(A) < tol·‖A‖_F`.
+pub fn sym_eig(a: &Matrix) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut p = Matrix::identity(n);
+    if n <= 1 {
+        return SymEig { values: m.diagonal(), vectors: p };
+    }
+    let norm = m.fro_norm().max(f64::MIN_POSITIVE);
+    let tol = 1e-14 * norm;
+    const MAX_SWEEPS: usize = 60;
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if (2.0 * off).sqrt() < tol {
+            break;
+        }
+        for i in 0..n - 1 {
+            for j in (i + 1)..n {
+                let apq = m[(i, j)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(i, i)];
+                let aqq = m[(j, j)];
+                // Stable rotation computation (Golub & Van Loan §8.5).
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply the rotation J(i, j, θ): A ← Jᵀ A J.
+                for k in 0..n {
+                    let aki = m[(k, i)];
+                    let akj = m[(k, j)];
+                    m[(k, i)] = c * aki - s * akj;
+                    m[(k, j)] = s * aki + c * akj;
+                }
+                for k in 0..n {
+                    let aik = m[(i, k)];
+                    let ajk = m[(j, k)];
+                    m[(i, k)] = c * aik - s * ajk;
+                    m[(j, k)] = s * aik + c * ajk;
+                }
+                // Accumulate eigenvectors: P ← P J.
+                for k in 0..n {
+                    let pki = p[(k, i)];
+                    let pkj = p[(k, j)];
+                    p[(k, i)] = c * pki - s * pkj;
+                    p[(k, j)] = s * pki + c * pkj;
+                }
+            }
+        }
+    }
+    // Sort by eigenvalue, descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag = m.diagonal();
+    order.sort_by(|&x, &y| diag[y].partial_cmp(&diag[x]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&k| diag[k]).collect();
+    let vectors = p.select_cols(&order);
+    SymEig { values, vectors }
+}
+
+impl SymEig {
+    /// Reconstruct `P Λ Pᵀ`.
+    pub fn reconstruct(&self) -> Matrix {
+        let pl = self.vectors.scale_cols(&self.values);
+        pl.matmul_nt(&self.vectors)
+    }
+
+    /// The whitening factor `S = P Λ^{1/2}` with eigenvalues clamped at zero
+    /// (PSD projection).  This is the ASVD-II transform.
+    pub fn sqrt_factor(&self) -> Matrix {
+        let sqrt_vals: Vec<f64> = self.values.iter().map(|&v| v.max(0.0).sqrt()).collect();
+        self.vectors.scale_cols(&sqrt_vals)
+    }
+
+    /// Pseudo-inverse of the whitening factor: `S⁺ = Λ^{-1/2} Pᵀ`, with
+    /// eigenvalues below `rel_tol·λ_max` treated as zero.
+    pub fn sqrt_factor_pinv(&self, rel_tol: f64) -> Matrix {
+        let lmax = self.values.first().copied().unwrap_or(0.0).max(0.0);
+        let cutoff = lmax * rel_tol;
+        let inv_sqrt: Vec<f64> = self
+            .values
+            .iter()
+            .map(|&v| if v > cutoff && v > 0.0 { 1.0 / v.sqrt() } else { 0.0 })
+            .collect();
+        // Λ^{-1/2} Pᵀ = (P Λ^{-1/2})ᵀ
+        self.vectors.scale_cols(&inv_sqrt).transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn ok(cond: bool, what: &str) -> Result<(), String> {
+        if cond {
+            Ok(())
+        } else {
+            Err(what.to_string())
+        }
+    }
+
+    #[test]
+    fn diagonalizes_known_matrix() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+        assert!(e.reconstruct().dist(&a) < 1e-12);
+    }
+
+    #[test]
+    fn eig_reconstructs_random_symmetric() {
+        check("A = PΛPᵀ", 20, |g| {
+            let mut rng = g.rng.fork(0);
+            let n = g.usize_in(1, 25);
+            let b = Matrix::randn(n, n, 1.0, &mut rng);
+            let mut a = &b + &b.transpose();
+            a.symmetrize();
+            let e = sym_eig(&a);
+            ok(e.reconstruct().dist(&a) < 1e-8 * (1.0 + a.fro_norm()), "PΛPᵀ=A")?;
+            // P orthonormal.
+            let gram = e.vectors.matmul_tn(&e.vectors);
+            ok(gram.dist(&Matrix::identity(n)) < 1e-9, "PᵀP=I")?;
+            // Sorted descending.
+            for w in e.values.windows(2) {
+                ok(w[0] + 1e-10 >= w[1], "sorted")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trace_and_fro_norm_invariants() {
+        check("trace = Σλ, ‖A‖²_F = Σλ²", 15, |g| {
+            let mut rng = g.rng.fork(0);
+            let n = g.usize_in(2, 20);
+            let b = Matrix::randn(n, n, 1.0, &mut rng);
+            let mut a = &b + &b.transpose();
+            a.symmetrize();
+            let e = sym_eig(&a);
+            let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
+            let sum_l: f64 = e.values.iter().sum();
+            ok((tr - sum_l).abs() < 1e-8 * (1.0 + tr.abs()), "trace")?;
+            let f2 = a.fro_norm().powi(2);
+            let sum_l2: f64 = e.values.iter().map(|l| l * l).sum();
+            ok((f2 - sum_l2).abs() < 1e-7 * (1.0 + f2), "fro")
+        });
+    }
+
+    #[test]
+    fn sqrt_factor_squares_to_gram() {
+        let mut rng = Rng::new(9);
+        let x = Matrix::randn(10, 30, 1.0, &mut rng);
+        let gram = x.matmul_nt(&x); // full-rank PSD
+        let e = sym_eig(&gram);
+        let s = e.sqrt_factor();
+        assert!(s.matmul_nt(&s).dist(&gram) < 1e-8 * gram.fro_norm());
+    }
+
+    #[test]
+    fn pinv_handles_rank_deficiency() {
+        let mut rng = Rng::new(10);
+        // Rank-3 Gram in R^8.
+        let x = Matrix::randn(8, 3, 1.0, &mut rng);
+        let gram = x.matmul_nt(&x);
+        let e = sym_eig(&gram);
+        let s = e.sqrt_factor();
+        let sp = e.sqrt_factor_pinv(1e-12);
+        // S S⁺ projects onto the column space: S S⁺ S = S.
+        let ssp_s = s.matmul(&sp).matmul(&s);
+        assert!(ssp_s.dist(&s) < 1e-7 * (1.0 + s.fro_norm()));
+    }
+
+    #[test]
+    fn handles_trivial_sizes() {
+        let a = Matrix::from_rows(&[vec![4.0]]);
+        let e = sym_eig(&a);
+        assert_eq!(e.values, vec![4.0]);
+        let z = Matrix::zeros(3, 3);
+        let ez = sym_eig(&z);
+        assert!(ez.values.iter().all(|&v| v.abs() < 1e-15));
+    }
+}

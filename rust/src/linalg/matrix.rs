@@ -1,0 +1,501 @@
+//! Row-major dense f64 matrix with cache-blocked multiplication.
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Matrix { rows: r, cols: c, data: rows.concat() }
+    }
+
+    /// Matrix with iid N(0, std²) entries.
+    pub fn randn(rows: usize, cols: usize, std: f64, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal() * std;
+        }
+        m
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Matrix {
+        let n = d.len();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    /// The main diagonal as a vector.
+    pub fn diagonal(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Copy of a rectangular block `[r0, r1) × [c0, c1)`.
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut m = Matrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            m.row_mut(i - r0)
+                .copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        m
+    }
+
+    /// Keep the first `k` columns.
+    pub fn take_cols(&self, k: usize) -> Matrix {
+        self.submatrix(0, self.rows, 0, k.min(self.cols))
+    }
+
+    /// Select columns by index.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, idx.len());
+        for (jj, &j) in idx.iter().enumerate() {
+            for i in 0..self.rows {
+                m[(i, jj)] = self[(i, j)];
+            }
+        }
+        m
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut m = Matrix::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            m.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            m.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        m
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let mut m = self.clone();
+        for v in m.data.iter_mut() {
+            *v *= s;
+        }
+        m
+    }
+
+    /// Scale column `j` by `s[j]` (right-multiplication by diag(s)).
+    pub fn scale_cols(&self, s: &[f64]) -> Matrix {
+        assert_eq!(s.len(), self.cols);
+        let mut m = self.clone();
+        for i in 0..m.rows {
+            let row = m.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= s[j];
+            }
+        }
+        m
+    }
+
+    /// Scale row `i` by `s[i]` (left-multiplication by diag(s)).
+    pub fn scale_rows(&self, s: &[f64]) -> Matrix {
+        assert_eq!(s.len(), self.rows);
+        let mut m = self.clone();
+        for i in 0..m.rows {
+            let si = s[i];
+            for v in m.row_mut(i).iter_mut() {
+                *v *= si;
+            }
+        }
+        m
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |acc, x| acc.max(x.abs()))
+    }
+
+    /// Frobenius norm of `self - other`.
+    pub fn dist(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// `self @ other` with cache blocking (k-panel inner loop, row-major
+    /// friendly: C[i,:] += A[i,k] * B[k,:]).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch: {}x{} @ {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Matrix::zeros(m, n);
+        const KB: usize = 64;
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            for i in 0..m {
+                let a_row = self.row(i);
+                let c_row = c.row_mut(i);
+                for kk in k0..k1 {
+                    let a = a_row[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = other.row(kk);
+                    for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
+                        *cv += a * bv;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// `selfᵀ @ other` without materializing the transpose.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let mut c = Matrix::zeros(m, n);
+        for kk in 0..k {
+            let a_row = self.row(kk);
+            let b_row = other.row(kk);
+            for i in 0..m {
+                let a = a_row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let c_row = c.row_mut(i);
+                for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// `self @ otherᵀ` without materializing the transpose (dot-product form).
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let c_row = c.row_mut(i);
+            for j in 0..n {
+                let b_row = other.row(j);
+                let mut acc = 0.0;
+                for (av, bv) in a_row.iter().zip(b_row.iter()) {
+                    acc += av * bv;
+                }
+                c_row[j] = acc;
+            }
+        }
+        c
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Symmetrize in place: `(M + Mᵀ)/2` (used to de-noise Gram matrices).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    /// Cast to f32 (row-major), for hand-off to the model/runtime layers.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from f32 data (row-major).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Matrix {
+    type Output = Matrix;
+    fn add(self, rhs: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut m = self.clone();
+        for (a, b) in m.data.iter_mut().zip(&rhs.data) {
+            *a += b;
+        }
+        m
+    }
+}
+
+impl Sub for &Matrix {
+    type Output = Matrix;
+    fn sub(self, rhs: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut m = self.clone();
+        for (a, b) in m.data.iter_mut().zip(&rhs.data) {
+            *a -= b;
+        }
+        m
+    }
+}
+
+impl Mul for &Matrix {
+    type Output = Matrix;
+    fn mul(self, rhs: &Matrix) -> Matrix {
+        self.matmul(rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn ok(cond: bool, what: &str) -> Result<(), String> {
+        if cond {
+            Ok(())
+        } else {
+            Err(what.to_string())
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(5, 7, 1.0, &mut rng);
+        let i5 = Matrix::identity(5);
+        let i7 = Matrix::identity(7);
+        assert!(i5.matmul(&a).dist(&a) < 1e-12);
+        assert!(a.matmul(&i7).dist(&a) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_matches_naive_small() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        check("matmul_tn/nt agree with explicit transpose", 20, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(1, 12);
+            let k = g.usize_in(1, 12);
+            let n = g.usize_in(1, 12);
+            let a = Matrix::randn(k, m, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let tn = a.matmul_tn(&b);
+            let explicit = a.transpose().matmul(&b);
+            ok(tn.dist(&explicit) < 1e-10, "tn mismatch")?;
+            let c = Matrix::randn(m, k, 1.0, &mut rng);
+            let d = Matrix::randn(n, k, 1.0, &mut rng);
+            let nt = c.matmul_nt(&d);
+            let explicit2 = c.matmul(&d.transpose());
+            ok(nt.dist(&explicit2) < 1e-10, "nt mismatch")
+        });
+    }
+
+    #[test]
+    fn matmul_associativity_property() {
+        check("(AB)C = A(BC)", 15, |g| {
+            let mut rng = g.rng.fork(0);
+            let (m, k, l, n) = (
+                g.usize_in(1, 10),
+                g.usize_in(1, 10),
+                g.usize_in(1, 10),
+                g.usize_in(1, 10),
+            );
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, l, 1.0, &mut rng);
+            let c = Matrix::randn(l, n, 1.0, &mut rng);
+            let left = a.matmul(&b).matmul(&c);
+            let right = a.matmul(&b.matmul(&c));
+            ok(left.dist(&right) < 1e-9, "associativity")
+        });
+    }
+
+    #[test]
+    fn scale_rows_cols_are_diag_products() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(4, 6, 1.0, &mut rng);
+        let s: Vec<f64> = (0..6).map(|i| (i + 1) as f64).collect();
+        let r: Vec<f64> = (0..4).map(|i| (i + 1) as f64 * 0.5).collect();
+        assert!(a.scale_cols(&s).dist(&a.matmul(&Matrix::diag(&s))) < 1e-12);
+        assert!(a.scale_rows(&r).dist(&Matrix::diag(&r).matmul(&a)) < 1e-12);
+    }
+
+    #[test]
+    fn submatrix_and_concat() {
+        let a = Matrix::from_fn(4, 5, |i, j| (i * 5 + j) as f64);
+        let s = a.submatrix(1, 3, 2, 5);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.cols, 3);
+        assert_eq!(s[(0, 0)], 7.0);
+        let left = a.take_cols(2);
+        let right = a.submatrix(0, 4, 2, 5);
+        assert!(left.hcat(&right).dist(&a) < 1e-15);
+    }
+
+    #[test]
+    fn select_cols_picks_columns() {
+        let a = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let s = a.select_cols(&[3, 1]);
+        assert_eq!(s.col(0), a.col(3));
+        assert_eq!(s.col(1), a.col(1));
+    }
+
+    #[test]
+    fn fro_norm_matches_definition() {
+        let a = Matrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(6, 4, 1.0, &mut rng);
+        let x: Vec<f64> = rng.normal_vec(4);
+        let y = a.matvec(&x);
+        let xm = Matrix { rows: 4, cols: 1, data: x };
+        let ym = a.matmul(&xm);
+        for i in 0..6 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(3, 3, 1.0, &mut rng);
+        let b = Matrix::from_f32(3, 3, &a.to_f32());
+        assert!(a.dist(&b) < 1e-6);
+    }
+}

@@ -1,0 +1,34 @@
+//! Dense f64 linear algebra, implemented from scratch.
+//!
+//! The paper's method is linear algebra: activation-aware whitening needs the
+//! Cholesky factor or eigendecomposition of the Gram matrix `X Xᵀ`, the
+//! decomposition itself needs truncated SVD, and the NID variants need a
+//! rank-revealing (column-pivoted) QR for the interpolative decomposition.
+//! No BLAS/LAPACK binding is available offline, so everything lives here:
+//!
+//! * [`matrix`] — row-major [`Matrix`] with blocked matmul.
+//! * [`qr`] — Householder QR, thin QR, LQ, and column-pivoted QR.
+//! * [`chol`] — Cholesky factorization with PSD-safe ridge handling.
+//! * [`eig`] — cyclic Jacobi symmetric eigendecomposition.
+//! * [`svd`] — one-sided Jacobi SVD + truncation (Eckart–Young).
+//! * [`id`] — low-rank column interpolative decomposition.
+//! * [`solve`] — triangular solves, inverses, pseudo-inverse.
+//!
+//! Numerical conventions: decompositions run in f64 (the whitening transform
+//! inverts triangular/eigen factors, where f32 demonstrably breaks the
+//! σ_j = loss correspondence of Theorem 2); model math elsewhere is f32.
+
+pub mod chol;
+pub mod eig;
+pub mod id;
+pub mod matrix;
+pub mod qr;
+pub mod solve;
+pub mod svd;
+
+pub use chol::cholesky;
+pub use eig::sym_eig;
+pub use id::interpolative;
+pub use matrix::Matrix;
+pub use qr::{lq, qr_thin};
+pub use svd::{svd_thin, Svd};

@@ -1,0 +1,286 @@
+//! Householder QR, thin QR, LQ, and column-pivoted (rank-revealing) QR.
+
+use super::matrix::Matrix;
+
+/// Thin QR: `A (m×n) = Q (m×r) R (r×n)` with `r = min(m, n)`,
+/// Q having orthonormal columns and R upper-triangular.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    let r = m.min(n);
+    let mut work = a.clone(); // becomes R in its upper triangle
+    // Store Householder vectors v_k in the lower triangle (and a side vec for
+    // the implicit leading 1).
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(r);
+    for k in 0..r {
+        // Build the Householder vector for column k below the diagonal.
+        let mut norm2 = 0.0;
+        for i in k..m {
+            let x = work[(i, k)];
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm <= f64::MIN_POSITIVE {
+            vs.push(v); // zero column: identity reflector
+            continue;
+        }
+        let alpha = if work[(k, k)] >= 0.0 { -norm } else { norm };
+        v[0] = work[(k, k)] - alpha;
+        for i in (k + 1)..m {
+            v[i - k] = work[(i, k)];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= f64::MIN_POSITIVE {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to work[k.., k..].
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * work[(i, j)];
+            }
+            let beta = 2.0 * dot / vnorm2;
+            for i in k..m {
+                work[(i, j)] -= beta * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+    // R: upper triangle of work, first r rows.
+    let mut rmat = Matrix::zeros(r, n);
+    for i in 0..r {
+        for j in i..n {
+            rmat[(i, j)] = work[(i, j)];
+        }
+    }
+    // Q: apply reflectors in reverse to the first r columns of I.
+    let mut q = Matrix::zeros(m, r);
+    for i in 0..r {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..r).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= f64::MIN_POSITIVE {
+            continue;
+        }
+        for j in 0..r {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let beta = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= beta * v[i - k];
+            }
+        }
+    }
+    (q, rmat)
+}
+
+/// LQ decomposition: `A (m×n) = L (m×r) Q (r×n)` with L lower-triangular and
+/// Q having orthonormal rows; computed via QR of `Aᵀ`.
+pub fn lq(a: &Matrix) -> (Matrix, Matrix) {
+    let (q, r) = qr_thin(&a.transpose());
+    (r.transpose(), q.transpose())
+}
+
+/// Column-pivoted QR: returns `(Q, R, perm)` with `A[:, perm] = Q R` and the
+/// diagonal of R non-increasing in magnitude — the rank-revealing property
+/// the interpolative decomposition builds on.
+pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
+    let (m, n) = (a.rows, a.cols);
+    let r = m.min(n);
+    let mut work = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut colnorm2: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| work[(i, j)] * work[(i, j)]).sum())
+        .collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(r);
+    for k in 0..r {
+        // Pivot: bring the column with largest remaining norm to position k.
+        let (jmax, _) = colnorm2
+            .iter()
+            .enumerate()
+            .skip(k)
+            .fold((k, -1.0), |(bj, bv), (j, &v)| if v > bv { (j, v) } else { (bj, bv) });
+        if jmax != k {
+            for i in 0..m {
+                let t = work[(i, k)];
+                work[(i, k)] = work[(i, jmax)];
+                work[(i, jmax)] = t;
+            }
+            perm.swap(k, jmax);
+            colnorm2.swap(k, jmax);
+        }
+        // Householder on column k.
+        let mut norm2 = 0.0;
+        for i in k..m {
+            norm2 += work[(i, k)] * work[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm > f64::MIN_POSITIVE {
+            let alpha = if work[(k, k)] >= 0.0 { -norm } else { norm };
+            v[0] = work[(k, k)] - alpha;
+            for i in (k + 1)..m {
+                v[i - k] = work[(i, k)];
+            }
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 > f64::MIN_POSITIVE {
+                for j in k..n {
+                    let mut dot = 0.0;
+                    for i in k..m {
+                        dot += v[i - k] * work[(i, j)];
+                    }
+                    let beta = 2.0 * dot / vnorm2;
+                    for i in k..m {
+                        work[(i, j)] -= beta * v[i - k];
+                    }
+                }
+            }
+        }
+        vs.push(v);
+        // Downdate remaining column norms.
+        for j in (k + 1)..n {
+            let x = work[(k, j)];
+            colnorm2[j] = (colnorm2[j] - x * x).max(0.0);
+        }
+        colnorm2[k] = 0.0;
+    }
+    let mut rmat = Matrix::zeros(r, n);
+    for i in 0..r {
+        for j in i..n {
+            rmat[(i, j)] = work[(i, j)];
+        }
+    }
+    let mut q = Matrix::zeros(m, r);
+    for i in 0..r {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..r).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= f64::MIN_POSITIVE {
+            continue;
+        }
+        for j in 0..r {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let beta = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= beta * v[i - k];
+            }
+        }
+    }
+    (q, rmat, perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn ok(cond: bool, what: &str) -> Result<(), String> {
+        if cond {
+            Ok(())
+        } else {
+            Err(what.to_string())
+        }
+    }
+
+    fn orthonormal_cols(q: &Matrix, tol: f64) -> bool {
+        let gram = q.matmul_tn(q);
+        gram.dist(&Matrix::identity(q.cols)) < tol
+    }
+
+    #[test]
+    fn qr_reconstructs_random_matrices() {
+        check("A = QR", 25, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(1, 20);
+            let n = g.usize_in(1, 20);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            ok(q.matmul(&r).dist(&a) < 1e-9 * (1.0 + a.fro_norm()), "A=QR")?;
+            ok(orthonormal_cols(&q, 1e-9), "QᵀQ=I")?;
+            // R upper-triangular
+            for i in 0..r.rows {
+                for j in 0..i.min(r.cols) {
+                    ok(r[(i, j)].abs() < 1e-12, "R lower part zero")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency() {
+        let mut rng = Rng::new(5);
+        // Rank-2 matrix 6x4.
+        let b = Matrix::randn(6, 2, 1.0, &mut rng);
+        let c = Matrix::randn(2, 4, 1.0, &mut rng);
+        let a = b.matmul(&c);
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).dist(&a) < 1e-9);
+    }
+
+    #[test]
+    fn lq_reconstructs_and_orthonormal_rows() {
+        check("A = LQ", 20, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(1, 15);
+            let n = g.usize_in(1, 15);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (l, q) = lq(&a);
+            ok(l.matmul(&q).dist(&a) < 1e-9 * (1.0 + a.fro_norm()), "A=LQ")?;
+            let gram = q.matmul_nt(&q);
+            ok(gram.dist(&Matrix::identity(q.rows)) < 1e-9, "QQᵀ=I")?;
+            // L lower-triangular
+            for i in 0..l.rows {
+                for j in (i + 1)..l.cols {
+                    ok(l[(i, j)].abs() < 1e-12, "L upper part zero")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pivoted_qr_reconstructs_with_permutation() {
+        check("A[:,perm] = QR (pivoted)", 20, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(2, 15);
+            let n = g.usize_in(2, 15);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (q, r, perm) = qr_pivoted(&a);
+            let ap = a.select_cols(&perm);
+            ok(q.matmul(&r).dist(&ap) < 1e-9 * (1.0 + a.fro_norm()), "A[:,p]=QR")?;
+            ok(orthonormal_cols(&q, 1e-9), "QᵀQ=I")?;
+            // Rank-revealing: |R[k,k]| non-increasing.
+            let d = r.diagonal();
+            for w in d.windows(2) {
+                ok(w[0].abs() + 1e-9 >= w[1].abs(), "diag non-increasing")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pivoted_qr_reveals_rank() {
+        let mut rng = Rng::new(6);
+        let b = Matrix::randn(10, 3, 1.0, &mut rng);
+        let c = Matrix::randn(3, 8, 1.0, &mut rng);
+        let a = b.matmul(&c); // rank 3
+        let (_, r, _) = qr_pivoted(&a);
+        let d = r.diagonal();
+        assert!(d[2].abs() > 1e-6, "first 3 pivots significant");
+        for &x in &d[3..] {
+            assert!(x.abs() < 1e-8, "trailing pivots vanish, got {x}");
+        }
+    }
+}

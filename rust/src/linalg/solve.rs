@@ -1,0 +1,198 @@
+//! General solves, inverses, and the Moore–Penrose pseudo-inverse.
+
+use super::chol::solve_upper;
+use super::matrix::Matrix;
+use super::qr::qr_thin;
+use super::svd::svd_thin;
+use anyhow::{bail, Result};
+
+/// Solve the square system `A x = b` via QR (stable for well-conditioned A).
+pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    if a.rows != a.cols {
+        bail!("solve expects a square matrix, got {}x{}", a.rows, a.cols);
+    }
+    let (q, r) = qr_thin(a);
+    // x = R⁻¹ Qᵀ b
+    let qtb = q.transpose().matvec(b);
+    let n = a.cols;
+    for i in 0..n {
+        if r[(i, i)].abs() < 1e-300 {
+            bail!("singular system at pivot {i}");
+        }
+    }
+    Ok(solve_upper(&r, &qtb))
+}
+
+/// Least-squares solve `min ‖A x − b‖₂` for tall A via thin QR.
+pub fn lstsq(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    if a.rows < a.cols {
+        bail!("lstsq expects a tall (m ≥ n) matrix");
+    }
+    let (q, r) = qr_thin(a);
+    let qtb = q.transpose().matvec(b);
+    for i in 0..a.cols {
+        if r[(i, i)].abs() < 1e-300 {
+            bail!("rank-deficient least-squares at pivot {i}");
+        }
+    }
+    Ok(solve_upper(&r, &qtb))
+}
+
+/// Inverse of a square matrix via QR (column-by-column solves).
+pub fn inverse(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows;
+    if a.rows != a.cols {
+        bail!("inverse expects a square matrix");
+    }
+    let (q, r) = qr_thin(a);
+    for i in 0..n {
+        if r[(i, i)].abs() < 1e-300 {
+            bail!("matrix is singular at pivot {i}");
+        }
+    }
+    let qt = q.transpose();
+    let mut inv = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        let qte = qt.matvec(&e);
+        let col = solve_upper(&r, &qte);
+        inv.set_col(j, &col);
+    }
+    Ok(inv)
+}
+
+/// Moore–Penrose pseudo-inverse via SVD, zeroing singular values below
+/// `rel_tol · σ_max`.
+pub fn pinv(a: &Matrix, rel_tol: f64) -> Matrix {
+    let svd = svd_thin(a);
+    let smax = svd.s.first().copied().unwrap_or(0.0);
+    let cutoff = smax * rel_tol;
+    let inv_s: Vec<f64> = svd
+        .s
+        .iter()
+        .map(|&x| if x > cutoff && x > 0.0 { 1.0 / x } else { 0.0 })
+        .collect();
+    // A⁺ = V diag(1/σ) Uᵀ
+    svd.v.scale_cols(&inv_s).matmul_nt(&svd.u)
+}
+
+/// Solve `x L = b` i.e. `Lᵀ xᵀ = bᵀ` for a lower-triangular L (row-vector
+/// form used when whitening from the right).
+pub fn solve_lower_right(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    // x L = b  ⇔  Lᵀ xᵀ = bᵀ, and Lᵀ is upper-triangular.
+    solve_upper(&l.transpose(), b)
+}
+
+/// Re-export triangular kernels at this level for discoverability.
+pub use super::chol::{solve_lower as trisolve_lower, solve_upper as trisolve_upper};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn ok(cond: bool, what: &str) -> Result<(), String> {
+        if cond {
+            Ok(())
+        } else {
+            Err(what.to_string())
+        }
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        check("A(Ax)⁻¹ roundtrip", 20, |g| {
+            let mut rng = g.rng.fork(0);
+            let n = g.usize_in(1, 15);
+            let mut a = Matrix::randn(n, n, 1.0, &mut rng);
+            for i in 0..n {
+                a[(i, i)] += n as f64; // diagonally dominant → well-conditioned
+            }
+            let x_true = rng.normal_vec(n);
+            let b = a.matvec(&x_true);
+            let x = solve(&a, &b).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                ok((x[i] - x_true[i]).abs() < 1e-7, "solution mismatch")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(18);
+        let mut a = Matrix::randn(10, 10, 1.0, &mut rng);
+        for i in 0..10 {
+            a[(i, i)] += 10.0;
+        }
+        let inv = inverse(&a).unwrap();
+        assert!(a.matmul(&inv).dist(&Matrix::identity(10)) < 1e-8);
+    }
+
+    #[test]
+    fn lstsq_matches_normal_equations() {
+        let mut rng = Rng::new(19);
+        let a = Matrix::randn(20, 6, 1.0, &mut rng);
+        let b = rng.normal_vec(20);
+        let x = lstsq(&a, &b).unwrap();
+        // Normal equations residual: Aᵀ(Ax - b) = 0.
+        let ax = a.matvec(&x);
+        let resid: Vec<f64> = ax.iter().zip(&b).map(|(p, q)| p - q).collect();
+        let at_res = a.transpose().matvec(&resid);
+        assert!(at_res.iter().all(|v| v.abs() < 1e-8));
+    }
+
+    #[test]
+    fn pinv_satisfies_penrose_conditions() {
+        check("Penrose: A A⁺ A = A and A⁺ A A⁺ = A⁺", 15, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(2, 14);
+            let n = g.usize_in(2, 14);
+            let r = g.usize_in(1, m.min(n) + 1).min(m.min(n));
+            let b = Matrix::randn(m, r, 1.0, &mut rng);
+            let c = Matrix::randn(r, n, 1.0, &mut rng);
+            let a = b.matmul(&c); // rank-r, possibly deficient
+            let ap = pinv(&a, 1e-12);
+            let aapa = a.matmul(&ap).matmul(&a);
+            ok(aapa.dist(&a) < 1e-7 * (1.0 + a.fro_norm()), "AA⁺A=A")?;
+            let apaap = ap.matmul(&a).matmul(&ap);
+            ok(apaap.dist(&ap) < 1e-7 * (1.0 + ap.fro_norm()), "A⁺AA⁺=A⁺")
+        });
+    }
+
+    #[test]
+    fn pinv_of_invertible_is_inverse() {
+        let mut rng = Rng::new(20);
+        let mut a = Matrix::randn(8, 8, 1.0, &mut rng);
+        for i in 0..8 {
+            a[(i, i)] += 8.0;
+        }
+        let inv = inverse(&a).unwrap();
+        let p = pinv(&a, 1e-14);
+        assert!(inv.dist(&p) < 1e-7);
+    }
+
+    #[test]
+    fn singular_solve_fails_cleanly() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(solve(&a, &[1.0, 2.0]).is_err());
+        assert!(inverse(&a).is_err());
+    }
+
+    #[test]
+    fn solve_lower_right_is_right_division() {
+        let mut rng = Rng::new(21);
+        let g = Matrix::randn(6, 12, 1.0, &mut rng);
+        let gram = g.matmul_nt(&g);
+        let l = crate::linalg::chol::cholesky(&gram).unwrap();
+        let b = rng.normal_vec(6);
+        let x = solve_lower_right(&l, &b);
+        // x L = b
+        let xl = l.transpose().matvec(&x); // (x L)ᵀ = Lᵀ xᵀ
+        for i in 0..6 {
+            assert!((xl[i] - b[i]).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! nsvd — command-line entrypoint for the NSVD compression system.
+//!
+//! Commands regenerate the paper's experiments (tables 1–6, figure 1, the
+//! ASVD-III ablation), run one-off compressions, and drive the serving demo.
+
+use anyhow::Result;
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
+use nsvd::coordinator::reports::{render_method_block, save_table, MethodRow, Table};
+use nsvd::coordinator::scheduler::{run_jobs, sweeps, Job};
+use nsvd::coordinator::server;
+use nsvd::data::corpus::{paper_label, Registry, DOMAIN_NAMES};
+use nsvd::util::cli::{Cli, Command};
+use nsvd::util::timer::Timer;
+use std::path::PathBuf;
+
+fn main() {
+    let cli = build_cli();
+    let argv: Vec<String> = std::env::args().collect();
+    let (cmd, args) = match cli.parse(&argv) {
+        Ok(x) => x,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.name {
+        "info" => cmd_info(&args),
+        "compress" => cmd_compress(&args),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "serve" => cmd_serve(&args),
+        "e2e" => cmd_e2e(&args),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_cli() -> Cli {
+    Cli::new("nsvd", "Nested activation-aware decomposition for LLM compression")
+        .command(
+            Command::new("info", "summarize the artifacts manifest")
+                .flag("artifacts", "artifacts directory", Some("artifacts")),
+        )
+        .command(
+            Command::new("compress", "compress one model and report perplexities")
+                .flag("artifacts", "artifacts directory", Some("artifacts"))
+                .flag("model", "model name", Some("llama-t"))
+                .flag("method", "svd | asvd-0 | asvd-i | asvd-ii | asvd-iii | nsvd-i | nsvd-ii | nid-i | nid-ii", Some("nsvd-i"))
+                .flag("ratio", "compression ratio (0-1)", Some("0.3"))
+                .flag("alpha", "k1 share for nested methods", Some("0.95"))
+                .flag("windows", "eval windows per dataset", Some("64"))
+                .switch("native", "use the native forward instead of PJRT"),
+        )
+        .command(
+            Command::new("table", "regenerate a paper table: 1 | 2 | 3 | 4 | 5 | 6 | ablation")
+                .flag("artifacts", "artifacts directory", Some("artifacts"))
+                .flag("windows", "eval windows per dataset", Some("64"))
+                .flag("ratios", "ratios for table 1", Some("0.1,0.2,0.3,0.4,0.5"))
+                .switch("native", "use the native forward instead of PJRT"),
+        )
+        .command(
+            Command::new("figure", "regenerate figure 1 (similarity histograms)")
+                .flag("artifacts", "artifacts directory", Some("artifacts"))
+                .flag("windows", "eval windows per dataset", Some("64")),
+        )
+        .command(
+            Command::new("serve", "serve scoring requests over a compressed model")
+                .flag("artifacts", "artifacts directory", Some("artifacts"))
+                .flag("model", "model name", Some("llama-t"))
+                .flag("method", "compression method", Some("nsvd-i"))
+                .flag("ratio", "compression ratio", Some("0.3"))
+                .flag("requests", "number of requests", Some("200"))
+                .flag("rate", "request rate (rps, 0 = as fast as possible)", Some("0"))
+                .flag("max-wait-ms", "batcher max wait", Some("2")),
+        )
+        .command(
+            Command::new("e2e", "full pipeline demo: calibrate → compress → evaluate")
+                .flag("artifacts", "artifacts directory", Some("artifacts"))
+                .flag("model", "model name", Some("llama-t"))
+                .flag("method", "compression method", Some("nsvd-i"))
+                .flag("ratio", "compression ratio", Some("0.3"))
+                .flag("alpha", "k1 share", Some("0.95"))
+                .flag("windows", "eval windows per dataset", Some("32"))
+                .switch("native", "use the native forward instead of PJRT"),
+        )
+}
+
+fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> {
+    let mut cfg = PipelineConfig::default_for_model(model);
+    cfg.artifacts_dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    cfg.eval_windows = args.get_usize("windows").unwrap_or(64);
+    cfg.use_pjrt = !args.switch("native");
+    Pipeline::new(cfg)
+}
+
+fn cmd_info(args: &nsvd::util::cli::Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = nsvd::runtime::artifacts::Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    println!("seq={} eval_batch={}", manifest.seq, manifest.eval_batch);
+    println!("\nmodels:");
+    for (name, cfg) in &manifest.models {
+        println!(
+            "  {name:<10} family={:?} d={} L={} heads={} ff={} window={} (arch {})",
+            cfg.family, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_ff, cfg.window, cfg.arch
+        );
+    }
+    println!("\nartifacts:");
+    for (key, a) in &manifest.artifacts {
+        println!("  {key:<24} kind={:<8} file={}", a.kind, a.file);
+    }
+    Ok(())
+}
+
+fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
+    let model = args.get_or("model", "llama-t").to_string();
+    let mut pipeline = pipeline_from(args, &model)?;
+    let spec = CompressionSpec {
+        method: Method::parse(args.get_or("method", "nsvd-i"))?,
+        ratio: args.get_f64("ratio").unwrap_or(0.3),
+        alpha: args.get_f64("alpha").unwrap_or(0.95),
+    };
+    let t = Timer::start();
+    let report = pipeline.run(&spec)?;
+    println!(
+        "model={} method={} ratio={:.0}% α={} params {} → {} ({:.1}% removed) in {:.1}s",
+        report.model,
+        report.method,
+        report.ratio * 100.0,
+        report.alpha,
+        report.dense_params,
+        report.compressed_params,
+        (1.0 - report.compressed_params as f64 / report.dense_params as f64) * 100.0,
+        t.elapsed_s()
+    );
+    for r in &report.results {
+        println!("  {:<16} ppl {:>10.2}", paper_label(&r.dataset), r.ppl());
+    }
+    Ok(())
+}
+
+/// Format job outcomes into table rows (one per method job).
+fn rows_from_outcomes(
+    outcomes: &[nsvd::coordinator::scheduler::JobOutcome],
+) -> Vec<MethodRow> {
+    outcomes
+        .iter()
+        .filter_map(|o| {
+            let report = o.result.as_ref().ok()?;
+            let ppl: Vec<f64> = DOMAIN_NAMES
+                .iter()
+                .map(|d| report.ppl(d).unwrap_or(f64::NAN))
+                .collect();
+            Some(MethodRow {
+                label: o.job.name.clone(),
+                ppl,
+                is_ours: o.job.spec.method.is_nested(),
+            })
+        })
+        .collect()
+}
+
+fn baseline_index(rows: &[MethodRow], label_prefix: &str) -> usize {
+    rows.iter()
+        .position(|r| r.label.starts_with(label_prefix))
+        .unwrap_or(0)
+}
+
+fn cmd_table(args: &nsvd::util::cli::Args) -> Result<()> {
+    let id = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("1");
+    match id {
+        "1" => {
+            let ratios: Vec<f64> = args
+                .get_list("ratios")
+                .iter()
+                .filter_map(|s| s.parse().ok())
+                .collect();
+            let mut pipeline = pipeline_from(args, "llama-t")?;
+            let dense = pipeline.run_dense()?;
+            println!(
+                "Original: {}",
+                dense
+                    .results
+                    .iter()
+                    .map(|r| format!("{}={:.2}", r.dataset, r.ppl()))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+            for &ratio in &ratios {
+                let jobs: Vec<Job> = sweeps::table1(&[ratio]);
+                let outcomes = run_jobs(&mut pipeline, &jobs);
+                let rows = rows_from_outcomes(&outcomes);
+                let b = baseline_index(&rows, "ASVD-I@");
+                let table = render_method_block(
+                    &format!(
+                        "Table 1 — LLaMA-7B analog (llama-t), ratio {:.0}%",
+                        ratio * 100.0
+                    ),
+                    &rows,
+                    b,
+                );
+                println!("{}", table.to_markdown());
+                save_table(&table, &format!("table1_r{:02.0}", ratio * 100.0))?;
+            }
+        }
+        "2" => {
+            let mut pipeline = pipeline_from(args, "llama-t")?;
+            let reports = pipeline.similarity_analysis()?;
+            let mut table = Table::new(
+                "Table 2 — activation similarity vs calibration set (llama-t)",
+                std::iter::once("Similarity".to_string())
+                    .chain(DOMAIN_NAMES.iter().map(|d| paper_label(d).to_string()))
+                    .collect(),
+            );
+            let mut row = vec!["Mean (std)".to_string()];
+            for r in &reports {
+                row.push(format!("{:.2} ({:.2})", r.mean, r.std));
+            }
+            table.push_row(row);
+            println!("{}", table.to_markdown());
+            save_table(&table, "table2_similarity")?;
+        }
+        "3" | "4" => {
+            let mut pipeline = pipeline_from(args, "llama-t")?;
+            let jobs = if id == "3" { sweeps::table3() } else { sweeps::table4() };
+            let mut all_jobs = vec![Job::new(Method::AsvdI, 0.30, 1.0)];
+            all_jobs.extend(jobs);
+            let outcomes = run_jobs(&mut pipeline, &all_jobs);
+            let rows = rows_from_outcomes(&outcomes);
+            let table = render_method_block(
+                &format!("Table {id} — k1 sweep at 30% (llama-t)"),
+                &rows,
+                0,
+            );
+            println!("{}", table.to_markdown());
+            save_table(&table, &format!("table{id}_k1_sweep"))?;
+        }
+        "5" | "6" => {
+            let models: &[&str] = if id == "5" {
+                &["vicuna-t", "mistral-t", "opt-t"]
+            } else {
+                &["llama-t", "llama-s", "llama-m"]
+            };
+            for model in models {
+                let mut pipeline = pipeline_from(args, model)?;
+                let outcomes = run_jobs(&mut pipeline, &sweeps::model_comparison());
+                let rows = rows_from_outcomes(&outcomes);
+                let b = baseline_index(&rows, "ASVD-I@");
+                let table =
+                    render_method_block(&format!("Table {id} — {model} at 30%"), &rows, b);
+                println!("{}", table.to_markdown());
+                save_table(&table, &format!("table{id}_{model}"))?;
+            }
+        }
+        "ablation" => {
+            let mut pipeline = pipeline_from(args, "llama-t")?;
+            let outcomes = run_jobs(&mut pipeline, &sweeps::ablation());
+            let rows = rows_from_outcomes(&outcomes);
+            let table = render_method_block(
+                "Ablation — ASVD-II vs ASVD-III (failure trial, §3 Theorem 4)",
+                &rows,
+                0,
+            );
+            println!("{}", table.to_markdown());
+            save_table(&table, "ablation_asvd3")?;
+        }
+        other => anyhow::bail!("unknown table id '{other}' (use 1-6 or 'ablation')"),
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &nsvd::util::cli::Args) -> Result<()> {
+    let mut pipeline = pipeline_from(args, "llama-t")?;
+    let reports = pipeline.similarity_analysis()?;
+    for r in &reports {
+        println!(
+            "--- Figure 1: {} (mean {:.2}, std {:.2}) ---",
+            paper_label(&r.dataset),
+            r.mean,
+            r.std
+        );
+        println!("{}", r.ascii_histogram(10, 40));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &nsvd::util::cli::Args) -> Result<()> {
+    let model = args.get_or("model", "llama-t").to_string();
+    let mut pipeline = pipeline_from(args, &model)?;
+    let spec = CompressionSpec {
+        method: Method::parse(args.get_or("method", "nsvd-i"))?,
+        ratio: args.get_f64("ratio").unwrap_or(0.3),
+        alpha: 0.95,
+    };
+    println!(
+        "compressing {model} with {} at {:.0}%...",
+        spec.method.label(),
+        spec.ratio * 100.0
+    );
+    let cm = pipeline.compress(&spec)?;
+    let rt = pipeline
+        .runtime()
+        .ok_or_else(|| anyhow::anyhow!("serving requires the PJRT runtime"))?;
+    let eval = rt.serve_evaluator(&model, &cm)?;
+    let registry = Registry::new(&PathBuf::from(args.get_or("artifacts", "artifacts")));
+    let corpus = registry.load("alpaca", "test")?;
+
+    let n = args.get_usize("requests").unwrap_or(200);
+    let rate = args.get_f64("rate").unwrap_or(0.0);
+    let policy = server::BatchPolicy {
+        max_wait_s: args.get_f64("max-wait-ms").unwrap_or(2.0) / 1e3,
+    };
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    let producer = server::spawn_load(corpus.tokens.clone(), eval.seq(), n, rate, req_tx);
+    let metrics = server::serve(&eval, req_rx, resp_tx, policy)?;
+    producer.join().ok();
+    let responses: Vec<_> = resp_rx.iter().collect();
+    println!("served {} responses", responses.len());
+    println!("{}", metrics.summary());
+    let mean_ppl: f64 =
+        responses.iter().map(|r| r.ppl).sum::<f64>() / responses.len().max(1) as f64;
+    println!("mean request ppl: {mean_ppl:.2}");
+    Ok(())
+}
+
+fn cmd_e2e(args: &nsvd::util::cli::Args) -> Result<()> {
+    println!("== e2e: calibrate → compress → evaluate (see examples/e2e_pipeline.rs) ==");
+    cmd_compress(args)
+}

@@ -1,0 +1,254 @@
+//! Model configurations (mirrors python/compile/model.py CONFIGS).
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Transformer family — decides norm type, MLP type, and position encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// RMSNorm + SwiGLU + RoPE (LLaMA / Vicuna).
+    Llama,
+    /// LayerNorm + ReLU MLP + learned absolute positions (OPT).
+    Opt,
+    /// LLaMA block + sliding-window attention (Mistral).
+    Mistral,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Result<Family> {
+        Ok(match s {
+            "llama" => Family::Llama,
+            "opt" => Family::Opt,
+            "mistral" => Family::Mistral,
+            _ => bail!("unknown family '{s}'"),
+        })
+    }
+
+    pub fn uses_rope(self) -> bool {
+        matches!(self, Family::Llama | Family::Mistral)
+    }
+}
+
+/// Static model description (matches the python side field-for-field).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: Family,
+    /// Architecture key — vicuna-t shares llama-t's lowered artifacts.
+    pub arch: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub window: usize, // 0 = full causal
+    pub vocab: usize,
+    /// [in, out] shapes of every compressible linear weight.
+    pub linear_shapes: Vec<(String, usize, usize)>,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parse from the manifest's `models.<name>` object.
+    pub fn from_manifest(name: &str, meta: &Json) -> Result<ModelConfig> {
+        let get = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("model {name}: missing field {k}"))
+        };
+        let family = Family::parse(
+            meta.get("family").and_then(Json::as_str).unwrap_or_default(),
+        )?;
+        let arch = meta
+            .get("arch")
+            .and_then(Json::as_str)
+            .unwrap_or(name)
+            .to_string();
+        let mut linear_shapes = Vec::new();
+        if let Some(Json::Obj(shapes)) = meta.get("linear_shapes") {
+            for (k, v) in shapes {
+                let arr = v.as_arr().unwrap_or(&[]);
+                if arr.len() == 2 {
+                    linear_shapes.push((
+                        k.clone(),
+                        arr[0].as_usize().unwrap_or(0),
+                        arr[1].as_usize().unwrap_or(0),
+                    ));
+                }
+            }
+        }
+        linear_shapes.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(ModelConfig {
+            name: name.to_string(),
+            family,
+            arch,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            max_seq: get("max_seq")?,
+            window: get("window")?,
+            vocab: get("vocab")?,
+            linear_shapes,
+        })
+    }
+
+    /// The calibration tap feeding a compressible weight (mirrors
+    /// `model.tap_for_linear` on the python side).
+    pub fn tap_for_linear(name: &str) -> String {
+        let parts: Vec<&str> = name.rsplitn(3, '.').collect();
+        // name = "blocks.{i}.attn.wq" → parts = ["wq", "attn", "blocks.{i}"]
+        let leaf = parts[0];
+        let block = parts[2];
+        match leaf {
+            "wq" | "wk" | "wv" => format!("{block}.attn_in"),
+            "wo" => format!("{block}.attn_out_in"),
+            "w_gate" | "w_up" | "fc1" => format!("{block}.mlp_in"),
+            _ => format!("{block}.mlp_down_in"), // w_down / fc2
+        }
+    }
+
+    /// Tap names in artifact output order (mirrors `model.tap_names`).
+    pub fn tap_names(&self) -> Vec<String> {
+        let mut taps = Vec::new();
+        for i in 0..self.n_layers {
+            taps.push(format!("blocks.{i}.attn_in"));
+            taps.push(format!("blocks.{i}.attn_out_in"));
+            taps.push(format!("blocks.{i}.mlp_in"));
+            taps.push(format!("blocks.{i}.mlp_down_in"));
+        }
+        taps
+    }
+
+    /// Total parameters in the compressible weights.
+    pub fn compressible_params(&self) -> usize {
+        self.linear_shapes.iter().map(|(_, a, b)| a * b).sum()
+    }
+
+    /// Built-in config table for tests / native-only runs (no manifest).
+    pub fn builtin(name: &str) -> Result<ModelConfig> {
+        let (family, d, l, h, f, w) = match name {
+            "llama-t" | "vicuna-t" => (Family::Llama, 128, 4, 4, 256, 0),
+            "llama-s" => (Family::Llama, 160, 5, 5, 320, 0),
+            "llama-m" => (Family::Llama, 192, 6, 6, 384, 0),
+            "opt-t" => (Family::Opt, 128, 4, 4, 384, 0),
+            "mistral-t" => (Family::Mistral, 128, 4, 4, 256, 32),
+            _ => bail!("unknown builtin model '{name}'"),
+        };
+        let arch = if name == "vicuna-t" { "llama-t" } else { name };
+        let mut linear_shapes = Vec::new();
+        for i in 0..l {
+            for leaf in ["wq", "wk", "wv", "wo"] {
+                linear_shapes.push((format!("blocks.{i}.attn.{leaf}"), d, d));
+            }
+            if family == Family::Opt {
+                linear_shapes.push((format!("blocks.{i}.mlp.fc1"), d, f));
+                linear_shapes.push((format!("blocks.{i}.mlp.fc2"), f, d));
+            } else {
+                linear_shapes.push((format!("blocks.{i}.mlp.w_gate"), d, f));
+                linear_shapes.push((format!("blocks.{i}.mlp.w_up"), d, f));
+                linear_shapes.push((format!("blocks.{i}.mlp.w_down"), f, d));
+            }
+        }
+        linear_shapes.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(ModelConfig {
+            name: name.to_string(),
+            family,
+            arch: arch.to_string(),
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            d_ff: f,
+            max_seq: 128,
+            window: w,
+            vocab: 256,
+            linear_shapes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_configs_parse() {
+        for name in ["llama-t", "llama-s", "llama-m", "vicuna-t", "opt-t", "mistral-t"] {
+            let cfg = ModelConfig::builtin(name).unwrap();
+            assert_eq!(cfg.d_model % cfg.n_heads, 0, "{name}");
+            assert!(!cfg.linear_shapes.is_empty());
+        }
+        assert!(ModelConfig::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn vicuna_shares_llama_arch() {
+        let v = ModelConfig::builtin("vicuna-t").unwrap();
+        assert_eq!(v.arch, "llama-t");
+        let l = ModelConfig::builtin("llama-t").unwrap();
+        assert_eq!(v.d_model, l.d_model);
+    }
+
+    #[test]
+    fn tap_mapping_matches_python() {
+        assert_eq!(
+            ModelConfig::tap_for_linear("blocks.2.attn.wq"),
+            "blocks.2.attn_in"
+        );
+        assert_eq!(
+            ModelConfig::tap_for_linear("blocks.0.attn.wo"),
+            "blocks.0.attn_out_in"
+        );
+        assert_eq!(
+            ModelConfig::tap_for_linear("blocks.3.mlp.w_gate"),
+            "blocks.3.mlp_in"
+        );
+        assert_eq!(
+            ModelConfig::tap_for_linear("blocks.1.mlp.w_down"),
+            "blocks.1.mlp_down_in"
+        );
+        assert_eq!(
+            ModelConfig::tap_for_linear("blocks.1.mlp.fc2"),
+            "blocks.1.mlp_down_in"
+        );
+    }
+
+    #[test]
+    fn tap_names_order() {
+        let cfg = ModelConfig::builtin("llama-t").unwrap();
+        let taps = cfg.tap_names();
+        assert_eq!(taps.len(), 16);
+        assert_eq!(taps[0], "blocks.0.attn_in");
+        assert_eq!(taps[5], "blocks.1.attn_out_in");
+    }
+
+    #[test]
+    fn linear_shapes_sorted_and_sized() {
+        let cfg = ModelConfig::builtin("llama-t").unwrap();
+        let names: Vec<&str> = cfg.linear_shapes.iter().map(|(n, _, _)| n.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        // 7 weights per block × 4 blocks.
+        assert_eq!(cfg.linear_shapes.len(), 28);
+        assert_eq!(cfg.compressible_params(), 4 * (4 * 128 * 128 + 3 * 128 * 256));
+    }
+
+    #[test]
+    fn from_manifest_roundtrip() {
+        let json_text = r#"{
+            "family": "llama", "arch": "llama-t", "d_model": 128,
+            "n_layers": 4, "n_heads": 4, "d_ff": 256, "max_seq": 128,
+            "window": 0, "vocab": 256,
+            "linear_shapes": {"blocks.0.attn.wq": [128, 128]}
+        }"#;
+        let meta = crate::util::json::parse(json_text).unwrap();
+        let cfg = ModelConfig::from_manifest("llama-t", &meta).unwrap();
+        assert_eq!(cfg.family, Family::Llama);
+        assert_eq!(cfg.linear_shapes.len(), 1);
+        assert_eq!(cfg.head_dim(), 32);
+    }
+}

@@ -1,0 +1,534 @@
+//! Native f32 transformer forward — the parity oracle for the PJRT path.
+//!
+//! Must match `python/compile/model.py::_forward` op-for-op: RMSNorm /
+//! LayerNorm epsilons, the split-halves RoPE convention, the additive -1e30
+//! mask, and the SwiGLU/ReLU MLP variants.  An integration test executes the
+//! lowered HLO artifact and asserts the two losses agree to f32 tolerance.
+
+use super::config::{Family, ModelConfig};
+use super::weights::{Tensor, Weights};
+use anyhow::Result;
+
+/// Overrides the dense apply for compressed layers.
+pub trait LinearOverride {
+    /// If `name` is compressed, compute `x @ W̃[name]` ([rows, in] →
+    /// [rows, out]) and return it; `None` falls back to the dense weight.
+    fn apply(&self, name: &str, x: &[f32], rows: usize, in_dim: usize) -> Option<Vec<f32>>;
+}
+
+/// No-op override (dense forward).
+pub struct NoOverride;
+impl LinearOverride for NoOverride {
+    fn apply(&self, _: &str, _: &[f32], _: usize, _: usize) -> Option<Vec<f32>> {
+        None
+    }
+}
+
+/// Observes tap activations (native calibration fallback + similarity).
+pub type TapSink<'a> = dyn FnMut(&str, &[f32], usize, usize) + 'a;
+
+/// f32 matmul: x [rows, k] @ w [k, n] → [rows, n], k-panel blocked.
+pub fn matmul_f32(x: &[f32], rows: usize, k: usize, w: &Tensor) -> Vec<f32> {
+    assert_eq!(w.dims.len(), 2);
+    assert_eq!(w.dims[0], k, "matmul: x cols {} vs w rows {}", k, w.dims[0]);
+    let n = w.dims[1];
+    matmul_raw(x, rows, k, &w.data, n)
+}
+
+/// f32 matmul over raw slices: x [rows, k] @ w [k, n].
+pub fn matmul_raw(x: &[f32], rows: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut out = vec![0.0f32; rows * n];
+    const KB: usize = 64;
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..rows {
+            let x_row = &x[i * k..(i + 1) * k];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let a = x_row[kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let w_row = &w[kk * n..(kk + 1) * n];
+                for (o, wv) in o_row.iter_mut().zip(w_row.iter()) {
+                    *o += a * wv;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn rmsnorm(x: &mut [f32], rows: usize, d: usize, w: &[f32]) {
+    for i in 0..rows {
+        let row = &mut x[i * d..(i + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for (v, &g) in row.iter_mut().zip(w.iter()) {
+            *v *= inv * g;
+        }
+    }
+}
+
+fn layernorm(x: &mut [f32], rows: usize, d: usize, w: &[f32], b: &[f32]) {
+    for i in 0..rows {
+        let row = &mut x[i * d..(i + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..d {
+            row[j] = (row[j] - mu) * inv * w[j] + b[j];
+        }
+    }
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// RoPE cos/sin tables [seq, head_dim] (split-halves convention, must match
+/// `model.rope_tables`).
+fn rope_tables(seq: usize, head_dim: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = vec![0.0f32; seq * head_dim];
+    let mut sin = vec![0.0f32; seq * head_dim];
+    for t in 0..seq {
+        for i in 0..half {
+            let freq = 1.0 / 10000f32.powf(i as f32 / half as f32);
+            let angle = t as f32 * freq;
+            let (s, c) = angle.sin_cos();
+            cos[t * head_dim + i] = c;
+            cos[t * head_dim + half + i] = c;
+            sin[t * head_dim + i] = s;
+            sin[t * head_dim + half + i] = s;
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in place to q or k laid out as [b, t, heads, hd].
+fn apply_rope(x: &mut [f32], b: usize, t: usize, heads: usize, hd: usize, cos: &[f32], sin: &[f32]) {
+    let half = hd / 2;
+    for bi in 0..b {
+        for ti in 0..t {
+            for h in 0..heads {
+                let base = ((bi * t + ti) * heads + h) * hd;
+                let crow = &cos[ti * hd..(ti + 1) * hd];
+                let srow = &sin[ti * hd..(ti + 1) * hd];
+                // rotate_half: [-x2, x1]
+                let mut rotated = vec![0.0f32; hd];
+                for i in 0..half {
+                    rotated[i] = -x[base + half + i];
+                    rotated[half + i] = x[base + i];
+                }
+                for i in 0..hd {
+                    x[base + i] = x[base + i] * crow[i] + rotated[i] * srow[i];
+                }
+            }
+        }
+    }
+}
+
+/// Forward pass state: logits [b, t, vocab].
+pub struct ForwardOutput {
+    pub logits: Vec<f32>,
+    pub b: usize,
+    pub t: usize,
+    pub vocab: usize,
+}
+
+/// Run the forward pass.  `tokens` is row-major [b, t] (values < vocab).
+pub fn forward_logits(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    mut taps: Option<&mut TapSink>,
+) -> Result<ForwardOutput> {
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let rows = b * t;
+    let tok_emb = weights.get("tok_emb")?;
+    let mut x = vec![0.0f32; rows * d];
+    for (r, &tok) in tokens.iter().enumerate().take(rows) {
+        let tok = tok as usize;
+        x[r * d..(r + 1) * d].copy_from_slice(tok_emb.row(tok));
+    }
+    if cfg.family == Family::Opt {
+        let pos_emb = weights.get("pos_emb")?;
+        for bi in 0..b {
+            for ti in 0..t {
+                let r = bi * t + ti;
+                for j in 0..d {
+                    x[r * d + j] += pos_emb.at2(ti, j);
+                }
+            }
+        }
+    }
+    let (cos, sin) = rope_tables(t, hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let lin = |name: &str, h: &[f32], rows: usize, in_dim: usize,
+                   weights: &Weights, taps: &mut Option<&mut TapSink>|
+     -> Result<Vec<f32>> {
+        if let Some(sink) = taps.as_mut() {
+            sink(&ModelConfig::tap_for_linear(name), h, rows, in_dim);
+        }
+        if let Some(y) = overrides.apply(name, h, rows, in_dim) {
+            return Ok(y);
+        }
+        Ok(matmul_f32(h, rows, in_dim, weights.get(name)?))
+    };
+
+    for i in 0..cfg.n_layers {
+        // ---- attention ----
+        let mut h = x.clone();
+        match cfg.family {
+            Family::Opt => layernorm(
+                &mut h, rows, d,
+                &weights.get(&format!("blocks.{i}.attn_norm.w"))?.data,
+                &weights.get(&format!("blocks.{i}.attn_norm.b"))?.data,
+            ),
+            _ => rmsnorm(&mut h, rows, d, &weights.get(&format!("blocks.{i}.attn_norm.w"))?.data),
+        }
+        let mut q = lin(&format!("blocks.{i}.attn.wq"), &h, rows, d, weights, &mut taps)?;
+        let mut k = lin(&format!("blocks.{i}.attn.wk"), &h, rows, d, weights, &mut taps)?;
+        let v = lin(&format!("blocks.{i}.attn.wv"), &h, rows, d, weights, &mut taps)?;
+        if cfg.family.uses_rope() {
+            apply_rope(&mut q, b, t, heads, hd, &cos, &sin);
+            apply_rope(&mut k, b, t, heads, hd, &cos, &sin);
+        }
+        // attention per (batch, head)
+        let mut att = vec![0.0f32; rows * d];
+        for bi in 0..b {
+            for hh in 0..heads {
+                for ti in 0..t {
+                    let qoff = ((bi * t + ti) * heads + hh) * hd;
+                    // scores over allowed keys
+                    let lo = if cfg.window > 0 {
+                        ti.saturating_sub(cfg.window - 1)
+                    } else {
+                        0
+                    };
+                    let mut scores = Vec::with_capacity(ti - lo + 1);
+                    let mut max_s = f32::NEG_INFINITY;
+                    for si in lo..=ti {
+                        let koff = ((bi * t + si) * heads + hh) * hd;
+                        let mut dot = 0.0f32;
+                        for u in 0..hd {
+                            dot += q[qoff + u] * k[koff + u];
+                        }
+                        let s = dot * scale;
+                        max_s = max_s.max(s);
+                        scores.push(s);
+                    }
+                    let mut denom = 0.0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max_s).exp();
+                        denom += *s;
+                    }
+                    let out_off = ((bi * t + ti) * heads + hh) * hd;
+                    for (idx, si) in (lo..=ti).enumerate() {
+                        let w = scores[idx] / denom;
+                        let voff = ((bi * t + si) * heads + hh) * hd;
+                        for u in 0..hd {
+                            att[out_off + u] += w * v[voff + u];
+                        }
+                    }
+                }
+            }
+        }
+        let o = lin(&format!("blocks.{i}.attn.wo"), &att, rows, d, weights, &mut taps)?;
+        for (xv, ov) in x.iter_mut().zip(o.iter()) {
+            *xv += ov;
+        }
+        // ---- MLP ----
+        let mut h = x.clone();
+        match cfg.family {
+            Family::Opt => layernorm(
+                &mut h, rows, d,
+                &weights.get(&format!("blocks.{i}.mlp_norm.w"))?.data,
+                &weights.get(&format!("blocks.{i}.mlp_norm.b"))?.data,
+            ),
+            _ => rmsnorm(&mut h, rows, d, &weights.get(&format!("blocks.{i}.mlp_norm.w"))?.data),
+        }
+        let m = if cfg.family == Family::Opt {
+            let mut u = lin(&format!("blocks.{i}.mlp.fc1"), &h, rows, d, weights, &mut taps)?;
+            for uv in u.iter_mut() {
+                *uv = uv.max(0.0);
+            }
+            lin(&format!("blocks.{i}.mlp.fc2"), &u, rows, cfg.d_ff, weights, &mut taps)?
+        } else {
+            let mut g = lin(&format!("blocks.{i}.mlp.w_gate"), &h, rows, d, weights, &mut taps)?;
+            let u = lin(&format!("blocks.{i}.mlp.w_up"), &h, rows, d, weights, &mut taps)?;
+            for (gv, uv) in g.iter_mut().zip(u.iter()) {
+                *gv = silu(*gv) * uv;
+            }
+            lin(&format!("blocks.{i}.mlp.w_down"), &g, rows, cfg.d_ff, weights, &mut taps)?
+        };
+        for (xv, mv) in x.iter_mut().zip(m.iter()) {
+            *xv += mv;
+        }
+    }
+    match cfg.family {
+        Family::Opt => layernorm(
+            &mut x, rows, d,
+            &weights.get("final_norm.w")?.data,
+            &weights.get("final_norm.b")?.data,
+        ),
+        _ => rmsnorm(&mut x, rows, d, &weights.get("final_norm.w")?.data),
+    }
+    let logits = matmul_f32(&x, rows, d, weights.get("lm_head")?);
+    Ok(ForwardOutput { logits, b, t, vocab: cfg.vocab })
+}
+
+/// Next-token (sum_nll, token_count) over `valid_rows` of the batch —
+/// identical reduction to `model._nll`.
+pub fn nll_from_logits(out: &ForwardOutput, tokens: &[i32], valid_rows: usize) -> (f64, usize) {
+    let (t, v) = (out.t, out.vocab);
+    let mut sum_nll = 0.0f64;
+    let mut count = 0usize;
+    for bi in 0..valid_rows.min(out.b) {
+        for ti in 0..t - 1 {
+            let row = &out.logits[((bi * t) + ti) * v..((bi * t) + ti + 1) * v];
+            let target = tokens[bi * t + ti + 1] as usize;
+            let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let lse: f32 = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+            sum_nll += (lse - row[target]) as f64;
+            count += 1;
+        }
+    }
+    (sum_nll, count)
+}
+
+/// Convenience: forward + NLL in one call (dense or overridden).
+pub fn loss(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    valid_rows: usize,
+) -> Result<(f64, usize)> {
+    let out = forward_logits(cfg, weights, overrides, tokens, b, t, None)?;
+    Ok(nll_from_logits(&out, tokens, valid_rows))
+}
+
+/// Synthetic random weights for a config — used by unit tests, property
+/// tests, and the perf benches that need a model without artifacts.
+pub fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut w = Weights::default();
+    let d = cfg.d_model;
+    let add = |w: &mut Weights, name: &str, dims: Vec<usize>, scale: f64, rng: &mut Rng| {
+        let count: usize = dims.iter().product();
+        let data: Vec<f32> = (0..count).map(|_| (rng.normal() * scale) as f32).collect();
+        w.set(name, Tensor { dims, data });
+    };
+    add(&mut w, "tok_emb", vec![cfg.vocab, d], 0.02, &mut rng);
+    add(&mut w, "lm_head", vec![d, cfg.vocab], 0.02, &mut rng);
+    if cfg.family == Family::Opt {
+        add(&mut w, "pos_emb", vec![cfg.max_seq, d], 0.02, &mut rng);
+    }
+    for (name, n_in, n_out) in &cfg.linear_shapes {
+        add(&mut w, name, vec![*n_in, *n_out], 1.0 / (*n_in as f64).sqrt(), &mut rng);
+    }
+    for i in 0..cfg.n_layers {
+        for pre in ["attn_norm", "mlp_norm"] {
+            w.set(
+                &format!("blocks.{i}.{pre}.w"),
+                Tensor { dims: vec![d], data: vec![1.0; d] },
+            );
+            if cfg.family == Family::Opt {
+                w.set(
+                    &format!("blocks.{i}.{pre}.b"),
+                    Tensor { dims: vec![d], data: vec![0.0; d] },
+                );
+            }
+        }
+    }
+    w.set("final_norm.w", Tensor { dims: vec![d], data: vec![1.0; d] });
+    if cfg.family == Family::Opt {
+        w.set("final_norm.b", Tensor { dims: vec![d], data: vec![0.0; d] });
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg(family: &str) -> ModelConfig {
+        let name = match family {
+            "opt" => "opt-t",
+            "mistral" => "mistral-t",
+            _ => "llama-t",
+        };
+        let mut cfg = ModelConfig::builtin(name).unwrap();
+        // Shrink for test speed.
+        cfg.n_layers = 2;
+        cfg.linear_shapes.retain(|(n, _, _)| n.contains("blocks.0") || n.contains("blocks.1"));
+        cfg
+    }
+
+    fn toks(b: usize, t: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..b * t).map(|_| rng.below(256) as i32).collect()
+    }
+
+    #[test]
+    fn random_init_loss_near_uniform() {
+        for fam in ["llama", "opt", "mistral"] {
+            let cfg = tiny_cfg(fam);
+            let w = random_weights(&cfg, 1);
+            let tokens = toks(2, 24, 2);
+            let (nll, count) = loss(&cfg, &w, &NoOverride, &tokens, 2, 24, 2).unwrap();
+            let mean = nll / count as f64;
+            // ln(256) ≈ 5.545 at uniform.
+            assert!((4.0..7.0).contains(&mean), "{fam}: mean nll {mean}");
+            assert_eq!(count, 2 * 23);
+        }
+    }
+
+    #[test]
+    fn causality_future_token_does_not_change_past() {
+        let cfg = tiny_cfg("llama");
+        let w = random_weights(&cfg, 3);
+        let mut tokens = toks(1, 16, 4);
+        let out_a = forward_logits(&cfg, &w, &NoOverride, &tokens, 1, 16, None).unwrap();
+        tokens[10] = (tokens[10] + 7) % 256;
+        let out_b = forward_logits(&cfg, &w, &NoOverride, &tokens, 1, 16, None).unwrap();
+        let v = cfg.vocab;
+        for ti in 0..10 {
+            for j in 0..v {
+                let a = out_a.logits[ti * v + j];
+                let bv = out_b.logits[ti * v + j];
+                assert!((a - bv).abs() < 1e-5, "past logit changed at t={ti}");
+            }
+        }
+        let mut changed = false;
+        for ti in 10..16 {
+            for j in 0..v {
+                if (out_a.logits[ti * v + j] - out_b.logits[ti * v + j]).abs() > 1e-4 {
+                    changed = true;
+                }
+            }
+        }
+        assert!(changed, "future logits should change");
+    }
+
+    #[test]
+    fn sliding_window_changes_long_range_only() {
+        let mut cfg_full = tiny_cfg("llama");
+        let mut cfg_win = tiny_cfg("mistral");
+        cfg_full.n_layers = 2;
+        cfg_win.n_layers = 2;
+        // Same weights work for both (same shapes).
+        let w = random_weights(&cfg_full, 5);
+        let tokens = toks(1, 64, 6);
+        let a = forward_logits(&cfg_full, &w, &NoOverride, &tokens, 1, 64, None).unwrap();
+        let b = forward_logits(&cfg_win, &w, &NoOverride, &tokens, 1, 64, None).unwrap();
+        let v = cfg_full.vocab;
+        // Positions < window (32) see identical context.
+        for ti in 0..32 {
+            for j in 0..v {
+                assert!(
+                    (a.logits[ti * v + j] - b.logits[ti * v + j]).abs() < 1e-4,
+                    "pos {ti} should match"
+                );
+            }
+        }
+        let diff: f32 = (32 * v..64 * v)
+            .map(|i| (a.logits[i] - b.logits[i]).abs())
+            .fold(0.0, f32::max);
+        assert!(diff > 1e-6, "windowed positions should differ");
+    }
+
+    #[test]
+    fn taps_fire_for_every_linear_class() {
+        let cfg = tiny_cfg("llama");
+        let w = random_weights(&cfg, 7);
+        let tokens = toks(1, 8, 8);
+        let mut seen: Vec<String> = Vec::new();
+        {
+            let mut sink = |tap: &str, _x: &[f32], rows: usize, dim: usize| {
+                assert_eq!(rows, 8);
+                assert!(dim == cfg.d_model || dim == cfg.d_ff);
+                seen.push(tap.to_string());
+            };
+            forward_logits(&cfg, &w, &NoOverride, &tokens, 1, 8, Some(&mut sink)).unwrap();
+        }
+        // 7 linears per llama block over 2 blocks = 14 tap events.
+        assert_eq!(seen.len(), 14);
+        assert!(seen.contains(&"blocks.0.attn_in".to_string()));
+        assert!(seen.contains(&"blocks.1.mlp_down_in".to_string()));
+    }
+
+    #[test]
+    fn override_replaces_dense_apply() {
+        struct ZeroWq;
+        impl LinearOverride for ZeroWq {
+            fn apply(&self, name: &str, _x: &[f32], rows: usize, _in: usize) -> Option<Vec<f32>> {
+                if name.ends_with("attn.wq") {
+                    Some(vec![0.0; rows * 128])
+                } else {
+                    None
+                }
+            }
+        }
+        let cfg = tiny_cfg("llama");
+        let w = random_weights(&cfg, 9);
+        let tokens = toks(1, 8, 10);
+        let a = forward_logits(&cfg, &w, &NoOverride, &tokens, 1, 8, None).unwrap();
+        let b = forward_logits(&cfg, &w, &ZeroWq, &tokens, 1, 8, None).unwrap();
+        let diff: f32 = a
+            .logits
+            .iter()
+            .zip(&b.logits)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max);
+        assert!(diff > 1e-6, "override should change the output");
+    }
+
+    #[test]
+    fn matmul_raw_matches_reference() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (7, 13, 9);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let out = matmul_raw(&x, m, k, &w, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += x[i * k + kk] * w[kk * n + j];
+                }
+                assert!((out[i * n + j] - acc).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn nll_ignores_padding_rows() {
+        let cfg = tiny_cfg("llama");
+        let w = random_weights(&cfg, 12);
+        let mut tokens = toks(2, 8, 13);
+        // Second row is padding garbage; valid_rows = 1 must ignore it.
+        let (nll1, c1) = loss(&cfg, &w, &NoOverride, &tokens, 2, 8, 1).unwrap();
+        for t in tokens.iter_mut().skip(8) {
+            *t = 0;
+        }
+        let (nll2, c2) = loss(&cfg, &w, &NoOverride, &tokens, 2, 8, 1).unwrap();
+        assert_eq!(c1, 7);
+        assert_eq!(c1, c2);
+        assert!((nll1 - nll2).abs() < 1e-6);
+    }
+}

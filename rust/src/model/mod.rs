@@ -1,0 +1,14 @@
+//! Transformer model substrate: configs, NSVDW weights, native forward.
+//!
+//! The native f32 forward is the **parity oracle** for the PJRT path: an
+//! integration test pins `forward::loss` against the executed HLO artifact,
+//! which transitively validates the whole python→HLO→rust chain.  It also
+//! serves evaluation when artifacts are absent.
+
+pub mod config;
+pub mod forward;
+pub mod generate;
+pub mod weights;
+
+pub use config::{Family, ModelConfig};
+pub use weights::Weights;

@@ -1,0 +1,166 @@
+//! NSVDW weight-file reader (format written by python/compile/weights_io.py).
+//!
+//! Layout (little-endian):
+//!   magic b"NSVDW001" · u32 n_tensors · repeat { u16 name_len · name ·
+//!   u8 ndim · u32[ndim] dims · f32[prod dims] row-major data }
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"NSVDW001";
+
+/// A named f32 tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// 2-D accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.dims.len(), 2);
+        let c = self.dims[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+}
+
+/// A complete weight set (sorted name → tensor).
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        Self::parse(&raw).with_context(|| path.display().to_string())
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Weights> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > raw.len() {
+                bail!("truncated NSVDW at byte {}", *pos);
+            }
+            let s = &raw[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != MAGIC {
+            bail!("bad NSVDW magic");
+        }
+        let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len =
+                u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = std::str::from_utf8(take(&mut pos, name_len)?)
+                .context("non-utf8 tensor name")?
+                .to_string();
+            let ndim = take(&mut pos, 1)?[0] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(
+                    u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize,
+                );
+            }
+            let count: usize = dims.iter().product::<usize>().max(1);
+            let bytes = take(&mut pos, 4 * count)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            tensors.insert(name, Tensor { dims, data });
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing tensor '{name}'"))
+    }
+
+    /// Names in sorted order — the artifact parameter order contract.
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len()).sum()
+    }
+
+    /// Replace a tensor (used when materializing compressed weights for the
+    /// native forward).
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a": shape [2, 2], data 1..4
+        raw.extend_from_slice(&1u16.to_le_bytes());
+        raw.extend_from_slice(b"a");
+        raw.push(2);
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        // tensor "b": shape [3], data 5,6,7
+        raw.extend_from_slice(&1u16.to_le_bytes());
+        raw.extend_from_slice(b"b");
+        raw.push(1);
+        raw.extend_from_slice(&3u32.to_le_bytes());
+        for v in [5.0f32, 6.0, 7.0] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        raw
+    }
+
+    #[test]
+    fn parse_sample() {
+        let w = Weights::parse(&sample_bytes()).unwrap();
+        assert_eq!(w.names(), vec!["a", "b"]);
+        let a = w.get("a").unwrap();
+        assert_eq!(a.dims, vec![2, 2]);
+        assert_eq!(a.at2(1, 0), 3.0);
+        assert_eq!(a.row(1), &[3.0, 4.0]);
+        assert_eq!(w.total_params(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(Weights::parse(b"WRONG!!!").is_err());
+        let mut raw = sample_bytes();
+        raw.truncate(raw.len() - 3);
+        assert!(Weights::parse(&raw).is_err());
+    }
+
+    #[test]
+    fn set_replaces_tensor() {
+        let mut w = Weights::parse(&sample_bytes()).unwrap();
+        w.set("a", Tensor { dims: vec![1], data: vec![9.0] });
+        assert_eq!(w.get("a").unwrap().data, vec![9.0]);
+    }
+}

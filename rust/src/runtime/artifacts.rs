@@ -1,0 +1,224 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (file names, parameter order, factor shapes, tap order).
+
+use crate::model::config::ModelConfig;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered executable's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub key: String,
+    pub file: String,
+    pub kind: String, // "dense" | "gram" | "lowrank"
+    pub arch: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// Weight tensor names in parameter order (after the tokens arg).
+    pub params: Vec<String>,
+    /// Gram artifacts: tap names in output order.
+    pub taps: Vec<String>,
+    /// Lowrank artifacts: compressible weight names in factor-arg order.
+    pub factor_order: Vec<String>,
+    /// Lowrank artifacts: padded (k1max, k2max) per weight.
+    pub factor_ranks: BTreeMap<String, (usize, usize)>,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seq: usize,
+    pub eval_batch: usize,
+    pub models: BTreeMap<String, ModelConfig>,
+    pub weight_files: BTreeMap<String, String>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(artifacts_dir, &doc)
+    }
+
+    pub fn from_json(dir: &Path, doc: &Json) -> Result<Manifest> {
+        let seq = doc.get("seq").and_then(Json::as_usize).unwrap_or(128);
+        let eval_batch = doc.get("eval_batch").and_then(Json::as_usize).unwrap_or(8);
+        let mut models = BTreeMap::new();
+        let mut weight_files = BTreeMap::new();
+        if let Some(Json::Obj(m)) = doc.get("models") {
+            for (name, meta) in m {
+                models.insert(name.clone(), ModelConfig::from_manifest(name, meta)?);
+                if let Some(w) = meta.get("weights").and_then(Json::as_str) {
+                    weight_files.insert(name.clone(), w.to_string());
+                }
+            }
+        }
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(arts)) = doc.get("artifacts") {
+            for (key, meta) in arts {
+                let str_list = |k: &str| -> Vec<String> {
+                    meta.get(k)
+                        .and_then(Json::as_arr)
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|v| v.as_str().map(str::to_string))
+                                .collect()
+                        })
+                        .unwrap_or_default()
+                };
+                let mut factor_ranks = BTreeMap::new();
+                if let Some(Json::Obj(fr)) = meta.get("factor_ranks") {
+                    for (w, v) in fr {
+                        if let Some(arr) = v.as_arr() {
+                            if arr.len() == 2 {
+                                factor_ranks.insert(
+                                    w.clone(),
+                                    (
+                                        arr[0].as_usize().unwrap_or(1),
+                                        arr[1].as_usize().unwrap_or(1),
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                }
+                artifacts.insert(
+                    key.clone(),
+                    ArtifactMeta {
+                        key: key.clone(),
+                        file: meta
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        kind: meta
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        arch: meta
+                            .get("arch")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        batch: meta.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                        seq: meta.get("seq").and_then(Json::as_usize).unwrap_or(seq),
+                        params: str_list("params"),
+                        taps: str_list("taps"),
+                        factor_order: str_list("factor_order"),
+                        factor_ranks,
+                    },
+                );
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), seq, eval_batch, models, weight_files, artifacts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelConfig> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn weights_path(&self, model: &str) -> Result<PathBuf> {
+        let rel = self
+            .weight_files
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("no weights for '{model}'"))?;
+        Ok(self.dir.join(rel))
+    }
+
+    /// Artifact for `(arch, kind, batch)`.
+    pub fn artifact(&self, arch: &str, kind: &str, batch: usize) -> Result<&ArtifactMeta> {
+        let key = format!("{arch}_{kind}_b{batch}");
+        self.artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{key}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Sanity-check that every referenced file exists on disk.
+    pub fn verify_files(&self) -> Result<()> {
+        for meta in self.artifacts.values() {
+            let p = self.hlo_path(meta);
+            if !p.exists() {
+                bail!("missing artifact file {}", p.display());
+            }
+        }
+        for model in self.weight_files.keys() {
+            let p = self.weights_path(model)?;
+            if !p.exists() {
+                bail!("missing weights {}", p.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Json {
+        json::parse(
+            r#"{
+            "seq": 128, "eval_batch": 8,
+            "models": {
+                "llama-t": {
+                    "family": "llama", "arch": "llama-t", "d_model": 128,
+                    "n_layers": 4, "n_heads": 4, "d_ff": 256, "max_seq": 128,
+                    "window": 0, "vocab": 256, "weights": "models/llama-t.nsvdw",
+                    "linear_shapes": {"blocks.0.attn.wq": [128, 128]}
+                }
+            },
+            "artifacts": {
+                "llama-t_dense_b8": {
+                    "file": "llama-t_dense_b8.hlo.txt", "kind": "dense",
+                    "arch": "llama-t", "batch": 8, "seq": 128,
+                    "params": ["blocks.0.attn.wq", "tok_emb"],
+                    "outputs": ["sum_nll", "count"]
+                },
+                "llama-t_lowrank_b8": {
+                    "file": "llama-t_lowrank_b8.hlo.txt", "kind": "lowrank",
+                    "arch": "llama-t", "batch": 8, "seq": 128,
+                    "params": ["tok_emb"],
+                    "factor_order": ["blocks.0.attn.wq"],
+                    "factor_ranks": {"blocks.0.attn.wq": [57, 15]}
+                }
+            }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_models_and_artifacts() {
+        let m = Manifest::from_json(Path::new("/tmp/x"), &sample_manifest()).unwrap();
+        assert_eq!(m.seq, 128);
+        let cfg = m.model("llama-t").unwrap();
+        assert_eq!(cfg.d_model, 128);
+        let a = m.artifact("llama-t", "dense", 8).unwrap();
+        assert_eq!(a.params.len(), 2);
+        let lr = m.artifact("llama-t", "lowrank", 8).unwrap();
+        assert_eq!(lr.factor_ranks["blocks.0.attn.wq"], (57, 15));
+        assert!(m.artifact("llama-t", "dense", 99).is_err());
+    }
+
+    #[test]
+    fn weights_path_joins_dir() {
+        let m = Manifest::from_json(Path::new("/art"), &sample_manifest()).unwrap();
+        assert_eq!(
+            m.weights_path("llama-t").unwrap(),
+            PathBuf::from("/art/models/llama-t.nsvdw")
+        );
+    }
+}

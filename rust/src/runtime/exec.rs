@@ -1,0 +1,349 @@
+//! Execution layer: HLO text → compiled PJRT executables → batched calls.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Weights are uploaded to device buffers ONCE per evaluator and reused for
+//! every batch (`execute_b`), so the request path does token upload + one
+//! execution + two-scalar download only.
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use crate::calib::collector::TapStats;
+use crate::compress::lowrank::CompressedModel;
+use crate::compress::ranks;
+use crate::data::batch::TokenBatch;
+use crate::model::weights::Weights;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Shared PJRT client + manifest + compiled-executable cache.
+///
+/// Compilation dominates sweep setup (seconds per artifact), but the
+/// executable is identical across every method/ratio job — only the factor
+/// BUFFERS change.  The cache makes the Nth job's setup buffer-upload-only.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exe_cache: std::cell::RefCell<
+        std::collections::HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    >,
+}
+
+impl Runtime {
+    /// CPU PJRT client over an artifacts directory.
+    pub fn open(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.verify_files()?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, exe_cache: Default::default() })
+    }
+
+    fn compile(&self, meta: &ArtifactMeta) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exe_cache.borrow().get(&meta.key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(meta);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", meta.key))?,
+        );
+        self.exe_cache
+            .borrow_mut()
+            .insert(meta.key.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload the weight tensors in `meta.params` order.
+    fn weight_buffers(&self, meta: &ArtifactMeta, weights: &Weights) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = Vec::with_capacity(meta.params.len());
+        for name in &meta.params {
+            let t = weights.get(name)?;
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer(&t.data, &t.dims, None)
+                    .with_context(|| format!("uploading {name}"))?,
+            );
+        }
+        Ok(bufs)
+    }
+
+    /// Build a dense evaluator for a model.
+    pub fn dense_evaluator(&self, model: &str, batch: usize) -> Result<DenseEvaluator> {
+        let cfg = self.manifest.model(model)?;
+        let meta = self.manifest.artifact(&cfg.arch, "dense", batch)?.clone();
+        let weights = Weights::load(&self.manifest.weights_path(model)?)?;
+        let exe = self.compile(&meta)?;
+        let wbufs = self.weight_buffers(&meta, &weights)?;
+        Ok(DenseEvaluator { client: self.client.clone(), meta, exe, wbufs })
+    }
+
+    /// Build a gram collector runner for a model.
+    pub fn gram_runner(&self, model: &str) -> Result<GramRunner> {
+        let cfg = self.manifest.model(model)?;
+        let batch = self.manifest.eval_batch;
+        let meta = self.manifest.artifact(&cfg.arch, "gram", batch)?.clone();
+        let weights = Weights::load(&self.manifest.weights_path(model)?)?;
+        let exe = self.compile(&meta)?;
+        let wbufs = self.weight_buffers(&meta, &weights)?;
+        Ok(GramRunner { client: self.client.clone(), meta, exe, wbufs })
+    }
+
+    /// Build a low-rank evaluator from a compressed model.  Factors are
+    /// zero-padded to the executable's fixed ranks and uploaded once.
+    pub fn lowrank_evaluator(
+        &self,
+        model: &str,
+        batch: usize,
+        compressed: &CompressedModel,
+    ) -> Result<LowRankEvaluator> {
+        let cfg = self.manifest.model(model)?;
+        let meta = self.manifest.artifact(&cfg.arch, "lowrank", batch)?.clone();
+        let weights = Weights::load(&self.manifest.weights_path(model)?)?;
+        let exe = self.compile(&meta)?;
+        let mut bufs = self.weight_buffers(&meta, &weights)?;
+        for wname in &meta.factor_order {
+            let layer = compressed
+                .get(wname)
+                .ok_or_else(|| anyhow::anyhow!("compressed model missing layer {wname}"))?;
+            let (k1m, k2m) = meta
+                .factor_ranks
+                .get(wname)
+                .copied()
+                .unwrap_or_else(|| ranks::max_ranks(layer.n_out, layer.n_in));
+            let padded = layer.pad_to(k1m, k2m);
+            let quads: [(&[f32], [usize; 2]); 4] = [
+                (&padded.p1, [padded.n_in, k1m]),
+                (&padded.q1, [k1m, padded.n_out]),
+                (&padded.p2, [padded.n_in, k2m]),
+                (&padded.q2, [k2m, padded.n_out]),
+            ];
+            for (data, dims) in quads {
+                bufs.push(self.client.buffer_from_host_buffer(data, &dims, None)?);
+            }
+        }
+        Ok(LowRankEvaluator { client: self.client.clone(), meta, exe, bufs })
+    }
+}
+
+/// Upload one token batch as an i32 device buffer.
+fn token_buffer(
+    client: &xla::PjRtClient,
+    meta: &ArtifactMeta,
+    tb: &TokenBatch,
+) -> Result<xla::PjRtBuffer> {
+    if tb.batch != meta.batch || tb.seq != meta.seq {
+        bail!(
+            "batch shape [{}, {}] does not match artifact {} ([{}, {}])",
+            tb.batch, tb.seq, meta.key, meta.batch, meta.seq
+        );
+    }
+    Ok(client.buffer_from_host_buffer(&tb.tokens, &[tb.batch, tb.seq], None)?)
+}
+
+/// Result of a loss-style executable: (sum_nll, token_count).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LossOutput {
+    pub sum_nll: f64,
+    pub count: f64,
+}
+
+fn run_loss(
+    client: &xla::PjRtClient,
+    exe: &xla::PjRtLoadedExecutable,
+    meta: &ArtifactMeta,
+    wbufs: &[xla::PjRtBuffer],
+    tb: &TokenBatch,
+) -> Result<(LossOutput, Vec<xla::Literal>)> {
+    let tok = token_buffer(client, meta, tb)?;
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + wbufs.len());
+    args.push(&tok);
+    args.extend(wbufs.iter());
+    let result = exe.execute_b(&args)?;
+    let lit = result[0][0].to_literal_sync()?;
+    let mut parts = lit.to_tuple()?;
+    if parts.len() < 2 {
+        bail!("{}: expected ≥2 outputs, got {}", meta.key, parts.len());
+    }
+    let rest = parts.split_off(2);
+    let sum_nll = parts[0].to_vec::<f32>()?[0] as f64;
+    let count = parts[1].to_vec::<f32>()?[0] as f64;
+    Ok((LossOutput { sum_nll, count }, rest))
+}
+
+/// Correct the (sum_nll, count) of a padded batch: the executable reduces
+/// over ALL rows, so we subtract nothing but rescale the count — callers with
+/// padding instead evaluate padding-row NLL too.  To keep exactness we only
+/// allow padding on dense/lowrank eval by computing per-batch on full rows.
+/// (Eval batches from `Batcher` only pad the FINAL batch; the evaluator
+/// handles that by re-running the final partial batch with valid rows only
+/// through a smaller logical count.)  See `eval::perplexity`.
+pub fn scale_for_padding(out: LossOutput, valid_rows: usize, batch: usize) -> LossOutput {
+    if valid_rows == batch {
+        return out;
+    }
+    // Padding rows are all-zero token rows; their NLL is well-defined and
+    // NOT zero, so we cannot subtract exactly.  The evaluator therefore
+    // drops padded batches from the PJRT path and scores them natively.
+    // This function is only used for throughput accounting.
+    LossOutput { sum_nll: out.sum_nll, count: out.count * valid_rows as f64 / batch as f64 }
+}
+
+/// Dense-model evaluator (device-resident weights).
+pub struct DenseEvaluator {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    wbufs: Vec<xla::PjRtBuffer>,
+}
+
+impl DenseEvaluator {
+    /// (sum_nll, count) over a FULL batch.
+    pub fn loss(&self, tb: &TokenBatch) -> Result<LossOutput> {
+        let (out, _) = run_loss(&self.client, &self.exe, &self.meta, &self.wbufs, tb)?;
+        Ok(out)
+    }
+}
+
+/// Gram-collection runner: accumulates TapStats over calibration batches.
+pub struct GramRunner {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    wbufs: Vec<xla::PjRtBuffer>,
+}
+
+impl GramRunner {
+    /// Run one batch; merge tap reductions into `stats`.
+    pub fn accumulate(&self, tb: &TokenBatch, stats: &mut TapStats) -> Result<LossOutput> {
+        let (out, rest) = run_loss(&self.client, &self.exe, &self.meta, &self.wbufs, tb)?;
+        let taps = &self.meta.taps;
+        if rest.len() != 2 * taps.len() {
+            bail!(
+                "{}: expected {} tap outputs, got {}",
+                self.meta.key,
+                2 * taps.len(),
+                rest.len()
+            );
+        }
+        let rows = tb.batch * tb.seq;
+        for (i, tap) in taps.iter().enumerate() {
+            let gram: Vec<f32> = rest[i].to_vec::<f32>()?;
+            let abs: Vec<f32> = rest[taps.len() + i].to_vec::<f32>()?;
+            let dim = abs.len();
+            if gram.len() != dim * dim {
+                bail!("tap {tap}: gram size {} != {dim}²", gram.len());
+            }
+            stats.accumulate_reduced(tap, &gram, &abs, rows, dim);
+        }
+        Ok(out)
+    }
+}
+
+/// Low-rank (compressed) model evaluator.
+pub struct LowRankEvaluator {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl LowRankEvaluator {
+    pub fn loss(&self, tb: &TokenBatch) -> Result<LossOutput> {
+        let (out, _) = run_loss(&self.client, &self.exe, &self.meta, &self.bufs, tb)?;
+        Ok(out)
+    }
+}
+
+/// Serving evaluator: per-row (nll, count) outputs over the factored model —
+/// the dynamic batcher's engine (padding rows are simply discarded).
+pub struct ServeEvaluator {
+    client: xla::PjRtClient,
+    pub meta: ArtifactMeta,
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl Runtime {
+    /// Build the serving evaluator from a compressed model.
+    pub fn serve_evaluator(
+        &self,
+        model: &str,
+        compressed: &CompressedModel,
+    ) -> Result<ServeEvaluator> {
+        let cfg = self.manifest.model(model)?;
+        let batch = self.manifest.eval_batch;
+        let meta = self.manifest.artifact(&cfg.arch, "serve", batch)?.clone();
+        let exe = self.compile(&meta)?;
+        let weights = Weights::load(&self.manifest.weights_path(model)?)?;
+        let mut bufs = self.weight_buffers(&meta, &weights)?;
+        for wname in &meta.factor_order {
+            let layer = compressed
+                .get(wname)
+                .ok_or_else(|| anyhow::anyhow!("compressed model missing layer {wname}"))?;
+            let (k1m, k2m) = meta
+                .factor_ranks
+                .get(wname)
+                .copied()
+                .unwrap_or_else(|| ranks::max_ranks(layer.n_out, layer.n_in));
+            let padded = layer.pad_to(k1m, k2m);
+            let quads: [(&[f32], [usize; 2]); 4] = [
+                (&padded.p1, [padded.n_in, k1m]),
+                (&padded.q1, [k1m, padded.n_out]),
+                (&padded.p2, [padded.n_in, k2m]),
+                (&padded.q2, [k2m, padded.n_out]),
+            ];
+            for (data, dims) in quads {
+                bufs.push(self.client.buffer_from_host_buffer(data, &dims, None)?);
+            }
+        }
+        Ok(ServeEvaluator { client: self.client.clone(), meta, exe, bufs })
+    }
+}
+
+impl ServeEvaluator {
+    pub fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    pub fn seq(&self) -> usize {
+        self.meta.seq
+    }
+
+    /// Score a batch; returns per-row (nll, token_count).
+    pub fn score(&self, tb: &TokenBatch) -> Result<Vec<(f64, f64)>> {
+        let tok = token_buffer(&self.client, &self.meta, tb)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.bufs.len());
+        args.push(&tok);
+        args.extend(self.bufs.iter());
+        let result = self.exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("{}: expected 2 row outputs, got {}", self.meta.key, parts.len());
+        }
+        let nll: Vec<f32> = parts[0].to_vec::<f32>()?;
+        let cnt: Vec<f32> = parts[1].to_vec::<f32>()?;
+        Ok(nll
+            .iter()
+            .zip(&cnt)
+            .map(|(&a, &b)| (a as f64, b as f64))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_for_padding_full_batch_is_identity() {
+        let out = LossOutput { sum_nll: 10.0, count: 100.0 };
+        let s = scale_for_padding(out, 8, 8);
+        assert_eq!(s.count, 100.0);
+        let s2 = scale_for_padding(out, 4, 8);
+        assert_eq!(s2.count, 50.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: artifact registry + executors over the AOT HLO text.
+//!
+//! * [`artifacts`] — parses `artifacts/manifest.json` (models, artifact
+//!   files, parameter order contracts).
+//! * [`exec`]      — the execution layer: loads HLO text, compiles once per
+//!   artifact, keeps weights device-resident, and marshals batches.
+//!
+//! Python never runs here: the HLO text was produced at `make artifacts`.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::Manifest;
+pub use exec::{DenseEvaluator, GramRunner, LowRankEvaluator, Runtime};

@@ -1,0 +1,265 @@
+//! Declarative command-line parsing (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required arguments, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Specification of a single flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+    pub required: bool,
+}
+
+/// A parsed invocation: positionals plus resolved flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// Parse a comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|s| {
+                s.split(',')
+                    .map(|t| t.trim().to_string())
+                    .filter(|t| !t.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+/// A command with flags; `Cli` is a tree of these.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.flags.push(FlagSpec { name, help, default, is_switch: false, required: false });
+        self
+    }
+
+    pub fn required_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: false, required: true });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: true, required: false });
+        self
+    }
+
+    /// Parse `argv` (not including the command name itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.flags.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name} for '{}'", self.name))?;
+                if spec.is_switch {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} is a switch and takes no value"));
+                    }
+                    args.switches.insert(name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} expects a value"))?
+                        }
+                    };
+                    args.flags.insert(name, val);
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.required && !args.flags.contains_key(f.name) {
+                return Err(format!("missing required flag --{} for '{}'", f.name, self.name));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.name, self.about);
+        for f in &self.flags {
+            let kind = if f.is_switch { "" } else { " <value>" };
+            let extra = match (f.required, f.default) {
+                (true, _) => " (required)".to_string(),
+                (_, Some(d)) => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{}{kind}\n      {}{extra}\n", f.name, f.help));
+        }
+        s
+    }
+}
+
+/// Top-level CLI: a set of subcommands.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, cmd: Command) -> Self {
+        self.commands.push(cmd);
+        self
+    }
+
+    /// Parse full `argv` (including program name at index 0).
+    /// Returns `(subcommand, args)`, or an Err with the message to print.
+    pub fn parse(&self, argv: &[String]) -> Result<(&Command, Args), String> {
+        let sub = argv.get(1).ok_or_else(|| self.help())?;
+        if sub == "--help" || sub == "-h" || sub == "help" {
+            return Err(self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == sub)
+            .ok_or_else(|| format!("unknown command '{sub}'\n\n{}", self.help()))?;
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            return Err(cmd.help());
+        }
+        let args = cmd.parse(&argv[2..])?;
+        Ok((cmd, args))
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nCommands:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+        }
+        s.push_str("\nUse '<command> --help' for details.\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn sample() -> Command {
+        Command::new("compress", "compress a model")
+            .flag("model", "model name", Some("llama-t"))
+            .flag("ratio", "compression ratio", Some("0.3"))
+            .required_flag("method", "decomposition method")
+            .switch("verbose", "more logging")
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let cmd = sample();
+        let a = cmd.parse(&argv(&["--method", "nsvd-i", "--ratio=0.4"])).unwrap();
+        assert_eq!(a.get("model"), Some("llama-t"));
+        assert_eq!(a.get_f64("ratio"), Some(0.4));
+        assert_eq!(a.get("method"), Some("nsvd-i"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn switch_and_positionals() {
+        let cmd = sample();
+        let a = cmd
+            .parse(&argv(&["--method", "svd", "--verbose", "extra1", "extra2"]))
+            .unwrap();
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positionals, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        let cmd = sample();
+        assert!(cmd.parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        let cmd = sample();
+        assert!(cmd.parse(&argv(&["--method", "svd", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn cli_routes_subcommands() {
+        let cli = Cli::new("nsvd", "test").command(sample());
+        let (cmd, a) = cli
+            .parse(&argv(&["nsvd", "compress", "--method", "svd"]))
+            .unwrap();
+        assert_eq!(cmd.name, "compress");
+        assert_eq!(a.get("method"), Some("svd"));
+        assert!(cli.parse(&argv(&["nsvd", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let cmd = Command::new("t", "t").flag("sets", "datasets", Some("a,b,c"));
+        let a = cmd.parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_list("sets"), vec!["a", "b", "c"]);
+    }
+}

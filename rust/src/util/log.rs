@@ -1,0 +1,76 @@
+//! Leveled stderr logging with a global verbosity switch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log levels, ordered by verbosity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(2); // default: Info
+
+/// Set the global verbosity (messages above this level are dropped).
+pub fn set_level(level: Level) {
+    VERBOSITY.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current verbosity level.
+pub fn level() -> Level {
+    match VERBOSITY.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Emit a message at `level` (module-qualified tag recommended).
+pub fn log(lvl: Level, tag: &str, msg: &str) {
+    if lvl <= level() {
+        let prefix = match lvl {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{prefix}] {tag}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $tag, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnln {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $tag, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debugln {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $tag, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Info);
+        assert_eq!(level(), Level::Info);
+    }
+}

@@ -1,0 +1,25 @@
+//! Offline utility substrate.
+//!
+//! The build environment has no network access and the registry snapshot only
+//! contains the `xla` crate closure, so the conveniences a crate would
+//! normally pull from crates.io (`rand`, `serde_json`, `clap`, `rayon`,
+//! `proptest`) are implemented here from scratch:
+//!
+//! * [`rng`] — SplitMix64 / PCG-XSH-RR generators with normal sampling.
+//! * [`json`] — a minimal JSON value model with parser and serializer.
+//! * [`cli`] — a declarative flag/subcommand parser.
+//! * [`threads`] — scoped data-parallel helpers over `std::thread`.
+//! * [`timer`] — wall-clock timing and summary statistics.
+//! * [`prop`] — a tiny randomized property-test driver with case reporting.
+//! * [`log`] — leveled stderr logging.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod threads;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

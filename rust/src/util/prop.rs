@@ -1,0 +1,121 @@
+//! A tiny randomized property-test driver (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```
+//! use nsvd::util::prop::{check, Gen};
+//! check("sum is commutative", 100, |g| {
+//!     let a = g.f64_in(-10.0, 10.0);
+//!     let b = g.f64_in(-10.0, 10.0);
+//!     prop_assert(g, (a + b - (b + a)).abs() < 1e-12, "commutativity")
+//! });
+//! fn prop_assert(_g: &mut Gen, cond: bool, what: &str) -> Result<(), String> {
+//!     if cond { Ok(()) } else { Err(what.to_string()) }
+//! }
+//! ```
+//!
+//! Each case gets a fresh deterministic seed derived from the case index, so
+//! a failure report (`case #17, seed 0x...`) is immediately reproducible.
+
+use super::rng::Rng;
+
+/// Case-local generator handed to the property closure.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Random vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        self.rng.normal_vec(n)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `property`.  Panics (test failure) on the
+/// first case whose closure returns `Err`, reporting case index and seed.
+pub fn check<F>(name: &str, cases: usize, property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xA11CE, property)
+}
+
+/// Like [`check`] with an explicit base seed (to reproduce a failure).
+pub fn check_seeded<F>(name: &str, cases: usize, base_seed: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(seed), case, seed };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property '{name}' failed at case #{case} (seed=0x{seed:x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("trivial", 25, |_g| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_case_info() {
+        check("fails", 10, |g| {
+            if g.case == 3 {
+                Err("intentional".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_reproducible_per_case() {
+        let mut first: Vec<f64> = Vec::new();
+        check("record", 5, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut second: Vec<f64> = Vec::new();
+        check("record", 5, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

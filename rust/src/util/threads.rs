@@ -1,0 +1,166 @@
+//! Data-parallel helpers over `std::thread` (rayon/tokio unavailable offline).
+//!
+//! The testbed is single-core, so these helpers degrade gracefully: with one
+//! hardware thread the chunked map runs inline with zero spawn overhead.  On
+//! multi-core machines the same API fans out over scoped threads.
+
+/// Number of worker threads to use for data-parallel sections.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f(index, &mut item)` to every element, splitting the slice across
+/// `workers` scoped threads.  Runs inline when `workers <= 1` or the slice is
+/// tiny (spawn cost would dominate).
+pub fn parallel_for_each<T: Send, F>(items: &mut [T], workers: usize, f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n < 2 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (ci, slice) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, item) in slice.iter_mut().enumerate() {
+                    f(ci * chunk + j, item);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map preserving order.
+pub fn parallel_map<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n < 2 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (ci, (in_chunk, out_chunk)) in
+            items.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
+        {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, (t, slot)) in in_chunk.iter().zip(out_chunk.iter_mut()).enumerate() {
+                    *slot = Some(f(ci * chunk + j, t));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// A minimal multi-producer work queue with a fixed worker pool, used by the
+/// coordinator's scheduler.  Jobs are boxed closures; results are delivered
+/// through the closure's own channel/handles.
+pub struct WorkerPool {
+    sender: Option<std::sync::mpsc::Sender<Box<dyn FnOnce() + Send>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = std::sync::mpsc::channel::<Box<dyn FnOnce() + Send>>();
+        let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // channel closed: shut down
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { sender: Some(tx), handles }
+    }
+
+    /// Submit a job; it runs on some worker thread.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("worker pool channel closed");
+    }
+
+    /// Wait for all submitted jobs to finish and stop the workers.
+    pub fn shutdown(mut self) {
+        drop(self.sender.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.sender.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn parallel_for_each_touches_everything() {
+        let mut xs: Vec<usize> = vec![0; 103];
+        parallel_for_each(&mut xs, 4, |i, x| *x = i * 2);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(*x, i * 2);
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..57).collect();
+        let ys = parallel_map(&xs, 3, |_, &x| x * x);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(*y, i * i);
+        }
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let xs: Vec<usize> = (0..5).collect();
+        let ys = parallel_map(&xs, 1, |i, &x| i + x);
+        assert_eq!(ys, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn worker_pool_executes_all_jobs() {
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration tests over the REAL artifacts: PJRT execution vs the native
+//! forward.  These pin the whole python→HLO→rust chain.
+//!
+//! Skipped (with a loud message) when `artifacts/` has not been built —
+//! run `make artifacts` first.
+
+use nsvd::calib::collector::{collect_native, TapStats};
+use nsvd::compress::methods::{compress_layer, CompressionSpec, Method};
+use nsvd::compress::ranks;
+use nsvd::compress::lowrank::CompressedModel;
+use nsvd::data::batch::Batcher;
+use nsvd::data::corpus::Registry;
+use nsvd::model::weights::Weights;
+use nsvd::runtime::exec::Runtime;
+use nsvd::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn dense_pjrt_matches_native_forward() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let reg = Registry::new(&dir);
+    let corpus = reg.load("wiki", "test").unwrap();
+    let batch = rt.manifest.eval_batch;
+    let seq = rt.manifest.seq;
+    let eval = rt.dense_evaluator("llama-t", batch).unwrap();
+    let tb = &Batcher::new(batch, seq).eval_batches(&corpus, batch)[0];
+    let pjrt = eval.loss(tb).unwrap();
+
+    let cfg = rt.manifest.model("llama-t").unwrap();
+    let weights = Weights::load(&rt.manifest.weights_path("llama-t").unwrap()).unwrap();
+    let (nll, count) = nsvd::model::forward::loss(
+        cfg,
+        &weights,
+        &nsvd::model::forward::NoOverride,
+        &tb.tokens,
+        tb.batch,
+        tb.seq,
+        tb.valid_rows,
+    )
+    .unwrap();
+    assert_eq!(pjrt.count as usize, count);
+    let rel = (pjrt.sum_nll - nll).abs() / nll.abs().max(1.0);
+    assert!(
+        rel < 2e-3,
+        "PJRT nll {} vs native {} (rel {rel})",
+        pjrt.sum_nll,
+        nll
+    );
+}
+
+#[test]
+fn gram_artifact_matches_native_collection() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let reg = Registry::new(&dir);
+    let corpus = reg.calibration().unwrap();
+    let batch = rt.manifest.eval_batch;
+    let seq = rt.manifest.seq;
+    let mut rng = Rng::new(17);
+    let batches = Batcher::new(batch, seq).calibration_batches(&corpus, batch * 2, &mut rng);
+
+    let runner = rt.gram_runner("llama-t").unwrap();
+    let mut pjrt_stats = TapStats::default();
+    for tb in &batches {
+        runner.accumulate(tb, &mut pjrt_stats).unwrap();
+    }
+
+    let cfg = rt.manifest.model("llama-t").unwrap();
+    let weights = Weights::load(&rt.manifest.weights_path("llama-t").unwrap()).unwrap();
+    let native_stats = collect_native(cfg, &weights, &batches).unwrap();
+
+    assert_eq!(pjrt_stats.taps.len(), native_stats.taps.len());
+    for (tap, ns) in &native_stats.taps {
+        let ps = &pjrt_stats.taps[tap];
+        assert_eq!(ps.rows, ns.rows, "{tap} rows");
+        let rel = ps.gram.dist(&ns.gram) / ns.gram.fro_norm().max(1.0);
+        assert!(rel < 5e-3, "{tap}: gram rel diff {rel}");
+        let abs_rel: f64 = ps
+            .abs_sum
+            .iter()
+            .zip(&ns.abs_sum)
+            .map(|(a, b)| (a - b).abs() / b.abs().max(1.0))
+            .fold(0.0, f64::max);
+        assert!(abs_rel < 5e-3, "{tap}: abs_sum rel diff {abs_rel}");
+    }
+}
+
+#[test]
+fn lowrank_pjrt_matches_native_compressed_forward() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let reg = Registry::new(&dir);
+    let corpus = reg.calibration().unwrap();
+    let batch = rt.manifest.eval_batch;
+    let seq = rt.manifest.seq;
+    let cfg = rt.manifest.model("llama-t").unwrap();
+    let weights = Weights::load(&rt.manifest.weights_path("llama-t").unwrap()).unwrap();
+
+    // Calibrate (native — small sample is fine for a parity check)...
+    let mut rng = Rng::new(18);
+    let cal_batches = Batcher::new(batch, seq).calibration_batches(&corpus, batch, &mut rng);
+    let stats = collect_native(cfg, &weights, &cal_batches).unwrap();
+
+    // ...compress at 30% with NSVD-I...
+    let spec = CompressionSpec::new(Method::NsvdI, 0.30);
+    let mut cm = CompressedModel::default();
+    for (name, n_in, n_out) in &cfg.linear_shapes {
+        let t = weights.get(name).unwrap();
+        let s = stats.for_linear(name).unwrap();
+        let plan = ranks::plan(*n_out, *n_in, spec.ratio, spec.effective_alpha());
+        cm.insert(name, compress_layer(t, s, &spec, &plan).unwrap());
+    }
+
+    // ...and compare PJRT lowrank execution vs native compressed forward.
+    let eval = rt.lowrank_evaluator("llama-t", batch, &cm).unwrap();
+    let test = reg.load("wiki", "test").unwrap();
+    let tb = &Batcher::new(batch, seq).eval_batches(&test, batch)[0];
+    let pjrt = eval.loss(tb).unwrap();
+    let (nll, count) = nsvd::model::forward::loss(
+        cfg, &weights, &cm, &tb.tokens, tb.batch, tb.seq, tb.valid_rows,
+    )
+    .unwrap();
+    assert_eq!(pjrt.count as usize, count);
+    let rel = (pjrt.sum_nll - nll).abs() / nll.abs().max(1.0);
+    assert!(rel < 2e-3, "lowrank PJRT {} vs native {nll} (rel {rel})", pjrt.sum_nll);
+}
+
+#[test]
+fn all_manifest_artifacts_compile_and_files_exist() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    rt.manifest.verify_files().unwrap();
+    // Six models across three families at multiple scales.
+    for m in ["llama-t", "llama-s", "llama-m", "vicuna-t", "opt-t", "mistral-t"] {
+        assert!(rt.manifest.models.contains_key(m), "missing model {m}");
+    }
+    // Eight corpora present.
+    let reg = Registry::new(&dir);
+    assert_eq!(reg.eval_sets().unwrap().len(), 8);
+}
+
+#[test]
+fn trained_models_beat_uniform_on_their_domains() {
+    // The trained zoo must be meaningfully better than the 256-way uniform
+    // baseline (ppl 256) on English, and not catastrophically bad on CJK.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let reg = Registry::new(&dir);
+    let batch = rt.manifest.eval_batch;
+    let seq = rt.manifest.seq;
+    let eval = rt.dense_evaluator("llama-t", batch).unwrap();
+    for (domain, bound) in [("wiki", 40.0), ("cmrc_cn", 200.0)] {
+        let corpus = reg.load(domain, "test").unwrap();
+        let mut sum = 0.0;
+        let mut tok = 0.0;
+        for tb in Batcher::new(batch, seq)
+            .eval_batches(&corpus, batch * 2)
+            .iter()
+            .filter(|tb| tb.valid_rows == tb.batch)
+        {
+            let out = eval.loss(tb).unwrap();
+            sum += out.sum_nll;
+            tok += out.count;
+        }
+        let ppl = (sum / tok).exp();
+        assert!(ppl < bound, "{domain}: ppl {ppl} (expected < {bound})");
+        assert!(ppl > 1.0);
+    }
+}
