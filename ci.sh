@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# Repo CI: build, test, docs, formatting — run locally before every PR.
+#
+#   ./ci.sh          # full gate
+#   ./ci.sh --quick  # skip the release build (debug test run only)
+#
+# Gates (in order, fail-fast):
+#   1. cargo build --release        — the whole system compiles optimized
+#   2. cargo test -q                — unit + integration tests (tier-1)
+#   3. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
+#                                     so README/ARCHITECTURE/module docs
+#                                     and intra-doc links can never rot
+#                                     silently
+#   4. cargo fmt --check            — advisory for now: the seed predates
+#                                     rustfmt enforcement, so drift in
+#                                     untouched files reports but does not
+#                                     fail the gate.  Flip ADVISORY_FMT=0
+#                                     once the tree is formatted.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+ADVISORY_FMT="${ADVISORY_FMT:-1}"
+QUICK=0
+[ "${1:-}" = "--quick" ] && QUICK=1
+
+step() { printf '\n== %s ==\n' "$*"; }
+
+if [ "$QUICK" -eq 0 ]; then
+    step "cargo build --release"
+    cargo build --release
+fi
+
+step "cargo test -q"
+cargo test -q
+
+step "cargo doc --no-deps (deny warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+step "cargo fmt --check"
+if ! cargo fmt --check; then
+    if [ "$ADVISORY_FMT" = "1" ]; then
+        echo "WARNING: rustfmt drift (advisory; set ADVISORY_FMT=0 to enforce)"
+    else
+        echo "ERROR: rustfmt drift"
+        exit 1
+    fi
+fi
+
+printf '\nCI OK\n'

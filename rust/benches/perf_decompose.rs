@@ -1,13 +1,25 @@
 //! Perf: compress_layer throughput per method on a llama-t-shaped weight,
-//! and whole-model decomposition time.
+//! whole-model decomposition serial vs the sharded engine, and the
+//! exact-vs-randomized SVD policy at the model level.
+//!
+//! The whole-model section also verifies (and prints) that the sharded
+//! exact path reproduces the serial loop's factors bit-for-bit.
 
 use nsvd::bench::Suite;
+use nsvd::calib::collector::TapStats;
+use nsvd::compress::engine::{
+    compress_model_serial, CompressionEngine, EngineConfig, WhitenerCache,
+};
+use nsvd::compress::lowrank::CompressedModel;
 use nsvd::compress::methods::{compress_layer, CompressionSpec, Method};
 use nsvd::compress::ranks;
 use nsvd::compress::whiten::CalibStats;
 use nsvd::linalg::matrix::Matrix;
-use nsvd::model::weights::Tensor;
+use nsvd::linalg::rsvd::SvdPolicy;
+use nsvd::model::config::ModelConfig;
+use nsvd::model::weights::{Tensor, Weights};
 use nsvd::util::rng::Rng;
+use nsvd::util::threads::default_workers;
 
 fn stats(n: usize, rng: &mut Rng) -> CalibStats {
     let x = Matrix::randn(4 * n, n, 1.0, rng);
@@ -16,6 +28,52 @@ fn stats(n: usize, rng: &mut Rng) -> CalibStats {
     s.abs_sum = (0..n).map(|j| (0..4 * n).map(|i| x[(i, j)].abs()).sum()).collect();
     s.rows = 4 * n;
     s
+}
+
+/// Synthetic llama-t: random weights for every compressible linear, random
+/// full-rank calibration stats for every tap.
+fn synthetic_model(rng: &mut Rng) -> (ModelConfig, Weights, TapStats) {
+    let cfg = ModelConfig::builtin("llama-t").unwrap();
+    let mut weights = Weights::default();
+    for (name, n_in, n_out) in &cfg.linear_shapes {
+        weights.tensors.insert(
+            name.clone(),
+            Tensor {
+                dims: vec![*n_in, *n_out],
+                data: Matrix::randn(*n_in, *n_out, 0.05, rng).to_f32(),
+            },
+        );
+    }
+    let mut taps = TapStats::default();
+    for tap in cfg.tap_names() {
+        let dim = if tap.ends_with("mlp_down_in") { cfg.d_ff } else { cfg.d_model };
+        taps.taps.insert(tap, stats(dim, rng));
+    }
+    (cfg, weights, taps)
+}
+
+fn engine_compress(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    taps: &TapStats,
+    spec: &CompressionSpec,
+    workers: usize,
+    svd: SvdPolicy,
+) -> CompressedModel {
+    let engine = CompressionEngine::new(EngineConfig { workers, svd });
+    let mut cache = WhitenerCache::default();
+    engine.compress_model(cfg, weights, taps, spec, &mut cache).unwrap()
+}
+
+fn max_factor_diff(a: &CompressedModel, b: &CompressedModel) -> f32 {
+    let mut worst = 0.0f32;
+    for (name, la) in &a.layers {
+        let lb = b.get(name).expect("layer sets match");
+        for (x, y) in la.p1.iter().zip(&lb.p1).chain(la.q1.iter().zip(&lb.q1)) {
+            worst = worst.max((x - y).abs());
+        }
+    }
+    worst
 }
 
 fn main() {
@@ -36,6 +94,47 @@ fn main() {
         suite.bench(&format!("layer_{}", method.label()), 3, || {
             std::hint::black_box(compress_layer(&w, &st, &spec, &plan).unwrap());
         });
+    }
+
+    // ---- Whole-model: serial loop vs the sharded engine ----
+    let (cfg, weights, taps) = synthetic_model(&mut rng);
+    let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 };
+    let cores = default_workers();
+    suite.bench("model_serial_loop", 3, || {
+        std::hint::black_box(compress_model_serial(&cfg, &weights, &taps, &spec).unwrap());
+    });
+    suite.bench("model_engine_w1", 3, || {
+        std::hint::black_box(engine_compress(&cfg, &weights, &taps, &spec, 1, SvdPolicy::exact()));
+    });
+    // On a single-core box w{cores} would duplicate the w1 name/measurement.
+    if cores > 1 {
+        suite.bench(&format!("model_engine_w{cores}"), 3, || {
+            std::hint::black_box(engine_compress(
+                &cfg, &weights, &taps, &spec, cores, SvdPolicy::exact(),
+            ));
+        });
+    }
+    suite.bench(&format!("model_engine_w{cores}_rsvd"), 3, || {
+        std::hint::black_box(engine_compress(
+            &cfg, &weights, &taps, &spec, cores, SvdPolicy::auto(),
+        ));
+    });
+    // Equality pin: sharded exact == serial, bit for bit, at every width run.
+    let mut widths = vec![1usize];
+    if cores > 1 {
+        widths.push(cores);
+    }
+    let serial = compress_model_serial(&cfg, &weights, &taps, &spec).unwrap();
+    for workers in widths {
+        let bench_name = format!("model_engine_w{workers}");
+        if !suite.enabled(&bench_name) {
+            continue;
+        }
+        let sharded = engine_compress(&cfg, &weights, &taps, &spec, workers, SvdPolicy::exact());
+        let diff = max_factor_diff(&serial, &sharded);
+        println!("      {bench_name} vs serial: max |Δfactor| = {diff:e} (expect 0)");
+        assert_eq!(diff, 0.0, "sharded exact engine must reproduce the serial loop");
+        suite.record_metric(&bench_name, "max_diff_vs_serial", diff as f64);
     }
     suite.finish();
 }

@@ -1,5 +1,7 @@
 //! Perf: the linalg substrate's hot kernels across the sizes the
-//! decomposition path actually hits (d_model 128-256, d_ff up to 384).
+//! decomposition path actually hits (d_model 128-256, d_ff up to 384),
+//! plus the jacobi-vs-randomized truncated-SVD comparison that motivates
+//! the `SvdPolicy` fast path.
 
 use nsvd::bench::Suite;
 use nsvd::linalg::chol::cholesky_psd;
@@ -7,8 +9,10 @@ use nsvd::linalg::eig::sym_eig;
 use nsvd::linalg::id::interpolative;
 use nsvd::linalg::matrix::Matrix;
 use nsvd::linalg::qr::{qr_pivoted, qr_thin};
+use nsvd::linalg::rsvd::{decaying_matrix as decaying, svd_for_rank, SvdPolicy};
 use nsvd::linalg::svd::svd_thin;
 use nsvd::util::rng::Rng;
+use nsvd::util::timer::Timer;
 
 fn main() {
     let mut suite = Suite::from_args("perf_linalg");
@@ -38,6 +42,53 @@ fn main() {
         });
         suite.bench(&format!("id_k32_{n}"), 3, || {
             std::hint::black_box(interpolative(&a, 32));
+        });
+    }
+
+    // ---- Truncated SVD: exact Jacobi vs the randomized fast path ----
+    // Rank k = n/4 (the ISSUE's "rank well below min(m,n)" regime) on a
+    // decaying-spectrum matrix, where the 2% certificate passes and the
+    // sketch genuinely replaces Jacobi rather than falling back.
+    for &n in &[128usize, 256, 384] {
+        let a = decaying(n, n, 0.93, &mut rng);
+        let k = n / 4;
+        let exact = SvdPolicy::exact();
+        let auto = SvdPolicy::auto();
+        suite.bench(&format!("svd_exact_trunc_k{k}_{n}"), 3, || {
+            std::hint::black_box(svd_for_rank(&a, k, &exact));
+        });
+        suite.bench(&format!("rsvd_k{k}_{n}"), 3, || {
+            std::hint::black_box(svd_for_rank(&a, k, &auto));
+        });
+        if suite.enabled(&format!("rsvd_k{k}_{n}")) {
+            let t = Timer::start();
+            let se = svd_for_rank(&a, k, &exact);
+            let exact_s = t.elapsed_s();
+            let t = Timer::start();
+            let sr = svd_for_rank(&a, k, &auto);
+            let rsvd_s = t.elapsed_s();
+            let err_e = se.u.scale_cols(&se.s).matmul_nt(&se.v).dist(&a);
+            let err_r = sr.u.scale_cols(&sr.s).matmul_nt(&sr.v).dist(&a);
+            println!(
+                "      rsvd_{n}: jacobi {exact_s:.3}s vs rsvd {rsvd_s:.3}s \
+                 ({:.1}x), err {err_e:.3e} vs {err_r:.3e}",
+                exact_s / rsvd_s.max(1e-12)
+            );
+            suite.record_metric(
+                &format!("rsvd_k{k}_{n}"),
+                "speedup_vs_jacobi",
+                exact_s / rsvd_s.max(1e-12),
+            );
+            suite.record_metric(
+                &format!("rsvd_k{k}_{n}"),
+                "rel_err_excess",
+                err_r / err_e.max(1e-300) - 1.0,
+            );
+        }
+        // A tall shape (the wo / w_down layers are rectangular).
+        let tall = decaying(2 * n, n / 2, 0.9, &mut rng);
+        suite.bench(&format!("rsvd_tall_{}x{}_k{}", 2 * n, n / 2, n / 8), 3, || {
+            std::hint::black_box(svd_for_rank(&tall, n / 8, &auto));
         });
     }
     suite.finish();

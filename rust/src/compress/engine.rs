@@ -1,0 +1,350 @@
+//! Parallel sharded compression engine.
+//!
+//! The paper's pipeline decomposes every linear layer *independently* — the
+//! only shared state is the per-tap whitener, which depends on (method
+//! class, calibration Gram) and nothing else.  The engine exploits exactly
+//! that structure:
+//!
+//! 1. **whitener phase** — the distinct taps a model needs are computed
+//!    once each (fanned out over the worker pool: eigendecomposition /
+//!    Cholesky of a `d_ff`-sized Gram is seconds of work) and published
+//!    read-only behind [`Arc`]s;
+//! 2. **shard phase** — the layer jobs fan out over scoped worker threads
+//!    with dynamic scheduling ([`parallel_map_dynamic`]): workers claim the
+//!    next unprocessed layer, so heterogeneous layer costs (d_ff MLP
+//!    weights vs d_model attention weights) and worker counts that don't
+//!    divide the layer count still keep every core busy; each job runs
+//!    with the shared whiteners and the configured [`SvdPolicy`];
+//! 3. **assembly** — results come back in deterministic layer order and are
+//!    folded into a [`CompressedModel`].
+//!
+//! Every per-layer decomposition is a pure function of `(weight, whitener,
+//! spec, plan, policy)`, so the output is **identical for any worker
+//! count** — `workers = 1` reproduces the historical serial loop
+//! bit-for-bit (pinned by `sharded_engine_matches_serial_loop` below).
+//!
+//! The whitener cache is keyed `(whitener kind, tap)` and owned by the
+//! caller, so ratio/α sweeps across jobs still pay zero whitening cost —
+//! the same contract the serial pipeline had, now `Send`-safe via [`Arc`].
+
+use crate::calib::collector::TapStats;
+use crate::compress::lowrank::CompressedModel;
+use crate::compress::methods::{compress_layer_with_policy, CompressionSpec};
+use crate::compress::ranks::{self, RankPlan};
+use crate::compress::whiten::{CalibStats, Whitener};
+use crate::linalg::rsvd::SvdPolicy;
+use crate::model::config::ModelConfig;
+use crate::model::weights::{Tensor, Weights};
+use crate::util::threads::{default_workers, parallel_map_dynamic};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Whitener cache shared across sweep jobs: `(whitener kind, tap)` →
+/// read-only whitener.  `Arc` (not `Rc`) so shards on other threads can
+/// hold it.
+pub type WhitenerCache = HashMap<(String, String), Arc<Whitener>>;
+
+/// Engine knobs, threaded from the CLI through `PipelineConfig`.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker threads for whitening + decomposition; `0` = all cores.
+    pub workers: usize,
+    /// Truncated-SVD policy applied to every stage-1/stage-2 decomposition.
+    pub svd: SvdPolicy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { workers: 0, svd: SvdPolicy::exact() }
+    }
+}
+
+impl EngineConfig {
+    /// Resolve `workers = 0` to the machine's available parallelism.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            default_workers()
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// One per-layer decomposition job (borrowed weight, shared whitener).
+struct LayerJob<'a> {
+    name: &'a str,
+    tensor: &'a Tensor,
+    whitener: Arc<Whitener>,
+    plan: RankPlan,
+}
+
+/// The sharded compression engine.  Stateless apart from its config; all
+/// model state is borrowed per call so one engine can serve many sweeps.
+pub struct CompressionEngine {
+    pub config: EngineConfig,
+}
+
+impl CompressionEngine {
+    pub fn new(config: EngineConfig) -> CompressionEngine {
+        CompressionEngine { config }
+    }
+
+    /// Decompose every compressible weight of `model_cfg` under `spec`,
+    /// fanning layer shards out over the worker pool.  `cache` carries
+    /// whiteners across calls (ratio/α sweeps reuse them for free).
+    pub fn compress_model(
+        &self,
+        model_cfg: &ModelConfig,
+        weights: &Weights,
+        stats: &TapStats,
+        spec: &CompressionSpec,
+        cache: &mut WhitenerCache,
+    ) -> Result<CompressedModel> {
+        let workers = self.config.effective_workers();
+        let kind = spec.method.whitener_kind().to_string();
+
+        // ---- Phase 1: one whitener per distinct tap, in parallel ----
+        let mut missing: Vec<(String, &CalibStats)> = Vec::new();
+        for (name, _, _) in &model_cfg.linear_shapes {
+            let tap = ModelConfig::tap_for_linear(name);
+            let key = (kind.clone(), tap.clone());
+            if cache.contains_key(&key) || missing.iter().any(|(t, _)| *t == tap) {
+                continue;
+            }
+            let tap_stats = stats
+                .taps
+                .get(&tap)
+                .ok_or_else(|| anyhow::anyhow!("no calibration stats for {name} (tap {tap})"))?;
+            missing.push((tap, tap_stats));
+        }
+        let method = spec.method;
+        let built = parallel_map_dynamic(&missing, workers, |_, pair| {
+            Arc::new(method.stage1_whitener(pair.1))
+        });
+        for ((tap, _), whitener) in missing.into_iter().zip(built) {
+            cache.insert((kind.clone(), tap), whitener);
+        }
+
+        // ---- Phase 2: shard the layer jobs across the workers ----
+        let mut jobs: Vec<LayerJob> = Vec::with_capacity(model_cfg.linear_shapes.len());
+        for (name, n_in, n_out) in &model_cfg.linear_shapes {
+            let tap = ModelConfig::tap_for_linear(name);
+            let whitener = cache
+                .get(&(kind.clone(), tap))
+                .expect("phase 1 populated every tap")
+                .clone();
+            jobs.push(LayerJob {
+                name: name.as_str(),
+                tensor: weights.get(name)?,
+                whitener,
+                plan: ranks::plan(*n_out, *n_in, spec.ratio, spec.effective_alpha()),
+            });
+        }
+        let spec = *spec;
+        let svd = &self.config.svd;
+        let results = parallel_map_dynamic(&jobs, workers, |_, job| {
+            compress_layer_with_policy(job.tensor, &job.whitener, &spec, &job.plan, svd)
+                .with_context(|| format!("compressing {}", job.name))
+        });
+
+        // ---- Phase 3: deterministic assembly (order preserved by the map) ----
+        let mut cm = CompressedModel::default();
+        for (job, layer) in jobs.iter().zip(results) {
+            cm.insert(job.name, layer?);
+        }
+        Ok(cm)
+    }
+}
+
+/// The historical serial loop, kept as the engine's differential-testing
+/// reference: per-tap whitener cache, one layer at a time, exact Jacobi.
+/// `compress_model` with any worker count and [`SvdPolicy::exact`] must
+/// reproduce this bit-for-bit (pinned by the tests below and by
+/// `benches/perf_decompose.rs`, which also times the two against each
+/// other).
+pub fn compress_model_serial(
+    model_cfg: &ModelConfig,
+    weights: &Weights,
+    stats: &TapStats,
+    spec: &CompressionSpec,
+) -> Result<CompressedModel> {
+    let mut whiteners: HashMap<String, Whitener> = HashMap::new();
+    let mut cm = CompressedModel::default();
+    for (name, n_in, n_out) in &model_cfg.linear_shapes {
+        let tap = ModelConfig::tap_for_linear(name);
+        let tap_stats = stats
+            .taps
+            .get(&tap)
+            .ok_or_else(|| anyhow::anyhow!("no calibration stats for {name} (tap {tap})"))?;
+        let whitener = whiteners
+            .entry(tap)
+            .or_insert_with(|| spec.method.stage1_whitener(tap_stats));
+        let plan = ranks::plan(*n_out, *n_in, spec.ratio, spec.effective_alpha());
+        let layer = crate::compress::methods::compress_layer_with(
+            weights.get(name)?,
+            whitener,
+            spec,
+            &plan,
+        )
+        .with_context(|| format!("compressing {name}"))?;
+        cm.insert(name, layer);
+    }
+    Ok(cm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::methods::Method;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    /// A 2-block llama-style toy model small enough for exhaustive checks.
+    fn tiny_model(rng: &mut Rng) -> (ModelConfig, Weights, TapStats) {
+        let (d, f, blocks) = (10usize, 14usize, 2usize);
+        let mut linear_shapes = Vec::new();
+        for i in 0..blocks {
+            for leaf in ["wq", "wk", "wv", "wo"] {
+                linear_shapes.push((format!("blocks.{i}.attn.{leaf}"), d, d));
+            }
+            linear_shapes.push((format!("blocks.{i}.mlp.w_gate"), d, f));
+            linear_shapes.push((format!("blocks.{i}.mlp.w_up"), d, f));
+            linear_shapes.push((format!("blocks.{i}.mlp.w_down"), f, d));
+        }
+        linear_shapes.sort_by(|a, b| a.0.cmp(&b.0));
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            family: crate::model::config::Family::Llama,
+            arch: "tiny".into(),
+            d_model: d,
+            n_layers: blocks,
+            n_heads: 2,
+            d_ff: f,
+            max_seq: 16,
+            window: 0,
+            vocab: 32,
+            linear_shapes,
+        };
+        let mut weights = Weights::default();
+        for (name, n_in, n_out) in &cfg.linear_shapes {
+            weights.tensors.insert(
+                name.clone(),
+                Tensor {
+                    dims: vec![*n_in, *n_out],
+                    data: Matrix::randn(*n_in, *n_out, 0.5, rng).to_f32(),
+                },
+            );
+        }
+        let mut stats = TapStats::default();
+        for tap in cfg.tap_names() {
+            let dim = if tap.ends_with("mlp_down_in") { f } else { d };
+            let rows = 3 * dim;
+            let x: Vec<f32> = (0..rows * dim).map(|_| rng.normal() as f32).collect();
+            stats.accumulate(&tap, &x, rows, dim);
+        }
+        (cfg, weights, stats)
+    }
+
+    fn assert_identical(a: &CompressedModel, b: &CompressedModel) {
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (name, la) in &a.layers {
+            let lb = b.get(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(la.p1, lb.p1, "{name} p1");
+            assert_eq!(la.q1, lb.q1, "{name} q1");
+            assert_eq!(la.p2, lb.p2, "{name} p2");
+            assert_eq!(la.q2, lb.q2, "{name} q2");
+        }
+    }
+
+    #[test]
+    fn sharded_engine_matches_serial_loop() {
+        let mut rng = Rng::new(21);
+        let (cfg, weights, stats) = tiny_model(&mut rng);
+        // α = 0.8 so k₂ > 0 at toy dimensions — stage 2 must shard too.
+        for method in [Method::NsvdI, Method::AsvdII, Method::NidI] {
+            let spec = CompressionSpec { method, ratio: 0.3, alpha: 0.8 };
+            let serial = compress_model_serial(&cfg, &weights, &stats, &spec).unwrap();
+            for workers in [1usize, 4] {
+                let engine = CompressionEngine::new(EngineConfig {
+                    workers,
+                    svd: SvdPolicy::exact(),
+                });
+                let mut cache = WhitenerCache::default();
+                let sharded = engine
+                    .compress_model(&cfg, &weights, &stats, &spec, &mut cache)
+                    .unwrap();
+                assert_identical(&serial, &sharded);
+            }
+        }
+    }
+
+    #[test]
+    fn whitener_cache_is_reused_across_sweep_jobs() {
+        let mut rng = Rng::new(22);
+        let (cfg, weights, stats) = tiny_model(&mut rng);
+        let engine = CompressionEngine::new(EngineConfig { workers: 2, ..Default::default() });
+        let mut cache = WhitenerCache::default();
+        let spec1 = CompressionSpec { method: Method::NsvdI, ratio: 0.2, alpha: 0.9 };
+        engine.compress_model(&cfg, &weights, &stats, &spec1, &mut cache).unwrap();
+        // 4 taps per block × 2 blocks, but wq/wk/wv share attn_in → 8 taps.
+        assert_eq!(cache.len(), 8);
+        let snapshot: Vec<*const Whitener> =
+            cache.values().map(|w| Arc::as_ptr(w)).collect();
+        // A second job at a different ratio must reuse the same whiteners.
+        let spec2 = CompressionSpec { method: Method::NsvdI, ratio: 0.4, alpha: 0.9 };
+        engine.compress_model(&cfg, &weights, &stats, &spec2, &mut cache).unwrap();
+        assert_eq!(cache.len(), 8);
+        let after: Vec<*const Whitener> = cache.values().map(|w| Arc::as_ptr(w)).collect();
+        assert_eq!(snapshot, after, "whiteners must not be rebuilt");
+    }
+
+    #[test]
+    fn auto_policy_equals_exact_when_sketch_cannot_fit() {
+        // At toy dimensions the auto gate (4k ≤ min(m,n)) never fires, so
+        // auto and exact must agree bit-for-bit.
+        let mut rng = Rng::new(23);
+        let (cfg, weights, stats) = tiny_model(&mut rng);
+        let spec = CompressionSpec { method: Method::NsvdII, ratio: 0.3, alpha: 0.95 };
+        let mut c1 = WhitenerCache::default();
+        let mut c2 = WhitenerCache::default();
+        let exact = CompressionEngine::new(EngineConfig { workers: 2, svd: SvdPolicy::exact() })
+            .compress_model(&cfg, &weights, &stats, &spec, &mut c1)
+            .unwrap();
+        let auto = CompressionEngine::new(EngineConfig { workers: 2, svd: SvdPolicy::auto() })
+            .compress_model(&cfg, &weights, &stats, &spec, &mut c2)
+            .unwrap();
+        assert_identical(&exact, &auto);
+    }
+
+    #[test]
+    fn rsvd_engine_run_preserves_budget_and_finiteness() {
+        let mut rng = Rng::new(24);
+        let (cfg, weights, stats) = tiny_model(&mut rng);
+        let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.3, alpha: 0.8 };
+        let mut policy = SvdPolicy::randomized();
+        policy.oversample = 2;
+        policy.max_rel_err = Some(0.05);
+        let engine = CompressionEngine::new(EngineConfig { workers: 3, svd: policy });
+        let mut cache = WhitenerCache::default();
+        let cm = engine.compress_model(&cfg, &weights, &stats, &spec, &mut cache).unwrap();
+        let exact = compress_model_serial(&cfg, &weights, &stats, &spec).unwrap();
+        assert_eq!(cm.params(), exact.params(), "like-for-like budget");
+        for layer in cm.layers.values() {
+            assert!(layer.p1.iter().all(|v| v.is_finite()));
+            assert!(layer.q1.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn missing_tap_stats_is_a_clean_error() {
+        let mut rng = Rng::new(25);
+        let (cfg, weights, _) = tiny_model(&mut rng);
+        let engine = CompressionEngine::new(EngineConfig::default());
+        let spec = CompressionSpec::new(Method::AsvdI, 0.3);
+        let err = engine
+            .compress_model(&cfg, &weights, &TapStats::default(), &spec, &mut Default::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("no calibration stats"));
+    }
+}

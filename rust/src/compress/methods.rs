@@ -17,7 +17,7 @@ use super::ranks::RankPlan;
 use super::whiten::{CalibStats, Whitener};
 use crate::linalg::id::interpolative;
 use crate::linalg::matrix::Matrix;
-use crate::linalg::svd::svd_thin;
+use crate::linalg::rsvd::{svd_for_rank, SvdPolicy};
 use crate::model::weights::Tensor;
 use anyhow::{bail, Result};
 
@@ -163,11 +163,27 @@ pub fn compress_layer(
 
 /// Like [`compress_layer`] with a pre-built (cacheable) stage-1 whitener —
 /// whiteners are ratio/α-independent, so sweeps reuse them across jobs.
+/// Uses the exact Jacobi SVD; the engine routes through
+/// [`compress_layer_with_policy`] to enable the randomized fast path.
 pub fn compress_layer_with(
     weight: &Tensor,
     w1: &Whitener,
     spec: &CompressionSpec,
     plan: &RankPlan,
+) -> Result<CompressedLayer> {
+    compress_layer_with_policy(weight, w1, spec, plan, &SvdPolicy::exact())
+}
+
+/// Full-control variant: both truncated SVDs (stage-1 whitened, stage-2
+/// residual) go through `svd` — [`SvdPolicy::exact`] is bit-identical to the
+/// historical `svd_thin(..).truncate(k)` path, [`SvdPolicy::auto`] enables
+/// the certified randomized fast path for ranks well below `min(m,n)`.
+pub fn compress_layer_with_policy(
+    weight: &Tensor,
+    w1: &Whitener,
+    spec: &CompressionSpec,
+    plan: &RankPlan,
+    svd: &SvdPolicy,
 ) -> Result<CompressedLayer> {
     let (n_in, n_out) = (weight.dims[0], weight.dims[1]);
     // Paper convention: A = Wᵀ is m×n with m = n_out, n = n_in.
@@ -175,7 +191,7 @@ pub fn compress_layer_with(
 
     // ---- Stage 1: activation-aware truncated SVD at rank k1 ----
     let aw = w1.whiten(&a);
-    let svd1 = svd_thin(&aw).truncate(plan.k1);
+    let svd1 = svd_for_rank(&aw, plan.k1, svd);
     // Ã₁ = U_k √Σ · √Σ Vᵀ_k S⁻¹  (balanced split).
     let sqrt_s: Vec<f64> = svd1.s.iter().map(|x| x.max(0.0).sqrt()).collect();
     let w1_fac = svd1.u.scale_cols(&sqrt_s); // [m, k1]
@@ -196,7 +212,7 @@ pub fn compress_layer_with(
             let id = interpolative(&resid, plan.k2);
             (id.t.transpose(), id.c.transpose())
         } else {
-            let svd2 = svd_thin(&resid).truncate(plan.k2);
+            let svd2 = svd_for_rank(&resid, plan.k2, svd);
             let sqrt2: Vec<f64> = svd2.s.iter().map(|x| x.max(0.0).sqrt()).collect();
             let w2 = svd2.u.scale_cols(&sqrt2); // [m, k2]
             let z2 = svd2.v.scale_cols(&sqrt2).transpose(); // [k2, n]
@@ -230,6 +246,7 @@ pub fn layer_error(weight: &Tensor, stats: &CalibStats, layer: &CompressedLayer)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::svd::svd_thin;
     use crate::util::prop::check;
     use crate::util::rng::Rng;
 
@@ -390,6 +407,49 @@ mod tests {
         assert_eq!(layer.k2, plan.k2);
         let err = layer_error(&w, &stats, &layer);
         assert!(err.fro.is_finite() && err.activation.is_finite());
+    }
+
+    #[test]
+    fn policy_exact_matches_legacy_path_bitwise() {
+        let mut rng = Rng::new(6);
+        let (stats, _) = stats_with_scales(&vec![1.0; 12], 40, &mut rng);
+        let w = tensor_from(&Matrix::randn(12, 16, 1.0, &mut rng));
+        let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.3, alpha: 0.9 };
+        let plan = super::super::ranks::plan(16, 12, 0.3, 0.9);
+        let w1 = spec.method.stage1_whitener(&stats);
+        let legacy = compress_layer_with(&w, &w1, &spec, &plan).unwrap();
+        let via =
+            compress_layer_with_policy(&w, &w1, &spec, &plan, &SvdPolicy::exact()).unwrap();
+        assert_eq!(legacy.p1, via.p1);
+        assert_eq!(legacy.q1, via.q1);
+        assert_eq!(legacy.p2, via.p2);
+        assert_eq!(legacy.q2, via.q2);
+    }
+
+    #[test]
+    fn rsvd_policy_stays_within_certificate_of_exact() {
+        // With the escape hatch at ε, the randomized path either certifies
+        // near-optimality or falls back — so the layer error can exceed the
+        // exact path's by at most the slack (plus the shared f32 cast).
+        let mut rng = Rng::new(7);
+        let (stats, _) = stats_with_scales(&vec![1.0; 40], 120, &mut rng);
+        let w = tensor_from(&Matrix::randn(40, 56, 1.0, &mut rng));
+        let spec = CompressionSpec::new(Method::AsvdI, 0.0);
+        let plan = super::super::ranks::RankPlan { k: 6, k1: 6, k2: 0 };
+        let w1 = spec.method.stage1_whitener(&stats);
+        let mut policy = SvdPolicy::randomized();
+        policy.max_rel_err = Some(0.05);
+        let exact = compress_layer_with(&w, &w1, &spec, &plan).unwrap();
+        let fast = compress_layer_with_policy(&w, &w1, &spec, &plan, &policy).unwrap();
+        let e_exact = layer_error(&w, &stats, &exact);
+        let e_fast = layer_error(&w, &stats, &fast);
+        assert!(
+            e_fast.activation <= 1.06 * e_exact.activation + 1e-3,
+            "rsvd loss {} vs exact {}",
+            e_fast.activation,
+            e_exact.activation
+        );
+        assert_eq!(fast.params(), exact.params());
     }
 
     #[test]

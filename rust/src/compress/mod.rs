@@ -1,4 +1,4 @@
-//! The paper's compression methods.
+//! The paper's compression methods and the engine that runs them at scale.
 //!
 //! * [`ranks`]   — parameter budgeting: compression ratio → (k₁, k₂).
 //! * [`whiten`]  — activation-aware whitening transforms built from the
@@ -6,14 +6,21 @@
 //!                 eigen, ASVD-III γ-scaled rotation).
 //! * [`methods`] — SVD / ASVD-0 / ASVD-I / ASVD-II / ASVD-III / NSVD-I/II /
 //!                 NID-I/II, all producing [`lowrank::CompressedLayer`]s.
+//! * [`engine`]  — the parallel sharded compression engine: per-tap
+//!                 whiteners computed once and shared via `Arc`, layer jobs
+//!                 fanned out over scoped worker threads, truncated SVDs
+//!                 routed through the [`crate::linalg::rsvd::SvdPolicy`]
+//!                 fast path.
 //! * [`lowrank`] — factored layer representation, padded marshaling for the
 //!                 fixed-shape PJRT executable, native apply + reconstruction.
 
+pub mod engine;
 pub mod lowrank;
 pub mod methods;
 pub mod ranks;
 pub mod whiten;
 
+pub use engine::{CompressionEngine, EngineConfig, WhitenerCache};
 pub use lowrank::{CompressedLayer, CompressedModel};
 pub use methods::{compress_layer, CompressionSpec, Method};
 pub use ranks::RankPlan;

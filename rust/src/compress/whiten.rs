@@ -80,6 +80,23 @@ impl Whitener {
         Whitener::Identity
     }
 
+    /// ASVD-0 whitener: `S = diag(mean |xᵢ|)` from the calibration profile.
+    ///
+    /// ```
+    /// use nsvd::compress::whiten::{CalibStats, Whitener};
+    /// use nsvd::linalg::Matrix;
+    ///
+    /// let mut stats = CalibStats::new(2);
+    /// stats.abs_sum = vec![4.0, 1.0]; // dim 0 fires 4× harder
+    /// stats.rows = 2;
+    /// let w = Whitener::diag(&stats);
+    /// // Whitening scales each input column by its mean |activation|.
+    /// let aw = w.whiten(&Matrix::identity(2));
+    /// assert!((aw[(0, 0)] - 2.0).abs() < 1e-12);
+    /// assert!((aw[(1, 1)] - 0.5).abs() < 1e-12);
+    /// // unwhiten ∘ whiten is the identity (S is invertible).
+    /// assert!(w.unwhiten_rows(&aw).dist(&Matrix::identity(2)) < 1e-12);
+    /// ```
     pub fn diag(stats: &CalibStats) -> Whitener {
         let mut s = stats.abs_mean();
         // Clamp: a dimension never activated in calibration must not blow up

@@ -1,8 +1,10 @@
 //! L3 coordinator — the orchestration layer.
 //!
 //! * [`pipeline`]  — the post-training compression pipeline: calibrate →
-//!   whiten → decompose → rebuild → evaluate, with cached calibration.
-//! * [`scheduler`] — multi-job experiment scheduler over the worker pool
+//!   whiten → decompose → rebuild → evaluate, with cached calibration;
+//!   decomposition fans out through the sharded
+//!   [`crate::compress::engine::CompressionEngine`].
+//! * [`scheduler`] — multi-job experiment scheduler
 //!   (used by the table regenerators to sweep ratios/methods).
 //! * [`server`]    — the serving loop: request queue, dynamic batcher over
 //!   the per-row serving executable, latency metrics.

@@ -12,13 +12,13 @@
 
 use crate::calib::collector::{collect_native, TapStats};
 use crate::calib::similarity::{similarity_stats, SimilarityReport};
+use crate::compress::engine::{CompressionEngine, EngineConfig, WhitenerCache};
 use crate::compress::lowrank::CompressedModel;
-use crate::compress::methods::{compress_layer_with, CompressionSpec};
-use crate::compress::whiten::Whitener;
-use crate::compress::ranks;
+use crate::compress::methods::CompressionSpec;
 use crate::data::batch::Batcher;
 use crate::data::corpus::{Corpus, Registry, DOMAIN_NAMES};
 use crate::eval::perplexity::{evaluate, EvalBackend, PerplexityResult};
+use crate::linalg::rsvd::SvdPolicy;
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::runtime::exec::Runtime;
@@ -38,6 +38,13 @@ pub struct PipelineConfig {
     /// Use the PJRT executables (true) or the native forward (false).
     pub use_pjrt: bool,
     pub seed: u64,
+    /// Decomposition worker threads (`0` = all cores).  Output is identical
+    /// for every worker count; this only changes wall-clock.
+    pub workers: usize,
+    /// Truncated-SVD policy for the decomposition engine.  The default
+    /// ([`SvdPolicy::exact`]) reproduces the serial pipeline bit-for-bit;
+    /// [`SvdPolicy::auto`] enables the certified randomized fast path.
+    pub svd: SvdPolicy,
 }
 
 impl PipelineConfig {
@@ -49,6 +56,8 @@ impl PipelineConfig {
             eval_windows: 64,
             use_pjrt: true,
             seed: 0xC0FFEE,
+            workers: 0,
+            svd: SvdPolicy::exact(),
         }
     }
 }
@@ -82,7 +91,8 @@ pub struct Pipeline {
     /// (whitener kind, tap) → whitener — reused across layers AND across
     /// sweep jobs (whiteners are ratio/α-independent; the eigendecomposition
     /// of a d_ff-sized Gram costs seconds, so this dominates sweep setup).
-    whitener_cache: std::collections::HashMap<(String, String), std::rc::Rc<Whitener>>,
+    /// `Arc`-backed so the sharded engine's worker threads can share it.
+    whitener_cache: WhitenerCache,
 }
 
 impl Pipeline {
@@ -164,32 +174,25 @@ impl Pipeline {
         }
     }
 
-    /// Decompose every compressible weight with `spec`.  Stage-1 whiteners
-    /// are cached per (method-class, tap): wq/wk/wv share one, and repeat
-    /// jobs in a sweep pay zero whitening cost.
+    /// Decompose every compressible weight with `spec` via the sharded
+    /// [`CompressionEngine`]: stage-1 whiteners are computed once per
+    /// (method-class, tap) — wq/wk/wv share one, repeat jobs in a sweep pay
+    /// zero whitening cost — and layer jobs fan out over
+    /// `config.workers` threads with the configured SVD policy.
     pub fn compress(&mut self, spec: &CompressionSpec) -> Result<CompressedModel> {
         self.calibrate()?;
         let stats = self.calib.as_ref().unwrap();
-        let kind = spec.method.whitener_kind().to_string();
-        let mut cm = CompressedModel::default();
-        for (name, n_in, n_out) in &self.model_cfg.linear_shapes {
-            let tensor = self.weights.get(name)?;
-            let tap = crate::model::config::ModelConfig::tap_for_linear(name);
-            let tap_stats = stats
-                .taps
-                .get(&tap)
-                .ok_or_else(|| anyhow::anyhow!("no calibration stats for {name}"))?;
-            let whitener = self
-                .whitener_cache
-                .entry((kind.clone(), tap.clone()))
-                .or_insert_with(|| std::rc::Rc::new(spec.method.stage1_whitener(tap_stats)))
-                .clone();
-            let plan = ranks::plan(*n_out, *n_in, spec.ratio, spec.effective_alpha());
-            let layer = compress_layer_with(tensor, &whitener, spec, &plan)
-                .with_context(|| format!("compressing {name}"))?;
-            cm.insert(name, layer);
-        }
-        Ok(cm)
+        let engine = CompressionEngine::new(EngineConfig {
+            workers: self.config.workers,
+            svd: self.config.svd.clone(),
+        });
+        engine.compress_model(
+            &self.model_cfg,
+            &self.weights,
+            stats,
+            spec,
+            &mut self.whitener_cache,
+        )
     }
 
     /// Evaluate a (possibly compressed) model on all eight test sets.

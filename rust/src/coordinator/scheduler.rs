@@ -3,8 +3,13 @@
 //! PJRT executables are not `Send` (the client is `Rc`-based), so jobs that
 //! execute on-device run sequentially on the owning thread; the scheduler's
 //! contribution is job bookkeeping — deterministic ordering, failure
-//! isolation, progress reporting — plus parallel decomposition for the
-//! CPU-bound SVD work when multiple cores exist.
+//! isolation, progress reporting.  The CPU-bound decomposition inside each
+//! job is parallel: `Pipeline::compress` routes through the sharded
+//! [`crate::compress::engine::CompressionEngine`], which fans layer jobs
+//! out over `PipelineConfig::workers` threads (whiteners built once per tap
+//! and shared read-only via `Arc`) and applies the configured
+//! [`crate::linalg::rsvd::SvdPolicy`] — so a sweep's wall-clock is
+//! evaluation-dominated on multi-core machines.
 
 use super::pipeline::{CompressionReport, Pipeline};
 use crate::compress::methods::{CompressionSpec, Method};

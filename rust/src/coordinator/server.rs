@@ -2,8 +2,13 @@
 //!
 //! The deployment story the paper motivates: the COMPRESSED model serves
 //! scoring requests.  Requests arrive on an mpsc channel from any number of
-//! producer threads; the serving loop (which owns the PJRT client — `Rc`
-//! inside, so single-threaded by construction) groups them into batches:
+//! producer threads.  Threading contract: the PJRT client and its compiled
+//! executables are not `Send`, so *execution* stays on the one thread that
+//! owns the [`ServeEvaluator`] — but nothing else in the system is
+//! single-threaded: producers fan in from arbitrary threads, and the
+//! decomposition that builds the served model runs on the sharded
+//! `compress::engine` worker pool (whiteners shared via `Arc`).  The loop
+//! groups requests into batches:
 //!
 //! * block for the first request;
 //! * drain more until the batch is full or `max_wait` elapses;
@@ -41,7 +46,11 @@ pub struct ScoreResponse {
 /// Dynamic batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// Max time to wait for more requests after the first (seconds).
+    /// Maximum time to wait for more requests after the first one arrives,
+    /// in **seconds** (the `_s` suffix is the crate-wide unit convention;
+    /// the CLI's `--max-wait-ms` flag is converted before it lands here).
+    /// The default, `0.002` (2 ms), trades ≤2 ms of added latency for much
+    /// fuller batches under load.
     pub max_wait_s: f64,
 }
 

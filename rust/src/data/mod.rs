@@ -1,4 +1,16 @@
-//! Corpora loading and batching (token files emitted by python/compile/corpora.py).
+//! Byte-level corpora and batching.
+//!
+//! The paper evaluates on eight domains (WikiText-2 plus seven OOD sets —
+//! multilingual and instruction data); the python side
+//! (`python/compile/corpora.py`) tokenizes each into flat byte files with
+//! train/test splits, and this module turns them back into model input:
+//!
+//! * [`corpus`] — the [`Corpus`] token store, the on-disk [`corpus::Registry`]
+//!   over `artifacts/corpora/`, and the canonical
+//!   [`corpus::DOMAIN_NAMES`] ordering every table iterates in.
+//! * [`batch`]  — the [`Batcher`]: random calibration windows (paper §4:
+//!   256 sequences) and sequential eval windows, padded into the
+//!   fixed-shape `[batch, seq]` token blocks the executables expect.
 
 pub mod batch;
 pub mod corpus;

@@ -1,5 +1,14 @@
 //! Evaluation: perplexity over the eight domains.
+//!
+//! One module, one metric: token-level perplexity `exp(Σ nll / Σ tokens)`
+//! accumulated over sequential eval windows.  [`perplexity::evaluate`] is
+//! generic over an [`EvalBackend`] so the SAME scoring loop runs against
+//! the PJRT dense executable, the PJRT low-rank executable (compressed
+//! models), or the pure-native forward — which is how the integration
+//! tests pin PJRT and native to each other.  Results arrive as
+//! [`PerplexityResult`] rows, one per dataset, in the order the paper's
+//! tables print them.
 
 pub mod perplexity;
 
-pub use perplexity::{EvalBackend, PerplexityResult, evaluate_native};
+pub use perplexity::{evaluate_native, EvalBackend, PerplexityResult};

@@ -14,16 +14,22 @@
 //!
 //! * [`util`] — PRNG, JSON, CLI, threading, timing (offline substrate).
 //! * [`linalg`] — dense f64 linear algebra: QR, LQ, Cholesky, symmetric
-//!   eigendecomposition, SVD, interpolative decomposition.
+//!   eigendecomposition, SVD, interpolative decomposition, and the
+//!   randomized truncated-SVD fast path ([`linalg::rsvd`]).
 //! * [`data`] — byte-level corpora, splits, batching.
 //! * [`model`] — transformer configs, NSVDW weight loading, native forward.
 //! * [`compress`] — the paper's methods: SVD, ASVD-0/I/II/III, NSVD-I/II,
-//!   NID-I/II, rank budgeting, padded low-rank layers.
+//!   NID-I/II, rank budgeting, padded low-rank layers, and the parallel
+//!   sharded decomposition engine ([`compress::engine`]).
 //! * [`calib`] — activation Gram collection + similarity analysis.
 //! * [`eval`] — perplexity evaluation.
 //! * [`runtime`] — PJRT client, artifact registry, executors.
 //! * [`coordinator`] — pipeline orchestration, scheduler, serving, reports.
 //! * [`bench`] — the criterion-free benchmark harness used by `cargo bench`.
+//!
+//! New readers: start with the repo-root `README.md` (quickstart, layout)
+//! and `ARCHITECTURE.md` (layering, data flow, where the engine and rsvd
+//! fast path sit); then come back here for API-level docs.
 
 pub mod bench;
 pub mod calib;

@@ -11,6 +11,8 @@
 //! * [`chol`] — Cholesky factorization with PSD-safe ridge handling.
 //! * [`eig`] — cyclic Jacobi symmetric eigendecomposition.
 //! * [`svd`] — one-sided Jacobi SVD + truncation (Eckart–Young).
+//! * [`rsvd`] — randomized range-finder SVD (the truncation fast path) and
+//!   the [`rsvd::SvdPolicy`] that arbitrates between it and exact Jacobi.
 //! * [`id`] — low-rank column interpolative decomposition.
 //! * [`solve`] — triangular solves, inverses, pseudo-inverse.
 //!
@@ -23,6 +25,7 @@ pub mod eig;
 pub mod id;
 pub mod matrix;
 pub mod qr;
+pub mod rsvd;
 pub mod solve;
 pub mod svd;
 
@@ -31,4 +34,5 @@ pub use eig::sym_eig;
 pub use id::interpolative;
 pub use matrix::Matrix;
 pub use qr::{lq, qr_thin};
+pub use rsvd::{svd_for_rank, SvdPolicy};
 pub use svd::{svd_thin, Svd};

@@ -1,0 +1,296 @@
+//! Randomized truncated SVD (Halko–Martinsson–Tropp range finder) and the
+//! [`SvdPolicy`] that decides, per matrix, between this fast path and the
+//! exact one-sided Jacobi SVD.
+//!
+//! The decomposition hot path truncates every SVD to a rank `k` far below
+//! `min(m, n)` whenever the compression ratio is aggressive or the stage-2
+//! residual rank `k₂` is small.  One-sided Jacobi always pays for the full
+//! spectrum; the randomized scheme pays only `O(mnl)` with `l = k +
+//! oversample`:
+//!
+//! 1. **sketch** — `Y = A Ω` with a Gaussian `Ω (n×l)`;
+//! 2. **power iterations** — `q` rounds of `Y ← A (Aᵀ Y)` with a QR
+//!    re-orthonormalization after every half-step (flattens slow spectral
+//!    decay);
+//! 3. **projection** — `Q = orth(Y)`, `B = Qᵀ A (l×n)`;
+//! 4. **small exact SVD** — one-sided Jacobi on `B`, then `U = Q U_B`.
+//!
+//! Because `Q` has orthonormal columns, the rank-k error splits exactly:
+//! `‖A − Ã_k‖²_F = ‖A − QQᵀA‖²_F + ‖B − B_k‖²_F`, and every singular value
+//! of `B` is ≤ the matching singular value of `A`, so
+//! `tail_B(k) = √(Σ_{k<i≤l} σ̂ᵢ²)` is a LOWER bound on the optimal
+//! (Eckart–Young) error.  That gives a cheap *a-posteriori certificate*:
+//! if `‖A − Ã_k‖ ≤ (1+ε)·tail_B(k)` the sketch is within `1+ε` of optimal.
+//! [`svd_for_rank`] uses the certificate as the relative-error escape hatch
+//! — when it fails, the matrix falls back to exact Jacobi, so paper tables
+//! stay meaningful no matter what the spectrum looks like.
+
+use super::matrix::Matrix;
+use super::qr::qr_thin;
+use super::svd::{svd_thin, Svd};
+use crate::util::rng::Rng;
+
+/// Which SVD implementation to use for rank-k truncations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SvdMode {
+    /// Choose per matrix: randomized when `4k ≤ min(m,n)` (rank well below
+    /// the full spectrum), exact Jacobi otherwise.
+    Auto,
+    /// Always exact one-sided Jacobi (bit-identical to the historical path).
+    Exact,
+    /// Randomized whenever the sketch fits (`k + oversample < min(m,n)`).
+    Randomized,
+}
+
+/// Policy threaded from the CLI / `PipelineConfig` down to every per-layer
+/// truncated SVD.  [`SvdPolicy::exact`] reproduces the serial pipeline's
+/// outputs bit-for-bit; [`SvdPolicy::auto`] enables the randomized fast path
+/// with a 2% near-optimality certificate.
+#[derive(Clone, Debug)]
+pub struct SvdPolicy {
+    pub mode: SvdMode,
+    /// Extra sketch columns beyond the requested rank (HMT recommend 5–10).
+    pub oversample: usize,
+    /// Subspace (power) iterations; 1–2 suffice for decaying spectra.
+    pub power_iters: usize,
+    /// Relative-error escape hatch: fall back to exact Jacobi unless the
+    /// randomized result is certified within `(1 + ε)` of the optimal
+    /// rank-k Frobenius error.  `None` disables the check (pure fast path).
+    pub max_rel_err: Option<f64>,
+    /// Sketch seed — fixed so runs are deterministic across worker counts.
+    pub seed: u64,
+}
+
+impl SvdPolicy {
+    /// Exact Jacobi everywhere (the default; bit-identical to the seed path).
+    pub fn exact() -> SvdPolicy {
+        SvdPolicy {
+            mode: SvdMode::Exact,
+            oversample: 8,
+            power_iters: 2,
+            max_rel_err: None,
+            seed: 0x5EED_CAFE,
+        }
+    }
+
+    /// Auto-select with the 2% near-optimality escape hatch.
+    pub fn auto() -> SvdPolicy {
+        SvdPolicy { mode: SvdMode::Auto, max_rel_err: Some(0.02), ..SvdPolicy::exact() }
+    }
+
+    /// Randomized whenever the sketch fits, no certificate (benchmarks).
+    pub fn randomized() -> SvdPolicy {
+        SvdPolicy { mode: SvdMode::Randomized, ..SvdPolicy::exact() }
+    }
+
+    /// Does this policy route an `m×n` rank-`k` truncation to the sketch?
+    pub fn wants_randomized(&self, m: usize, n: usize, k: usize) -> bool {
+        let min_dim = m.min(n);
+        let fits = k > 0 && k + self.oversample < min_dim;
+        match self.mode {
+            SvdMode::Exact => false,
+            SvdMode::Randomized => fits,
+            SvdMode::Auto => fits && 4 * k <= min_dim,
+        }
+    }
+}
+
+/// A randomized rank-k factorization plus its error certificate.
+#[derive(Clone, Debug)]
+pub struct RsvdResult {
+    /// Rank-≤k truncated SVD (`u` m×k, `s`, `v` n×k).
+    pub svd: Svd,
+    /// `‖A − QQᵀA‖_F` — energy missed by the range finder (exact, via the
+    /// norm identity; no extra matmul).
+    pub range_residual: f64,
+    /// `√(Σ_{k<i≤l} σ̂ᵢ²)` — sketch tail beyond rank k; a lower bound on the
+    /// optimal rank-k error because `σᵢ(QᵀA) ≤ σᵢ(A)`.
+    pub optimal_lower_bound: f64,
+    /// `√(range_residual² + optimal_lower_bound²)` — the EXACT Frobenius
+    /// error of `svd` as a rank-k approximation of A.
+    pub achieved_err: f64,
+}
+
+impl RsvdResult {
+    /// Is the factorization certified within `(1+ε)` of Eckart–Young?
+    pub fn certified(&self, eps: f64, a_norm: f64) -> bool {
+        if self.optimal_lower_bound > 1e-12 * a_norm {
+            self.achieved_err <= (1.0 + eps) * self.optimal_lower_bound
+        } else {
+            // A is (numerically) rank ≤ k: demand the residual itself vanish.
+            self.achieved_err <= eps * a_norm + 1e-300
+        }
+    }
+}
+
+/// Orthonormalize the columns of `y` (thin QR, Q only).
+fn orth(y: &Matrix) -> Matrix {
+    qr_thin(y).0
+}
+
+/// Random `m×n` matrix with prescribed geometric singular-value decay
+/// `σᵢ = decay^i` (random orthonormal factors).  The spectrum shape of real
+/// whitened weights — shared by the rsvd unit tests and the
+/// `perf_linalg` bench so both exercise the same certified regime.
+pub fn decaying_matrix(m: usize, n: usize, decay: f64, rng: &mut Rng) -> Matrix {
+    let r = m.min(n);
+    let (qu, _) = qr_thin(&Matrix::randn(m, r, 1.0, rng));
+    let (qv, _) = qr_thin(&Matrix::randn(n, r, 1.0, rng));
+    let s: Vec<f64> = (0..r).map(|i| decay.powi(i as i32)).collect();
+    qu.scale_cols(&s).matmul_nt(&qv)
+}
+
+/// Randomized rank-k SVD with diagnostics.  Requires
+/// `k + oversample < min(m,n)`; callers should route through
+/// [`svd_for_rank`], which enforces that and handles fallback.
+pub fn rsvd(a: &Matrix, k: usize, oversample: usize, power_iters: usize, rng: &mut Rng) -> RsvdResult {
+    let (m, n) = (a.rows, a.cols);
+    let l = (k + oversample).min(m.min(n));
+    // Stage A: range finder with power iterations.
+    let omega = Matrix::randn(n, l, 1.0, rng);
+    let mut q = orth(&a.matmul(&omega)); // m×l
+    for _ in 0..power_iters {
+        let z = orth(&a.matmul_tn(&q)); // Aᵀ Q, re-orthonormalized: n×l
+        q = orth(&a.matmul(&z)); // A Z: m×l
+    }
+    // Stage B: project and solve the small problem exactly.
+    let b = q.matmul_tn(a); // Qᵀ A: l×n
+    let sb = svd_thin(&b);
+    let k_eff = k.min(sb.s.len());
+    let trunc = sb.truncate(k_eff);
+    let u = q.matmul(&trunc.u); // m×k
+    // Certificate pieces (‖A‖² = ‖QᵀA‖² + ‖A−QQᵀA‖² since Q is orthonormal).
+    let a2 = a.fro_norm().powi(2);
+    let b2 = b.fro_norm().powi(2);
+    let range_residual = (a2 - b2).max(0.0).sqrt();
+    let tail = sb.tail_norm(k_eff);
+    RsvdResult {
+        svd: Svd { u, s: trunc.s, v: trunc.v },
+        range_residual,
+        optimal_lower_bound: tail,
+        achieved_err: (range_residual.powi(2) + tail.powi(2)).sqrt(),
+    }
+}
+
+/// Rank-k truncated SVD under `policy`: the randomized fast path when the
+/// policy selects it (and, if `max_rel_err` is set, the certificate holds),
+/// exact one-sided Jacobi otherwise.  The exact branch is bit-identical to
+/// `svd_thin(a).truncate(k)`.
+pub fn svd_for_rank(a: &Matrix, k: usize, policy: &SvdPolicy) -> Svd {
+    if !policy.wants_randomized(a.rows, a.cols, k) {
+        return svd_thin(a).truncate(k);
+    }
+    let mut rng = Rng::new(policy.seed);
+    let r = rsvd(a, k, policy.oversample, policy.power_iters, &mut rng);
+    if let Some(eps) = policy.max_rel_err {
+        if !r.certified(eps, a.fro_norm()) {
+            return svd_thin(a).truncate(k);
+        }
+    }
+    r.svd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::decaying_matrix as decaying;
+
+    #[test]
+    fn rsvd_matches_exact_error_on_decaying_spectra() {
+        let mut rng = Rng::new(7);
+        // Tall, wide, and square — all shapes the engine hits.
+        for (m, n) in [(60usize, 24usize), (24, 60), (40, 40)] {
+            let a = decaying(m, n, 0.7, &mut rng);
+            let k = 6;
+            let exact_err = svd_thin(&a).low_rank(k).dist(&a);
+            let r = rsvd(&a, k, 8, 2, &mut rng);
+            let rand_err = r.svd.u.scale_cols(&r.svd.s).matmul_nt(&r.svd.v).dist(&a);
+            assert!(
+                rand_err <= 1.05 * exact_err + 1e-10,
+                "{m}x{n}: rsvd err {rand_err} vs exact {exact_err}"
+            );
+            // The diagnostic error must equal the measured error.
+            assert!((r.achieved_err - rand_err).abs() < 1e-8 * (1.0 + rand_err));
+        }
+    }
+
+    #[test]
+    fn rsvd_factors_are_orthonormal_and_sorted() {
+        let mut rng = Rng::new(8);
+        let a = decaying(50, 30, 0.8, &mut rng);
+        let r = rsvd(&a, 5, 6, 2, &mut rng);
+        let u = &r.svd.u;
+        let v = &r.svd.v;
+        assert_eq!(u.cols, 5);
+        assert_eq!(v.cols, 5);
+        assert!(u.matmul_tn(u).dist(&Matrix::identity(5)) < 1e-9, "UᵀU=I");
+        assert!(v.matmul_tn(v).dist(&Matrix::identity(5)) < 1e-9, "VᵀV=I");
+        for w in r.svd.s.windows(2) {
+            assert!(w[0] + 1e-12 >= w[1], "sorted");
+        }
+    }
+
+    #[test]
+    fn exact_policy_is_bit_identical_to_jacobi() {
+        let mut rng = Rng::new(9);
+        let a = Matrix::randn(20, 14, 1.0, &mut rng);
+        let k = 4;
+        let via_policy = svd_for_rank(&a, k, &SvdPolicy::exact());
+        let direct = svd_thin(&a).truncate(k);
+        assert_eq!(via_policy.s, direct.s);
+        assert_eq!(via_policy.u.data, direct.u.data);
+        assert_eq!(via_policy.v.data, direct.v.data);
+    }
+
+    #[test]
+    fn auto_mode_selects_by_rank_ratio() {
+        let p = SvdPolicy::auto();
+        // Rank well below min(m,n)/4: randomized.
+        assert!(p.wants_randomized(256, 128, 16));
+        // Rank above min/4: exact.
+        assert!(!p.wants_randomized(256, 128, 48));
+        // Sketch (k + oversample) would not fit below min(m,n): exact.
+        assert!(!p.wants_randomized(10, 10, 2));
+        // k = 0 never sketches.
+        assert!(!p.wants_randomized(256, 128, 0));
+        assert!(!SvdPolicy::exact().wants_randomized(256, 128, 16));
+    }
+
+    #[test]
+    fn escape_hatch_falls_back_to_exact() {
+        // An impossible certificate (ε = 0 on a full-rank matrix) must give
+        // exactly the Jacobi answer.
+        let mut rng = Rng::new(10);
+        let a = Matrix::randn(64, 40, 1.0, &mut rng);
+        let k = 5;
+        let mut policy = SvdPolicy::randomized();
+        policy.max_rel_err = Some(0.0);
+        let out = svd_for_rank(&a, k, &policy);
+        let exact = svd_thin(&a).truncate(k);
+        assert_eq!(out.s, exact.s);
+        assert_eq!(out.u.data, exact.u.data);
+    }
+
+    #[test]
+    fn certificate_accepts_easy_spectra() {
+        // Fast decay + power iterations: the certificate must PASS, so the
+        // fast path actually runs where it is safe.
+        let mut rng = Rng::new(11);
+        let a = decaying(80, 48, 0.5, &mut rng);
+        let r = rsvd(&a, 6, 8, 2, &mut rng);
+        assert!(r.certified(0.02, a.fro_norm()), "2% certificate should hold");
+    }
+
+    #[test]
+    fn zero_rank_and_degenerate_shapes() {
+        let mut rng = Rng::new(12);
+        let a = Matrix::randn(9, 5, 1.0, &mut rng);
+        let s = svd_for_rank(&a, 0, &SvdPolicy::auto());
+        assert_eq!(s.s.len(), 0);
+        let z = Matrix::zeros(16, 16);
+        let r = rsvd(&z, 2, 4, 1, &mut rng);
+        assert!(r.achieved_err < 1e-12);
+        assert!(r.certified(0.02, 0.0));
+    }
+}

@@ -24,6 +24,18 @@ impl Svd {
     }
 
     /// Rank-k truncation (Eckart–Young optimum).
+    ///
+    /// ```
+    /// use nsvd::linalg::{svd_thin, Matrix};
+    ///
+    /// let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+    /// let top2 = svd_thin(&a).truncate(2);
+    /// assert_eq!(top2.s.len(), 2);
+    /// assert!((top2.s[0] - 3.0).abs() < 1e-12); // sorted: σ₁ = 3
+    /// assert!((top2.s[1] - 2.0).abs() < 1e-12); //         σ₂ = 2
+    /// // The rank-2 reconstruction drops exactly the σ = 1 direction.
+    /// assert!((top2.reconstruct().dist(&a) - 1.0).abs() < 1e-12);
+    /// ```
     pub fn truncate(&self, k: usize) -> Svd {
         let k = k.min(self.s.len());
         Svd {

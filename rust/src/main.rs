@@ -53,6 +53,9 @@ fn build_cli() -> Cli {
                 .flag("ratio", "compression ratio (0-1)", Some("0.3"))
                 .flag("alpha", "k1 share for nested methods", Some("0.95"))
                 .flag("windows", "eval windows per dataset", Some("64"))
+                .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
+                .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
+                .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
                 .switch("native", "use the native forward instead of PJRT"),
         )
         .command(
@@ -60,6 +63,9 @@ fn build_cli() -> Cli {
                 .flag("artifacts", "artifacts directory", Some("artifacts"))
                 .flag("windows", "eval windows per dataset", Some("64"))
                 .flag("ratios", "ratios for table 1", Some("0.1,0.2,0.3,0.4,0.5"))
+                .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
+                .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
+                .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
                 .switch("native", "use the native forward instead of PJRT"),
         )
         .command(
@@ -75,7 +81,10 @@ fn build_cli() -> Cli {
                 .flag("ratio", "compression ratio", Some("0.3"))
                 .flag("requests", "number of requests", Some("200"))
                 .flag("rate", "request rate (rps, 0 = as fast as possible)", Some("0"))
-                .flag("max-wait-ms", "batcher max wait", Some("2")),
+                .flag("max-wait-ms", "batcher max wait", Some("2"))
+                .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
+                .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
+                .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02")),
         )
         .command(
             Command::new("e2e", "full pipeline demo: calibrate → compress → evaluate")
@@ -85,6 +94,9 @@ fn build_cli() -> Cli {
                 .flag("ratio", "compression ratio", Some("0.3"))
                 .flag("alpha", "k1 share", Some("0.95"))
                 .flag("windows", "eval windows per dataset", Some("32"))
+                .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
+                .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
+                .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
                 .switch("native", "use the native forward instead of PJRT"),
         )
 }
@@ -94,6 +106,17 @@ fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> 
     cfg.artifacts_dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     cfg.eval_windows = args.get_usize("windows").unwrap_or(64);
     cfg.use_pjrt = !args.switch("native");
+    if args.get("workers").is_some() {
+        cfg.workers = args.get_workers("workers").ok_or_else(|| {
+            anyhow::anyhow!("--workers expects a positive integer or 'auto'")
+        })?;
+    }
+    if args.switch("rsvd") {
+        cfg.svd = nsvd::linalg::rsvd::SvdPolicy::auto();
+        if let Some(tol) = args.get_f64("rsvd-tol") {
+            cfg.svd.max_rel_err = Some(tol);
+        }
+    }
     Pipeline::new(cfg)
 }
 

@@ -44,6 +44,16 @@ impl Args {
         self.switches.get(name).copied().unwrap_or(false)
     }
 
+    /// Parse a worker-count flag: `auto` (or `0`) means "let the engine use
+    /// all cores" and is returned as `0`; anything else must be a positive
+    /// integer thread count.  `None` when the flag is absent or malformed.
+    pub fn get_workers(&self, name: &str) -> Option<usize> {
+        match self.get(name)? {
+            "auto" | "0" => Some(0),
+            s => s.parse().ok().filter(|&n| n > 0),
+        }
+    }
+
     /// Parse a comma-separated list flag.
     pub fn get_list(&self, name: &str) -> Vec<String> {
         self.get(name)
@@ -254,6 +264,24 @@ mod tests {
         assert_eq!(cmd.name, "compress");
         assert_eq!(a.get("method"), Some("svd"));
         assert!(cli.parse(&argv(&["nsvd", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn workers_flag_parses_auto_and_counts() {
+        let cmd = Command::new("t", "t").flag("workers", "threads", Some("auto"));
+        assert_eq!(cmd.parse(&argv(&[])).unwrap().get_workers("workers"), Some(0));
+        assert_eq!(
+            cmd.parse(&argv(&["--workers", "0"])).unwrap().get_workers("workers"),
+            Some(0)
+        );
+        assert_eq!(
+            cmd.parse(&argv(&["--workers", "8"])).unwrap().get_workers("workers"),
+            Some(8)
+        );
+        assert_eq!(
+            cmd.parse(&argv(&["--workers", "lots"])).unwrap().get_workers("workers"),
+            None
+        );
     }
 
     #[test]

@@ -64,6 +64,46 @@ where
     out.into_iter().map(|o| o.unwrap()).collect()
 }
 
+/// Like [`parallel_map`] but with dynamic (work-stealing) scheduling: each
+/// worker repeatedly claims the next unprocessed index from a shared atomic
+/// counter.  Use when item costs are heterogeneous or `workers` does not
+/// divide the item count — static chunking would idle workers on the tail
+/// while one slow shard dominates wall-clock.  The returned order matches
+/// `items` regardless of which worker computed what.
+pub fn parallel_map_dynamic<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let n = items.len();
+    let workers = workers.min(n);
+    if workers <= 1 || n < 2 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let done: std::sync::Mutex<Vec<(usize, U)>> =
+        std::sync::Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, U)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                }
+                done.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut pairs = done.into_inner().unwrap();
+    pairs.sort_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, u)| u).collect()
+}
+
 /// A minimal multi-producer work queue with a fixed worker pool, used by the
 /// coordinator's scheduler.  Jobs are boxed closures; results are delivered
 /// through the closure's own channel/handles.
@@ -141,6 +181,30 @@ mod tests {
         for (i, y) in ys.iter().enumerate() {
             assert_eq!(*y, i * i);
         }
+    }
+
+    #[test]
+    fn dynamic_map_preserves_order_with_uneven_costs() {
+        // 29 items, 4 workers (not a divisor), wildly uneven per-item cost.
+        let xs: Vec<usize> = (0..29).collect();
+        let ys = parallel_map_dynamic(&xs, 4, |i, &x| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x * 3
+        });
+        assert_eq!(ys.len(), 29);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(*y, i * 3);
+        }
+    }
+
+    #[test]
+    fn dynamic_map_matches_static_map() {
+        let xs: Vec<usize> = (0..64).collect();
+        let a = parallel_map(&xs, 3, |i, &x| i + x);
+        let b = parallel_map_dynamic(&xs, 5, |i, &x| i + x);
+        assert_eq!(a, b);
     }
 
     #[test]
