@@ -7,11 +7,18 @@
 # Gates (in order, fail-fast):
 #   1. cargo build --release        — the whole system compiles optimized
 #   2. cargo test -q                — unit + integration tests (tier-1)
-#   3. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
+#   3. cargo bench --no-run         — every bench target compiles (the
+#                                     paper-table regenerators rot silently
+#                                     otherwise)
+#   4. GEMM parity smoke            — perf_linalg's `gemm` benches in
+#                                     --quick mode assert tiled == naive
+#                                     and 4-worker bit-identity, so kernel
+#                                     regressions fail fast
+#   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
 #                                     silently
-#   4. cargo fmt --check            — advisory for now: the seed predates
+#   6. cargo fmt --check            — advisory for now: the seed predates
 #                                     rustfmt enforcement, so drift in
 #                                     untouched files reports but does not
 #                                     fail the gate.  Flip ADVISORY_FMT=0
@@ -33,6 +40,12 @@ fi
 
 step "cargo test -q"
 cargo test -q
+
+step "cargo bench --no-run (bench targets compile)"
+cargo bench --no-run
+
+step "GEMM parity smoke (perf_linalg gemm --quick)"
+cargo bench --bench perf_linalg -- gemm --quick
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

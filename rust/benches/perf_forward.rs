@@ -1,16 +1,53 @@
 //! Perf: forward-pass engines — native f32 vs PJRT dense vs PJRT low-rank —
-//! in tokens/second at the eval batch shape.
+//! in tokens/second at the eval batch shape, plus the batch-parallel native
+//! evaluator's worker scaling (runs without artifacts: random weights,
+//! synthetic corpus).
 
 use nsvd::bench::{artifacts_dir, Suite};
 use nsvd::compress::methods::{CompressionSpec, Method};
 use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
 use nsvd::data::batch::Batcher;
-use nsvd::data::corpus::Registry;
-use nsvd::eval::perplexity::EvalBackend;
+use nsvd::data::corpus::{Corpus, Registry};
+use nsvd::eval::perplexity::{evaluate_with_workers, EvalBackend};
+use nsvd::model::config::ModelConfig;
+use nsvd::model::forward::random_weights;
 
 fn main() {
     let mut suite = Suite::from_args("perf_forward");
-    let Some(dir) = artifacts_dir() else { return };
+
+    // ---- Native evaluator worker scaling (no artifacts needed) ----
+    // Independent TokenBatches fan out over the worker pool; each forward
+    // pass runs the f32 GEMM kernel with its ThreadBudget share.  The
+    // result is bit-identical at every worker count, so this measures pure
+    // wall-clock scaling of the eval side.
+    {
+        let cfg = ModelConfig::builtin("llama-t").expect("builtin llama-t");
+        let weights = random_weights(&cfg, 1);
+        let corpus = Corpus {
+            name: "synthetic".into(),
+            tokens: (0..1usize << 15).map(|i| (i * 31 % 251) as u8).collect(),
+        };
+        let (batch, seq) = (8usize, 64usize.min(cfg.max_seq));
+        // ≥ 4×batch windows so the OUTER batch fan-out genuinely reaches 4
+        // workers (2 batches would cap outer at 2 and measure inner-GEMM
+        // scaling instead).
+        let windows = if suite.quick() { 16 } else { 32 };
+        let backend = EvalBackend::Native { cfg: &cfg, weights: &weights, compressed: None };
+        let tokens_per_iter = (windows * seq) as f64;
+        for workers in [1usize, 2, 4] {
+            suite.bench_throughput(&format!("native_eval_w{workers}"), 3, tokens_per_iter, || {
+                std::hint::black_box(
+                    evaluate_with_workers(&backend, &corpus, batch, seq, windows, workers)
+                        .unwrap(),
+                );
+            });
+        }
+    }
+
+    let Some(dir) = artifacts_dir() else {
+        suite.finish();
+        return;
+    };
     let mut cfg = PipelineConfig::default_for_model("llama-t");
     cfg.artifacts_dir = dir.clone();
     let mut pipeline = Pipeline::new(cfg).unwrap();

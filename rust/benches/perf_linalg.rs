@@ -1,11 +1,14 @@
 //! Perf: the linalg substrate's hot kernels across the sizes the
 //! decomposition path actually hits (d_model 128-256, d_ff up to 384),
 //! plus the jacobi-vs-randomized truncated-SVD comparison that motivates
-//! the `SvdPolicy` fast path.
+//! the `SvdPolicy` fast path, plus the unified tiled+packed GEMM kernel
+//! vs the retired naive loop (parity smoke + GFLOP/s + worker scaling;
+//! summarized into the top-level `BENCH_gemm.json`).
 
 use nsvd::bench::Suite;
 use nsvd::linalg::chol::cholesky_psd;
 use nsvd::linalg::eig::sym_eig;
+use nsvd::linalg::gemm;
 use nsvd::linalg::id::interpolative;
 use nsvd::linalg::matrix::Matrix;
 use nsvd::linalg::qr::{qr_pivoted, qr_thin};
@@ -17,6 +20,66 @@ use nsvd::util::timer::Timer;
 fn main() {
     let mut suite = Suite::from_args("perf_linalg");
     let mut rng = Rng::new(1);
+
+    // ---- Unified tiled+packed GEMM kernel vs the retired naive loop ----
+    // Parity smoke runs first (ci.sh invokes `-- gemm --quick`, so a kernel
+    // regression fails fast); then GFLOP/s, measured speedup-vs-naive, the
+    // row-parallel worker scaling, and the f32 forward-pass instantiation.
+    let gemm_sizes: &[usize] = if suite.quick() { &[128] } else { &[128, 256, 512] };
+    for &n in gemm_sizes {
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        if suite.enabled("gemm_parity") {
+            let mut c_naive = vec![0.0; n * n];
+            gemm::naive_nn(n, n, n, &a.data, &b.data, &mut c_naive);
+            let c_tiled = a.matmul(&b);
+            let err = c_naive
+                .iter()
+                .zip(&c_tiled.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max);
+            assert!(err < 1e-12 * (1.0 + n as f64), "gemm parity @{n}: max err {err:e}");
+            let mut c_par = vec![0.0; n * n];
+            gemm::gemm_nn(n, n, n, &a.data, &b.data, &mut c_par, 4);
+            assert_eq!(c_par, c_tiled.data, "gemm @{n}: 4 workers not bit-identical");
+            println!("gemm_parity_{n}: OK (max err {err:.2e}, 4-worker bit-identical)");
+        }
+        let flops = 2.0 * (n as f64).powi(3);
+        suite.bench_throughput(&format!("gemm_naive_f64_{n}"), 5, flops, || {
+            let mut c = vec![0.0; n * n];
+            gemm::naive_nn(n, n, n, &a.data, &b.data, &mut c);
+            std::hint::black_box(c);
+        });
+        suite.bench_throughput(&format!("gemm_tiled_f64_{n}"), 5, flops, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        // Speedup from the robust means the two benches above collected
+        // (warmup + multiple iterations), not a fresh single-shot timing.
+        if let (Some(naive_s), Some(tiled_s)) = (
+            suite.mean_of(&format!("gemm_naive_f64_{n}")),
+            suite.mean_of(&format!("gemm_tiled_f64_{n}")),
+        ) {
+            suite.record_metric(
+                &format!("gemm_tiled_f64_{n}"),
+                "speedup_vs_naive",
+                naive_s / tiled_s.max(1e-12),
+            );
+        }
+        for workers in [2usize, 4] {
+            suite.bench_throughput(&format!("gemm_tiled_f64_{n}_w{workers}"), 5, flops, || {
+                let mut c = vec![0.0; n * n];
+                gemm::gemm_nn(n, n, n, &a.data, &b.data, &mut c, workers);
+                std::hint::black_box(c);
+            });
+        }
+        let af = a.to_f32();
+        let bf = b.to_f32();
+        suite.bench_throughput(&format!("gemm_tiled_f32_{n}"), 5, flops, || {
+            let mut c = vec![0.0f32; n * n];
+            gemm::gemm_nn(n, n, n, &af, &bf, &mut c, 1);
+            std::hint::black_box(c);
+        });
+    }
     for &n in &[128usize, 256, 384] {
         let a = Matrix::randn(n, n, 1.0, &mut rng);
         let b = Matrix::randn(n, n, 1.0, &mut rng);
@@ -90,6 +153,13 @@ fn main() {
         suite.bench(&format!("rsvd_tall_{}x{}_k{}", 2 * n, n / 2, n / 8), 3, || {
             std::hint::black_box(svd_for_rank(&tall, n / 8, &auto));
         });
+    }
+    // Stable top-level summary (GFLOP/s per shape, speedup vs naive) so the
+    // kernel's perf trajectory is tracked across PRs.  Skipped when a filter
+    // excludes the gemm benches AND in --quick mode (the ci.sh smoke), so a
+    // partial or low-iteration run never clobbers the full numbers.
+    if suite.enabled("gemm") && !suite.quick() {
+        suite.write_summary(std::path::Path::new("BENCH_gemm.json"), "gemm");
     }
     suite.finish();
 }

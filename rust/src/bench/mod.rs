@@ -134,6 +134,15 @@ impl Suite {
         }
     }
 
+    /// Mean seconds of a completed measurement, by name.
+    pub fn mean_of(&self, bench: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .rev()
+            .find(|m| m.name == bench)
+            .map(|m| m.stats.mean)
+    }
+
     /// Attach a named metric to the most recent measurement (or a standalone
     /// record when no timing applies, e.g. accuracy rows of a paper table).
     pub fn record_metric(&mut self, bench: &str, key: &str, value: f64) {
@@ -146,6 +155,39 @@ impl Suite {
                 items: None,
                 extra: vec![(key.to_string(), value)],
             });
+        }
+    }
+
+    /// Write a stable summary of the measurements whose name starts with
+    /// `prefix` to `path` — used by `perf_linalg` to keep a top-level
+    /// `BENCH_gemm.json` (GFLOP/s per shape, speedup vs the naive kernel)
+    /// next to `target/bench-results/`, so the perf trajectory is tracked
+    /// across PRs instead of buried in per-run output.  `items` is
+    /// interpreted as FLOPs per iteration, so `items_per_s` is reported as
+    /// `gflops`.  Call before [`Suite::finish`] (which consumes the suite).
+    pub fn write_summary(&self, path: &std::path::Path, prefix: &str) {
+        let mut arr = Vec::new();
+        for m in self.results.iter().filter(|m| m.name.starts_with(prefix)) {
+            let mut o = Json::obj();
+            o.set("name", m.name.as_str()).set("mean_s", m.stats.mean);
+            if let Some(items) = m.items {
+                if m.stats.mean > 0.0 {
+                    o.set("gflops", items / m.stats.mean / 1e9);
+                }
+            }
+            for (k, v) in &m.extra {
+                o.set(k, *v);
+            }
+            arr.push(o);
+        }
+        let mut doc = Json::obj();
+        doc.set("suite", self.name.as_str())
+            .set("quick", if self.quick { 1.0 } else { 0.0 })
+            .set("results", Json::Arr(arr));
+        if let Err(e) = std::fs::write(path, doc.to_string_pretty()) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("summary written to {}", path.display());
         }
     }
 
@@ -220,6 +262,31 @@ mod tests {
         };
         assert!(suite.enabled("nsvd_decompose"));
         assert!(!suite.enabled("matmul"));
+    }
+
+    #[test]
+    fn write_summary_filters_by_prefix() {
+        let mut suite = Suite {
+            name: "t".into(),
+            filter: None,
+            quick: true,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        suite.bench_throughput("gemm_x", 2, 1e9, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        suite.bench("other", 2, || {});
+        // temp_dir, not target/: the package-root target dir need not exist
+        // (e.g. CARGO_TARGET_DIR pointing elsewhere).
+        let path = std::env::temp_dir().join("nsvd-test-bench-summary.json");
+        suite.write_summary(&path, "gemm");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("gemm_x"));
+        assert!(!body.contains("other"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

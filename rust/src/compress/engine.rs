@@ -26,6 +26,12 @@
 //! The whitener cache is keyed `(whitener kind, tap)` and owned by the
 //! caller, so ratio/α sweeps across jobs still pay zero whitening cost —
 //! the same contract the serial pipeline had, now `Send`-safe via [`Arc`].
+//!
+//! Threading: the engine owns ONE [`ThreadBudget`] and splits it between
+//! the layer fan-out and the parallel GEMM kernel each job's whitening /
+//! SVD math runs on (`outer × inner ≤ total`) — nesting two independent
+//! pools would oversubscribe the machine.  Since the GEMM kernel is
+//! bit-identical for every worker count, the split never affects results.
 
 use crate::calib::collector::TapStats;
 use crate::compress::lowrank::CompressedModel;
@@ -35,7 +41,8 @@ use crate::compress::whiten::{CalibStats, Whitener};
 use crate::linalg::rsvd::SvdPolicy;
 use crate::model::config::ModelConfig;
 use crate::model::weights::{Tensor, Weights};
-use crate::util::threads::{default_workers, parallel_map_dynamic};
+use crate::linalg::gemm;
+use crate::util::threads::{parallel_map_dynamic, ThreadBudget};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -61,13 +68,17 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
-    /// Resolve `workers = 0` to the machine's available parallelism.
+    /// Resolve `workers = 0` to the machine's available parallelism
+    /// (same resolution as [`EngineConfig::thread_budget`]).
     pub fn effective_workers(&self) -> usize {
-        if self.workers == 0 {
-            default_workers()
-        } else {
-            self.workers
-        }
+        self.thread_budget().total()
+    }
+
+    /// The engine's one thread budget, split between the layer fan-out and
+    /// the parallel GEMMs inside each job (see [`ThreadBudget`]) — nesting
+    /// two pools would oversubscribe the machine.
+    pub fn thread_budget(&self) -> ThreadBudget {
+        ThreadBudget::new(self.workers)
     }
 }
 
@@ -101,7 +112,7 @@ impl CompressionEngine {
         spec: &CompressionSpec,
         cache: &mut WhitenerCache,
     ) -> Result<CompressedModel> {
-        let workers = self.config.effective_workers();
+        let budget = self.config.thread_budget();
         let kind = spec.method.whitener_kind().to_string();
 
         // ---- Phase 1: one whitener per distinct tap, in parallel ----
@@ -119,7 +130,12 @@ impl CompressionEngine {
             missing.push((tap, tap_stats));
         }
         let method = spec.method;
-        let built = parallel_map_dynamic(&missing, workers, |_, pair| {
+        // One budget, two levels: `outer` whitener jobs in flight, each
+        // handing `inner` threads to the GEMMs under its eigen/Cholesky
+        // math (the knob is thread-local, so it is set inside the job).
+        let (outer, inner) = budget.split(missing.len());
+        let built = parallel_map_dynamic(&missing, outer, |_, pair| {
+            let _gemm_threads = gemm::scoped_workers(inner);
             Arc::new(method.stage1_whitener(pair.1))
         });
         for ((tap, _), whitener) in missing.into_iter().zip(built) {
@@ -143,7 +159,10 @@ impl CompressionEngine {
         }
         let spec = *spec;
         let svd = &self.config.svd;
-        let results = parallel_map_dynamic(&jobs, workers, |_, job| {
+        // Same split for the layer shards: outer × inner ≤ budget.total().
+        let (outer, inner) = budget.split(jobs.len());
+        let results = parallel_map_dynamic(&jobs, outer, |_, job| {
+            let _gemm_threads = gemm::scoped_workers(inner);
             compress_layer_with_policy(job.tensor, &job.whitener, &spec, &job.plan, svd)
                 .with_context(|| format!("compressing {}", job.name))
         });

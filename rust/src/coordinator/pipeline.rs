@@ -17,7 +17,7 @@ use crate::compress::lowrank::CompressedModel;
 use crate::compress::methods::CompressionSpec;
 use crate::data::batch::Batcher;
 use crate::data::corpus::{Corpus, Registry, DOMAIN_NAMES};
-use crate::eval::perplexity::{evaluate, EvalBackend, PerplexityResult};
+use crate::eval::perplexity::{evaluate, evaluate_with_workers, EvalBackend, PerplexityResult};
 use crate::linalg::rsvd::SvdPolicy;
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
@@ -39,8 +39,16 @@ pub struct PipelineConfig {
     pub use_pjrt: bool,
     pub seed: u64,
     /// Decomposition worker threads (`0` = all cores).  Output is identical
-    /// for every worker count; this only changes wall-clock.
+    /// for every worker count; this only changes wall-clock.  The engine
+    /// splits this ONE budget between its layer fan-out and the parallel
+    /// GEMMs inside each job ([`crate::util::threads::ThreadBudget`]).
     pub workers: usize,
+    /// Evaluation worker threads for the native backend (`0` = all cores):
+    /// independent `TokenBatch`es are scored concurrently, splitting the
+    /// budget with the f32 GEMMs inside each forward pass.  Bit-identical
+    /// for every worker count; ignored on the PJRT path (the client is
+    /// pinned to one thread).
+    pub eval_workers: usize,
     /// Truncated-SVD policy for the decomposition engine.  The default
     /// ([`SvdPolicy::exact`]) reproduces the serial pipeline bit-for-bit;
     /// [`SvdPolicy::auto`] enables the certified randomized fast path.
@@ -57,6 +65,7 @@ impl PipelineConfig {
             use_pjrt: true,
             seed: 0xC0FFEE,
             workers: 0,
+            eval_workers: 1,
             svd: SvdPolicy::exact(),
         }
     }
@@ -225,13 +234,14 @@ impl Pipeline {
             (None, cm) => {
                 for domain in DOMAIN_NAMES {
                     let corpus = self.registry.load(domain, "test")?;
-                    out.push(evaluate(
+                    out.push(evaluate_with_workers(
                         &EvalBackend::Native {
                             cfg: &self.model_cfg,
                             weights: &self.weights,
                             compressed: cm,
                         },
                         &corpus, batch, seq, self.config.eval_windows,
+                        self.config.eval_workers,
                     )?);
                 }
             }

@@ -5,10 +5,12 @@
 //! generic over an [`EvalBackend`] so the SAME scoring loop runs against
 //! the PJRT dense executable, the PJRT low-rank executable (compressed
 //! models), or the pure-native forward — which is how the integration
-//! tests pin PJRT and native to each other.  Results arrive as
+//! tests pin PJRT and native to each other.  The native backend scores
+//! independent batches concurrently ([`perplexity::evaluate_with_workers`],
+//! bit-identical at every worker count).  Results arrive as
 //! [`PerplexityResult`] rows, one per dataset, in the order the paper's
 //! tables print them.
 
 pub mod perplexity;
 
-pub use perplexity::{evaluate_native, EvalBackend, PerplexityResult};
+pub use perplexity::{evaluate, evaluate_native, evaluate_with_workers, EvalBackend, PerplexityResult};

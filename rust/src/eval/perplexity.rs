@@ -9,13 +9,27 @@
 //!   the batch size, which drops at most `batch-1` tail windows — the same
 //!   protocol for every method, so comparisons are exact.
 //! * **native** (fallback + parity oracle): scores any batch shape.
+//!
+//! Batches are independent, so the native backend scores them
+//! **concurrently**: [`evaluate_with_workers`] fans `TokenBatch`es out over
+//! the worker pool and folds the per-batch `(nll, tokens)` pairs in batch
+//! order — the same merge [`PerplexityResult::merge`] performs — so the sum
+//! is bit-identical for every worker count.  One [`ThreadBudget`] is split
+//! between the batch fan-out and the parallel f32 GEMMs inside each forward
+//! pass (no nested-pool oversubscription).  PJRT executables are pinned to
+//! the thread that owns the client (they are not `Send`), so that path
+//! scores batches back-to-back via the evaluators' batched entry points.
+//!
+//! [`ThreadBudget`]: crate::util::threads::ThreadBudget
 
 use crate::compress::lowrank::CompressedModel;
 use crate::data::batch::{Batcher, TokenBatch};
 use crate::data::corpus::Corpus;
+use crate::linalg::gemm;
 use crate::model::config::ModelConfig;
 use crate::model::forward::{self, LinearOverride, NoOverride};
 use crate::model::weights::Weights;
+use crate::util::threads::{parallel_map, ThreadBudget};
 use anyhow::Result;
 
 /// Perplexity outcome for one (model, method, dataset) cell.
@@ -82,7 +96,8 @@ impl<'a> EvalBackend<'a> {
     }
 }
 
-/// Evaluate perplexity of `backend` on a corpus.
+/// Evaluate perplexity of `backend` on a corpus (single-threaded; see
+/// [`evaluate_with_workers`] for the batch-parallel native path).
 ///
 /// `max_windows` bounds eval cost; it is rounded DOWN to a multiple of the
 /// batch size on PJRT backends (identical window set for every method).
@@ -93,16 +108,64 @@ pub fn evaluate(
     seq: usize,
     max_windows: usize,
 ) -> Result<PerplexityResult> {
+    evaluate_with_workers(backend, corpus, batch, seq, max_windows, 1)
+}
+
+/// Evaluate perplexity, scoring independent `TokenBatch`es concurrently.
+///
+/// `workers` is the eval thread budget (`0` = all cores), split between the
+/// batch fan-out and the parallel GEMMs inside each forward pass.  The
+/// result is **bit-identical for every worker count**: each batch's loss is
+/// a pure function, the GEMM kernel is deterministic, and partial sums are
+/// folded in batch order.  PJRT backends ignore `workers` (the client and
+/// executables are not `Send`) and score batches sequentially on the
+/// calling thread.
+pub fn evaluate_with_workers(
+    backend: &EvalBackend,
+    corpus: &Corpus,
+    batch: usize,
+    seq: usize,
+    max_windows: usize,
+    workers: usize,
+) -> Result<PerplexityResult> {
     let batcher = Batcher::new(batch, seq);
     let mut batches = batcher.eval_batches(corpus, max_windows);
     if backend.pjrt_full_batches_only() {
         batches.retain(|tb| tb.valid_rows == tb.batch);
     }
     let mut out = PerplexityResult { dataset: corpus.name.clone(), sum_nll: 0.0, tokens: 0.0 };
-    for tb in &batches {
-        let (nll, count) = backend.loss(tb)?;
-        out.sum_nll += nll;
-        out.tokens += count;
+    match backend {
+        EvalBackend::Native { cfg, weights, compressed } => {
+            // Destructure to `Sync` references before crossing threads (the
+            // enum itself is not `Sync`: the PJRT variants hold Rc-backed
+            // evaluators).
+            let (cfg, weights, compressed) = (*cfg, *weights, *compressed);
+            let budget = ThreadBudget::new(workers); // 0 = all cores
+            let (outer, inner) = budget.split(batches.len());
+            let partials = parallel_map(&batches, outer, |_, tb| {
+                let _gemm_threads = gemm::scoped_workers(inner);
+                let ov: &dyn LinearOverride = match compressed {
+                    Some(c) => c,
+                    None => &NoOverride,
+                };
+                forward::loss(cfg, weights, ov, &tb.tokens, tb.batch, tb.seq, tb.valid_rows)
+            });
+            for r in partials {
+                let (nll, count) = r?;
+                out.sum_nll += nll;
+                out.tokens += count as f64;
+            }
+        }
+        EvalBackend::PjrtDense(e) => {
+            let folded = e.loss_batches(&batches)?;
+            out.sum_nll = folded.sum_nll;
+            out.tokens = folded.count;
+        }
+        EvalBackend::PjrtLowRank(e) => {
+            let folded = e.loss_batches(&batches)?;
+            out.sum_nll = folded.sum_nll;
+            out.tokens = folded.count;
+        }
     }
     Ok(out)
 }
@@ -171,6 +234,19 @@ mod tests {
         let r1 = evaluate_native(&cfg, &w, None, &c, 4, 32, 12).unwrap();
         let r2 = evaluate_native(&cfg, &w, None, &c, 4, 32, 12).unwrap();
         assert_eq!(r1.sum_nll, r2.sum_nll);
+    }
+
+    #[test]
+    fn parallel_eval_is_bit_identical_to_serial() {
+        let (cfg, w) = tiny();
+        let c = corpus(4096);
+        let backend = EvalBackend::Native { cfg: &cfg, weights: &w, compressed: None };
+        let serial = evaluate_with_workers(&backend, &c, 4, 32, 12, 1).unwrap();
+        for workers in [2usize, 4] {
+            let par = evaluate_with_workers(&backend, &c, 4, 32, 12, workers).unwrap();
+            assert_eq!(serial.sum_nll, par.sum_nll, "workers={workers}");
+            assert_eq!(serial.tokens, par.tokens, "workers={workers}");
+        }
     }
 
     #[test]

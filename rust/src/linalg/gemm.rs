@@ -1,0 +1,609 @@
+//! The unified tiled + packed GEMM kernel — every dense matrix product in
+//! the system (f64 whitening/QR/rSVD math and the f32 model forward) runs
+//! through here.
+//!
+//! Design (classic three-level cache blocking, BLIS-style):
+//!
+//! ```text
+//!   for jc in 0..n  step NC        // B column block    → stays in L3
+//!     for pc in 0..k step KC       // shared K panel    → packed B in L2/L3
+//!       pack B[pc..pc+KC, jc..jc+NC] into NR-wide micro-panels
+//!       for ic in 0..m step MC     // A row block       → packed A in L1/L2
+//!         pack A[ic..ic+MC, pc..pc+KC] into MR-tall micro-panels
+//!         for jr, ir:              // MR×NR register microkernel
+//!           C[ir.., jr..] += Apanel · Bpanel
+//! ```
+//!
+//! * **Packing** copies each block into contiguous micro-panels (A: MR-tall,
+//!   k-major; B: NR-wide, k-major) so the microkernel streams both operands
+//!   with unit stride — and because packing is where layout is resolved, the
+//!   same microkernel serves the NN, TN (`Aᵀ·B`), and NT (`A·Bᵀ`) entry
+//!   points with zero transpose materialization.
+//! * **Microkernel** keeps an `MR×NR = 8×4` accumulator block in registers;
+//!   the inner loop is a plain FMA over fixed-size arrays, which LLVM
+//!   auto-vectorizes (no intrinsics, so the same source serves f32 and f64
+//!   via the [`Scalar`] trait).
+//! * **Parallelism** is over rows of C only: B is packed once per (jc, pc)
+//!   block — its contents never depend on the row range — then the rows are
+//!   split into contiguous MR-aligned chunks, one scoped thread each (the
+//!   same `std::thread::scope` substrate as [`crate::util::threads`]), each
+//!   packing only its own A panels.  Each C element is computed by exactly
+//!   one thread in the same k-order, so the result is **bit-identical for
+//!   every worker count** — pinned by the determinism test below and relied
+//!   on by the compression engine's bit-exactness contract.
+//! * **Accumulation order** per C element is ascending-k within each K
+//!   block (into a fresh register accumulator) with blocks folded in
+//!   ascending order — for `k ≤ KC` that is term-for-term the order the
+//!   retired naive loops used (pinned bit-exactly by a test below), and for
+//!   larger k it differs only by the per-block regrouping, far inside every
+//!   caller's tolerance.
+//!
+//! Worker-count plumbing: callers that own a thread budget pass `workers`
+//! explicitly; the [`Matrix`](super::matrix::Matrix) wrappers and the f32
+//! forward read a per-thread knob ([`workers`]/[`scoped_workers`]), which
+//! each worker of an outer parallel section (the compression engine's layer
+//! fan-out, the batched evaluator) sets from its [`ThreadBudget`] split so
+//! that outer × inner never oversubscribes the machine.
+//!
+//! [`ThreadBudget`]: crate::util::threads::ThreadBudget
+
+/// Element type the kernel is generic over (f32 for the model/runtime
+/// domain, f64 for the decomposition domain).
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + PartialEq
+    + PartialOrd
+    + std::fmt::Debug
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+    + 'static
+{
+    const ZERO: Self;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    #[inline]
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+    #[inline]
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+/// Microkernel tile height (rows of C held in registers).
+pub const MR: usize = 8;
+/// Microkernel tile width (columns of C held in registers).
+pub const NR: usize = 4;
+/// Row-block size (packed A panel height); multiple of [`MR`].
+pub const MC: usize = 64;
+/// K-block size (packed panel depth).
+pub const KC: usize = 256;
+/// Column-block size (packed B panel width); multiple of [`NR`].
+pub const NC: usize = 512;
+
+/// Operand layout of a product `C += op(A) · op(B)` (C always m×n row-major).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// `A` m×k, `B` k×n (both row-major).
+    NN,
+    /// `A` stored k×m, used as `Aᵀ` (no transpose materialized).
+    TN,
+    /// `B` stored n×k, used as `Bᵀ` (no transpose materialized).
+    NT,
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread worker knob (what Matrix::matmul* and matmul_raw consult).
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static GEMM_WORKERS: std::cell::Cell<usize> = std::cell::Cell::new(1);
+}
+
+/// Worker threads the wrapper entry points (`Matrix::matmul*`, the f32
+/// forward) use *on the calling thread*.  Defaults to 1; results are
+/// identical for every value, so this is purely a wall-clock knob.  The
+/// knob is thread-local on purpose: each worker of an outer fan-out sets
+/// its own inner share, so concurrent pipelines (and concurrent tests)
+/// never interfere.
+pub fn workers() -> usize {
+    GEMM_WORKERS.with(|c| c.get())
+}
+
+/// Set this thread's GEMM worker count; returns the previous value.
+pub fn set_workers(n: usize) -> usize {
+    GEMM_WORKERS.with(|c| c.replace(n.max(1)))
+}
+
+/// RAII guard restoring the previous per-thread worker count on drop.
+pub struct WorkersGuard {
+    prev: usize,
+}
+
+/// Set this thread's GEMM worker count for the lifetime of the returned
+/// guard.  Outer parallel sections use this to hand their [`ThreadBudget`]
+/// remainder to the GEMMs running underneath them.
+///
+/// [`ThreadBudget`]: crate::util::threads::ThreadBudget
+pub fn scoped_workers(n: usize) -> WorkersGuard {
+    WorkersGuard { prev: set_workers(n) }
+}
+
+impl Drop for WorkersGuard {
+    fn drop(&mut self) {
+        set_workers(self.prev);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points.
+// ---------------------------------------------------------------------------
+
+/// `C += A · B` with `A` m×k and `B` k×n, both row-major.
+pub fn gemm_nn<T: Scalar>(m: usize, k: usize, n: usize, a: &[T], b: &[T], c: &mut [T], workers: usize) {
+    gemm(Layout::NN, m, k, n, a, b, c, workers);
+}
+
+/// `C += Aᵀ · B` with `A` stored k×m and `B` k×n (row-major storage).
+pub fn gemm_tn<T: Scalar>(m: usize, k: usize, n: usize, a: &[T], b: &[T], c: &mut [T], workers: usize) {
+    gemm(Layout::TN, m, k, n, a, b, c, workers);
+}
+
+/// `C += A · Bᵀ` with `A` m×k and `B` stored n×k (row-major storage).
+pub fn gemm_nt<T: Scalar>(m: usize, k: usize, n: usize, a: &[T], b: &[T], c: &mut [T], workers: usize) {
+    gemm(Layout::NT, m, k, n, a, b, c, workers);
+}
+
+/// The generic entry point: `C += op(A)·op(B)` per `layout`, fanning row
+/// blocks of C out over `workers` scoped threads (1 = fully serial).
+pub fn gemm<T: Scalar>(
+    layout: Layout,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    workers: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm: A size mismatch ({layout:?}, m={m} k={k})");
+    assert_eq!(b.len(), k * n, "gemm: B size mismatch ({layout:?}, k={k} n={n})");
+    assert_eq!(c.len(), m * n, "gemm: C size mismatch (m={m} n={n})");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let row_blocks = m.div_ceil(MR);
+    let workers = workers.max(1).min(row_blocks);
+    // Pack buffers sized to the actual problem (capped at one full tile):
+    // small products — rSVD sketches, low-rank factors — shouldn't pay a
+    // full-tile zeroed allocation per call.
+    let kc_cap = KC.min(k);
+    let nc_cap = NC.min(n.div_ceil(NR) * NR);
+    let mut bpack = vec![T::ZERO; kc_cap * nc_cap];
+    if workers <= 1 {
+        let mut apack = vec![T::ZERO; MC.min(m.div_ceil(MR) * MR) * kc_cap];
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                pack_b(layout, b, k, n, pc, kc, jc, nc, &mut bpack);
+                gemm_block(layout, 0, k, n, a, &bpack, &mut apack, c, pc, kc, jc, nc);
+            }
+        }
+        return;
+    }
+    // Parallel path: B is packed ONCE per (jc, pc) block — its contents do
+    // not depend on the row range — then contiguous MR-aligned row chunks of
+    // C fan out over scoped threads, each packing only its own A panels.
+    // Disjoint C slices need no synchronization, and the per-element
+    // accumulation order (ascending k) is independent of the worker count.
+    let rows_per = row_blocks.div_ceil(workers) * MR;
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(layout, b, k, n, pc, kc, jc, nc, &mut bpack);
+            let bref: &[T] = &bpack;
+            std::thread::scope(|scope| {
+                for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                    let row0 = ci * rows_per;
+                    scope.spawn(move || {
+                        let rows = chunk.len() / n;
+                        let mut apack =
+                            vec![T::ZERO; MC.min(rows.div_ceil(MR) * MR) * kc];
+                        gemm_block(
+                            layout, row0, k, n, a, bref, &mut apack, chunk, pc, kc, jc, nc,
+                        );
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Matrix–vector product `y += A·x` (`A` m×k row-major).  Four-way unrolled
+/// dot products; always single-threaded (the shapes this system hits are
+/// memory-bound and too small to amortize a spawn).
+pub fn gemv<T: Scalar>(m: usize, k: usize, a: &[T], x: &[T], y: &mut [T]) {
+    assert_eq!(a.len(), m * k, "gemv: A size mismatch");
+    assert_eq!(x.len(), k, "gemv: x size mismatch");
+    assert_eq!(y.len(), m, "gemv: y size mismatch");
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &a[i * k..(i + 1) * k];
+        let mut acc = [T::ZERO; 4];
+        let mut chunks_a = row.chunks_exact(4);
+        let mut chunks_x = x.chunks_exact(4);
+        for (ca, cx) in (&mut chunks_a).zip(&mut chunks_x) {
+            for l in 0..4 {
+                acc[l] += ca[l] * cx[l];
+            }
+        }
+        let mut tail = T::ZERO;
+        for (av, xv) in chunks_a.remainder().iter().zip(chunks_x.remainder()) {
+            tail += *av * *xv;
+        }
+        *yi += ((acc[0] + acc[1]) + (acc[2] + acc[3])) + tail;
+    }
+}
+
+/// The retired naive kernel (k-panel blocked i-k-j loop), kept as the parity
+/// reference for the property tests and the speedup baseline for
+/// `benches/perf_linalg.rs` / `BENCH_gemm.json`.
+pub fn naive_nn<T: Scalar>(m: usize, k: usize, n: usize, a: &[T], b: &[T], c: &mut [T]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    const KB: usize = 64;
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let av = a_row[kk];
+                let b_row = &b[kk * n..(kk + 1) * n];
+                for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
+                    *cv += av * *bv;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// One (jc, pc) block over a row range of C.
+// ---------------------------------------------------------------------------
+
+/// Process one packed-B block: walk MC sub-blocks of C rows `[row0,
+/// row0 + rows)` (where `rows = c.len() / n`; `c` covers exactly that row
+/// range and `row0` is only needed to index into `a`), packing A panels into
+/// `apack` and running the microkernel against `bpack` (already packed for
+/// `[pc, pc+kc) × [jc, jc+nc)`).
+#[allow(clippy::too_many_arguments)]
+fn gemm_block<T: Scalar>(
+    layout: Layout,
+    row0: usize,
+    k: usize,
+    n: usize,
+    a: &[T],
+    bpack: &[T],
+    apack: &mut [T],
+    c: &mut [T],
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+) {
+    // a's leading dimension: k for row-major m×k (NN/NT); for TN the element
+    // (i, p) of op(A) lives at a[p * m_full + i], and m_full is recovered
+    // from the slice length.
+    let m_full = a.len() / k;
+    let rows = c.len() / n;
+    for ic in (0..rows).step_by(MC) {
+        let mc = MC.min(rows - ic);
+        pack_a(layout, a, m_full, k, row0 + ic, mc, pc, kc, apack);
+        for jr in (0..nc).step_by(NR) {
+            let nr_eff = NR.min(nc - jr);
+            let bmicro = &bpack[(jr / NR) * (kc * NR)..][..kc * NR];
+            for ir in (0..mc).step_by(MR) {
+                let mr_eff = MR.min(mc - ir);
+                let amicro = &apack[(ir / MR) * (kc * MR)..][..kc * MR];
+                let mut acc = [[T::ZERO; NR]; MR];
+                microkernel(amicro, bmicro, &mut acc);
+                for (i, acc_row) in acc.iter().enumerate().take(mr_eff) {
+                    let crow = &mut c[(ic + ir + i) * n + jc + jr..][..nr_eff];
+                    for (cv, av) in crow.iter_mut().zip(acc_row.iter()) {
+                        *cv += *av;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// MR×NR register block over one packed-A / packed-B micro-panel pair
+/// (`ap.len() == kc·MR`, `bp.len() == kc·NR`).  `chunks_exact` + fixed-size
+/// array views make every access provably in-bounds, so LLVM unrolls the
+/// `i`/`j` loops and vectorizes the FMA with no bounds checks.
+#[inline(always)]
+fn microkernel<T: Scalar>(ap: &[T], bp: &[T], acc: &mut [[T; NR]; MR]) {
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let av: &[T; MR] = av.try_into().expect("exact MR chunk");
+        let bv: &[T; NR] = bv.try_into().expect("exact NR chunk");
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let ai = av[i];
+            for (j, cell) in acc_row.iter_mut().enumerate() {
+                *cell += ai * bv[j];
+            }
+        }
+    }
+}
+
+/// Pack `op(A)[ic..ic+mc, pc..pc+kc]` into MR-tall k-major micro-panels,
+/// zero-padding the last panel so the microkernel never branches on height.
+#[allow(clippy::too_many_arguments)]
+fn pack_a<T: Scalar>(
+    layout: Layout,
+    a: &[T],
+    m_full: usize,
+    k: usize,
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    apack: &mut [T],
+) {
+    for ip in 0..mc.div_ceil(MR) {
+        let panel = &mut apack[ip * (kc * MR)..(ip + 1) * (kc * MR)];
+        let rows_here = MR.min(mc - ip * MR);
+        for p in 0..kc {
+            let dst = &mut panel[p * MR..(p + 1) * MR];
+            for (i, d) in dst.iter_mut().enumerate() {
+                *d = if i < rows_here {
+                    let r = ic + ip * MR + i;
+                    match layout {
+                        // op(A)[r, pc+p] for row-major A (NN and NT share it).
+                        Layout::NN | Layout::NT => a[r * k + pc + p],
+                        // op(A) = Aᵀ with A stored k×m: element at [pc+p, r].
+                        Layout::TN => a[(pc + p) * m_full + r],
+                    }
+                } else {
+                    T::ZERO
+                };
+            }
+        }
+    }
+}
+
+/// Pack `op(B)[pc..pc+kc, jc..jc+nc]` into NR-wide k-major micro-panels,
+/// zero-padding the last panel so the microkernel never branches on width.
+#[allow(clippy::too_many_arguments)]
+fn pack_b<T: Scalar>(
+    layout: Layout,
+    b: &[T],
+    k: usize,
+    n: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    bpack: &mut [T],
+) {
+    for jp in 0..nc.div_ceil(NR) {
+        let panel = &mut bpack[jp * (kc * NR)..(jp + 1) * (kc * NR)];
+        let cols_here = NR.min(nc - jp * NR);
+        for p in 0..kc {
+            let dst = &mut panel[p * NR..(p + 1) * NR];
+            for (j, d) in dst.iter_mut().enumerate() {
+                *d = if j < cols_here {
+                    let col = jc + jp * NR + j;
+                    match layout {
+                        // op(B)[pc+p, col] for row-major k×n B (NN and TN).
+                        Layout::NN | Layout::TN => b[(pc + p) * n + col],
+                        // op(B) = Bᵀ with B stored n×k: element at [col, pc+p].
+                        Layout::NT => b[col * k + pc + p],
+                    }
+                } else {
+                    T::ZERO
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    /// Dumb triple-loop reference in the layout's own indexing (independent
+    /// of both the tiled kernel and `naive_nn`).
+    fn reference<T: Scalar>(layout: Layout, m: usize, k: usize, n: usize, a: &[T], b: &[T]) -> Vec<T> {
+        let mut c = vec![T::ZERO; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = T::ZERO;
+                for p in 0..k {
+                    let av = match layout {
+                        Layout::NN | Layout::NT => a[i * k + p],
+                        Layout::TN => a[p * m + i],
+                    };
+                    let bv = match layout {
+                        Layout::NN | Layout::TN => b[p * n + j],
+                        Layout::NT => b[j * k + p],
+                    };
+                    acc += av * bv;
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn randn_vec<T: Scalar>(len: usize, rng: &mut Rng) -> Vec<T> {
+        (0..len).map(|_| T::from_f64(rng.normal())).collect()
+    }
+
+    fn max_abs_diff<T: Scalar>(x: &[T], y: &[T]) -> f64 {
+        x.iter()
+            .zip(y)
+            .map(|(a, b)| (a.to_f64() - b.to_f64()).abs())
+            .fold(0.0, f64::max)
+    }
+
+    fn check_parity<T: Scalar>(tol: f64, cases: usize, label: &str) {
+        check(label, cases, |g| {
+            let mut rng = g.rng.fork(0);
+            // Shape classes: tall, wide, tiny, and non-multiple-of-tile;
+            // dimensions straddle MR/NR/MC boundaries.
+            let m = *g.choose(&[1usize, 2, 3, 7, 8, 9, 17, 65, 70]);
+            let k = *g.choose(&[1usize, 2, 5, 16, 33, 64, 100]);
+            let n = *g.choose(&[1usize, 2, 3, 4, 5, 11, 12, 66]);
+            let layout = *g.choose(&[Layout::NN, Layout::TN, Layout::NT]);
+            let a: Vec<T> = randn_vec(m * k, &mut rng);
+            let b: Vec<T> = randn_vec(k * n, &mut rng);
+            let want = reference(layout, m, k, n, &a, &b);
+            for workers in [1usize, 4] {
+                let mut got = vec![T::ZERO; m * n];
+                gemm(layout, m, k, n, &a, &b, &mut got, workers);
+                let err = max_abs_diff(&got, &want);
+                // Scale the tolerance with the accumulation length.
+                if err > tol * (1.0 + k as f64) {
+                    return Err(format!(
+                        "{layout:?} {m}x{k}x{n} w={workers}: err {err:e}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_matches_reference_f64() {
+        check_parity::<f64>(1e-12, 40, "tiled gemm == reference (f64)");
+    }
+
+    #[test]
+    fn tiled_matches_reference_f32() {
+        check_parity::<f32>(1e-4, 40, "tiled gemm == reference (f32)");
+    }
+
+    #[test]
+    fn tiled_matches_naive_bitwise() {
+        // For k ≤ KC (single K block) the tiled kernel performs the exact
+        // same ascending-k addition sequence per element as the retired
+        // naive loop ⇒ bit-identical output, which is what let the callers
+        // rewire without moving any test tolerance.
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(17usize, 33usize, 12usize), (64, 64, 64), (70, 100, 66)] {
+            let a: Vec<f64> = randn_vec(m * k, &mut rng);
+            let b: Vec<f64> = randn_vec(k * n, &mut rng);
+            let mut c_naive = vec![0.0; m * n];
+            naive_nn(m, k, n, &a, &b, &mut c_naive);
+            let mut c_tiled = vec![0.0; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c_tiled, 1);
+            assert_eq!(c_naive, c_tiled, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (130usize, 90usize, 75usize);
+        let a: Vec<f64> = randn_vec(m * k, &mut rng);
+        let b: Vec<f64> = randn_vec(k * n, &mut rng);
+        let mut base = vec![0.0; m * n];
+        gemm_nn(m, k, n, &a, &b, &mut base, 1);
+        for workers in [2usize, 3, 4, 9] {
+            let mut c = vec![0.0; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c, workers);
+            assert_eq!(base, c, "workers={workers} must be bit-identical");
+        }
+        let af: Vec<f32> = randn_vec(m * k, &mut rng);
+        let bf: Vec<f32> = randn_vec(k * n, &mut rng);
+        let mut base_f = vec![0.0f32; m * n];
+        gemm_nn(m, k, n, &af, &bf, &mut base_f, 1);
+        let mut c_f = vec![0.0f32; m * n];
+        gemm_nn(m, k, n, &af, &bf, &mut c_f, 4);
+        assert_eq!(base_f, c_f);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        // k = 0: C untouched (the product is an empty sum).
+        let mut c = vec![1.0f64; 6];
+        gemm_nn(2, 0, 3, &[], &[], &mut c, 4);
+        assert_eq!(c, vec![1.0; 6]);
+        // m = 0 / n = 0: nothing to do, must not panic.
+        let mut empty: Vec<f64> = Vec::new();
+        gemm_nn(0, 5, 3, &[], &vec![0.0; 15], &mut empty, 2);
+        gemm_nn(3, 5, 0, &vec![0.0; 15], &[], &mut empty, 2);
+        // 1×1×1.
+        let mut c1 = vec![0.0f64];
+        gemm_nn(1, 1, 1, &[3.0], &[4.0], &mut c1, 4);
+        assert_eq!(c1, vec![12.0]);
+    }
+
+    #[test]
+    fn accumulates_into_existing_c() {
+        // gemm is C += A·B, which the nested two-stage apply relies on.
+        let mut c = vec![10.0f64; 4];
+        gemm_nn(2, 2, 2, &[1.0, 0.0, 0.0, 1.0], &[1.0, 2.0, 3.0, 4.0], &mut c, 1);
+        assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn gemv_matches_gemm_column() {
+        check("gemv == gemm with n=1", 20, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(1, 40);
+            let k = g.usize_in(1, 40);
+            let a: Vec<f64> = randn_vec(m * k, &mut rng);
+            let x: Vec<f64> = randn_vec(k, &mut rng);
+            let mut y = vec![0.0; m];
+            gemv(m, k, &a, &x, &mut y);
+            let mut want = vec![0.0; m];
+            gemm_nn(m, k, 1, &a, &x, &mut want, 1);
+            let err = max_abs_diff(&y, &want);
+            if err > 1e-12 * (1.0 + k as f64) {
+                return Err(format!("{m}x{k}: err {err:e}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scoped_workers_sets_and_restores() {
+        let before = workers();
+        {
+            let _g = scoped_workers(before + 3);
+            assert_eq!(workers(), before + 3);
+        }
+        assert_eq!(workers(), before);
+        // 0 clamps to 1 (a GEMM always has at least the calling thread).
+        let _g = scoped_workers(0);
+        assert_eq!(workers(), 1);
+    }
+}

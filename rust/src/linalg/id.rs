@@ -46,11 +46,13 @@ pub fn interpolative(a: &Matrix, k: usize) -> ColumnId {
     // R11: k×k upper-triangular; R12: k×(n-k).
     let r11 = r.submatrix(0, k, 0, k);
     let r12 = r.submatrix(0, k, k, n);
-    // Solve R11 · X = R12 by back substitution, column by column.
+    // Solve R11 · X = R12 by back substitution, column by column (two
+    // reusable buffers instead of two fresh Vecs per column).
     let mut x = Matrix::zeros(k, n - k);
+    let mut b = vec![0.0; k];
+    let mut col = vec![0.0; k];
     for j in 0..(n - k) {
-        let b = r12.col(j);
-        let mut col = vec![0.0; k];
+        r12.col_into(j, &mut b);
         for i in (0..k).rev() {
             let mut s = b[i];
             for l in (i + 1)..k {

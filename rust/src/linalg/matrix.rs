@@ -1,5 +1,7 @@
-//! Row-major dense f64 matrix with cache-blocked multiplication.
+//! Row-major dense f64 matrix; all products are thin wrappers over the
+//! unified tiled+packed kernel in [`super::gemm`].
 
+use super::gemm;
 use crate::util::rng::Rng;
 use std::fmt;
 use std::ops::{Add, Index, IndexMut, Mul, Sub};
@@ -95,8 +97,29 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Iterate column `j` without allocating (strided walk of the row-major
+    /// buffer) — the inner-loop alternative to [`Matrix::col`].
+    #[inline]
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f64> + '_ {
+        debug_assert!(j < self.cols);
+        self.data
+            .get(j..)
+            .unwrap_or(&[])
+            .iter()
+            .step_by(self.cols.max(1))
+            .copied()
+    }
+
+    /// Copy column `j` into `out` (`out.len() == rows`), no allocation.
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.rows);
+        for (o, v) in out.iter_mut().zip(self.col_iter(j)) {
+            *o = v;
+        }
+    }
+
     pub fn col(&self, j: usize) -> Vec<f64> {
-        (0..self.rows).map(|i| self[(i, j)]).collect()
+        self.col_iter(j).collect()
     }
 
     pub fn set_col(&mut self, j: usize, v: &[f64]) {
@@ -135,9 +158,10 @@ impl Matrix {
     /// Select columns by index.
     pub fn select_cols(&self, idx: &[usize]) -> Matrix {
         let mut m = Matrix::zeros(self.rows, idx.len());
+        let w = idx.len();
         for (jj, &j) in idx.iter().enumerate() {
-            for i in 0..self.rows {
-                m[(i, jj)] = self[(i, j)];
+            for (i, v) in self.col_iter(j).enumerate() {
+                m.data[i * w + jj] = v;
             }
         }
         m
@@ -209,8 +233,9 @@ impl Matrix {
             .sqrt()
     }
 
-    /// `self @ other` with cache blocking (k-panel inner loop, row-major
-    /// friendly: C[i,:] += A[i,k] * B[k,:]).
+    /// `self @ other` through the tiled+packed kernel ([`super::gemm`]),
+    /// parallel over row blocks when the calling thread's
+    /// [`gemm::workers`] share is > 1 (bit-identical either way).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(
             self.cols, other.rows,
@@ -219,81 +244,36 @@ impl Matrix {
         );
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut c = Matrix::zeros(m, n);
-        const KB: usize = 64;
-        for k0 in (0..k).step_by(KB) {
-            let k1 = (k0 + KB).min(k);
-            for i in 0..m {
-                let a_row = self.row(i);
-                let c_row = c.row_mut(i);
-                for kk in k0..k1 {
-                    let a = a_row[kk];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let b_row = other.row(kk);
-                    for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
-                        *cv += a * bv;
-                    }
-                }
-            }
-        }
+        gemm::gemm_nn(m, k, n, &self.data, &other.data, &mut c.data, gemm::workers());
         c
     }
 
-    /// `selfᵀ @ other` without materializing the transpose.
+    /// `selfᵀ @ other` without materializing the transpose (packing reads
+    /// the transposed layout directly).
     pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
         let (m, k, n) = (self.cols, self.rows, other.cols);
         let mut c = Matrix::zeros(m, n);
-        for kk in 0..k {
-            let a_row = self.row(kk);
-            let b_row = other.row(kk);
-            for i in 0..m {
-                let a = a_row[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let c_row = c.row_mut(i);
-                for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
-                    *cv += a * bv;
-                }
-            }
-        }
+        gemm::gemm_tn(m, k, n, &self.data, &other.data, &mut c.data, gemm::workers());
         c
     }
 
-    /// `self @ otherᵀ` without materializing the transpose (dot-product form).
+    /// `self @ otherᵀ` without materializing the transpose (packing reads
+    /// the transposed layout directly).
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
-        let (m, n) = (self.rows, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut c = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = self.row(i);
-            let c_row = c.row_mut(i);
-            for j in 0..n {
-                let b_row = other.row(j);
-                let mut acc = 0.0;
-                for (av, bv) in a_row.iter().zip(b_row.iter()) {
-                    acc += av * bv;
-                }
-                c_row[j] = acc;
-            }
-        }
+        gemm::gemm_nt(m, k, n, &self.data, &other.data, &mut c.data, gemm::workers());
         c
     }
 
-    /// Matrix-vector product.
+    /// Matrix-vector product (kernel's unrolled `gemv`).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|i| {
-                self.row(i)
-                    .iter()
-                    .zip(x.iter())
-                    .map(|(a, b)| a * b)
-                    .sum()
-            })
-            .collect()
+        let mut y = vec![0.0; self.rows];
+        gemm::gemv(self.rows, self.cols, &self.data, x, &mut y);
+        y
     }
 
     /// Symmetrize in place: `(M + Mᵀ)/2` (used to de-noise Gram matrices).

@@ -6,7 +6,13 @@
 //! rank-revealing (column-pivoted) QR for the interpolative decomposition.
 //! No BLAS/LAPACK binding is available offline, so everything lives here:
 //!
-//! * [`matrix`] — row-major [`Matrix`] with blocked matmul.
+//! * [`gemm`]   — the unified tiled+packed GEMM kernel (MC/KC/NC cache
+//!   blocking, MR×NR register microkernel, A/B panel packing), generic over
+//!   f32/f64 via [`gemm::Scalar`], row-parallel over scoped threads.  Every
+//!   product below — and the f32 model forward — runs through it.
+//! * [`matrix`] — row-major [`Matrix`]; its `matmul`/`matmul_tn`/
+//!   `matmul_nt`/`matvec` are thin wrappers over the kernel's NN/TN/NT/gemv
+//!   entry points.
 //! * [`qr`] — Householder QR, thin QR, LQ, and column-pivoted QR.
 //! * [`chol`] — Cholesky factorization with PSD-safe ridge handling.
 //! * [`eig`] — cyclic Jacobi symmetric eigendecomposition.
@@ -22,6 +28,7 @@
 
 pub mod chol;
 pub mod eig;
+pub mod gemm;
 pub mod id;
 pub mod matrix;
 pub mod qr;
@@ -31,6 +38,7 @@ pub mod svd;
 
 pub use chol::cholesky;
 pub use eig::sym_eig;
+pub use gemm::Scalar;
 pub use id::interpolative;
 pub use matrix::Matrix;
 pub use qr::{lq, qr_thin};

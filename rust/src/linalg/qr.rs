@@ -8,9 +8,12 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
     let (m, n) = (a.rows, a.cols);
     let r = m.min(n);
     let mut work = a.clone(); // becomes R in its upper triangle
-    // Store Householder vectors v_k in the lower triangle (and a side vec for
-    // the implicit leading 1).
-    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(r);
+    // Householder vectors live in one flat arena (stride m; reflector k uses
+    // the first m-k entries) with their squared norms cached — the old
+    // per-column `Vec` allocations were measurable in the decomposition
+    // inner loops that call QR per sketch / per sweep.
+    let mut varena = vec![0.0; r * m];
+    let mut vnorm2s = vec![0.0; r];
     for k in 0..r {
         // Build the Householder vector for column k below the diagonal.
         let mut norm2 = 0.0;
@@ -19,22 +22,25 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
             norm2 += x * x;
         }
         let norm = norm2.sqrt();
-        let mut v = vec![0.0; m - k];
         if norm <= f64::MIN_POSITIVE {
-            vs.push(v); // zero column: identity reflector
-            continue;
+            continue; // zero column: identity reflector (arena stays zero)
         }
         let alpha = if work[(k, k)] >= 0.0 { -norm } else { norm };
-        v[0] = work[(k, k)] - alpha;
-        for i in (k + 1)..m {
-            v[i - k] = work[(i, k)];
-        }
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        let vnorm2 = {
+            let v = &mut varena[k * m..k * m + (m - k)];
+            v[0] = work[(k, k)] - alpha;
+            for i in (k + 1)..m {
+                v[i - k] = work[(i, k)];
+            }
+            v.iter().map(|x| x * x).sum::<f64>()
+        };
         if vnorm2 <= f64::MIN_POSITIVE {
-            vs.push(vec![0.0; m - k]);
+            varena[k * m..k * m + (m - k)].iter_mut().for_each(|x| *x = 0.0);
             continue;
         }
+        vnorm2s[k] = vnorm2;
         // Apply H = I - 2 v vᵀ / (vᵀv) to work[k.., k..].
+        let v = &varena[k * m..k * m + (m - k)];
         for j in k..n {
             let mut dot = 0.0;
             for i in k..m {
@@ -45,7 +51,6 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
                 work[(i, j)] -= beta * v[i - k];
             }
         }
-        vs.push(v);
     }
     // R: upper triangle of work, first r rows.
     let mut rmat = Matrix::zeros(r, n);
@@ -60,11 +65,11 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
         q[(i, i)] = 1.0;
     }
     for k in (0..r).rev() {
-        let v = &vs[k];
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        let vnorm2 = vnorm2s[k];
         if vnorm2 <= f64::MIN_POSITIVE {
             continue;
         }
+        let v = &varena[k * m..k * m + (m - k)];
         for j in 0..r {
             let mut dot = 0.0;
             for i in k..m {
@@ -97,7 +102,9 @@ pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
     let mut colnorm2: Vec<f64> = (0..n)
         .map(|j| (0..m).map(|i| work[(i, j)] * work[(i, j)]).sum())
         .collect();
-    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(r);
+    // Same flat Householder arena as `qr_thin` (no per-column Vec allocs).
+    let mut varena = vec![0.0; r * m];
+    let mut vnorm2s = vec![0.0; r];
     for k in 0..r {
         // Pivot: bring the column with largest remaining norm to position k.
         let (jmax, _) = colnorm2
@@ -120,15 +127,19 @@ pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
             norm2 += work[(i, k)] * work[(i, k)];
         }
         let norm = norm2.sqrt();
-        let mut v = vec![0.0; m - k];
         if norm > f64::MIN_POSITIVE {
             let alpha = if work[(k, k)] >= 0.0 { -norm } else { norm };
-            v[0] = work[(k, k)] - alpha;
-            for i in (k + 1)..m {
-                v[i - k] = work[(i, k)];
-            }
-            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            let vnorm2 = {
+                let v = &mut varena[k * m..k * m + (m - k)];
+                v[0] = work[(k, k)] - alpha;
+                for i in (k + 1)..m {
+                    v[i - k] = work[(i, k)];
+                }
+                v.iter().map(|x| x * x).sum::<f64>()
+            };
+            vnorm2s[k] = vnorm2;
             if vnorm2 > f64::MIN_POSITIVE {
+                let v = &varena[k * m..k * m + (m - k)];
                 for j in k..n {
                     let mut dot = 0.0;
                     for i in k..m {
@@ -141,7 +152,6 @@ pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
                 }
             }
         }
-        vs.push(v);
         // Downdate remaining column norms.
         for j in (k + 1)..n {
             let x = work[(k, j)];
@@ -160,11 +170,11 @@ pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
         q[(i, i)] = 1.0;
     }
     for k in (0..r).rev() {
-        let v = &vs[k];
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        let vnorm2 = vnorm2s[k];
         if vnorm2 <= f64::MIN_POSITIVE {
             continue;
         }
+        let v = &varena[k * m..k * m + (m - k)];
         for j in 0..r {
             let mut dot = 0.0;
             for i in k..m {

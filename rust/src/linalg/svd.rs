@@ -91,8 +91,12 @@ pub fn svd_thin(a: &Matrix) -> Svd {
 fn svd_tall(a: &Matrix) -> Svd {
     let (m, n) = (a.rows, a.cols);
     // Work on columns of W = A; accumulate V as the product of rotations.
-    // Column-major working storage for cache-friendly column ops.
-    let mut w: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    // One flat column-major buffer (column j at `w[j*m..(j+1)*m]`) instead
+    // of n separate Vecs: cache-friendly column ops, zero per-column allocs.
+    let mut w = vec![0.0; m * n];
+    for j in 0..n {
+        a.col_into(j, &mut w[j * m..(j + 1) * m]);
+    }
     let mut v = Matrix::identity(n);
     // Convergence threshold: 1e-12 relative off-diagonal mass gives ~1e-12
     // reconstruction error — far below the f32 cast applied to the factors —
@@ -107,10 +111,14 @@ fn svd_tall(a: &Matrix) -> Svd {
                 let mut app = 0.0;
                 let mut aqq = 0.0;
                 let mut apq = 0.0;
-                for i in 0..m {
-                    app += w[p][i] * w[p][i];
-                    aqq += w[q][i] * w[q][i];
-                    apq += w[p][i] * w[q][i];
+                {
+                    let wp = &w[p * m..(p + 1) * m];
+                    let wq = &w[q * m..(q + 1) * m];
+                    for (xp, xq) in wp.iter().zip(wq.iter()) {
+                        app += xp * xp;
+                        aqq += xq * xq;
+                        apq += xp * xq;
+                    }
                 }
                 if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
                     continue;
@@ -121,11 +129,17 @@ fn svd_tall(a: &Matrix) -> Svd {
                 let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
                 let c = 1.0 / (1.0 + t * t).sqrt();
                 let s = c * t;
-                for i in 0..m {
-                    let wp = w[p][i];
-                    let wq = w[q][i];
-                    w[p][i] = c * wp - s * wq;
-                    w[q][i] = s * wp + c * wq;
+                {
+                    // p < q, so split at q's start gives disjoint column views.
+                    let (left, right) = w.split_at_mut(q * m);
+                    let wp = &mut left[p * m..(p + 1) * m];
+                    let wq = &mut right[..m];
+                    for (xp, xq) in wp.iter_mut().zip(wq.iter_mut()) {
+                        let a_ = *xp;
+                        let b_ = *xq;
+                        *xp = c * a_ - s * b_;
+                        *xq = s * a_ + c * b_;
+                    }
                 }
                 for i in 0..n {
                     let vp = v[(i, p)];
@@ -141,7 +155,7 @@ fn svd_tall(a: &Matrix) -> Svd {
     }
     // Singular values = column norms; U = normalized columns.
     let mut s: Vec<f64> = (0..n)
-        .map(|j| w[j].iter().map(|x| x * x).sum::<f64>().sqrt())
+        .map(|j| w[j * m..(j + 1) * m].iter().map(|x| x * x).sum::<f64>().sqrt())
         .collect();
     // Sort descending.
     let mut order: Vec<usize> = (0..n).collect();
@@ -152,8 +166,9 @@ fn svd_tall(a: &Matrix) -> Svd {
     for (jj, &j) in order.iter().enumerate() {
         s_sorted[jj] = s[j];
         let norm = if s[j] > 1e-300 { s[j] } else { 1.0 };
-        for i in 0..m {
-            u[(i, jj)] = w[j][i] / norm;
+        let wj = &w[j * m..(j + 1) * m];
+        for (i, &x) in wj.iter().enumerate() {
+            u[(i, jj)] = x / norm;
         }
         for i in 0..n {
             v_sorted[(i, jj)] = v[(i, j)];

@@ -54,6 +54,7 @@ fn build_cli() -> Cli {
                 .flag("alpha", "k1 share for nested methods", Some("0.95"))
                 .flag("windows", "eval windows per dataset", Some("64"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
+                .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
                 .switch("native", "use the native forward instead of PJRT"),
@@ -64,6 +65,7 @@ fn build_cli() -> Cli {
                 .flag("windows", "eval windows per dataset", Some("64"))
                 .flag("ratios", "ratios for table 1", Some("0.1,0.2,0.3,0.4,0.5"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
+                .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
                 .switch("native", "use the native forward instead of PJRT"),
@@ -83,6 +85,7 @@ fn build_cli() -> Cli {
                 .flag("rate", "request rate (rps, 0 = as fast as possible)", Some("0"))
                 .flag("max-wait-ms", "batcher max wait", Some("2"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
+                .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02")),
         )
@@ -95,6 +98,7 @@ fn build_cli() -> Cli {
                 .flag("alpha", "k1 share", Some("0.95"))
                 .flag("windows", "eval windows per dataset", Some("32"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
+                .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
                 .switch("native", "use the native forward instead of PJRT"),
@@ -109,6 +113,11 @@ fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> 
     if args.get("workers").is_some() {
         cfg.workers = args.get_workers("workers").ok_or_else(|| {
             anyhow::anyhow!("--workers expects a positive integer or 'auto'")
+        })?;
+    }
+    if args.get("eval-workers").is_some() {
+        cfg.eval_workers = args.get_workers("eval-workers").ok_or_else(|| {
+            anyhow::anyhow!("--eval-workers expects a positive integer or 'auto'")
         })?;
     }
     if args.switch("rsvd") {

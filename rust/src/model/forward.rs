@@ -27,7 +27,7 @@ impl LinearOverride for NoOverride {
 /// Observes tap activations (native calibration fallback + similarity).
 pub type TapSink<'a> = dyn FnMut(&str, &[f32], usize, usize) + 'a;
 
-/// f32 matmul: x [rows, k] @ w [k, n] → [rows, n], k-panel blocked.
+/// f32 matmul: x [rows, k] @ w [k, n] → [rows, n], through the tiled kernel.
 pub fn matmul_f32(x: &[f32], rows: usize, k: usize, w: &Tensor) -> Vec<f32> {
     assert_eq!(w.dims.len(), 2);
     assert_eq!(w.dims[0], k, "matmul: x cols {} vs w rows {}", k, w.dims[0]);
@@ -35,29 +35,17 @@ pub fn matmul_f32(x: &[f32], rows: usize, k: usize, w: &Tensor) -> Vec<f32> {
     matmul_raw(x, rows, k, &w.data, n)
 }
 
-/// f32 matmul over raw slices: x [rows, k] @ w [k, n].
+/// f32 matmul over raw slices: x [rows, k] @ w [k, n] — the f32
+/// instantiation of the unified tiled+packed kernel
+/// ([`crate::linalg::gemm`]), row-parallel when the calling thread's
+/// [`gemm::workers`](crate::linalg::gemm::workers) share is > 1 (set by the
+/// batched evaluator's `ThreadBudget` split; bit-identical either way).
 pub fn matmul_raw(x: &[f32], rows: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+    use crate::linalg::gemm;
     debug_assert_eq!(x.len(), rows * k);
     debug_assert_eq!(w.len(), k * n);
     let mut out = vec![0.0f32; rows * n];
-    const KB: usize = 64;
-    for k0 in (0..k).step_by(KB) {
-        let k1 = (k0 + KB).min(k);
-        for i in 0..rows {
-            let x_row = &x[i * k..(i + 1) * k];
-            let o_row = &mut out[i * n..(i + 1) * n];
-            for kk in k0..k1 {
-                let a = x_row[kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let w_row = &w[kk * n..(kk + 1) * n];
-                for (o, wv) in o_row.iter_mut().zip(w_row.iter()) {
-                    *o += a * wv;
-                }
-            }
-        }
-    }
+    gemm::gemm_nn(rows, k, n, x, w, &mut out, gemm::workers());
     out
 }
 

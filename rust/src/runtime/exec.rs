@@ -150,6 +150,23 @@ pub struct LossOutput {
     pub count: f64,
 }
 
+/// Fold per-batch losses in batch order (the same merge the parallel native
+/// path performs, so the two backends stay interchangeable in
+/// `eval::perplexity`).  One implementation for both evaluators.
+fn fold_losses(
+    tbs: &[TokenBatch],
+    mut loss: impl FnMut(&TokenBatch) -> Result<LossOutput>,
+) -> Result<LossOutput> {
+    let mut folded = LossOutput::default();
+    for tb in tbs {
+        debug_assert_eq!(tb.valid_rows, tb.batch);
+        let out = loss(tb)?;
+        folded.sum_nll += out.sum_nll;
+        folded.count += out.count;
+    }
+    Ok(folded)
+}
+
 fn run_loss(
     client: &xla::PjRtClient,
     exe: &xla::PjRtLoadedExecutable,
@@ -205,6 +222,13 @@ impl DenseEvaluator {
         let (out, _) = run_loss(&self.client, &self.exe, &self.meta, &self.wbufs, tb)?;
         Ok(out)
     }
+
+    /// Score a run of batches and fold their loss outputs.  PJRT pins the
+    /// client + executable to the owning thread (neither is `Send`), so
+    /// the batches execute back-to-back here.
+    pub fn loss_batches(&self, tbs: &[TokenBatch]) -> Result<LossOutput> {
+        fold_losses(tbs, |tb| self.loss(tb))
+    }
 }
 
 /// Gram-collection runner: accumulates TapStats over calibration batches.
@@ -254,6 +278,11 @@ impl LowRankEvaluator {
     pub fn loss(&self, tb: &TokenBatch) -> Result<LossOutput> {
         let (out, _) = run_loss(&self.client, &self.exe, &self.meta, &self.bufs, tb)?;
         Ok(out)
+    }
+
+    /// Batched scoring; see [`DenseEvaluator::loss_batches`].
+    pub fn loss_batches(&self, tbs: &[TokenBatch]) -> Result<LossOutput> {
+        fold_losses(tbs, |tb| self.loss(tb))
     }
 }
 

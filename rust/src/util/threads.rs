@@ -9,6 +9,64 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// One global thread budget shared between an outer task fan-out and the
+/// parallel GEMMs each task runs underneath it.
+///
+/// Two layers of this system are data-parallel at once: the compression
+/// engine fans layer jobs out over workers, and every job's whitening /
+/// decomposition math calls the parallel GEMM kernel
+/// ([`crate::linalg::gemm`]); likewise the batched evaluator fans
+/// `TokenBatch`es out while each forward pass runs parallel f32 GEMMs.
+/// Nesting two independent pools would oversubscribe the machine
+/// (`outer × gemm` threads); instead both levels split ONE budget:
+///
+/// ```
+/// use nsvd::util::threads::ThreadBudget;
+///
+/// let budget = ThreadBudget::new(8);
+/// let (outer, inner) = budget.split(3); // 3 jobs on 8 threads
+/// assert_eq!((outer, inner), (3, 2));   // 3 job workers × 2 GEMM threads ≤ 8
+/// ```
+///
+/// `outer × inner ≤ total` always holds, and every split leaves at least
+/// one thread for each level, so a budget of 1 degrades to fully serial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ThreadBudget {
+    total: usize,
+}
+
+impl ThreadBudget {
+    /// A budget of `total` threads; `0` means "all cores"
+    /// ([`default_workers`]).
+    pub fn new(total: usize) -> ThreadBudget {
+        ThreadBudget { total: if total == 0 { default_workers() } else { total } }
+    }
+
+    /// Total threads in the budget (≥ 1).
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Workers for an outer fan-out over `jobs` items (never more workers
+    /// than items).
+    pub fn outer(&self, jobs: usize) -> usize {
+        self.total.min(jobs.max(1))
+    }
+
+    /// Threads left for each nested parallel section when the outer level
+    /// uses `outer_workers`.
+    pub fn inner(&self, outer_workers: usize) -> usize {
+        (self.total / outer_workers.max(1)).max(1)
+    }
+
+    /// The `(outer, inner)` split for a fan-out over `jobs` items, with
+    /// `outer × inner ≤ total`.
+    pub fn split(&self, jobs: usize) -> (usize, usize) {
+        let outer = self.outer(jobs);
+        (outer, self.inner(outer))
+    }
+}
+
 /// Apply `f(index, &mut item)` to every element, splitting the slice across
 /// `workers` scoped threads.  Runs inline when `workers <= 1` or the slice is
 /// tiny (spawn cost would dominate).
@@ -164,6 +222,24 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
+
+    #[test]
+    fn thread_budget_split_never_oversubscribes() {
+        for total in 1..=9usize {
+            let budget = ThreadBudget::new(total);
+            assert_eq!(budget.total(), total);
+            for jobs in 0..=12usize {
+                let (outer, inner) = budget.split(jobs);
+                assert!(outer >= 1 && inner >= 1);
+                assert!(outer * inner <= total.max(1), "total={total} jobs={jobs}");
+                assert!(outer <= jobs.max(1));
+            }
+        }
+        // 0 = all cores.
+        assert_eq!(ThreadBudget::new(0).total(), default_workers());
+        // Serial budget degrades to (1, 1).
+        assert_eq!(ThreadBudget::new(1).split(64), (1, 1));
+    }
 
     #[test]
     fn parallel_for_each_touches_everything() {
