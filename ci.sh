@@ -14,6 +14,16 @@
 #                                     --quick mode assert tiled == naive
 #                                     and 4-worker bit-identity, so kernel
 #                                     regressions fail fast
+#   4b. SYRK + QR parity smokes     — perf_linalg's `syrk` benches assert
+#                                     the packed SYRK upper triangle is
+#                                     bit-identical to gemm_tn at workers
+#                                     {1,4}; `qr_parity` asserts blocked
+#                                     compact-WY QR == the retired
+#                                     unblocked path (Q/R to rounding,
+#                                     pivots exactly)
+#   4c. tournament determinism      — the eig/svd tournament-ordering
+#                                     tests (bit-identity across worker
+#                                     counts incl. workers=4) run by name
 #   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
@@ -46,6 +56,15 @@ cargo bench --no-run
 
 step "GEMM parity smoke (perf_linalg gemm --quick)"
 cargo bench --bench perf_linalg -- gemm --quick
+
+step "SYRK parity smoke (perf_linalg syrk --quick)"
+cargo bench --bench perf_linalg -- syrk --quick
+
+step "QR parity smoke (perf_linalg qr_parity --quick)"
+cargo bench --bench perf_linalg -- qr_parity --quick
+
+step "eig/svd tournament determinism (workers=4)"
+cargo test -q tournament
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

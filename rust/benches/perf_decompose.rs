@@ -1,6 +1,9 @@
 //! Perf: compress_layer throughput per method on a llama-t-shaped weight,
-//! whole-model decomposition serial vs the sharded engine, and the
-//! exact-vs-randomized SVD policy at the model level.
+//! whitener construction wall-clock, whole-model decomposition serial vs
+//! the sharded engine, and the exact-vs-randomized SVD policy at the model
+//! level — summarized into the top-level `BENCH_decompose.json` (same
+//! convention as `BENCH_gemm.json`) so the decomposition path's perf
+//! trajectory is visible per PR.
 //!
 //! The whole-model section also verifies (and prints) that the sharded
 //! exact path reproduces the serial loop's factors bit-for-bit.
@@ -13,7 +16,7 @@ use nsvd::compress::engine::{
 use nsvd::compress::lowrank::CompressedModel;
 use nsvd::compress::methods::{compress_layer, CompressionSpec, Method};
 use nsvd::compress::ranks;
-use nsvd::compress::whiten::CalibStats;
+use nsvd::compress::whiten::{CalibStats, Whitener};
 use nsvd::linalg::matrix::Matrix;
 use nsvd::linalg::rsvd::SvdPolicy;
 use nsvd::model::config::ModelConfig;
@@ -24,7 +27,7 @@ use nsvd::util::threads::default_workers;
 fn stats(n: usize, rng: &mut Rng) -> CalibStats {
     let x = Matrix::randn(4 * n, n, 1.0, rng);
     let mut s = CalibStats::new(n);
-    s.gram = x.matmul_tn(&x);
+    s.gram = x.gram(); // XᵀX through the packed SYRK kernel
     s.abs_sum = (0..n).map(|j| (0..4 * n).map(|i| x[(i, j)].abs()).sum()).collect();
     s.rows = 4 * n;
     s
@@ -79,6 +82,30 @@ fn max_factor_diff(a: &CompressedModel, b: &CompressedModel) -> f32 {
 fn main() {
     let mut suite = Suite::from_args("perf_decompose");
     let mut rng = Rng::new(2);
+
+    // ---- Gram accumulation + whitener construction wall-clock ----
+    // The calibration fan-in (SYRK-buffered accumulate) and the stage-1
+    // whiteners (Cholesky / eigendecomposition of the Gram) are the
+    // decomposition pipeline's setup cost; tracked per dimension.
+    for &n in &[128usize, 256] {
+        let rows = 4 * n;
+        let x: Vec<f32> = (0..rows * n).map(|_| rng.normal() as f32).collect();
+        suite.bench(&format!("decompose_gram_accumulate_{n}"), 3, || {
+            let mut ts = TapStats::default();
+            ts.accumulate("t", &x, rows, n);
+            ts.finalize();
+            std::hint::black_box(ts);
+        });
+        let st = stats(n, &mut rng);
+        suite.bench(&format!("decompose_whiten_chol_{n}"), 3, || {
+            std::hint::black_box(Whitener::cholesky(&st));
+        });
+        suite.bench(&format!("decompose_whiten_eig_{n}"), 3, || {
+            std::hint::black_box(Whitener::eigen(&st));
+        });
+    }
+
+    // ---- Per-layer factorization throughput by method ----
     let (n_in, n_out) = (128usize, 256usize); // llama-t MLP shape
     let w = Tensor {
         dims: vec![n_in, n_out],
@@ -91,7 +118,7 @@ fn main() {
     ] {
         let spec = CompressionSpec { method, ratio: 0.30, alpha: 0.95 };
         let plan = ranks::plan(n_out, n_in, 0.30, spec.effective_alpha());
-        suite.bench(&format!("layer_{}", method.label()), 3, || {
+        suite.bench(&format!("decompose_layer_{}", method.label()), 3, || {
             std::hint::black_box(compress_layer(&w, &st, &spec, &plan).unwrap());
         });
     }
@@ -100,21 +127,21 @@ fn main() {
     let (cfg, weights, taps) = synthetic_model(&mut rng);
     let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 };
     let cores = default_workers();
-    suite.bench("model_serial_loop", 3, || {
+    suite.bench("decompose_model_serial", 3, || {
         std::hint::black_box(compress_model_serial(&cfg, &weights, &taps, &spec).unwrap());
     });
-    suite.bench("model_engine_w1", 3, || {
+    suite.bench("decompose_model_engine_w1", 3, || {
         std::hint::black_box(engine_compress(&cfg, &weights, &taps, &spec, 1, SvdPolicy::exact()));
     });
     // On a single-core box w{cores} would duplicate the w1 name/measurement.
     if cores > 1 {
-        suite.bench(&format!("model_engine_w{cores}"), 3, || {
+        suite.bench(&format!("decompose_model_engine_w{cores}"), 3, || {
             std::hint::black_box(engine_compress(
                 &cfg, &weights, &taps, &spec, cores, SvdPolicy::exact(),
             ));
         });
     }
-    suite.bench(&format!("model_engine_w{cores}_rsvd"), 3, || {
+    suite.bench(&format!("decompose_model_engine_w{cores}_rsvd"), 3, || {
         std::hint::black_box(engine_compress(
             &cfg, &weights, &taps, &spec, cores, SvdPolicy::auto(),
         ));
@@ -126,7 +153,7 @@ fn main() {
     }
     let serial = compress_model_serial(&cfg, &weights, &taps, &spec).unwrap();
     for workers in widths {
-        let bench_name = format!("model_engine_w{workers}");
+        let bench_name = format!("decompose_model_engine_w{workers}");
         if !suite.enabled(&bench_name) {
             continue;
         }
@@ -135,6 +162,13 @@ fn main() {
         println!("      {bench_name} vs serial: max |Δfactor| = {diff:e} (expect 0)");
         assert_eq!(diff, 0.0, "sharded exact engine must reproduce the serial loop");
         suite.record_metric(&bench_name, "max_diff_vs_serial", diff as f64);
+    }
+    // Stable top-level summary (whiten + factorize wall-clock, serial vs
+    // sharded, exact vs rsvd), matching the BENCH_gemm.json convention.
+    // Skipped under a filter that excludes the decompose benches and in
+    // --quick mode, so partial runs never clobber the tracked numbers.
+    if suite.enabled("decompose") && !suite.quick() {
+        suite.write_summary(std::path::Path::new("BENCH_decompose.json"), "decompose");
     }
     suite.finish();
 }

@@ -3,17 +3,22 @@
 //! plus the jacobi-vs-randomized truncated-SVD comparison that motivates
 //! the `SvdPolicy` fast path, plus the unified tiled+packed GEMM kernel
 //! vs the retired naive loop (parity smoke + GFLOP/s + worker scaling;
-//! summarized into the top-level `BENCH_gemm.json`).
+//! summarized into the top-level `BENCH_gemm.json`), plus the level-3
+//! factorization substrate: packed SYRK vs the TN Gram, blocked compact-WY
+//! QR vs the retired unblocked path, and tournament vs cyclic Jacobi.
+//! `ci.sh` runs the `gemm`, `syrk`, and `qr_parity` benches in `--quick`
+//! mode as bit/tolerance parity smokes.
 
 use nsvd::bench::Suite;
 use nsvd::linalg::chol::cholesky_psd;
-use nsvd::linalg::eig::sym_eig;
+use nsvd::linalg::eig::{sym_eig, sym_eig_ordered};
 use nsvd::linalg::gemm;
 use nsvd::linalg::id::interpolative;
+use nsvd::linalg::jacobi::JacobiOrdering;
 use nsvd::linalg::matrix::Matrix;
-use nsvd::linalg::qr::{qr_pivoted, qr_thin};
+use nsvd::linalg::qr::{qr_pivoted, qr_pivoted_unblocked, qr_thin, qr_thin_unblocked};
 use nsvd::linalg::rsvd::{decaying_matrix as decaying, svd_for_rank, SvdPolicy};
-use nsvd::linalg::svd::svd_thin;
+use nsvd::linalg::svd::{svd_thin, svd_thin_ordered};
 use nsvd::util::rng::Rng;
 use nsvd::util::timer::Timer;
 
@@ -80,6 +85,83 @@ fn main() {
             std::hint::black_box(c);
         });
     }
+    // ---- Packed SYRK vs the TN Gram path (half the flops + threads) ----
+    // Parity smoke first (ci.sh runs `-- syrk --quick`): the SYRK upper
+    // triangle must be BIT-identical to gemm_tn(A, A) at workers {1, 4}.
+    let syrk_sizes: &[usize] = if suite.quick() { &[128] } else { &[256, 512] };
+    for &n in syrk_sizes {
+        let rows = n; // square-ish Gram: k = n sample rows of dimension n
+        let a = Matrix::randn(rows, n, 1.0, &mut rng);
+        if suite.enabled(&format!("syrk_parity_{n}")) {
+            let mut want = vec![0.0; n * n];
+            gemm::gemm_tn(n, rows, n, &a.data, &a.data, &mut want, 1);
+            for workers in [1usize, 4] {
+                let mut got = vec![0.0; n * n];
+                gemm::syrk_tn(n, rows, &a.data, &mut got, workers);
+                for i in 0..n {
+                    for j in i..n {
+                        assert_eq!(
+                            got[i * n + j],
+                            want[i * n + j],
+                            "syrk parity @{n} w={workers}: ({i},{j})"
+                        );
+                    }
+                }
+            }
+            println!("syrk_parity_{n}: OK (upper triangle bit-identical, workers 1 and 4)");
+        }
+        // Gram flops: n²·rows for the full TN product, half for SYRK — both
+        // annotated with the FULL product's flops so the throughput numbers
+        // are directly comparable.
+        let flops = 2.0 * (n as f64) * (n as f64) * rows as f64;
+        suite.bench_throughput(&format!("syrk_baseline_tn_{n}"), 5, flops, || {
+            let mut c = vec![0.0; n * n];
+            gemm::gemm_tn(n, rows, n, &a.data, &a.data, &mut c, 1);
+            std::hint::black_box(c);
+        });
+        suite.bench_throughput(&format!("syrk_{n}"), 5, flops, || {
+            let mut c = vec![0.0; n * n];
+            gemm::syrk_tn(n, rows, &a.data, &mut c, 1);
+            std::hint::black_box(c);
+        });
+        if let (Some(tn_s), Some(syrk_s)) = (
+            suite.mean_of(&format!("syrk_baseline_tn_{n}")),
+            suite.mean_of(&format!("syrk_{n}")),
+        ) {
+            suite.record_metric(&format!("syrk_{n}"), "speedup_vs_tn", tn_s / syrk_s.max(1e-12));
+        }
+        for workers in [2usize, 4] {
+            suite.bench_throughput(&format!("syrk_{n}_w{workers}"), 5, flops, || {
+                let mut c = vec![0.0; n * n];
+                gemm::syrk_tn(n, rows, &a.data, &mut c, workers);
+                std::hint::black_box(c);
+            });
+        }
+    }
+
+    // ---- Blocked compact-WY QR vs the retired unblocked path ----
+    // Parity smoke (ci.sh runs `-- qr_parity --quick`): Q/R agreement to
+    // rounding, orthogonality at the acceptance bar, exact pivot agreement.
+    let qr_parity_sizes: &[usize] = if suite.quick() { &[128] } else { &[256] };
+    for &n in qr_parity_sizes {
+        if !suite.enabled(&format!("qr_parity_{n}")) {
+            continue;
+        }
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let (qb, rb) = qr_thin(&a);
+        let (qu, ru) = qr_thin_unblocked(&a);
+        let scale = 1.0 + a.fro_norm();
+        assert!(qb.dist(&qu) < 1e-10 * scale, "qr parity @{n}: Q diverged");
+        assert!(rb.dist(&ru) < 1e-10 * scale, "qr parity @{n}: R diverged");
+        let orth = qb.matmul_tn(&qb).dist(&Matrix::identity(n));
+        assert!(orth < 1e-12 * n as f64, "qr parity @{n}: ‖QᵀQ−I‖ = {orth:e}");
+        let (_, rpb, pb) = qr_pivoted(&a);
+        let (_, rpu, pu) = qr_pivoted_unblocked(&a);
+        assert_eq!(pb, pu, "qr parity @{n}: pivots diverged");
+        assert_eq!(rpb.data, rpu.data, "qr parity @{n}: pivoted R not bit-identical");
+        println!("qr_parity_{n}: OK (Q/R agree, ‖QᵀQ−I‖ = {orth:.2e}, pivots exact)");
+    }
+
     for &n in &[128usize, 256, 384] {
         let a = Matrix::randn(n, n, 1.0, &mut rng);
         let b = Matrix::randn(n, n, 1.0, &mut rng);
@@ -100,12 +182,63 @@ fn main() {
         suite.bench(&format!("qr_{n}"), 5, || {
             std::hint::black_box(qr_thin(&a));
         });
+        suite.bench(&format!("qr_unblocked_{n}"), 5, || {
+            std::hint::black_box(qr_thin_unblocked(&a));
+        });
+        if let (Some(unb), Some(blk)) =
+            (suite.mean_of(&format!("qr_unblocked_{n}")), suite.mean_of(&format!("qr_{n}")))
+        {
+            suite.record_metric(&format!("qr_{n}"), "speedup_vs_unblocked", unb / blk.max(1e-12));
+        }
         suite.bench(&format!("qr_pivoted_{n}"), 3, || {
             std::hint::black_box(qr_pivoted(&a));
         });
         suite.bench(&format!("id_k32_{n}"), 3, || {
             std::hint::black_box(interpolative(&a, 32));
         });
+    }
+
+    // ---- Tournament vs cyclic Jacobi (SVD + eig), serial and w=4 ----
+    {
+        let n = 256usize;
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let gram = a.matmul_nt(&a);
+        suite.bench(&format!("jacobi_svd_cyclic_{n}"), 3, || {
+            std::hint::black_box(svd_thin(&a));
+        });
+        for workers in [1usize, 4] {
+            suite.bench(&format!("jacobi_svd_tournament_w{workers}_{n}"), 3, || {
+                std::hint::black_box(svd_thin_ordered(&a, JacobiOrdering::Tournament, workers));
+            });
+        }
+        if let (Some(cyc), Some(tor)) = (
+            suite.mean_of(&format!("jacobi_svd_cyclic_{n}")),
+            suite.mean_of(&format!("jacobi_svd_tournament_w4_{n}")),
+        ) {
+            suite.record_metric(
+                &format!("jacobi_svd_tournament_w4_{n}"),
+                "speedup_vs_cyclic",
+                cyc / tor.max(1e-12),
+            );
+        }
+        suite.bench(&format!("jacobi_eig_cyclic_{n}"), 3, || {
+            std::hint::black_box(sym_eig(&gram));
+        });
+        for workers in [1usize, 4] {
+            suite.bench(&format!("jacobi_eig_tournament_w{workers}_{n}"), 3, || {
+                std::hint::black_box(sym_eig_ordered(&gram, JacobiOrdering::Tournament, workers));
+            });
+        }
+        if let (Some(cyc), Some(tor)) = (
+            suite.mean_of(&format!("jacobi_eig_cyclic_{n}")),
+            suite.mean_of(&format!("jacobi_eig_tournament_w4_{n}")),
+        ) {
+            suite.record_metric(
+                &format!("jacobi_eig_tournament_w4_{n}"),
+                "speedup_vs_cyclic",
+                cyc / tor.max(1e-12),
+            );
+        }
     }
 
     // ---- Truncated SVD: exact Jacobi vs the randomized fast path ----

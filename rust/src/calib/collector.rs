@@ -5,12 +5,21 @@
 //! activations are reduced to a Gram matrix `XᵀX` and an abs-sum vector.
 //! Streaming accumulation (Gram of stacked rows = sum of per-batch Grams) is
 //! pinned by a python-side test and re-verified here.
+//!
+//! Raw activation blocks are no longer reduced by a scalar `O(rows·dim²)`
+//! triple loop: [`TapStats::accumulate`] buffers rows inside each tap's
+//! [`CalibStats`] and flushes them through the packed SYRK kernel
+//! (`linalg/gemm.rs::syrk_tn`, upper triangle only), and
+//! [`TapStats::finalize`] mirrors the triangles once after the last batch —
+//! so Gram construction inherits the kernel layer's tiling, threads, and
+//! worker-count bit-determinism.
 
 use crate::compress::whiten::CalibStats;
 use crate::model::config::ModelConfig;
 use crate::model::forward::{self, NoOverride};
 use crate::model::weights::Weights;
 use anyhow::Result;
+use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 
 /// Per-tap statistics for a model.
@@ -25,40 +34,41 @@ impl TapStats {
         self.taps.get(&ModelConfig::tap_for_linear(name))
     }
 
-    pub fn merge(&mut self, other: &TapStats) {
-        for (tap, stats) in &other.taps {
-            self.taps
-                .entry(tap.clone())
-                .and_modify(|s| s.merge(stats))
-                .or_insert_with(|| stats.clone());
+    /// Merge another collection into this one, consuming it: vacant taps
+    /// are **moved** in (no per-tap clone on the fan-in path), existing
+    /// taps fold Grams/abs-sums/pending buffers together
+    /// ([`CalibStats::merge_from`]).
+    pub fn merge(&mut self, other: TapStats) {
+        for (tap, stats) in other.taps {
+            match self.taps.entry(tap) {
+                Entry::Occupied(mut e) => e.get_mut().merge_from(stats),
+                Entry::Vacant(e) => {
+                    e.insert(stats);
+                }
+            }
         }
     }
 
     /// Accumulate one raw activation block `x [rows, dim]` into a tap.
+    ///
+    /// Rows are buffered and flushed through SYRK in batches; call
+    /// [`TapStats::finalize`] after the last batch, before the Grams are
+    /// consumed.
     pub fn accumulate(&mut self, tap: &str, x: &[f32], rows: usize, dim: usize) {
         let stats = self
             .taps
             .entry(tap.to_string())
             .or_insert_with(|| CalibStats::new(dim));
         assert_eq!(stats.dim(), dim, "tap {tap} dim changed");
-        for r in 0..rows {
-            let row = &x[r * dim..(r + 1) * dim];
-            for i in 0..dim {
-                let xi = row[i] as f64;
-                stats.abs_sum[i] += xi.abs();
-                // Upper triangle then mirror (Gram is symmetric).
-                for j in i..dim {
-                    stats.gram[(i, j)] += xi * row[j] as f64;
-                }
-            }
+        stats.push_rows(x, rows);
+    }
+
+    /// Flush every tap's pending rows and mirror the SYRK-built upper
+    /// triangles into full symmetric Grams.  Idempotent.
+    pub fn finalize(&mut self) {
+        for stats in self.taps.values_mut() {
+            stats.finalize();
         }
-        for i in 0..dim {
-            for j in (i + 1)..dim {
-                let v = stats.gram[(i, j)];
-                stats.gram[(j, i)] = v;
-            }
-        }
-        stats.rows += rows;
     }
 
     /// Accumulate pre-reduced Gram/abs-sum blocks (the PJRT artifact path:
@@ -112,6 +122,7 @@ pub fn collect_native(
             cfg, weights, &NoOverride, &tb.tokens, tb.batch, tb.seq, Some(&mut sink),
         )?;
     }
+    stats.finalize();
     Ok(stats)
 }
 
@@ -129,9 +140,10 @@ mod tests {
         let dim = 6;
         let rows = 10;
         let x: Vec<f32> = (0..rows * dim).map(|_| rng.normal() as f32).collect();
-        // Raw accumulation.
+        // Raw accumulation (buffered; finalize flushes + mirrors).
         let mut raw = TapStats::default();
         raw.accumulate("t", &x, rows, dim);
+        raw.finalize();
         // Reduced accumulation from an externally computed Gram.
         let mut gram = vec![0.0f32; dim * dim];
         let mut abs = vec![0.0f32; dim];
@@ -194,8 +206,32 @@ mod tests {
         let mut xall = x1.clone();
         xall.extend_from_slice(&x2);
         whole.accumulate("t", &xall, 12, 4);
-        a.merge(&b);
+        whole.finalize();
+        a.merge(b); // consumes b: vacant taps move, occupied taps fold
+        a.finalize();
         assert_eq!(a.taps["t"].rows, 12);
         assert!(a.taps["t"].gram.dist(&whole.taps["t"].gram) < 1e-4);
+    }
+
+    #[test]
+    fn merge_moves_vacant_taps_and_folds_occupied() {
+        let mut rng = Rng::new(5);
+        let xa: Vec<f32> = (0..6 * 3).map(|_| rng.normal() as f32).collect();
+        let xb: Vec<f32> = (0..4 * 3).map(|_| rng.normal() as f32).collect();
+        let mut a = TapStats::default();
+        a.accumulate("shared", &xa, 6, 3);
+        let mut b = TapStats::default();
+        b.accumulate("shared", &xb, 4, 3);
+        b.accumulate("only_b", &xb, 4, 3);
+        a.merge(b);
+        a.finalize();
+        assert_eq!(a.taps.len(), 2);
+        assert_eq!(a.taps["shared"].rows, 10);
+        assert_eq!(a.taps["only_b"].rows, 4);
+        // The moved tap carries its data intact.
+        let mut direct = TapStats::default();
+        direct.accumulate("only_b", &xb, 4, 3);
+        direct.finalize();
+        assert!(a.taps["only_b"].gram.dist(&direct.taps["only_b"].gram) < 1e-6);
     }
 }

@@ -262,6 +262,7 @@ mod tests {
             let x: Vec<f32> = (0..rows * dim).map(|_| rng.normal() as f32).collect();
             stats.accumulate(&tap, &x, rows, dim);
         }
+        stats.finalize();
         (cfg, weights, stats)
     }
 

@@ -15,9 +15,24 @@
 
 use crate::linalg::chol::{cholesky_psd, invert_lower};
 use crate::linalg::eig::{sym_eig, SymEig};
+use crate::linalg::gemm;
 use crate::linalg::matrix::Matrix;
 
+/// Pending-row threshold at which [`CalibStats::push_rows`] flushes its
+/// buffer through the SYRK kernel: large enough to amortize packing, small
+/// enough to bound buffer memory at `FLUSH_ROWS × dim` f64s.
+const FLUSH_ROWS: usize = 256;
+
 /// Calibration statistics for one tap (accumulated over batches).
+///
+/// Raw activation rows are buffered (`pending`, row-major) and flushed
+/// through the packed SYRK kernel ([`gemm::syrk_tn`]) every `FLUSH_ROWS`
+/// rows: the Gram's **upper triangle** accumulates `XᵀX` batch-wise, and
+/// [`CalibStats::finalize`] mirrors it down once at the end of collection —
+/// instead of the retired per-call scalar triple loop, which mirrored on
+/// every accumulate and bypassed the kernel layer entirely.  Consumers of
+/// `gram` (whiteners, similarity, activation loss) must only see finalized
+/// stats; every collection path calls finalize after its last batch.
 #[derive(Clone, Debug)]
 pub struct CalibStats {
     /// `Σ x xᵀ` over all calibration rows — [n, n].
@@ -26,25 +41,93 @@ pub struct CalibStats {
     pub abs_sum: Vec<f64>,
     /// Number of accumulated rows.
     pub rows: usize,
+    /// Buffered activation rows awaiting a SYRK flush (row-major, f64).
+    pending: Vec<f64>,
 }
 
 impl CalibStats {
     pub fn new(n: usize) -> CalibStats {
-        CalibStats { gram: Matrix::zeros(n, n), abs_sum: vec![0.0; n], rows: 0 }
+        CalibStats { gram: Matrix::zeros(n, n), abs_sum: vec![0.0; n], rows: 0, pending: Vec::new() }
     }
 
     pub fn dim(&self) -> usize {
         self.gram.rows
     }
 
-    /// Merge another accumulator (streaming/sharded collection).
+    /// Buffer `rows` activation rows (`x` row-major `rows × dim`, f32 as
+    /// the forward produces them): abs-sums update immediately, the Gram
+    /// update is deferred to a SYRK flush.  The flush check runs per row,
+    /// so the buffer never grows past `FLUSH_ROWS` rows even when a single
+    /// call delivers a much larger block.
+    pub fn push_rows(&mut self, x: &[f32], rows: usize) {
+        let dim = self.dim();
+        assert_eq!(x.len(), rows * dim, "push_rows: row block size mismatch");
+        let cap = FLUSH_ROWS * dim.max(1);
+        for r in 0..rows {
+            for (i, &v) in x[r * dim..(r + 1) * dim].iter().enumerate() {
+                let v = v as f64;
+                self.abs_sum[i] += v.abs();
+                self.pending.push(v);
+            }
+            if self.pending.len() >= cap {
+                self.flush();
+            }
+        }
+        self.rows += rows;
+    }
+
+    /// Flush buffered rows into the Gram's upper triangle via the packed
+    /// SYRK kernel, parallel over the calling thread's GEMM worker share
+    /// (bit-identical at every worker count).
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let dim = self.dim();
+        let rows = self.pending.len() / dim;
+        gemm::syrk_tn(dim, rows, &self.pending, &mut self.gram.data, gemm::workers());
+        self.pending.clear();
+    }
+
+    /// Flush pending rows and mirror the upper triangle down, making
+    /// `gram` the full symmetric `XᵀX`.  Idempotent; must run before the
+    /// Gram is consumed.
+    pub fn finalize(&mut self) {
+        self.flush();
+        let n = self.dim();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = self.gram[(i, j)];
+                self.gram[(j, i)] = v;
+            }
+        }
+    }
+
+    /// Merge another accumulator by reference (clones the other side; kept
+    /// for callers that cannot give up ownership — the fan-in path uses
+    /// [`CalibStats::merge_from`]).
     pub fn merge(&mut self, other: &CalibStats) {
+        self.merge_from(other.clone());
+    }
+
+    /// Owned merge — the no-clone calibration fan-in path
+    /// ([`crate::calib::collector::TapStats::merge`] moves vacant entries
+    /// wholesale and calls this for occupied ones, so nothing is cloned
+    /// either way).  Grams and abs-sums add; pending row buffers
+    /// concatenate (`self` rows first; flushed on the next
+    /// flush/finalize).
+    pub fn merge_from(&mut self, other: CalibStats) {
         assert_eq!(self.dim(), other.dim());
         self.gram = &self.gram + &other.gram;
         for (a, b) in self.abs_sum.iter_mut().zip(&other.abs_sum) {
             *a += b;
         }
         self.rows += other.rows;
+        if self.pending.is_empty() {
+            self.pending = other.pending;
+        } else {
+            self.pending.extend_from_slice(&other.pending);
+        }
     }
 
     /// Per-dimension mean absolute activation (the ASVD-0 scale).
@@ -193,7 +276,8 @@ mod tests {
     fn random_stats(n: usize, samples: usize, rng: &mut Rng) -> (CalibStats, Matrix) {
         let x = Matrix::randn(samples, n, 1.0, rng); // rows = activations
         let mut stats = CalibStats::new(n);
-        stats.gram = x.matmul_tn(&x); // XᵀX in row convention = paper's XXᵀ
+        // XᵀX in row convention = paper's XXᵀ, via the SYRK kernel.
+        stats.gram = x.gram();
         for i in 0..samples {
             for j in 0..n {
                 stats.abs_sum[j] += x[(i, j)].abs();
@@ -212,6 +296,31 @@ mod tests {
         s1.merge(&s2);
         assert_eq!(s1.rows, 50);
         assert!((&s1.gram - &g1).dist(&s2.gram) < 1e-12);
+    }
+
+    #[test]
+    fn push_rows_flush_finalize_matches_direct_gram() {
+        let mut rng = Rng::new(5);
+        let n = 9;
+        let rows = 700; // > 2×FLUSH_ROWS: exercises the periodic flushes
+        let xf: Vec<f32> = (0..rows * n).map(|_| rng.normal() as f32).collect();
+        let mut stats = CalibStats::new(n);
+        stats.push_rows(&xf[..300 * n], 300);
+        stats.push_rows(&xf[300 * n..], rows - 300);
+        stats.finalize();
+        let x = Matrix::from_f32(rows, n, &xf);
+        let want = x.gram();
+        assert_eq!(stats.rows, rows);
+        assert!(stats.gram.dist(&want) < 1e-9 * (1.0 + want.fro_norm()));
+        // Finalize leaves an exactly symmetric Gram and is idempotent.
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(stats.gram[(i, j)], stats.gram[(j, i)]);
+            }
+        }
+        let g = stats.gram.clone();
+        stats.finalize();
+        assert_eq!(stats.gram.data, g.data);
     }
 
     #[test]

@@ -177,9 +177,19 @@ impl Pipeline {
                 for tb in &batches {
                     runner.accumulate(tb, &mut stats)?;
                 }
+                stats.finalize();
                 Ok(stats)
             }
-            None => collect_native(&self.model_cfg, &self.weights, &batches),
+            None => {
+                // Hand the pipeline's thread budget to the GEMMs under the
+                // native collection: both the f32 forward and the SYRK
+                // Gram flushes read the per-thread knob, and both are
+                // bit-identical at every worker count.
+                let _gemm = crate::linalg::gemm::scoped_workers(
+                    crate::util::threads::ThreadBudget::new(self.config.workers).total(),
+                );
+                collect_native(&self.model_cfg, &self.weights, &batches)
+            }
         }
     }
 

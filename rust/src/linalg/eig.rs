@@ -5,8 +5,21 @@
 //! Grams are small (n ≤ a few hundred), symmetric PSD, and Jacobi delivers
 //! high relative accuracy on the small eigenvalues that decide whether a
 //! pseudo-inverse is needed — precisely the regime the paper's §3 discusses.
+//!
+//! Orderings ([`JacobiOrdering`], shared with the SVD): `Cyclic` is the
+//! sequential historical default; `Tournament` runs each sweep as `n − 1`
+//! rounds of disjoint pairs with the round's rotation angles frozen at
+//! round start.  For the two-sided update `A ← Jᵀ A J` a round is applied
+//! as a column pass (`A·J`, row-parallel over chunks) followed by a row
+//! pass (`Jᵀ·`, parallel over the disjoint row pairs), so every element is
+//! transformed in a fixed order and the result is bit-identical at every
+//! worker count.  Within a round, the entry `(i, j)` targeted by a rotation
+//! is touched by no other pair (rows/columns of disjoint pairs), so frozen
+//! angles still annihilate exactly the entries they were computed for.
 
+use super::jacobi::{apply_col_rotations, tournament_rounds, JacobiOrdering, PAR_MIN_ELEMS};
 use super::matrix::Matrix;
+use crate::util::threads::parallel_map;
 
 /// Result of a symmetric eigendecomposition `A = P Λ Pᵀ`.
 #[derive(Clone, Debug)]
@@ -17,10 +30,22 @@ pub struct SymEig {
     pub vectors: Matrix,
 }
 
-/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix — the
+/// sequential historical ordering.  (Note: results are deterministic, but
+/// not bit-identical to the pre-SYRK seed in every edge case — the
+/// rotation-skip threshold is now relative to the matrix norm, so
+/// rotations on entries below `1e-18·‖A‖_F`, which the retired absolute
+/// `1e-300` cutoff still performed, are skipped as numerically irrelevant.)
 ///
 /// Sweeps rotate away off-diagonal mass until `off(A) < tol·‖A‖_F`.
 pub fn sym_eig(a: &Matrix) -> SymEig {
+    sym_eig_ordered(a, JacobiOrdering::Cyclic, 1)
+}
+
+/// Jacobi eigendecomposition with an explicit sweep [`JacobiOrdering`] and
+/// worker count (`Cyclic` ignores `workers`; `Tournament` dispatches each
+/// round over them with a worker-count-independent result).
+pub fn sym_eig_ordered(a: &Matrix, ordering: JacobiOrdering, workers: usize) -> SymEig {
     assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
     let n = a.rows;
     let mut m = a.clone();
@@ -29,9 +54,63 @@ pub fn sym_eig(a: &Matrix) -> SymEig {
     if n <= 1 {
         return SymEig { values: m.diagonal(), vectors: p };
     }
+    // Extreme-scale lift: the sweep machinery squares entries (convergence
+    // mass, and implicitly the skip test), so norms below ~1e-154 underflow
+    // to a spurious "converged" and norms above ~1e154 overflow to a
+    // never-converging `inf`.  Multiplying by a power of two is exact for
+    // every entry in range, so lifting the matrix to norm ≈ 1 and dividing
+    // the eigenvalues back changes no bits for ordinary-scaled Grams
+    // (`lift = 1.0` there) while making tiny/huge-scaled ones converge in
+    // the usual sweep count.
+    let raw_norm = m.fro_norm();
+    let lift = if raw_norm > 0.0 && !(1e-130..=1e130).contains(&raw_norm) {
+        (2.0f64).powi(-(raw_norm.log2().floor() as i32))
+    } else {
+        1.0
+    };
+    if lift != 1.0 {
+        for v in m.data.iter_mut() {
+            *v *= lift;
+        }
+    }
     let norm = m.fro_norm().max(f64::MIN_POSITIVE);
     let tol = 1e-14 * norm;
-    const MAX_SWEEPS: usize = 60;
+    // Rotation-skip threshold, relative to the (rotation-invariant)
+    // Frobenius norm like the convergence test.  The retired absolute
+    // `1e-300` cutoff could stall or silently mis-converge tiny-scaled
+    // Grams: entries sat below the cutoff while carrying all of the
+    // matrix's structure.  1e-18 is ≪ tol/n, so skipped rotations can
+    // never hold `off(A)` above the convergence threshold.
+    let skip = 1e-18 * norm;
+    match ordering {
+        JacobiOrdering::Cyclic => cyclic_sweeps(&mut m, &mut p, tol, skip),
+        JacobiOrdering::Tournament => tournament_sweeps(&mut m, &mut p, tol, skip, workers),
+    }
+    // Sort by eigenvalue, descending (un-lifting exactly: 1/lift is a
+    // power of two too).
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag = m.diagonal();
+    order.sort_by(|&x, &y| diag[y].partial_cmp(&diag[x]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&k| diag[k] / lift).collect();
+    let vectors = p.select_cols(&order);
+    SymEig { values, vectors }
+}
+
+const MAX_SWEEPS: usize = 60;
+
+/// Stable rotation for off-diagonal entry `apq` with diagonal `(app, aqq)`
+/// (Golub & Van Loan §8.5).
+#[inline]
+fn eig_rotation(apq: f64, app: f64, aqq: f64) -> (f64, f64) {
+    let theta = (aqq - app) / (2.0 * apq);
+    let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    (c, t * c)
+}
+
+/// The historical sequential row-cyclic sweep loop.
+fn cyclic_sweeps(m: &mut Matrix, p: &mut Matrix, tol: f64, skip: f64) {
+    let n = m.rows;
     for _sweep in 0..MAX_SWEEPS {
         let mut off = 0.0;
         for i in 0..n {
@@ -45,16 +124,10 @@ pub fn sym_eig(a: &Matrix) -> SymEig {
         for i in 0..n - 1 {
             for j in (i + 1)..n {
                 let apq = m[(i, j)];
-                if apq.abs() < 1e-300 {
+                if apq.abs() <= skip {
                     continue;
                 }
-                let app = m[(i, i)];
-                let aqq = m[(j, j)];
-                // Stable rotation computation (Golub & Van Loan §8.5).
-                let theta = (aqq - app) / (2.0 * apq);
-                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = t * c;
+                let (c, s) = eig_rotation(apq, m[(i, i)], m[(j, j)]);
                 // Apply the rotation J(i, j, θ): A ← Jᵀ A J.
                 for k in 0..n {
                     let aki = m[(k, i)];
@@ -78,13 +151,79 @@ pub fn sym_eig(a: &Matrix) -> SymEig {
             }
         }
     }
-    // Sort by eigenvalue, descending.
-    let mut order: Vec<usize> = (0..n).collect();
-    let diag = m.diagonal();
-    order.sort_by(|&x, &y| diag[y].partial_cmp(&diag[x]).unwrap());
-    let values: Vec<f64> = order.iter().map(|&k| diag[k]).collect();
-    let vectors = p.select_cols(&order);
-    SymEig { values, vectors }
+}
+
+/// Tournament sweeps: per round, freeze the rotation angles from the
+/// round-start matrix, then apply all disjoint rotations as a column pass
+/// (`A·J`), a row pass (`Jᵀ·`), and the eigenvector column pass (`P·J`).
+/// Each pass transforms every element exactly once in a fixed per-element
+/// order, so the result is bit-identical at every worker count.
+fn tournament_sweeps(m: &mut Matrix, p: &mut Matrix, tol: f64, skip: f64, workers: usize) {
+    let n = m.rows;
+    let rounds = tournament_rounds(n);
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if (2.0 * off).sqrt() < tol {
+            break;
+        }
+        for round in &rounds {
+            let mut rots: Vec<(usize, usize, f64, f64)> = Vec::with_capacity(round.len());
+            for &(i, j) in round {
+                let apq = m[(i, j)];
+                if apq.abs() <= skip {
+                    continue;
+                }
+                let (c, s) = eig_rotation(apq, m[(i, i)], m[(j, j)]);
+                rots.push((i, j, c, s));
+            }
+            if rots.is_empty() {
+                continue;
+            }
+            apply_col_rotations(&mut m.data, n, &rots, workers);
+            apply_row_rotations(m, &rots, workers);
+            apply_col_rotations(&mut p.data, n, &rots, workers);
+        }
+    }
+}
+
+/// Row pass `Jᵀ·A` for one round: each rotation rewrites its own row pair,
+/// and pairs are disjoint — sequentially in place, or in parallel via
+/// per-pair row buffers (identical arithmetic per element either way;
+/// small rounds run inline, a spawn costs more than the rotations).
+fn apply_row_rotations(m: &mut Matrix, rots: &[(usize, usize, f64, f64)], workers: usize) {
+    let n = m.cols;
+    if workers <= 1 || rots.len() < 2 || 2 * n * rots.len() < PAR_MIN_ELEMS {
+        for &(i, j, c, s) in rots {
+            for k in 0..n {
+                let aik = m[(i, k)];
+                let ajk = m[(j, k)];
+                m[(i, k)] = c * aik - s * ajk;
+                m[(j, k)] = s * aik + c * ajk;
+            }
+        }
+        return;
+    }
+    let mref: &Matrix = m;
+    let new_rows = parallel_map(rots, workers, |_, &(i, j, c, s)| {
+        let ri = mref.row(i);
+        let rj = mref.row(j);
+        let mut ni = vec![0.0; n];
+        let mut nj = vec![0.0; n];
+        for k in 0..n {
+            ni[k] = c * ri[k] - s * rj[k];
+            nj[k] = s * ri[k] + c * rj[k];
+        }
+        (i, j, ni, nj)
+    });
+    for (i, j, ni, nj) in new_rows {
+        m.row_mut(i).copy_from_slice(&ni);
+        m.row_mut(j).copy_from_slice(&nj);
+    }
 }
 
 impl SymEig {
@@ -211,5 +350,67 @@ mod tests {
         let z = Matrix::zeros(3, 3);
         let ez = sym_eig(&z);
         assert!(ez.values.iter().all(|&v| v.abs() < 1e-15));
+    }
+
+    #[test]
+    fn tiny_scaled_gram_converges() {
+        // Regression: the retired absolute rotation-skip (|apq| < 1e-300)
+        // stalled matrices whose entries all sit below the cutoff.  The
+        // relative skip must diagonalize them in the usual sweep count.
+        let s = 1e-301;
+        let a = Matrix::from_rows(&[vec![2.0 * s, 1.0 * s], vec![1.0 * s, 2.0 * s]]);
+        for ordering in [JacobiOrdering::Cyclic, JacobiOrdering::Tournament] {
+            let e = sym_eig_ordered(&a, ordering, 1);
+            assert!(
+                (e.values[0] - 3.0 * s).abs() < 1e-10 * s,
+                "{ordering:?}: λ₁ = {} (want {})",
+                e.values[0],
+                3.0 * s
+            );
+            assert!((e.values[1] - 1.0 * s).abs() < 1e-10 * s);
+            assert!(e.reconstruct().dist(&a) < 1e-12 * a.fro_norm());
+        }
+    }
+
+    #[test]
+    fn tournament_eig_matches_cyclic_to_tolerance() {
+        check("tournament eig ≡ cyclic (to tol)", 12, |g| {
+            let mut rng = g.rng.fork(0);
+            let n = g.usize_in(1, 30);
+            let b = Matrix::randn(n, n, 1.0, &mut rng);
+            let mut a = &b + &b.transpose();
+            a.symmetrize();
+            let cyc = sym_eig(&a);
+            let tor = sym_eig_ordered(&a, JacobiOrdering::Tournament, 1);
+            ok(
+                tor.reconstruct().dist(&a) < 1e-8 * (1.0 + a.fro_norm()),
+                "tournament reconstructs",
+            )?;
+            let gram = tor.vectors.matmul_tn(&tor.vectors);
+            ok(gram.dist(&Matrix::identity(n)) < 1e-9, "PᵀP=I")?;
+            for (vc, vt) in cyc.values.iter().zip(&tor.values) {
+                ok(
+                    (vc - vt).abs() < 1e-8 * (1.0 + a.fro_norm()),
+                    "eigenvalues agree",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tournament_eig_bit_identical_across_workers() {
+        let mut rng = Rng::new(33);
+        for n in [17usize, 30, 41] {
+            let b = Matrix::randn(n, n, 1.0, &mut rng);
+            let mut a = &b + &b.transpose();
+            a.symmetrize();
+            let base = sym_eig_ordered(&a, JacobiOrdering::Tournament, 1);
+            for workers in [2usize, 4] {
+                let par = sym_eig_ordered(&a, JacobiOrdering::Tournament, workers);
+                assert_eq!(base.values, par.values, "n={n} w={workers} values");
+                assert_eq!(base.vectors.data, par.vectors.data, "n={n} w={workers} vectors");
+            }
+        }
     }
 }

@@ -38,6 +38,11 @@
 //!   larger k it differs only by the per-block regrouping, far inside every
 //!   caller's tolerance.
 //!
+//! Beyond the general NN/TN/NT products, the kernel exposes a packed
+//! **SYRK** entry point ([`syrk_tn`]): `C[upper] += AᵀA`, upper triangle
+//! only (half the flops), parallel over diagonal-block column stripes —
+//! the Gram-construction primitive behind calibration and whitening.
+//!
 //! Worker-count plumbing: callers that own a thread budget pass `workers`
 //! explicitly; the [`Matrix`](super::matrix::Matrix) wrappers and the f32
 //! forward read a per-thread knob ([`workers`]/[`scoped_workers`]), which
@@ -101,6 +106,10 @@ pub const MC: usize = 64;
 pub const KC: usize = 256;
 /// Column-block size (packed B panel width); multiple of [`NR`].
 pub const NC: usize = 512;
+/// Column-stripe width of the SYRK task grid — much narrower than [`NC`]
+/// so the triangular column stripes expose parallelism at Gram sizes
+/// (`d_model`..`d_ff`); a multiple of [`NR`].
+pub const SYRK_NC: usize = 64;
 
 /// Operand layout of a product `C += op(A) · op(B)` (C always m×n row-major).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -208,7 +217,7 @@ pub fn gemm<T: Scalar>(
             for pc in (0..k).step_by(KC) {
                 let kc = KC.min(k - pc);
                 pack_b(layout, b, k, n, pc, kc, jc, nc, &mut bpack);
-                gemm_block(layout, 0, k, n, a, &bpack, &mut apack, c, pc, kc, jc, nc);
+                gemm_block(layout, 0, k, a, &bpack, &mut apack, c, pc, kc, nc, n, jc);
             }
         }
         return;
@@ -233,11 +242,109 @@ pub fn gemm<T: Scalar>(
                         let mut apack =
                             vec![T::ZERO; MC.min(rows.div_ceil(MR) * MR) * kc];
                         gemm_block(
-                            layout, row0, k, n, a, bref, &mut apack, chunk, pc, kc, jc, nc,
+                            layout, row0, k, a, bref, &mut apack, chunk, pc, kc, nc, n, jc,
                         );
                     });
                 }
             });
+        }
+    }
+}
+
+/// Symmetric rank-k update `C[upper] += AᵀA`, with `A` stored k×n row-major
+/// (k sample rows of dimension n — the calibration layout) and `C` n×n
+/// row-major.
+///
+/// Only the upper triangle (`j ≥ i`) of `C` is touched — callers that need
+/// the full Gram mirror once at the end ([`Matrix::gram`], the calibration
+/// collector's finalize) instead of per accumulation, which is where the
+/// ~2× flop saving over [`gemm_tn`]`(A, A)` comes from.  The triangle is
+/// tiled into [`SYRK_NC`]-wide column stripes (stripe `jc` covers rows
+/// `0..jc+nc`); each stripe runs the same packing + microkernel pipeline as
+/// [`gemm`] into a private buffer that is folded into `C` with one add per
+/// element, so:
+///
+/// * the per-element accumulation order is fixed (ascending k within K
+///   blocks, blocks ascending, one fold into C) — **bit-identical for
+///   every worker count**, and bit-identical to the upper triangle of
+///   `gemm_tn(A, A)` when `C` starts zeroed;
+/// * workers claim stripes dynamically (an atomic cursor): stripes get
+///   strictly more expensive left→right, so static chunking would idle the
+///   early workers.
+///
+/// [`Matrix::gram`]: super::matrix::Matrix::gram
+pub fn syrk_tn<T: Scalar>(n: usize, k: usize, a: &[T], c: &mut [T], workers: usize) {
+    assert_eq!(a.len(), k * n, "syrk: A size mismatch (k={k} n={n})");
+    assert_eq!(c.len(), n * n, "syrk: C size mismatch (n={n})");
+    if n == 0 || k == 0 {
+        return;
+    }
+    let tasks: Vec<(usize, usize)> = (0..n)
+        .step_by(SYRK_NC)
+        .map(|jc| (jc, SYRK_NC.min(n - jc)))
+        .collect();
+    let workers = workers.max(1).min(tasks.len());
+    if workers <= 1 {
+        for &(jc, nc) in &tasks {
+            let stripe = syrk_stripe(n, k, a, jc, nc);
+            add_stripe_upper(n, jc, nc, &stripe, c);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let done: std::sync::Mutex<Vec<(usize, Vec<T>)>> =
+        std::sync::Mutex::new(Vec::with_capacity(tasks.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, Vec<T>)> = Vec::new();
+                loop {
+                    let t = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if t >= tasks.len() {
+                        break;
+                    }
+                    let (jc, nc) = tasks[t];
+                    local.push((t, syrk_stripe(n, k, a, jc, nc)));
+                }
+                done.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut stripes = done.into_inner().unwrap();
+    stripes.sort_by_key(|&(t, _)| t);
+    for (t, stripe) in stripes {
+        let (jc, nc) = tasks[t];
+        add_stripe_upper(n, jc, nc, &stripe, c);
+    }
+}
+
+/// One SYRK column stripe: rows `0..jc+nc`, columns `jc..jc+nc` of `AᵀA`,
+/// accumulated into a fresh `(jc+nc)×nc` row-major buffer through the
+/// packed TN pipeline (A plays both operands; no transpose materialized).
+fn syrk_stripe<T: Scalar>(n: usize, k: usize, a: &[T], jc: usize, nc: usize) -> Vec<T> {
+    let rows = jc + nc;
+    let kc_cap = KC.min(k);
+    let mut bpack = vec![T::ZERO; kc_cap * nc.div_ceil(NR) * NR];
+    let mut apack = vec![T::ZERO; MC.min(rows.div_ceil(MR) * MR) * kc_cap];
+    let mut stripe = vec![T::ZERO; rows * nc];
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        pack_b(Layout::TN, a, k, n, pc, kc, jc, nc, &mut bpack);
+        gemm_block(Layout::TN, 0, k, a, &bpack, &mut apack, &mut stripe, pc, kc, nc, nc, 0);
+    }
+    stripe
+}
+
+/// Fold a stripe into `C`'s upper triangle (`j ≥ i` only — the stripe's
+/// below-diagonal corner of the diagonal block is dropped, leaving the
+/// strict lower triangle of `C` untouched).
+fn add_stripe_upper<T: Scalar>(n: usize, jc: usize, nc: usize, stripe: &[T], c: &mut [T]) {
+    for i in 0..jc + nc {
+        let lo = i.saturating_sub(jc);
+        let crow = &mut c[i * n + jc + lo..i * n + jc + nc];
+        let srow = &stripe[i * nc + lo..(i + 1) * nc];
+        for (cv, sv) in crow.iter_mut().zip(srow) {
+            *cv += *sv;
         }
     }
 }
@@ -296,30 +403,33 @@ pub fn naive_nn<T: Scalar>(m: usize, k: usize, n: usize, a: &[T], b: &[T], c: &m
 // ---------------------------------------------------------------------------
 
 /// Process one packed-B block: walk MC sub-blocks of C rows `[row0,
-/// row0 + rows)` (where `rows = c.len() / n`; `c` covers exactly that row
+/// row0 + rows)` (where `rows = c.len() / ldc`; `c` covers exactly that row
 /// range and `row0` is only needed to index into `a`), packing A panels into
 /// `apack` and running the microkernel against `bpack` (already packed for
-/// `[pc, pc+kc) × [jc, jc+nc)`).
+/// the `kc`-deep, `nc`-wide operand block).  The output geometry is
+/// explicit so SYRK stripes can reuse this: `ldc` is `c`'s row stride and
+/// `cj0` the column offset where the `nc`-wide block lands (`gemm` passes
+/// `ldc = n`, `cj0 = jc`; a stripe passes `ldc = nc`, `cj0 = 0`).
 #[allow(clippy::too_many_arguments)]
 fn gemm_block<T: Scalar>(
     layout: Layout,
     row0: usize,
     k: usize,
-    n: usize,
     a: &[T],
     bpack: &[T],
     apack: &mut [T],
     c: &mut [T],
     pc: usize,
     kc: usize,
-    jc: usize,
     nc: usize,
+    ldc: usize,
+    cj0: usize,
 ) {
     // a's leading dimension: k for row-major m×k (NN/NT); for TN the element
     // (i, p) of op(A) lives at a[p * m_full + i], and m_full is recovered
     // from the slice length.
     let m_full = a.len() / k;
-    let rows = c.len() / n;
+    let rows = c.len() / ldc;
     for ic in (0..rows).step_by(MC) {
         let mc = MC.min(rows - ic);
         pack_a(layout, a, m_full, k, row0 + ic, mc, pc, kc, apack);
@@ -332,7 +442,7 @@ fn gemm_block<T: Scalar>(
                 let mut acc = [[T::ZERO; NR]; MR];
                 microkernel(amicro, bmicro, &mut acc);
                 for (i, acc_row) in acc.iter().enumerate().take(mr_eff) {
-                    let crow = &mut c[(ic + ir + i) * n + jc + jr..][..nr_eff];
+                    let crow = &mut c[(ic + ir + i) * ldc + cj0 + jr..][..nr_eff];
                     for (cv, av) in crow.iter_mut().zip(acc_row.iter()) {
                         *cv += *av;
                     }
@@ -592,6 +702,90 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn syrk_matches_tn_upper_bitwise() {
+        // On a zeroed C, the SYRK upper triangle must be BIT-identical to
+        // gemm_tn(A, A) at every worker count, across tall/wide/tiny/1×1
+        // shapes and k values that straddle the KC block boundary; the
+        // strict lower triangle must stay untouched.
+        check("syrk == gemm_tn upper (bitwise)", 40, |g| {
+            let mut rng = g.rng.fork(0);
+            let n = *g.choose(&[1usize, 2, 3, 5, 17, 63, 64, 65, 130]);
+            let k = *g.choose(&[1usize, 2, 7, 33, 256, 300]);
+            let a: Vec<f64> = randn_vec(k * n, &mut rng);
+            let mut want = vec![0.0; n * n];
+            gemm_tn(n, k, n, &a, &a, &mut want, 1);
+            for workers in [1usize, 4] {
+                let mut got = vec![0.0; n * n];
+                syrk_tn(n, k, &a, &mut got, workers);
+                for i in 0..n {
+                    for j in 0..n {
+                        if j >= i {
+                            if got[i * n + j] != want[i * n + j] {
+                                return Err(format!(
+                                    "n={n} k={k} w={workers}: ({i},{j}) {} != {}",
+                                    got[i * n + j],
+                                    want[i * n + j]
+                                ));
+                            }
+                        } else if got[i * n + j] != 0.0 {
+                            return Err(format!(
+                                "n={n} k={k} w={workers}: lower ({i},{j}) written"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn syrk_accumulates_and_is_worker_deterministic() {
+        // C += semantics on a pre-filled C; with k > KC the fold order
+        // differs from gemm_tn's per-K-block adds, but must be identical
+        // across worker counts (one stripe fold per element).
+        let mut rng = Rng::new(15);
+        let (n, k) = (97usize, 300usize);
+        let a: Vec<f64> = randn_vec(k * n, &mut rng);
+        let mut base = vec![3.0; n * n];
+        syrk_tn(n, k, &a, &mut base, 1);
+        for workers in [2usize, 4, 9] {
+            let mut c = vec![3.0; n * n];
+            syrk_tn(n, k, &a, &mut c, workers);
+            assert_eq!(base, c, "workers={workers} must be bit-identical");
+        }
+        // Strict lower triangle keeps its prior contents.
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(base[i * n + j], 3.0);
+            }
+        }
+        // f32 instantiation (the f32 path has no Gram caller today, but the
+        // genericity contract is pinned like the GEMM one).
+        let af: Vec<f32> = randn_vec(k * n, &mut rng);
+        let mut c1 = vec![0.0f32; n * n];
+        let mut c4 = vec![0.0f32; n * n];
+        syrk_tn(n, k, &af, &mut c1, 1);
+        syrk_tn(n, k, &af, &mut c4, 4);
+        assert_eq!(c1, c4);
+    }
+
+    #[test]
+    fn syrk_degenerate_shapes() {
+        // k = 0: empty sum, C untouched.
+        let mut c = vec![2.0f64; 9];
+        syrk_tn(3, 0, &[], &mut c, 4);
+        assert_eq!(c, vec![2.0; 9]);
+        // n = 0: nothing to do.
+        let mut empty: Vec<f64> = Vec::new();
+        syrk_tn(0, 5, &[], &mut empty, 2);
+        // 1×1: C[0,0] += Σ a².
+        let mut c1 = vec![1.0f64];
+        syrk_tn(1, 2, &[3.0, 4.0], &mut c1, 4);
+        assert_eq!(c1, vec![26.0]);
     }
 
     #[test]

@@ -8,6 +8,12 @@
 //!
 //! Storage at rank k is `m·k + k·n`, the same as an SVD factor pair, so NID
 //! achieves the same compression ratio while being cheaper to compute.
+//!
+//! Stability note: the ID consumes only `R` and the pivot permutation from
+//! [`qr_pivoted`] — both of which are bit-identical to the retired
+//! unblocked pivoted QR (the blocked compact-WY rebuild only changed how
+//! `Q` is *formed*, pinned by `qr::tests`) — so NID factor outputs are
+//! unchanged by the level-3 QR substrate.
 
 use super::matrix::Matrix;
 use super::qr::qr_pivoted;

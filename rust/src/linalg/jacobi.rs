@@ -1,0 +1,161 @@
+//! Shared machinery for the Jacobi solvers ([`eig`](super::eig) and
+//! [`svd`](super::svd)): the sweep-ordering knob, the deterministic
+//! round-robin **tournament** schedule, and the row-parallel application of
+//! a round's disjoint column-pair rotations.
+//!
+//! A tournament sweep visits every unordered index pair exactly once, like
+//! a cyclic sweep, but groups the pairs into `n − 1` rounds of pairwise
+//! **disjoint** pairs (the circle method every round-robin league uses).
+//! Disjoint pairs touch disjoint columns, so all of a round's rotations can
+//! run concurrently; because the schedule is a pure function of `n` and
+//! each matrix element is transformed by exactly one rotation per round (in
+//! a fixed order), the result is **bit-identical at every worker count** —
+//! the property the compression engine's reproducibility contract demands
+//! from every parallel kernel in the substrate.
+
+use crate::util::threads::parallel_row_chunks;
+
+/// Minimum number of touched matrix elements before a rotation pass fans
+/// out over threads: a `thread::scope` spawn costs tens of microseconds,
+/// so rounds below this bound run inline.  Serial and parallel execution
+/// are bit-identical, so gating on problem size (never on worker count
+/// alone) cannot change results.  Unit tests override the gate (to 1, so
+/// every non-empty round qualifies) and the determinism tests exercise
+/// the parallel paths at test-sized matrices.
+#[cfg(not(test))]
+pub(crate) const PAR_MIN_ELEMS: usize = 1 << 15;
+#[cfg(test)]
+pub(crate) const PAR_MIN_ELEMS: usize = 1;
+
+/// Rotation-sweep ordering for the Jacobi eigen/SVD solvers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum JacobiOrdering {
+    /// Sequential row-cyclic sweeps — the historical default.  The SVD's
+    /// cyclic sweep is unchanged from the seed pipeline; the eigensolver's
+    /// differs only in its rotation-skip threshold (now norm-relative, see
+    /// [`super::eig::sym_eig`]).  Deterministic and independent of worker
+    /// count either way.
+    #[default]
+    Cyclic,
+    /// Deterministic round-robin tournament: `n − 1` rounds of disjoint
+    /// pairs per sweep, rotations within a round computed from the
+    /// round-start matrix and dispatched over the caller's worker share.
+    /// Bit-identical across worker counts for a fixed schedule; the
+    /// rotation *sequence* differs from `Cyclic`, so singular values /
+    /// eigenvalues agree only to convergence tolerance, not bitwise.
+    Tournament,
+}
+
+/// The circle-method round-robin schedule over `n` players: `n − 1` rounds
+/// (n even; a bye pads odd `n`), each a maximal matching of disjoint pairs
+/// `(p, q)` with `p < q`; every unordered pair appears in exactly one round.
+/// Pure function of `n` — the fixed schedule is what makes the tournament
+/// solvers reproducible.
+pub fn tournament_rounds(n: usize) -> Vec<Vec<(usize, usize)>> {
+    if n < 2 {
+        return Vec::new();
+    }
+    let m = if n % 2 == 0 { n } else { n + 1 }; // pad odd n with a bye
+    let mut players: Vec<usize> = (0..m).collect();
+    let mut rounds = Vec::with_capacity(m - 1);
+    for _ in 0..m - 1 {
+        let mut pairs = Vec::with_capacity(m / 2);
+        for i in 0..m / 2 {
+            let (a, b) = (players[i], players[m - 1 - i]);
+            if a < n && b < n {
+                pairs.push((a.min(b), a.max(b)));
+            }
+        }
+        rounds.push(pairs);
+        // Rotate: pin players[0], shift the rest one slot clockwise.
+        let last = players[m - 1];
+        for i in (2..m).rev() {
+            players[i] = players[i - 1];
+        }
+        players[1] = last;
+    }
+    rounds
+}
+
+/// Apply one round's column-pair rotations `(p, q, c, s)` to a row-major
+/// buffer: for every row, `(x_p, x_q) ← (c·x_p − s·x_q, s·x_p + c·x_q)`.
+/// The pairs are disjoint, so each element is touched by exactly one
+/// rotation and the per-row loop parallelizes over contiguous row chunks
+/// with a bit-identical result at every worker count.  Rounds touching
+/// fewer than [`PAR_MIN_ELEMS`] elements run inline — the spawn would
+/// cost more than the arithmetic.
+pub(crate) fn apply_col_rotations(
+    data: &mut [f64],
+    width: usize,
+    rots: &[(usize, usize, f64, f64)],
+    workers: usize,
+) {
+    let rows = if width == 0 { 0 } else { data.len() / width };
+    let workers = if rows * rots.len() * 2 < PAR_MIN_ELEMS { 1 } else { workers };
+    parallel_row_chunks(data, width, workers, |chunk| {
+        for row in chunk.chunks_mut(width) {
+            for &(p, q, c, s) in rots {
+                let xp = row[p];
+                let xq = row[q];
+                row[p] = c * xp - s * xq;
+                row[q] = s * xp + c * xq;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tournament_covers_every_pair_exactly_once() {
+        for n in [2usize, 3, 4, 5, 8, 9, 16, 17] {
+            let rounds = tournament_rounds(n);
+            assert_eq!(rounds.len(), if n % 2 == 0 { n - 1 } else { n });
+            let mut seen = vec![vec![0usize; n]; n];
+            for round in &rounds {
+                // Disjoint within a round.
+                let mut used = vec![false; n];
+                for &(p, q) in round {
+                    assert!(p < q && q < n, "n={n}: bad pair ({p},{q})");
+                    assert!(!used[p] && !used[q], "n={n}: index reused in round");
+                    used[p] = true;
+                    used[q] = true;
+                    seen[p][q] += 1;
+                }
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    assert_eq!(seen[p][q], 1, "n={n}: pair ({p},{q}) seen {} times", seen[p][q]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tournament_is_deterministic() {
+        assert_eq!(tournament_rounds(9), tournament_rounds(9));
+        assert!(tournament_rounds(0).is_empty());
+        assert!(tournament_rounds(1).is_empty());
+    }
+
+    #[test]
+    fn col_rotations_match_serial_at_any_worker_count() {
+        let width = 10usize;
+        let rows = 7usize;
+        let base: Vec<f64> = (0..rows * width).map(|i| (i as f64).sin()).collect();
+        let rots = vec![(0usize, 3usize, 0.8, 0.6), (1, 9, 0.6, -0.8), (4, 5, 1.0, 0.0)];
+        let mut serial = base.clone();
+        apply_col_rotations(&mut serial, width, &rots, 1);
+        for workers in [2usize, 4] {
+            let mut par = base.clone();
+            apply_col_rotations(&mut par, width, &rots, workers);
+            assert_eq!(serial, par);
+        }
+        // Untouched columns stay bit-identical to the input.
+        for r in 0..rows {
+            assert_eq!(serial[r * width + 2], base[r * width + 2]);
+        }
+    }
+}

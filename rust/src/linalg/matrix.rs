@@ -268,6 +268,25 @@ impl Matrix {
         c
     }
 
+    /// The Gram matrix `selfᵀ · self` via the packed SYRK kernel
+    /// ([`gemm::syrk_tn`]): only the upper triangle is computed (half the
+    /// flops of `matmul_tn(self)`) and then mirrored.  Bit-identical to
+    /// `self.matmul_tn(self)` — SYRK's upper triangle matches the TN path
+    /// exactly, and the TN path's lower triangle is its upper's mirror
+    /// (products commute and sum in the same k-order) — at every worker
+    /// count.
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut c = Matrix::zeros(n, n);
+        gemm::syrk_tn(n, self.rows, &self.data, &mut c.data, gemm::workers());
+        for i in 0..n {
+            for j in (i + 1)..n {
+                c.data[j * n + i] = c.data[i * n + j];
+            }
+        }
+        c
+    }
+
     /// Matrix-vector product (kernel's unrolled `gemv`).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, x.len());
@@ -456,6 +475,19 @@ mod tests {
     fn fro_norm_matches_definition() {
         let a = Matrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
         assert!((a.fro_norm() - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gram_is_bitwise_matmul_tn() {
+        check("AᵀA via SYRK == matmul_tn (bitwise)", 15, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(1, 40);
+            let n = g.usize_in(1, 40);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let via_syrk = a.gram();
+            let via_tn = a.matmul_tn(&a);
+            ok(via_syrk.data == via_tn.data, "gram != matmul_tn")
+        });
     }
 
     #[test]

@@ -13,10 +13,15 @@
 //! * [`matrix`] — row-major [`Matrix`]; its `matmul`/`matmul_tn`/
 //!   `matmul_nt`/`matvec` are thin wrappers over the kernel's NN/TN/NT/gemv
 //!   entry points.
-//! * [`qr`] — Householder QR, thin QR, LQ, and column-pivoted QR.
+//! * [`qr`] — blocked compact-WY Householder QR (panel factorization +
+//!   two-GEMM trailing updates), thin QR, LQ, and column-pivoted QR.
 //! * [`chol`] — Cholesky factorization with PSD-safe ridge handling.
-//! * [`eig`] — cyclic Jacobi symmetric eigendecomposition.
-//! * [`svd`] — one-sided Jacobi SVD + truncation (Eckart–Young).
+//! * [`eig`] — Jacobi symmetric eigendecomposition (cyclic or parallel
+//!   tournament ordering).
+//! * [`svd`] — one-sided Jacobi SVD + truncation (Eckart–Young), same
+//!   ordering choices.
+//! * [`jacobi`] — the shared ordering knob, the deterministic round-robin
+//!   tournament schedule, and the row-parallel rotation apply.
 //! * [`rsvd`] — randomized range-finder SVD (the truncation fast path) and
 //!   the [`rsvd::SvdPolicy`] that arbitrates between it and exact Jacobi.
 //! * [`id`] — low-rank column interpolative decomposition.
@@ -30,6 +35,7 @@ pub mod chol;
 pub mod eig;
 pub mod gemm;
 pub mod id;
+pub mod jacobi;
 pub mod matrix;
 pub mod qr;
 pub mod rsvd;
@@ -37,10 +43,11 @@ pub mod solve;
 pub mod svd;
 
 pub use chol::cholesky;
-pub use eig::sym_eig;
+pub use eig::{sym_eig, sym_eig_ordered};
 pub use gemm::Scalar;
 pub use id::interpolative;
+pub use jacobi::JacobiOrdering;
 pub use matrix::Matrix;
 pub use qr::{lq, qr_thin};
 pub use rsvd::{svd_for_rank, SvdPolicy};
-pub use svd::{svd_thin, Svd};
+pub use svd::{svd_thin, svd_thin_ordered, Svd};

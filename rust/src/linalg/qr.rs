@@ -1,17 +1,262 @@
 //! Householder QR, thin QR, LQ, and column-pivoted (rank-revealing) QR.
+//!
+//! [`qr_thin`] is a **blocked compact-WY** factorization: reflectors are
+//! computed one panel ([`QR_NB`] columns) at a time with the classic
+//! level-2 loop, then the whole panel is applied to the trailing matrix as
+//! `(I − V T Vᵀ)ᵀ A₂ = A₂ − V (Tᵀ (Vᵀ A₂))` — two GEMMs through the tiled
+//! kernel plus a small triangular multiply — so the O(mn²) bulk of the
+//! factorization rides the kernel layer ([`crate::linalg::gemm`]) instead
+//! of one reflector-at-a-time level-2 updates.  Q is accumulated the same
+//! way (panels applied to the identity in reverse, two GEMMs each).  The
+//! rSVD range finder calls this per sketch; the speedup is tracked by
+//! `benches/perf_linalg.rs` against [`qr_thin_unblocked`], the retired
+//! level-2 path kept as the parity reference.
+//!
+//! [`qr_pivoted`] keeps its sequential factorization loop — column
+//! pivoting needs the updated column norms after every reflector, which is
+//! inherently level-2 — but forms Q through the same blocked compact-WY
+//! apply.  Its R, pivot sequence, and therefore everything the column-ID
+//! path ([`crate::linalg::id`]) consumes are bit-identical to the retired
+//! [`qr_pivoted_unblocked`] (pinned by tests below).
 
+use super::gemm;
 use super::matrix::Matrix;
 
+/// Panel width of the blocked QR (columns factored level-2 before each
+/// compact-WY trailing update).  32 balances the O(m·NB²) panel work
+/// against GEMM efficiency at the d_model..d_ff sizes the engine hits.
+pub const QR_NB: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Householder + compact-WY building blocks.
+// ---------------------------------------------------------------------------
+
+/// Compute the Householder reflector annihilating column `col` of `work`
+/// below row `k`, in the normalized convention `H = I − τ u uᵀ` with
+/// `u[0] = 1`.  Writes `u` into `u_out` (length `m − k`), sets the column
+/// to its post-reflection value `(α, 0, …)ᵀ`, and returns `τ` (0 for a
+/// numerically zero column, i.e. `H = I` and the column left untouched).
+fn house(work: &mut Matrix, k: usize, col: usize, u_out: &mut [f64]) -> f64 {
+    let m = work.rows;
+    let mut norm2 = 0.0;
+    for i in k..m {
+        let x = work[(i, col)];
+        norm2 += x * x;
+    }
+    let norm = norm2.sqrt();
+    if norm <= f64::MIN_POSITIVE {
+        u_out.iter_mut().for_each(|x| *x = 0.0);
+        return 0.0;
+    }
+    let x0 = work[(k, col)];
+    let alpha = if x0 >= 0.0 { -norm } else { norm };
+    // v₀ = x₀ − α = x₀ + sign(x₀)·‖x‖ never cancels (|v₀| ≥ ‖x‖ > 0).
+    let v0 = x0 - alpha;
+    u_out[0] = 1.0;
+    let mut unorm2 = 1.0;
+    for i in (k + 1)..m {
+        let ui = work[(i, col)] / v0;
+        u_out[i - k] = ui;
+        unorm2 += ui * ui;
+    }
+    work[(k, col)] = alpha;
+    for i in (k + 1)..m {
+        work[(i, col)] = 0.0;
+    }
+    2.0 / unorm2
+}
+
+/// Apply `H = I − τ u uᵀ` (acting on rows `k..m`) to columns `cols` of
+/// `work` — the level-2 update used inside a panel.
+fn apply_house(work: &mut Matrix, k: usize, u: &[f64], tau: f64, cols: std::ops::Range<usize>) {
+    let m = work.rows;
+    for j in cols {
+        let mut dot = 0.0;
+        for i in k..m {
+            dot += u[i - k] * work[(i, j)];
+        }
+        let beta = tau * dot;
+        for i in k..m {
+            work[(i, j)] -= beta * u[i - k];
+        }
+    }
+}
+
+/// Assemble the dense unit-lower-trapezoidal reflector block `V`
+/// (`(m − k0) × (k1 − k0)`) for reflectors `k0..k1` stored in the
+/// normalized arena (reflector `k` at `varena[k·m ..]`, length `m − k`).
+fn panel_v(varena: &[f64], m: usize, k0: usize, k1: usize) -> Matrix {
+    let nb = k1 - k0;
+    let mut v = Matrix::zeros(m - k0, nb);
+    for jj in 0..nb {
+        let k = k0 + jj;
+        let u = &varena[k * m..k * m + (m - k)];
+        for (i, &ui) in u.iter().enumerate() {
+            v[(jj + i, jj)] = ui;
+        }
+    }
+    v
+}
+
+/// The compact-WY `T` factor (upper triangular, LAPACK `larft` forward
+/// columnwise recurrence): `H₁ H₂ ⋯ H_nb = I − V T Vᵀ`.  A zero `τ`
+/// yields an all-zero row and column of `T`, i.e. that reflector drops out
+/// of the block exactly.
+fn build_t(v: &Matrix, taus: &[f64]) -> Matrix {
+    let nb = v.cols;
+    let mut t = Matrix::zeros(nb, nb);
+    let mut w = vec![0.0; nb];
+    for j in 0..nb {
+        let tau = taus[j];
+        if tau == 0.0 {
+            continue;
+        }
+        // w = V[:, 0..j]ᵀ v_j (v_j vanishes above its unit at row j).
+        for (p, wp) in w.iter_mut().enumerate().take(j) {
+            let mut s = 0.0;
+            for i in j..v.rows {
+                s += v[(i, p)] * v[(i, j)];
+            }
+            *wp = s;
+        }
+        for p in 0..j {
+            let mut s = 0.0;
+            for l in p..j {
+                s += t[(p, l)] * w[l];
+            }
+            t[(p, j)] = -tau * s;
+        }
+        t[(j, j)] = tau;
+    }
+    t
+}
+
+/// `−Tᵀ·W` for upper-triangular `T` (the negation folds the block
+/// reflector's subtraction into the accumulate-only GEMM that follows).
+fn neg_trmm_upper_t(t: &Matrix, w: &Matrix) -> Matrix {
+    let nb = t.rows;
+    let mut out = Matrix::zeros(nb, w.cols);
+    for p in 0..nb {
+        for c in 0..w.cols {
+            let mut s = 0.0;
+            for l in 0..=p {
+                s += t[(l, p)] * w[(l, c)];
+            }
+            out[(p, c)] = -s;
+        }
+    }
+    out
+}
+
+/// `−T·W` for upper-triangular `T` (the Q-formation variant: panels are
+/// applied un-transposed when accumulating Q).
+fn neg_trmm_upper(t: &Matrix, w: &Matrix) -> Matrix {
+    let nb = t.rows;
+    let mut out = Matrix::zeros(nb, w.cols);
+    for p in 0..nb {
+        for c in 0..w.cols {
+            let mut s = 0.0;
+            for l in p..nb {
+                s += t[(p, l)] * w[(l, c)];
+            }
+            out[(p, c)] = -s;
+        }
+    }
+    out
+}
+
+/// Accumulate `Q = H₀ H₁ ⋯ H_{r−1} · [I_r; 0]` (m×r, orthonormal columns)
+/// by applying the stored reflector panels to the identity in reverse,
+/// each as `Q ← Q − V (T (Vᵀ Q))` — two GEMMs per panel on the contiguous
+/// trailing row block `Q[k0.., :]`.
+fn form_q_blocked(varena: &[f64], taus: &[f64], m: usize, r: usize) -> Matrix {
+    let mut q = Matrix::zeros(m, r);
+    for i in 0..r {
+        q[(i, i)] = 1.0;
+    }
+    let mut panel_starts: Vec<usize> = (0..r).step_by(QR_NB).collect();
+    panel_starts.reverse();
+    for k0 in panel_starts {
+        let k1 = (k0 + QR_NB).min(r);
+        if taus[k0..k1].iter().all(|&t| t == 0.0) {
+            continue;
+        }
+        let v = panel_v(varena, m, k0, k1);
+        let t = build_t(&v, &taus[k0..k1]);
+        let nb = k1 - k0;
+        let rows = m - k0;
+        // W = Vᵀ Q[k0.., :] — the trailing rows of Q are contiguous.
+        let mut w = Matrix::zeros(nb, r);
+        gemm::gemm_tn(nb, rows, r, &v.data, &q.data[k0 * r..], &mut w.data, gemm::workers());
+        let w2 = neg_trmm_upper(&t, &w);
+        gemm::gemm_nn(rows, nb, r, &v.data, &w2.data, &mut q.data[k0 * r..], gemm::workers());
+    }
+    q
+}
+
+// ---------------------------------------------------------------------------
+// Thin QR (blocked) + the retired unblocked reference.
+// ---------------------------------------------------------------------------
+
 /// Thin QR: `A (m×n) = Q (m×r) R (r×n)` with `r = min(m, n)`,
-/// Q having orthonormal columns and R upper-triangular.
+/// Q having orthonormal columns and R upper-triangular.  Blocked
+/// compact-WY: see the module docs.
 pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    let r = m.min(n);
+    let mut work = a.clone();
+    // Normalized Householder arena (stride m; reflector k uses the first
+    // m−k entries, u[0] = 1) plus the τ scalars — everything the compact-WY
+    // panels and the blocked Q formation need.
+    let mut varena = vec![0.0; r * m];
+    let mut taus = vec![0.0; r];
+    let mut k0 = 0;
+    while k0 < r {
+        let k1 = (k0 + QR_NB).min(r);
+        // Panel factorization (level 2, panel columns only).
+        for k in k0..k1 {
+            let tau = house(&mut work, k, k, &mut varena[k * m..k * m + (m - k)]);
+            taus[k] = tau;
+            if tau != 0.0 && k + 1 < k1 {
+                apply_house(&mut work, k, &varena[k * m..k * m + (m - k)], tau, (k + 1)..k1);
+            }
+        }
+        // Compact-WY trailing update: A₂ ← A₂ − V (Tᵀ (Vᵀ A₂)).
+        if k1 < n && taus[k0..k1].iter().any(|&t| t != 0.0) {
+            let v = panel_v(&varena, m, k0, k1);
+            let t = build_t(&v, &taus[k0..k1]);
+            let mut a2 = work.submatrix(k0, m, k1, n);
+            let w = v.matmul_tn(&a2);
+            let w2 = neg_trmm_upper_t(&t, &w);
+            gemm::gemm_nn(m - k0, k1 - k0, n - k1, &v.data, &w2.data, &mut a2.data, gemm::workers());
+            for i in k0..m {
+                for j in k1..n {
+                    work[(i, j)] = a2[(i - k0, j - k1)];
+                }
+            }
+        }
+        k0 = k1;
+    }
+    // R: upper triangle of work, first r rows.
+    let mut rmat = Matrix::zeros(r, n);
+    for i in 0..r {
+        for j in i..n {
+            rmat[(i, j)] = work[(i, j)];
+        }
+    }
+    let q = form_q_blocked(&varena, &taus, m, r);
+    (q, rmat)
+}
+
+/// The retired unblocked (level-2) thin QR, kept as the parity reference
+/// for the property tests and the speedup baseline for
+/// `benches/perf_linalg.rs`.
+pub fn qr_thin_unblocked(a: &Matrix) -> (Matrix, Matrix) {
     let (m, n) = (a.rows, a.cols);
     let r = m.min(n);
     let mut work = a.clone(); // becomes R in its upper triangle
     // Householder vectors live in one flat arena (stride m; reflector k uses
-    // the first m-k entries) with their squared norms cached — the old
-    // per-column `Vec` allocations were measurable in the decomposition
-    // inner loops that call QR per sketch / per sweep.
+    // the first m-k entries) with their squared norms cached.
     let mut varena = vec![0.0; r * m];
     let mut vnorm2s = vec![0.0; r];
     for k in 0..r {
@@ -91,10 +336,55 @@ pub fn lq(a: &Matrix) -> (Matrix, Matrix) {
     (r.transpose(), q.transpose())
 }
 
+// ---------------------------------------------------------------------------
+// Column-pivoted QR.
+// ---------------------------------------------------------------------------
+
 /// Column-pivoted QR: returns `(Q, R, perm)` with `A[:, perm] = Q R` and the
 /// diagonal of R non-increasing in magnitude — the rank-revealing property
 /// the interpolative decomposition builds on.
+///
+/// The factorization loop is sequential (pivot selection needs the updated
+/// column norms after every reflector); `R` and `perm` are bit-identical to
+/// [`qr_pivoted_unblocked`].  Q is formed through the blocked compact-WY
+/// apply ([`form_q_blocked`]), which is where the level-3 speedup lives.
 pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
+    let (work, varena, vnorm2s, perm) = qr_pivoted_factor(a);
+    let (m, n) = (a.rows, a.cols);
+    let r = m.min(n);
+    let mut rmat = Matrix::zeros(r, n);
+    for i in 0..r {
+        for j in i..n {
+            rmat[(i, j)] = work[(i, j)];
+        }
+    }
+    // Convert the unnormalized arena (v, ‖v‖²) to the normalized one
+    // (u = v/v₀, τ = 2v₀²/‖v‖²) the compact-WY panels consume.
+    let mut uarena = vec![0.0; r * m];
+    let mut taus = vec![0.0; r];
+    for k in 0..r {
+        let vnorm2 = vnorm2s[k];
+        if vnorm2 <= f64::MIN_POSITIVE {
+            continue;
+        }
+        let v = &varena[k * m..k * m + (m - k)];
+        let v0 = v[0]; // x₀ + sign(x₀)·‖x‖: never zero when ‖v‖² > 0
+        let u = &mut uarena[k * m..k * m + (m - k)];
+        u[0] = 1.0;
+        for i in 1..v.len() {
+            u[i] = v[i] / v0;
+        }
+        taus[k] = 2.0 * v0 * v0 / vnorm2;
+    }
+    let q = form_q_blocked(&uarena, &taus, m, r);
+    (q, rmat, perm)
+}
+
+/// The shared sequential pivoted factorization: returns the reduced
+/// `work` (R in its upper triangle), the unnormalized Householder arena +
+/// squared norms, and the pivot permutation.
+#[allow(clippy::type_complexity)]
+fn qr_pivoted_factor(a: &Matrix) -> (Matrix, Vec<f64>, Vec<f64>, Vec<usize>) {
     let (m, n) = (a.rows, a.cols);
     let r = m.min(n);
     let mut work = a.clone();
@@ -102,7 +392,7 @@ pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
     let mut colnorm2: Vec<f64> = (0..n)
         .map(|j| (0..m).map(|i| work[(i, j)] * work[(i, j)]).sum())
         .collect();
-    // Same flat Householder arena as `qr_thin` (no per-column Vec allocs).
+    // Same flat Householder arena as the thin path (no per-column allocs).
     let mut varena = vec![0.0; r * m];
     let mut vnorm2s = vec![0.0; r];
     for k in 0..r {
@@ -159,6 +449,16 @@ pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
         }
         colnorm2[k] = 0.0;
     }
+    (work, varena, vnorm2s, perm)
+}
+
+/// The retired fully-unblocked pivoted QR (reverse reflector-at-a-time Q
+/// formation) — the differential reference pinning [`qr_pivoted`]'s pivot
+/// agreement and Q parity.
+pub fn qr_pivoted_unblocked(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
+    let (work, varena, vnorm2s, perm) = qr_pivoted_factor(a);
+    let (m, n) = (a.rows, a.cols);
+    let r = m.min(n);
     let mut rmat = Matrix::zeros(r, n);
     for i in 0..r {
         for j in i..n {
@@ -229,6 +529,28 @@ mod tests {
     }
 
     #[test]
+    fn blocked_qr_matches_unblocked() {
+        // Sizes straddle the QR_NB = 32 panel boundary so multi-panel
+        // trailing updates and Q accumulation are exercised; both paths
+        // use the same sign convention, so Q and R agree to rounding.
+        check("blocked QR == unblocked QR", 20, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = *g.choose(&[3usize, 8, 31, 33, 40, 70]);
+            let n = *g.choose(&[1usize, 5, 32, 45, 64]);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (qb, rb) = qr_thin(&a);
+            let (qu, ru) = qr_thin_unblocked(&a);
+            let scale = 1.0 + a.fro_norm();
+            ok(qb.dist(&qu) < 1e-10 * scale, "Q agree")?;
+            ok(rb.dist(&ru) < 1e-10 * scale, "R agree")?;
+            // The acceptance bar: orthogonality of the blocked Q at 1e-12.
+            ok(orthonormal_cols(&qb, 1e-12), "‖QᵀQ−I‖ ≤ 1e-12")?;
+            ok(qb.matmul(&rb).dist(&a) < 1e-11 * scale, "A=QR (blocked)")?;
+            Ok(())
+        });
+    }
+
+    #[test]
     fn qr_handles_rank_deficiency() {
         let mut rng = Rng::new(5);
         // Rank-2 matrix 6x4.
@@ -237,6 +559,22 @@ mod tests {
         let a = b.matmul(&c);
         let (q, r) = qr_thin(&a);
         assert!(q.matmul(&r).dist(&a) < 1e-9);
+    }
+
+    #[test]
+    fn qr_handles_zero_columns() {
+        // A column of exact zeros → τ = 0 reflector must drop out of the
+        // compact-WY block without contaminating T.
+        let mut rng = Rng::new(7);
+        let mut a = Matrix::randn(40, 36, 1.0, &mut rng);
+        for i in 0..40 {
+            a[(i, 2)] = 0.0;
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).dist(&a) < 1e-9 * (1.0 + a.fro_norm()));
+        let (qu, ru) = qr_thin_unblocked(&a);
+        assert!(q.dist(&qu) < 1e-9 * (1.0 + a.fro_norm()));
+        assert!(r.dist(&ru) < 1e-9 * (1.0 + a.fro_norm()));
     }
 
     #[test]
@@ -276,6 +614,26 @@ mod tests {
             for w in d.windows(2) {
                 ok(w[0].abs() + 1e-9 >= w[1].abs(), "diag non-increasing")?;
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pivoted_qr_agrees_with_unblocked_reference() {
+        // Pivot agreement must be EXACT (the shared factorization makes it
+        // structural, and the column-ID's skeleton selection rides on it);
+        // R is bit-identical too; Q differs only by blocked-apply rounding.
+        check("pivoted QR == unblocked reference", 15, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = *g.choose(&[4usize, 20, 33, 50]);
+            let n = *g.choose(&[3usize, 16, 40, 64]);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (qb, rb, pb) = qr_pivoted(&a);
+            let (qu, ru, pu) = qr_pivoted_unblocked(&a);
+            ok(pb == pu, "pivot agreement")?;
+            ok(rb.data == ru.data, "R bit-identical")?;
+            ok(qb.dist(&qu) < 1e-10 * (1.0 + a.fro_norm()), "Q agree")?;
+            ok(orthonormal_cols(&qb, 1e-12), "‖QᵀQ−I‖ ≤ 1e-12")?;
             Ok(())
         });
     }

@@ -25,9 +25,10 @@
 //! — when it fails, the matrix falls back to exact Jacobi, so paper tables
 //! stay meaningful no matter what the spectrum looks like.
 
+use super::jacobi::JacobiOrdering;
 use super::matrix::Matrix;
 use super::qr::qr_thin;
-use super::svd::{svd_thin, Svd};
+use super::svd::{svd_thin, svd_thin_ordered, Svd};
 use crate::util::rng::Rng;
 
 /// Which SVD implementation to use for rank-k truncations.
@@ -59,6 +60,12 @@ pub struct SvdPolicy {
     pub max_rel_err: Option<f64>,
     /// Sketch seed — fixed so runs are deterministic across worker counts.
     pub seed: u64,
+    /// Sweep ordering for the exact Jacobi SVD (the `Exact` mode and every
+    /// certificate fallback).  `Cyclic` (default) is bit-identical to the
+    /// seed pipeline; `Tournament` parallelizes rotation rounds over the
+    /// calling thread's GEMM worker share with a worker-count-independent
+    /// result (`--jacobi tournament`).
+    pub ordering: JacobiOrdering,
 }
 
 impl SvdPolicy {
@@ -70,6 +77,7 @@ impl SvdPolicy {
             power_iters: 2,
             max_rel_err: None,
             seed: 0x5EED_CAFE,
+            ordering: JacobiOrdering::Cyclic,
         }
     }
 
@@ -81,6 +89,12 @@ impl SvdPolicy {
     /// Randomized whenever the sketch fits, no certificate (benchmarks).
     pub fn randomized() -> SvdPolicy {
         SvdPolicy { mode: SvdMode::Randomized, ..SvdPolicy::exact() }
+    }
+
+    /// Builder: select the Jacobi sweep ordering for the exact paths.
+    pub fn with_ordering(mut self, ordering: JacobiOrdering) -> SvdPolicy {
+        self.ordering = ordering;
+        self
     }
 
     /// Does this policy route an `m×n` rank-`k` truncation to the sketch?
@@ -177,14 +191,20 @@ pub fn rsvd(a: &Matrix, k: usize, oversample: usize, power_iters: usize, rng: &m
 /// exact one-sided Jacobi otherwise.  The exact branch is bit-identical to
 /// `svd_thin(a).truncate(k)`.
 pub fn svd_for_rank(a: &Matrix, k: usize, policy: &SvdPolicy) -> Svd {
+    // Exact sweeps run under the policy's ordering; the rotation rounds of
+    // a tournament sweep draw on the calling thread's GEMM worker share —
+    // the same ThreadBudget split the outer engine shards set up.
+    let exact = || {
+        svd_thin_ordered(a, policy.ordering, crate::linalg::gemm::workers()).truncate(k)
+    };
     if !policy.wants_randomized(a.rows, a.cols, k) {
-        return svd_thin(a).truncate(k);
+        return exact();
     }
     let mut rng = Rng::new(policy.seed);
     let r = rsvd(a, k, policy.oversample, policy.power_iters, &mut rng);
     if let Some(eps) = policy.max_rel_err {
         if !r.certified(eps, a.fro_norm()) {
-            return svd_thin(a).truncate(k);
+            return exact();
         }
     }
     r.svd
@@ -255,6 +275,26 @@ mod tests {
         // k = 0 never sketches.
         assert!(!p.wants_randomized(256, 128, 0));
         assert!(!SvdPolicy::exact().wants_randomized(256, 128, 16));
+    }
+
+    #[test]
+    fn tournament_policy_is_worker_independent() {
+        // An exact policy with the tournament ordering must give the same
+        // bits whatever GEMM worker share the calling thread advertises.
+        let mut rng = Rng::new(14);
+        let a = Matrix::randn(30, 20, 1.0, &mut rng);
+        let policy = SvdPolicy::exact().with_ordering(JacobiOrdering::Tournament);
+        let base = svd_for_rank(&a, 6, &policy);
+        let _g = crate::linalg::gemm::scoped_workers(4);
+        let par = svd_for_rank(&a, 6, &policy);
+        assert_eq!(base.s, par.s);
+        assert_eq!(base.u.data, par.u.data);
+        assert_eq!(base.v.data, par.v.data);
+        // And it still reconstructs like the cyclic truncation does.
+        let cyc = svd_for_rank(&a, 6, &SvdPolicy::exact());
+        let err_t = base.u.scale_cols(&base.s).matmul_nt(&base.v).dist(&a);
+        let err_c = cyc.u.scale_cols(&cyc.s).matmul_nt(&cyc.v).dist(&a);
+        assert!((err_t - err_c).abs() < 1e-8 * (1.0 + err_c));
     }
 
     #[test]

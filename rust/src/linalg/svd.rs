@@ -5,8 +5,23 @@
 //! values), and plenty fast at the matrix sizes this system decomposes
 //! (weight matrices up to ~1k on a side).  `svd_thin` handles both tall and
 //! wide inputs by transposing internally.
+//!
+//! Two sweep orderings ([`JacobiOrdering`]):
+//!
+//! * **Cyclic** (default) — the historical sequential row-cyclic sweep,
+//!   bit-identical to the seed pipeline.
+//! * **Tournament** — each sweep is `n − 1` rounds of pairwise-disjoint
+//!   column pairs (round-robin circle schedule, [`super::jacobi`]).  A
+//!   round's rotations touch disjoint columns, so they are computed from
+//!   the round-start matrix and dispatched over the caller's worker share;
+//!   the fixed schedule makes the result **bit-identical at every worker
+//!   count** (pinned below), while rotating in a different order than
+//!   `Cyclic` (values agree to convergence tolerance, not bitwise).
 
+use super::jacobi::{apply_col_rotations, tournament_rounds, PAR_MIN_ELEMS};
+pub use super::jacobi::JacobiOrdering;
 use super::matrix::Matrix;
+use crate::util::threads::parallel_map;
 
 /// Thin SVD `A (m×n) = U (m×r) diag(s) Vᵀ (r×n)` with `r = min(m,n)` and
 /// singular values in non-increasing order.
@@ -76,19 +91,68 @@ impl Svd {
     }
 }
 
-/// Compute the thin SVD of `a` by one-sided Jacobi.
+/// Compute the thin SVD of `a` by one-sided Jacobi (cyclic ordering,
+/// single-threaded — bit-identical to the seed pipeline).
 pub fn svd_thin(a: &Matrix) -> Svd {
+    svd_thin_ordered(a, JacobiOrdering::Cyclic, 1)
+}
+
+/// Thin SVD with an explicit sweep [`JacobiOrdering`] and worker count.
+/// `Cyclic` ignores `workers` (the sequential sweep is inherently ordered)
+/// and reproduces [`svd_thin`] bit-for-bit; `Tournament` dispatches each
+/// round's disjoint column-pair rotations over `workers` scoped threads
+/// (callers inside an outer fan-out pass their
+/// [`gemm::workers`](super::gemm::workers) share) with a bit-identical
+/// result at every worker count.
+pub fn svd_thin_ordered(a: &Matrix, ordering: JacobiOrdering, workers: usize) -> Svd {
     if a.rows >= a.cols {
-        svd_tall(a)
+        svd_tall(a, ordering, workers)
     } else {
         // A = U S Vᵀ  ⇔  Aᵀ = V S Uᵀ.
-        let t = svd_tall(&a.transpose());
+        let t = svd_tall(&a.transpose(), ordering, workers);
         Svd { u: t.v, s: t.s, v: t.u }
     }
 }
 
+/// Column-pair Gram entries → the rotation `(c, s)` zeroing the pair's
+/// off-diagonal Gram entry, or `None` when the pair is already orthogonal
+/// to relative tolerance `eps` (the convergence criterion).
+fn pair_rotation(w: &[f64], m: usize, p: usize, q: usize, eps: f64) -> Option<(f64, f64)> {
+    let wp = &w[p * m..(p + 1) * m];
+    let wq = &w[q * m..(q + 1) * m];
+    let mut app = 0.0;
+    let mut aqq = 0.0;
+    let mut apq = 0.0;
+    for (xp, xq) in wp.iter().zip(wq.iter()) {
+        app += xp * xp;
+        aqq += xq * xq;
+        apq += xp * xq;
+    }
+    if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+        return None;
+    }
+    let tau = (aqq - app) / (2.0 * apq);
+    let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    Some((c, c * t))
+}
+
+/// Rotate columns `p < q` of the flat column-major buffer in place.
+fn rotate_pair(w: &mut [f64], m: usize, p: usize, q: usize, c: f64, s: f64) {
+    // p < q, so split at q's start gives disjoint column views.
+    let (left, right) = w.split_at_mut(q * m);
+    let wp = &mut left[p * m..(p + 1) * m];
+    let wq = &mut right[..m];
+    for (xp, xq) in wp.iter_mut().zip(wq.iter_mut()) {
+        let a_ = *xp;
+        let b_ = *xq;
+        *xp = c * a_ - s * b_;
+        *xq = s * a_ + c * b_;
+    }
+}
+
 /// One-sided Jacobi on a tall (m ≥ n) matrix.
-fn svd_tall(a: &Matrix) -> Svd {
+fn svd_tall(a: &Matrix, ordering: JacobiOrdering, workers: usize) -> Svd {
     let (m, n) = (a.rows, a.cols);
     // Work on columns of W = A; accumulate V as the product of rotations.
     // One flat column-major buffer (column j at `w[j*m..(j+1)*m]`) instead
@@ -103,54 +167,83 @@ fn svd_tall(a: &Matrix) -> Svd {
     // and saves 1-2 Jacobi sweeps vs machine-epsilon termination.
     let eps = 1e-12;
     const MAX_SWEEPS: usize = 60;
-    for _ in 0..MAX_SWEEPS {
-        let mut converged = true;
-        for p in 0..n.saturating_sub(1) {
-            for q in (p + 1)..n {
-                // Gram entries for the (p, q) column pair.
-                let mut app = 0.0;
-                let mut aqq = 0.0;
-                let mut apq = 0.0;
-                {
-                    let wp = &w[p * m..(p + 1) * m];
-                    let wq = &w[q * m..(q + 1) * m];
-                    for (xp, xq) in wp.iter().zip(wq.iter()) {
-                        app += xp * xp;
-                        aqq += xq * xq;
-                        apq += xp * xq;
+    match ordering {
+        JacobiOrdering::Cyclic => {
+            for _ in 0..MAX_SWEEPS {
+                let mut converged = true;
+                for p in 0..n.saturating_sub(1) {
+                    for q in (p + 1)..n {
+                        let Some((c, s)) = pair_rotation(&w, m, p, q, eps) else {
+                            continue;
+                        };
+                        converged = false;
+                        rotate_pair(&mut w, m, p, q, c, s);
+                        for i in 0..n {
+                            let vp = v[(i, p)];
+                            let vq = v[(i, q)];
+                            v[(i, p)] = c * vp - s * vq;
+                            v[(i, q)] = s * vp + c * vq;
+                        }
                     }
                 }
-                if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
-                    continue;
-                }
-                converged = false;
-                // Jacobi rotation that zeroes the (p,q) Gram entry.
-                let tau = (aqq - app) / (2.0 * apq);
-                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = c * t;
-                {
-                    // p < q, so split at q's start gives disjoint column views.
-                    let (left, right) = w.split_at_mut(q * m);
-                    let wp = &mut left[p * m..(p + 1) * m];
-                    let wq = &mut right[..m];
-                    for (xp, xq) in wp.iter_mut().zip(wq.iter_mut()) {
-                        let a_ = *xp;
-                        let b_ = *xq;
-                        *xp = c * a_ - s * b_;
-                        *xq = s * a_ + c * b_;
-                    }
-                }
-                for i in 0..n {
-                    let vp = v[(i, p)];
-                    let vq = v[(i, q)];
-                    v[(i, p)] = c * vp - s * vq;
-                    v[(i, q)] = s * vp + c * vq;
+                if converged {
+                    break;
                 }
             }
         }
-        if converged {
-            break;
+        JacobiOrdering::Tournament => {
+            let rounds = tournament_rounds(n);
+            for _ in 0..MAX_SWEEPS {
+                let mut converged = true;
+                for round in &rounds {
+                    // A pair's rotation reads only its own two columns, and
+                    // a round's pairs are disjoint — so the sequential
+                    // in-place path and the buffered parallel path perform
+                    // the exact same arithmetic per element.  Small rounds
+                    // run inline: a spawn costs more than the rotations.
+                    let par = workers > 1 && 2 * m * round.len() >= PAR_MIN_ELEMS;
+                    let applied: Vec<(usize, usize, f64, f64)> = if !par {
+                        let mut applied = Vec::new();
+                        for &(p, q) in round {
+                            if let Some((c, s)) = pair_rotation(&w, m, p, q, eps) {
+                                rotate_pair(&mut w, m, p, q, c, s);
+                                applied.push((p, q, c, s));
+                            }
+                        }
+                        applied
+                    } else {
+                        let computed = parallel_map(round, workers, |_, &(p, q)| {
+                            pair_rotation(&w, m, p, q, eps).map(|(c, s)| {
+                                let wp = &w[p * m..(p + 1) * m];
+                                let wq = &w[q * m..(q + 1) * m];
+                                let mut np = vec![0.0; m];
+                                let mut nq = vec![0.0; m];
+                                for i in 0..m {
+                                    np[i] = c * wp[i] - s * wq[i];
+                                    nq[i] = s * wp[i] + c * wq[i];
+                                }
+                                (p, q, c, s, np, nq)
+                            })
+                        });
+                        let mut applied = Vec::new();
+                        for (p, q, c, s, np, nq) in computed.into_iter().flatten() {
+                            w[p * m..(p + 1) * m].copy_from_slice(&np);
+                            w[q * m..(q + 1) * m].copy_from_slice(&nq);
+                            applied.push((p, q, c, s));
+                        }
+                        applied
+                    };
+                    if applied.is_empty() {
+                        continue;
+                    }
+                    converged = false;
+                    // V ← V·J: disjoint column pairs, row-parallel.
+                    apply_col_rotations(&mut v.data, n, &applied, workers);
+                }
+                if converged {
+                    break;
+                }
+            }
         }
     }
     // Singular values = column norms; U = normalized columns.
@@ -309,5 +402,66 @@ mod tests {
         let svd = svd_thin(&a);
         assert!(svd.s.iter().all(|&x| x == 0.0));
         assert!(svd.reconstruct().dist(&a) < 1e-15);
+    }
+
+    #[test]
+    fn ordered_cyclic_is_bit_identical_to_svd_thin() {
+        let mut rng = Rng::new(21);
+        for (m, n) in [(18usize, 13usize), (9, 16)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let base = svd_thin(&a);
+            // Cyclic ignores workers: the sweep is inherently sequential.
+            for workers in [1usize, 4] {
+                let o = svd_thin_ordered(&a, JacobiOrdering::Cyclic, workers);
+                assert_eq!(o.s, base.s);
+                assert_eq!(o.u.data, base.u.data);
+                assert_eq!(o.v.data, base.v.data);
+            }
+        }
+    }
+
+    #[test]
+    fn tournament_matches_cyclic_to_tolerance() {
+        check("tournament SVD ≡ cyclic (to tol)", 15, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = g.usize_in(1, 30);
+            let n = g.usize_in(1, 30);
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let cyc = svd_thin(&a);
+            let tor = svd_thin_ordered(&a, JacobiOrdering::Tournament, 1);
+            ok(
+                tor.reconstruct().dist(&a) < 1e-9 * (1.0 + a.fro_norm()),
+                "tournament reconstructs",
+            )?;
+            let r = m.min(n);
+            ok(
+                tor.u.matmul_tn(&tor.u).dist(&Matrix::identity(r)) < 1e-9,
+                "UᵀU=I",
+            )?;
+            for (sc, st) in cyc.s.iter().zip(&tor.s) {
+                ok(
+                    (sc - st).abs() < 1e-8 * (1.0 + a.fro_norm()),
+                    "singular values agree",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tournament_bit_identical_across_workers() {
+        // The engine's reproducibility contract: a fixed schedule must give
+        // the exact same bits no matter how many threads apply it.
+        let mut rng = Rng::new(22);
+        for (m, n) in [(40usize, 25usize), (31, 31), (20, 33)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let base = svd_thin_ordered(&a, JacobiOrdering::Tournament, 1);
+            for workers in [2usize, 3, 4] {
+                let par = svd_thin_ordered(&a, JacobiOrdering::Tournament, workers);
+                assert_eq!(base.s, par.s, "{m}x{n} w={workers} s");
+                assert_eq!(base.u.data, par.u.data, "{m}x{n} w={workers} u");
+                assert_eq!(base.v.data, par.v.data, "{m}x{n} w={workers} v");
+            }
+        }
     }
 }

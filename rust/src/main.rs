@@ -57,6 +57,7 @@ fn build_cli() -> Cli {
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
+                .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic"))
                 .switch("native", "use the native forward instead of PJRT"),
         )
         .command(
@@ -68,6 +69,7 @@ fn build_cli() -> Cli {
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
+                .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic"))
                 .switch("native", "use the native forward instead of PJRT"),
         )
         .command(
@@ -87,7 +89,8 @@ fn build_cli() -> Cli {
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
-                .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02")),
+                .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
+                .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic")),
         )
         .command(
             Command::new("e2e", "full pipeline demo: calibrate → compress → evaluate")
@@ -101,6 +104,7 @@ fn build_cli() -> Cli {
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
+                .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic"))
                 .switch("native", "use the native forward instead of PJRT"),
         )
 }
@@ -125,6 +129,13 @@ fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> 
         if let Some(tol) = args.get_f64("rsvd-tol") {
             cfg.svd.max_rel_err = Some(tol);
         }
+    }
+    match args.get_or("jacobi", "cyclic") {
+        "cyclic" => {}
+        "tournament" => {
+            cfg.svd.ordering = nsvd::linalg::JacobiOrdering::Tournament;
+        }
+        other => anyhow::bail!("--jacobi expects 'cyclic' or 'tournament', got '{other}'"),
     }
     Pipeline::new(cfg)
 }

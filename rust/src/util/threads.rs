@@ -67,6 +67,34 @@ impl ThreadBudget {
     }
 }
 
+/// Split a flat row-major buffer (`data.len() = rows × width`) into
+/// contiguous row-aligned chunks, one scoped thread each, and run `f` on
+/// every chunk.  Used by the tournament Jacobi solvers to apply a round's
+/// disjoint column-pair rotations: each row is transformed independently,
+/// so the result is bit-identical for every worker count.  Runs inline when
+/// `workers <= 1`.
+pub fn parallel_row_chunks<T: Send, F>(data: &mut [T], width: usize, workers: usize, f: F)
+where
+    F: Fn(&mut [T]) + Sync,
+{
+    if width == 0 || data.is_empty() {
+        return;
+    }
+    let rows = data.len() / width;
+    let workers = workers.max(1).min(rows);
+    if workers <= 1 {
+        f(data);
+        return;
+    }
+    let rows_per = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for chunk in data.chunks_mut(rows_per * width) {
+            let f = &f;
+            scope.spawn(move || f(chunk));
+        }
+    });
+}
+
 /// Apply `f(index, &mut item)` to every element, splitting the slice across
 /// `workers` scoped threads.  Runs inline when `workers <= 1` or the slice is
 /// tiny (spawn cost would dominate).
@@ -239,6 +267,29 @@ mod tests {
         assert_eq!(ThreadBudget::new(0).total(), default_workers());
         // Serial budget degrades to (1, 1).
         assert_eq!(ThreadBudget::new(1).split(64), (1, 1));
+    }
+
+    #[test]
+    fn parallel_row_chunks_covers_all_rows() {
+        // 13 rows × 5 cols, 4 workers (non-divisor): every row transformed
+        // exactly once, matching the inline (workers = 1) result.
+        let width = 5usize;
+        let rows = 13usize;
+        let base: Vec<f64> = (0..rows * width).map(|i| i as f64).collect();
+        let bump = |chunk: &mut [f64]| {
+            for row in chunk.chunks_mut(width) {
+                for v in row.iter_mut() {
+                    *v = 2.0 * *v + 1.0;
+                }
+            }
+        };
+        let mut serial = base.clone();
+        parallel_row_chunks(&mut serial, width, 1, bump);
+        let mut parallel = base.clone();
+        parallel_row_chunks(&mut parallel, width, 4, bump);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[0], 1.0);
+        assert_eq!(serial[rows * width - 1], 2.0 * (rows * width - 1) as f64 + 1.0);
     }
 
     #[test]
