@@ -24,6 +24,14 @@
 #   4c. tournament determinism      — the eig/svd tournament-ordering
 #                                     tests (bit-identity across worker
 #                                     counts incl. workers=4) run by name
+#   4d. allocator smoke             — the global rank-allocator tests run
+#                                     by name (budget exactness,
+#                                     monotonicity, uniform parity,
+#                                     worker-count determinism) plus
+#                                     perf_allocate's greedy section in
+#                                     --quick mode (asserts spectrum never
+#                                     loses to uniform on the synthetic
+#                                     model)
 #   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
@@ -65,6 +73,10 @@ cargo bench --bench perf_linalg -- qr_parity --quick
 
 step "eig/svd tournament determinism (workers=4)"
 cargo test -q tournament
+
+step "allocator smoke (tests + perf_allocate greedy --quick)"
+cargo test -q allocat
+cargo bench --bench perf_allocate -- allocate_greedy --quick
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

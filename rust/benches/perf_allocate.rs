@@ -1,0 +1,194 @@
+//! Perf + quality: the global spectrum-driven rank allocator.
+//!
+//! Artifact-free (synthetic llama-t weights + calibration stats, synthetic
+//! byte corpus), so it runs everywhere.  Sections:
+//!
+//! * `allocate_profile_*`  — wall-clock of the parallel whitened-spectrum
+//!   profiling pass at 1 worker vs all cores, plus a bit-identity pin
+//!   across worker counts;
+//! * `allocate_greedy`     — wall-clock of the serial water-filling pass,
+//!   with the uniform-vs-spectrum total whitened tail error recorded (and
+//!   asserted ≤ 1) for ratios 20–50%;
+//! * `allocate_ppl_*`      — a small budget-vs-perplexity sweep through the
+//!   native evaluator: uniform vs spectrum at the same parameter budget.
+//!
+//! The stable summary is written to the top-level `BENCH_allocate.json`
+//! (same convention as `BENCH_gemm.json` / `BENCH_decompose.json`);
+//! regenerate with `cargo bench --bench perf_allocate`.
+
+use nsvd::bench::Suite;
+use nsvd::calib::collector::TapStats;
+use nsvd::compress::allocate::{self, AllocConfig, AllocStrategy};
+use nsvd::compress::engine::{CompressionEngine, EngineConfig, WhitenerCache};
+use nsvd::compress::methods::{CompressionSpec, Method};
+use nsvd::compress::whiten::CalibStats;
+use nsvd::data::corpus::Corpus;
+use nsvd::eval::perplexity::{evaluate_with_workers, pooled_ppl, EvalBackend};
+use nsvd::linalg::matrix::Matrix;
+use nsvd::linalg::rsvd::SvdPolicy;
+use nsvd::model::config::ModelConfig;
+use nsvd::model::weights::{Tensor, Weights};
+use nsvd::util::rng::Rng;
+use nsvd::util::threads::default_workers;
+
+fn stats(n: usize, rng: &mut Rng) -> CalibStats {
+    let x = Matrix::randn(4 * n, n, 1.0, rng);
+    let mut s = CalibStats::new(n);
+    s.gram = x.gram();
+    s.abs_sum = (0..n).map(|j| (0..4 * n).map(|i| x[(i, j)].abs()).sum()).collect();
+    s.rows = 4 * n;
+    s
+}
+
+/// Synthetic llama-t with deliberately heterogeneous layer spectra: blocks
+/// get geometrically shrinking weight scales, so a global allocator has
+/// something real to exploit (uniform ratios waste rank on the quiet tail).
+fn synthetic_model(rng: &mut Rng) -> (ModelConfig, Weights, TapStats) {
+    let cfg = ModelConfig::builtin("llama-t").unwrap();
+    let mut weights = Weights::default();
+    for (name, n_in, n_out) in &cfg.linear_shapes {
+        let block: usize = name
+            .split('.')
+            .nth(1)
+            .and_then(|b| b.parse().ok())
+            .unwrap_or(0);
+        let scale = 0.05 * 0.5f64.powi(block as i32);
+        weights.tensors.insert(
+            name.clone(),
+            Tensor {
+                dims: vec![*n_in, *n_out],
+                data: Matrix::randn(*n_in, *n_out, scale, rng).to_f32(),
+            },
+        );
+    }
+    let mut taps = TapStats::default();
+    for tap in cfg.tap_names() {
+        let dim = if tap.ends_with("mlp_down_in") { cfg.d_ff } else { cfg.d_model };
+        taps.taps.insert(tap, stats(dim, rng));
+    }
+    (cfg, weights, taps)
+}
+
+fn main() {
+    let mut suite = Suite::from_args("perf_allocate");
+    let mut rng = Rng::new(5);
+    let (cfg, weights, taps) = synthetic_model(&mut rng);
+    let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.30, alpha: 0.95 };
+    let cores = default_workers();
+
+    let engine_at = |workers: usize| {
+        CompressionEngine::new(EngineConfig { workers, svd: SvdPolicy::exact() })
+    };
+    // Whiteners are built once up front so the profile benches time the
+    // spectra, not the (cached-across-sweeps) eigen/Cholesky setup.
+    let mut cache = WhitenerCache::default();
+    let profiles = engine_at(1)
+        .profile_spectra(&cfg, &weights, &taps, &spec, &mut cache)
+        .unwrap();
+
+    // ---- Profiling pass wall-clock: serial vs all cores ----
+    suite.bench("allocate_profile_w1", 3, || {
+        std::hint::black_box(
+            engine_at(1).profile_spectra(&cfg, &weights, &taps, &spec, &mut cache).unwrap(),
+        );
+    });
+    if cores > 1 {
+        suite.bench(&format!("allocate_profile_w{cores}"), 3, || {
+            std::hint::black_box(
+                engine_at(cores)
+                    .profile_spectra(&cfg, &weights, &taps, &spec, &mut cache)
+                    .unwrap(),
+            );
+        });
+    }
+    // Bit-identity pin: spectra at any worker count match the serial pass.
+    if suite.enabled("allocate_profile") {
+        let wide = engine_at(4.min(cores.max(2)))
+            .profile_spectra(&cfg, &weights, &taps, &spec, &mut cache)
+            .unwrap();
+        for (a, b) in profiles.iter().zip(&wide) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.spectrum, b.spectrum, "{}: spectra must be bit-identical", a.name);
+        }
+        println!("      allocate_profile: spectra bit-identical across worker counts");
+    }
+
+    // ---- Serial water-filling wall-clock + uniform-vs-spectrum quality ----
+    suite.bench("allocate_greedy", 20, || {
+        std::hint::black_box(allocate::spectrum_ranks(&profiles, 0.30, None));
+    });
+    if suite.enabled("allocate_greedy") {
+        for &ratio in &[0.20, 0.30, 0.40, 0.50] {
+            let ks = allocate::spectrum_ranks(&profiles, ratio, None);
+            let uks: Vec<usize> = profiles
+                .iter()
+                .map(|p| nsvd::compress::ranks::k_budget(p.m, p.n, ratio))
+                .collect();
+            let spent: usize = profiles.iter().zip(&ks).map(|(p, &k)| p.cost() * k).sum();
+            let budget = allocate::uniform_budget(&profiles, ratio);
+            assert!(spent <= budget, "spectrum overspent at ρ={ratio}");
+            let ts = allocate::total_tail_sq(&profiles, &ks);
+            let tu = allocate::total_tail_sq(&profiles, &uks);
+            assert!(ts <= tu + 1e-12 * (1.0 + tu), "spectrum lost to uniform at ρ={ratio}");
+            let rel = if tu > 0.0 { ts / tu } else { 1.0 };
+            println!(
+                "      ρ={ratio:.2}: tail²(spectrum)/tail²(uniform) = {rel:.4} \
+                 (params {spent} of {budget})"
+            );
+            suite.record_metric(
+                "allocate_greedy",
+                &format!("tail_ratio_r{:02.0}", ratio * 100.0),
+                rel,
+            );
+        }
+    }
+
+    // ---- Budget-vs-perplexity through the native evaluator ----
+    // Tiny eval (synthetic bytes, few windows) — this tracks the plumbing
+    // end to end; the quality signal lives in the tail ratios above.
+    let eval_name = "allocate_ppl_sweep";
+    if suite.enabled(eval_name) {
+        let corpus = Corpus {
+            name: "synthetic".into(),
+            tokens: (0..4096usize).map(|i| (i * 31 % 251) as u8).collect(),
+        };
+        let windows = if suite.quick() { 4 } else { 8 };
+        let engine = engine_at(cores);
+        for (strategy, label) in
+            [(AllocStrategy::Uniform, "uniform"), (AllocStrategy::Spectrum, "spectrum")]
+        {
+            let plans = engine
+                .plan_model(
+                    &cfg,
+                    &weights,
+                    &taps,
+                    &spec,
+                    &AllocConfig { strategy, ..Default::default() },
+                    &mut cache,
+                )
+                .unwrap();
+            let cm = engine
+                .compress_model_planned(&cfg, &weights, &taps, &spec, &plans, &mut cache)
+                .unwrap();
+            let backend =
+                EvalBackend::Native { cfg: &cfg, weights: &weights, compressed: Some(&cm) };
+            let result =
+                evaluate_with_workers(&backend, &corpus, 4, 32, windows, cores).unwrap();
+            let ppl = pooled_ppl(&[result]);
+            println!(
+                "      {label}: params={} pooled ppl={ppl:.2} (ρ=30%, {windows} windows)",
+                cm.params()
+            );
+            suite.record_metric(eval_name, &format!("ppl_{label}_r30"), ppl);
+            suite.record_metric(eval_name, &format!("params_{label}_r30"), cm.params() as f64);
+        }
+    }
+
+    // Stable top-level summary, matching the BENCH_gemm.json convention.
+    // Skipped under a filter that excludes the allocate benches and in
+    // --quick mode, so partial runs never clobber the tracked numbers.
+    if suite.enabled("allocate") && !suite.quick() {
+        suite.write_summary(std::path::Path::new("BENCH_allocate.json"), "allocate");
+    }
+    suite.finish();
+}

@@ -1,0 +1,543 @@
+//! Global spectrum-driven rank allocation.
+//!
+//! The paper's protocol compresses every layer at the same ratio
+//! (`ranks::plan` per layer, the **uniform** strategy), but the ASVD line of
+//! work (Yuan et al., 2023) shows per-layer rank budgets chosen by
+//! sensitivity materially beat uniform allocation.  This module spends one
+//! global `(m+n)·k` parameter budget across all layers where the whitened
+//! spectra say the activation-weighted mass is:
+//!
+//! 1. **profile** (parallel) — every layer's whitened singular spectrum
+//!    `σ(A·S)` is computed on the sharded engine pool
+//!    ([`crate::compress::engine::CompressionEngine::profile_spectra`]);
+//!    by Theorem 2, keeping direction `i` of the whitened matrix removes
+//!    exactly `σᵢ²` of squared activation-weighted loss, so the spectrum is
+//!    a complete per-layer sensitivity profile;
+//! 2. **allocate** (serial, deterministic) — [`spectrum_ranks`] runs a
+//!    greedy water-filling pass over the marginal gains `σ²_{ℓ,k} / cost_ℓ`
+//!    (`cost_ℓ = m_ℓ + n_ℓ` parameters per rank unit) against the budget the
+//!    uniform plan would spend, so the two strategies are compared at the
+//!    SAME total parameter count;
+//! 3. **split** — each granted total rank is split into the nested
+//!    `(k₁, k₂)` pair, either with the fixed α
+//!    ([`crate::compress::ranks::split_k`]) or per layer via the
+//!    [`tune_alpha`] mini-sweep (`--alpha auto`).
+//!
+//! Because the profile phase is a pure per-layer function and the allocation
+//! phase is serial, the resulting plans — and therefore the compressed
+//! model — are **identical at every worker count**.  Uniform mode bypasses
+//! this module's allocator entirely and stays bit-identical to the
+//! historical per-layer planner.
+//!
+//! ## Guarantees
+//!
+//! * **budget** ([`spectrum_ranks`] and [`allocate_spectrum`]) —
+//!   `Σ cost_ℓ·k_ℓ ≤ budget`, and when some layer is still below its cap
+//!   the unspent remainder is smaller than one layer's cost ("within one
+//!   layer's granularity");
+//! * **monotone** ([`allocate_spectrum`]) — a larger budget never shrinks
+//!   any layer's rank: grants are a budget-independent priority sequence
+//!   and the spend is its longest affordable prefix.  [`spectrum_ranks`]
+//!   does NOT inherit this across ratios — its uniform fallback (next
+//!   bullet) can reshuffle ranks between two nearby budgets;
+//! * **never worse than uniform** ([`spectrum_ranks`]) — the total whitened truncation error
+//!   `Σ_ℓ Σ_{i>k_ℓ} σ²_{ℓ,i}` is ≤ the uniform plan's at the same budget.
+//!   The greedy prefix can occasionally lose (its early stop strands
+//!   budget behind one expensive layer — a few percent of random
+//!   instances); [`spectrum_ranks`] compares both totals and returns the
+//!   uniform ranks in exactly those cases, making the guarantee
+//!   unconditional.
+
+use super::methods::{compress_layer_with_policy, CompressionSpec, Method};
+use super::ranks::{self, RankPlan};
+use super::whiten::Whitener;
+use crate::linalg::eig::sym_eig;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::rsvd::SvdPolicy;
+use crate::model::weights::Tensor;
+use anyhow::{bail, Result};
+
+/// How the global parameter budget is distributed across layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocStrategy {
+    /// Paper protocol: every layer compressed at the same ratio
+    /// (`k = ⌊(1-ρ)·mn/(m+n)⌋` per layer).  The default; bit-identical to
+    /// the pre-allocator planner.
+    Uniform,
+    /// Spectrum-driven water-filling: one global budget, spent greedily by
+    /// whitened marginal gain per parameter.
+    Spectrum,
+}
+
+impl AllocStrategy {
+    /// Parse the `--allocate` CLI value.
+    pub fn parse(s: &str) -> Result<AllocStrategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "uniform" => AllocStrategy::Uniform,
+            "spectrum" => AllocStrategy::Spectrum,
+            _ => bail!("unknown allocation strategy '{s}' (use 'uniform' or 'spectrum')"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            AllocStrategy::Uniform => "uniform",
+            AllocStrategy::Spectrum => "spectrum",
+        }
+    }
+}
+
+/// Allocation knobs threaded from the pipeline into
+/// [`crate::compress::engine::CompressionEngine::plan_model`].
+#[derive(Clone, Debug, Default)]
+pub struct AllocConfig {
+    pub strategy: AllocStrategy,
+    /// Replace the single global α with a per-layer (k₁, k₂) split chosen
+    /// by [`tune_alpha`] (nested methods only).
+    pub alpha_auto: bool,
+    /// Optional per-layer cap on the total rank `k`, aligned with
+    /// `ModelConfig::linear_shapes`.  The pipeline passes the
+    /// padded-executable caps ([`ranks::max_k_for_alpha`]) on the PJRT path
+    /// so spectrum-allocated factors always fit the fixed-shape executable;
+    /// `None` caps only at `min(m, n)`.
+    pub k_caps: Option<Vec<usize>>,
+}
+
+impl Default for AllocStrategy {
+    fn default() -> AllocStrategy {
+        AllocStrategy::Uniform
+    }
+}
+
+/// One layer's profiling output: the whitened singular spectrum.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    /// Weight name (`blocks.i.attn.wq`, …).
+    pub name: String,
+    /// Paper-convention row count of `A = Wᵀ` (`m = n_out`).
+    pub m: usize,
+    /// Paper-convention column count (`n = n_in`; the whitened/calibrated
+    /// dimension).
+    pub n: usize,
+    /// Whitened singular values `σ(A·S)`, non-increasing, length
+    /// `min(m, n)`.
+    pub spectrum: Vec<f64>,
+}
+
+impl LayerProfile {
+    /// Parameters one rank unit stores: `m + n`.
+    pub fn cost(&self) -> usize {
+        self.m + self.n
+    }
+
+    /// Largest meaningful rank: `min(m, n)` (capped by the profiled
+    /// spectrum length).
+    pub fn max_rank(&self) -> usize {
+        self.m.min(self.n).min(self.spectrum.len())
+    }
+
+    /// `Σ_{i≥k} σᵢ²` — the squared activation-weighted loss of truncating
+    /// this layer at rank `k` (Theorem 2).
+    pub fn tail_sq(&self, k: usize) -> f64 {
+        self.spectrum[k.min(self.spectrum.len())..].iter().map(|s| s * s).sum()
+    }
+}
+
+/// Whitened singular spectrum of one weight: `σ(A·S)` with `A = Wᵀ`.
+///
+/// Computed as the square roots of the eigenvalues of the whitened Gram
+/// `(AS)ᵀ(AS)` — the Gram goes through the packed SYRK kernel and the
+/// symmetric Jacobi eigensolver, which is cheaper than a full one-sided
+/// Jacobi SVD of `AS` (no singular vectors are needed for allocation) and
+/// bit-identical at every worker count.  Values are clamped at zero and
+/// truncated to `min(m, n)` (the Gram is n×n but has rank ≤ min(m, n)).
+pub fn whitened_spectrum(weight: &Tensor, w1: &Whitener) -> Vec<f64> {
+    let (n_in, n_out) = (weight.dims[0], weight.dims[1]);
+    let a = Matrix::from_f32(n_in, n_out, &weight.data).transpose(); // m×n
+    let aw = w1.whiten(&a);
+    let eig = sym_eig(&aw.gram());
+    let r = aw.rows.min(aw.cols);
+    eig.values.iter().take(r).map(|&v| v.max(0.0).sqrt()).collect()
+}
+
+/// The uniform per-layer plans — the paper's protocol, one
+/// [`ranks::plan`] per `(name, n_in, n_out)` entry of
+/// `ModelConfig::linear_shapes`.  This is the exact computation the engine
+/// performed before the allocator existed; `--allocate uniform` routes
+/// through it unchanged (pinned bit-identical by the engine tests).
+pub fn uniform_plans(shapes: &[(String, usize, usize)], ratio: f64, alpha: f64) -> Vec<RankPlan> {
+    shapes
+        .iter()
+        .map(|(_, n_in, n_out)| ranks::plan(*n_out, *n_in, ratio, alpha))
+        .collect()
+}
+
+/// The global parameter budget the uniform plan spends at `ratio`:
+/// `Σ_ℓ (m_ℓ+n_ℓ)·k_ℓ` — the like-for-like total the spectrum allocator is
+/// held to (α does not change it: `(m+n)(k₁+k₂) = (m+n)k`).
+pub fn uniform_budget(profiles: &[LayerProfile], ratio: f64) -> usize {
+    profiles
+        .iter()
+        .map(|p| p.cost() * ranks::k_budget(p.m, p.n, ratio))
+        .sum()
+}
+
+/// Greedy water-filling of `budget` parameters over the profiled layers;
+/// returns each layer's total rank `k` (every layer keeps at least 1).
+///
+/// The grant sequence — layer ℓ's `k→k+1` step offers marginal gain
+/// `σ²_{ℓ,k} / cost_ℓ` — is materialized and sorted once
+/// (gain desc, then layer index, then rank: fully deterministic), which
+/// makes it **budget-independent**; the allocation is then the longest
+/// prefix of that sequence whose cumulative cost fits the budget.  Stopping
+/// at the first unaffordable grant (rather than skipping it and continuing
+/// with cheaper layers) is what makes the allocation *monotone in the
+/// budget* — a skip policy can starve a cheap layer under a LARGER budget —
+/// at the price of leaving less than one layer-cost of the budget unspent.
+///
+/// ```
+/// use nsvd::compress::allocate::{allocate_spectrum, LayerProfile};
+///
+/// // Layer 0: flat spectrum (every direction matters); layer 1: one
+/// // dominant direction.  Same shape, so same cost per rank.
+/// let flat = LayerProfile {
+///     name: "flat".into(), m: 8, n: 8, spectrum: vec![1.0; 8],
+/// };
+/// let spiked = LayerProfile {
+///     name: "spiked".into(), m: 8, n: 8,
+///     spectrum: vec![1.0, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01],
+/// };
+/// let ks = allocate_spectrum(&[flat, spiked], 6 * 16, None);
+/// // 6 rank units fit the budget: the flat layer wins all the extras.
+/// assert_eq!(ks, vec![5, 1]);
+/// ```
+pub fn allocate_spectrum(
+    profiles: &[LayerProfile],
+    budget: usize,
+    k_caps: Option<&[usize]>,
+) -> Vec<usize> {
+    let cap = |i: usize| {
+        let c = k_caps.and_then(|c| c.get(i).copied()).unwrap_or(usize::MAX);
+        profiles[i].max_rank().min(c).max(1)
+    };
+    // Floor: every layer keeps rank 1 (same guarantee as `ranks::plan`).
+    let mut ks: Vec<usize> = vec![1; profiles.len()];
+    let mut spent: usize = profiles.iter().map(|p| p.cost()).sum();
+    // Budget-independent priority sequence of grants.
+    struct Grant {
+        gain: f64,
+        layer: usize,
+        k: usize,
+    }
+    let mut grants: Vec<Grant> = Vec::new();
+    for (i, p) in profiles.iter().enumerate() {
+        for k in 1..cap(i) {
+            grants.push(Grant { gain: p.spectrum[k] * p.spectrum[k] / p.cost() as f64, layer: i, k });
+        }
+    }
+    // Non-increasing spectra mean per-layer gains are non-increasing, so the
+    // (gain desc, layer, k) order lists each layer's grants in rank order.
+    grants.sort_by(|a, b| {
+        b.gain.total_cmp(&a.gain).then(a.layer.cmp(&b.layer)).then(a.k.cmp(&b.k))
+    });
+    for g in &grants {
+        let cost = profiles[g.layer].cost();
+        if spent + cost > budget {
+            break; // prefix stop: keeps the allocation monotone in budget
+        }
+        debug_assert_eq!(ks[g.layer], g.k, "grants must arrive in rank order");
+        ks[g.layer] += 1;
+        spent += cost;
+    }
+    ks
+}
+
+/// Total squared whitened truncation error of an allocation:
+/// `Σ_ℓ Σ_{i≥k_ℓ} σ²_{ℓ,i}` (the quantity water-filling minimizes).
+pub fn total_tail_sq(profiles: &[LayerProfile], ks: &[usize]) -> f64 {
+    profiles.iter().zip(ks).map(|(p, &k)| p.tail_sq(k)).sum()
+}
+
+/// Spectrum-driven per-layer total ranks at compression ratio `ratio`,
+/// spending exactly the budget the uniform plan would
+/// ([`uniform_budget`]) — never more, so uniform and spectrum runs compare
+/// like for like.
+///
+/// Guaranteed no worse than uniform: when the greedy allocation's total
+/// whitened tail error exceeds the uniform plan's (the monotone prefix
+/// stop can strand budget behind one expensive layer — observed on a few
+/// percent of random instances), the uniform ranks are returned instead.
+/// Both totals are computed from the profiles, so the check is exact,
+/// deterministic, and costs one pass.
+pub fn spectrum_ranks(
+    profiles: &[LayerProfile],
+    ratio: f64,
+    k_caps: Option<&[usize]>,
+) -> Vec<usize> {
+    let cap = |i: usize| {
+        let c = k_caps.and_then(|c| c.get(i).copied()).unwrap_or(usize::MAX);
+        profiles[i].max_rank().min(c).max(1)
+    };
+    // `k_budget < min(m,n)` always, so the cap only ever binds when the
+    // caller passes explicit `k_caps` (the PJRT padded maxima).
+    let uniform: Vec<usize> = profiles
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ranks::k_budget(p.m, p.n, ratio).min(cap(i)))
+        .collect();
+    let budget = uniform_budget(profiles, ratio);
+    let greedy = allocate_spectrum(profiles, budget, k_caps);
+    if total_tail_sq(profiles, &greedy) <= total_tail_sq(profiles, &uniform) {
+        greedy
+    } else {
+        uniform
+    }
+}
+
+/// The α candidates of the per-layer auto-tune — the paper's §4.2 sweep
+/// grid (Table 3 sweeps these global α values; `--alpha auto` picks one
+/// *per layer* instead).
+pub const ALPHA_GRID: [f64; 5] = [0.80, 0.85, 0.90, 0.95, 0.99];
+
+/// Per-layer α auto-tune: decompose the layer at every distinct
+/// `(k₁, k₂)` split the [`ALPHA_GRID`] induces at total rank `k`, score
+/// each candidate, and return the winning plan.
+///
+/// The score blends the two failure modes the paper's nested design trades
+/// off, both computed from the true residual `E = A − Ã`:
+///
+/// * **in-distribution**: the activation-weighted energy `‖E·S‖²_F`
+///   (= `tr(E·G·Eᵀ)`, since `S·Sᵀ = G` for the nested methods' Cholesky
+///   and eigen whiteners) — what stage 1 minimizes;
+/// * **out-of-distribution**: the plain energy `‖E‖²_F`, the
+///   distribution-free worst-case proxy stage 2's weight anchoring exists
+///   to control (§3: "handling unseen activations").
+///
+/// The ID term is rescaled by `n / ‖S‖²_F` so both terms have the same
+/// units (for an isotropically random `E`, `E[‖E·S‖²] = ‖E‖²·‖S‖²/n`), and
+/// the blend weights them equally.  The tune is a pure function of
+/// `(weight, whitener, k, policy)`, so plans are identical at every worker
+/// count; ties keep the smallest α in grid order.
+///
+/// Cost: ≤ `ALPHA_GRID.len()` extra per-layer decompositions, run inside
+/// the engine's parallel planning pass.
+pub fn tune_alpha(
+    weight: &Tensor,
+    w1: &Whitener,
+    method: Method,
+    ratio: f64,
+    k: usize,
+    svd: &SvdPolicy,
+) -> Result<RankPlan> {
+    let (n_in, n_out) = (weight.dims[0], weight.dims[1]);
+    let a = Matrix::from_f32(n_in, n_out, &weight.data).transpose(); // m×n
+    // ‖S‖²_F = tr(S·Sᵀ) = tr(G), in closed form from the whitener's factor.
+    let s_norm_sq = w1.fro_norm_sq(n_in);
+    let id_scale = n_in as f64 / s_norm_sq.max(1e-300);
+    let mut seen: Vec<(usize, usize)> = Vec::new();
+    let mut best: Option<(f64, RankPlan)> = None;
+    for &alpha in ALPHA_GRID.iter() {
+        let plan = ranks::split_k(k, alpha);
+        if seen.contains(&(plan.k1, plan.k2)) {
+            continue; // small k collapses grid neighbors onto one split
+        }
+        seen.push((plan.k1, plan.k2));
+        let spec = CompressionSpec { method, ratio, alpha };
+        let layer = compress_layer_with_policy(weight, w1, &spec, &plan, svd)?;
+        let recon = layer.reconstruct();
+        let err = &a - &Matrix::from_f32(n_in, n_out, &recon.data).transpose();
+        let id = w1.whiten(&err).fro_norm().powi(2);
+        let ood = err.fro_norm().powi(2);
+        let score = id * id_scale + ood;
+        if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
+            best = Some((score, plan));
+        }
+    }
+    Ok(best.expect("ALPHA_GRID is non-empty").1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::whiten::CalibStats;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    /// Random profile with a geometrically decaying spectrum; `decay` near
+    /// 1.0 is flat (rank-hungry), near 0 concentrates on one direction.
+    fn profile(name: &str, m: usize, n: usize, decay: f64, scale: f64) -> LayerProfile {
+        let r = m.min(n);
+        LayerProfile {
+            name: name.into(),
+            m,
+            n,
+            spectrum: (0..r).map(|i| scale * decay.powi(i as i32)).collect(),
+        }
+    }
+
+    fn random_profiles(g: &mut crate::util::prop::Gen) -> Vec<LayerProfile> {
+        let layers = g.usize_in(2, 6);
+        (0..layers)
+            .map(|i| {
+                let m = g.usize_in(8, 48);
+                let n = g.usize_in(8, 48);
+                let decay = g.f64_in(0.3, 0.99);
+                let scale = g.f64_in(0.1, 10.0);
+                profile(&format!("l{i}"), m, n, decay, scale)
+            })
+            .collect()
+    }
+
+    fn spend(profiles: &[LayerProfile], ks: &[usize]) -> usize {
+        profiles.iter().zip(ks).map(|(p, &k)| p.cost() * k).sum()
+    }
+
+    #[test]
+    fn strategy_parses() {
+        assert_eq!(AllocStrategy::parse("uniform").unwrap(), AllocStrategy::Uniform);
+        assert_eq!(AllocStrategy::parse("SPECTRUM").unwrap(), AllocStrategy::Spectrum);
+        assert!(AllocStrategy::parse("greedy").is_err());
+        assert_eq!(AllocStrategy::default(), AllocStrategy::Uniform);
+    }
+
+    #[test]
+    fn allocation_budget_is_exact_within_one_layer() {
+        check("Σ cost·k ≤ budget, slack < one layer", 40, |g| {
+            let profiles = random_profiles(g);
+            let floor: usize = profiles.iter().map(|p| p.cost()).sum();
+            let max_spend: usize = profiles.iter().map(|p| p.cost() * p.max_rank()).sum();
+            let budget = g.usize_in(floor, max_spend + floor);
+            let ks = allocate_spectrum(&profiles, budget, None);
+            let spent = spend(&profiles, &ks);
+            if spent > budget {
+                return Err(format!("spent {spent} > budget {budget}"));
+            }
+            let saturated = ks
+                .iter()
+                .enumerate()
+                .all(|(i, &k)| k >= profiles[i].max_rank());
+            let max_cost = profiles.iter().map(|p| p.cost()).max().unwrap();
+            if !saturated && budget - spent >= max_cost {
+                return Err(format!(
+                    "unspent {} ≥ max layer cost {max_cost} with headroom left",
+                    budget - spent
+                ));
+            }
+            if ks.iter().any(|&k| k < 1) {
+                return Err("every layer must keep rank ≥ 1".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allocation_is_monotone_in_budget() {
+        check("larger budget never shrinks a layer", 40, |g| {
+            let profiles = random_profiles(g);
+            let floor: usize = profiles.iter().map(|p| p.cost()).sum();
+            let max_spend: usize = profiles.iter().map(|p| p.cost() * p.max_rank()).sum();
+            let b1 = g.usize_in(floor, max_spend);
+            let b2 = g.usize_in(b1, max_spend + floor);
+            let k1 = allocate_spectrum(&profiles, b1, None);
+            let k2 = allocate_spectrum(&profiles, b2, None);
+            for (i, (a, b)) in k1.iter().zip(&k2).enumerate() {
+                if b < a {
+                    return Err(format!(
+                        "layer {i} shrank {a} → {b} when budget grew {b1} → {b2}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spectrum_never_loses_to_uniform_at_same_budget() {
+        check("tail(spectrum) ≤ tail(uniform), spend ≤ uniform spend", 40, |g| {
+            let profiles = random_profiles(g);
+            let ratio = g.f64_in(0.1, 0.6);
+            let ks = spectrum_ranks(&profiles, ratio, None);
+            let uniform: Vec<usize> = profiles
+                .iter()
+                .map(|p| ranks::k_budget(p.m, p.n, ratio))
+                .collect();
+            let budget = uniform_budget(&profiles, ratio);
+            if spend(&profiles, &ks) > budget {
+                return Err("spectrum overspent the uniform budget".into());
+            }
+            let ts = total_tail_sq(&profiles, &ks);
+            let tu = total_tail_sq(&profiles, &uniform);
+            if ts > tu + 1e-12 * (1.0 + tu) {
+                return Err(format!("spectrum tail {ts} > uniform tail {tu}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allocation_prefers_heavy_spectra() {
+        // Flat spectrum (all directions matter) vs fast decay: the flat
+        // layer must win the extra ranks.
+        let profiles = vec![
+            profile("flat", 64, 64, 1.0, 1.0),
+            profile("decayed", 64, 64, 0.5, 1.0),
+        ];
+        let ks = spectrum_ranks(&profiles, 0.5, None);
+        assert!(ks[0] > ks[1], "flat spectrum should win ranks: {ks:?}");
+        assert!(ks.iter().all(|&k| k >= 1));
+    }
+
+    #[test]
+    fn identical_layers_allocate_near_uniformly() {
+        check("identical layers stay within one rank", 10, |g| {
+            let n = g.usize_in(16, 64);
+            let p = profile("l", n, n, 0.9, 1.0);
+            let profiles = vec![p.clone(), p.clone(), p];
+            let ks = spectrum_ranks(&profiles, 0.4, None);
+            let spread = ks.iter().max().unwrap() - ks.iter().min().unwrap();
+            if spread > 1 {
+                return Err(format!("identical layers diverged: {ks:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn k_caps_bind_the_allocation() {
+        let profiles = vec![
+            profile("hot", 32, 32, 1.0, 10.0),
+            profile("cold", 32, 32, 0.4, 1.0),
+        ];
+        let caps = vec![4usize, 4];
+        let ks = allocate_spectrum(&profiles, usize::MAX, Some(&caps[..]));
+        assert!(ks.iter().zip(&caps).all(|(k, c)| k <= c), "caps violated: {ks:?}");
+        // Without caps the same (infinite) budget saturates max_rank.
+        let free = allocate_spectrum(&profiles, usize::MAX, None);
+        assert_eq!(free, vec![32, 32]);
+    }
+
+    #[test]
+    fn tune_alpha_splits_the_budget_exactly_and_deterministically() {
+        let mut rng = Rng::new(31);
+        let (n_in, n_out) = (14usize, 10usize);
+        let x = Matrix::randn(3 * n_in, n_in, 1.0, &mut rng);
+        let mut stats = CalibStats::new(n_in);
+        stats.gram = x.gram();
+        stats.rows = 3 * n_in;
+        let w1 = Whitener::cholesky(&stats);
+        let weight = Tensor {
+            dims: vec![n_in, n_out],
+            data: Matrix::randn(n_in, n_out, 1.0, &mut rng).to_f32(),
+        };
+        for k in [2usize, 5, 8] {
+            let plan =
+                tune_alpha(&weight, &w1, Method::NsvdI, 0.3, k, &SvdPolicy::exact()).unwrap();
+            assert_eq!(plan.k, k);
+            assert_eq!(plan.k1 + plan.k2, k, "split must consume the whole budget");
+            assert!(plan.k1 >= 1);
+            let again =
+                tune_alpha(&weight, &w1, Method::NsvdI, 0.3, k, &SvdPolicy::exact()).unwrap();
+            assert_eq!(plan, again, "tune must be deterministic");
+        }
+    }
+}

@@ -27,6 +27,15 @@
 //! caller, so ratio/α sweeps across jobs still pay zero whitening cost —
 //! the same contract the serial pipeline had, now `Send`-safe via [`Arc`].
 //!
+//! Global rank allocation rides the same phases: [`CompressionEngine::profile_spectra`]
+//! fans the per-layer whitened-spectrum jobs over the pool,
+//! [`CompressionEngine::plan_model`] turns the profiles into per-layer
+//! [`RankPlan`]s (the cross-layer water-filling itself is serial and
+//! deterministic — see [`crate::compress::allocate`]), and
+//! [`CompressionEngine::compress_model_planned`] decomposes under those
+//! plans.  [`CompressionEngine::compress_model`] is the uniform-protocol
+//! wrapper and stays bit-identical to the pre-allocator engine.
+//!
 //! Threading: the engine owns ONE [`ThreadBudget`] and splits it between
 //! the layer fan-out and the parallel GEMM kernel each job's whitening /
 //! SVD math runs on (`outer × inner ≤ total`) — nesting two independent
@@ -34,6 +43,7 @@
 //! bit-identical for every worker count, the split never affects results.
 
 use crate::calib::collector::TapStats;
+use crate::compress::allocate::{self, AllocConfig, AllocStrategy, LayerProfile};
 use crate::compress::lowrank::CompressedModel;
 use crate::compress::methods::{compress_layer_with_policy, CompressionSpec};
 use crate::compress::ranks::{self, RankPlan};
@@ -104,6 +114,12 @@ impl CompressionEngine {
     /// Decompose every compressible weight of `model_cfg` under `spec`,
     /// fanning layer shards out over the worker pool.  `cache` carries
     /// whiteners across calls (ratio/α sweeps reuse them for free).
+    ///
+    /// Uses the paper's uniform per-layer rank protocol
+    /// ([`allocate::uniform_plans`]) — bit-identical to the pre-allocator
+    /// engine.  Globally allocated or α-tuned plans go through
+    /// [`CompressionEngine::plan_model`] +
+    /// [`CompressionEngine::compress_model_planned`].
     pub fn compress_model(
         &self,
         model_cfg: &ModelConfig,
@@ -112,10 +128,23 @@ impl CompressionEngine {
         spec: &CompressionSpec,
         cache: &mut WhitenerCache,
     ) -> Result<CompressedModel> {
+        let plans =
+            allocate::uniform_plans(&model_cfg.linear_shapes, spec.ratio, spec.effective_alpha());
+        self.compress_model_planned(model_cfg, weights, stats, spec, &plans, cache)
+    }
+
+    /// Phase 1: make sure `cache` holds one whitener per distinct tap of
+    /// `model_cfg` for `spec.method`'s whitener class, building missing
+    /// ones in parallel over the engine pool.
+    fn ensure_whiteners(
+        &self,
+        model_cfg: &ModelConfig,
+        stats: &TapStats,
+        spec: &CompressionSpec,
+        cache: &mut WhitenerCache,
+    ) -> Result<()> {
         let budget = self.config.thread_budget();
         let kind = spec.method.whitener_kind().to_string();
-
-        // ---- Phase 1: one whitener per distinct tap, in parallel ----
         let mut missing: Vec<(String, &CalibStats)> = Vec::new();
         for (name, _, _) in &model_cfg.linear_shapes {
             let tap = ModelConfig::tap_for_linear(name);
@@ -141,20 +170,53 @@ impl CompressionEngine {
         for ((tap, _), whitener) in missing.into_iter().zip(built) {
             cache.insert((kind.clone(), tap), whitener);
         }
+        Ok(())
+    }
+
+    /// The whitener for `name` under `spec.method`'s class; phase 1 must
+    /// have populated the cache.
+    fn whitener_for(
+        spec: &CompressionSpec,
+        cache: &WhitenerCache,
+        name: &str,
+    ) -> Arc<Whitener> {
+        let tap = ModelConfig::tap_for_linear(name);
+        cache
+            .get(&(spec.method.whitener_kind().to_string(), tap))
+            .expect("ensure_whiteners populated every tap")
+            .clone()
+    }
+
+    /// Decompose every layer with an explicit per-layer [`RankPlan`]
+    /// (aligned with `model_cfg.linear_shapes`) — the planned entry point
+    /// the global allocator feeds.  [`CompressionEngine::compress_model`]
+    /// is this with the uniform plans.
+    pub fn compress_model_planned(
+        &self,
+        model_cfg: &ModelConfig,
+        weights: &Weights,
+        stats: &TapStats,
+        spec: &CompressionSpec,
+        plans: &[RankPlan],
+        cache: &mut WhitenerCache,
+    ) -> Result<CompressedModel> {
+        anyhow::ensure!(
+            plans.len() == model_cfg.linear_shapes.len(),
+            "plan count {} != layer count {}",
+            plans.len(),
+            model_cfg.linear_shapes.len()
+        );
+        let budget = self.config.thread_budget();
+        self.ensure_whiteners(model_cfg, stats, spec, cache)?;
 
         // ---- Phase 2: shard the layer jobs across the workers ----
         let mut jobs: Vec<LayerJob> = Vec::with_capacity(model_cfg.linear_shapes.len());
-        for (name, n_in, n_out) in &model_cfg.linear_shapes {
-            let tap = ModelConfig::tap_for_linear(name);
-            let whitener = cache
-                .get(&(kind.clone(), tap))
-                .expect("phase 1 populated every tap")
-                .clone();
+        for ((name, _, _), plan) in model_cfg.linear_shapes.iter().zip(plans) {
             jobs.push(LayerJob {
                 name: name.as_str(),
                 tensor: weights.get(name)?,
-                whitener,
-                plan: ranks::plan(*n_out, *n_in, spec.ratio, spec.effective_alpha()),
+                whitener: Self::whitener_for(spec, cache, name),
+                plan: *plan,
             });
         }
         let spec = *spec;
@@ -173,6 +235,121 @@ impl CompressionEngine {
             cm.insert(job.name, layer?);
         }
         Ok(cm)
+    }
+
+    /// Profile every layer's whitened singular spectrum `σ(A·S)` in
+    /// parallel over the engine pool — the (pure, per-layer) first phase of
+    /// global allocation.  Profiles come back in `linear_shapes` order and
+    /// are identical at every worker count.
+    pub fn profile_spectra(
+        &self,
+        model_cfg: &ModelConfig,
+        weights: &Weights,
+        stats: &TapStats,
+        spec: &CompressionSpec,
+        cache: &mut WhitenerCache,
+    ) -> Result<Vec<LayerProfile>> {
+        let budget = self.config.thread_budget();
+        self.ensure_whiteners(model_cfg, stats, spec, cache)?;
+        let mut jobs: Vec<(&str, &Tensor, Arc<Whitener>, usize, usize)> =
+            Vec::with_capacity(model_cfg.linear_shapes.len());
+        for (name, n_in, n_out) in &model_cfg.linear_shapes {
+            jobs.push((
+                name.as_str(),
+                weights.get(name)?,
+                Self::whitener_for(spec, cache, name),
+                *n_out, // paper-convention m
+                *n_in,  // paper-convention n
+            ));
+        }
+        let (outer, inner) = budget.split(jobs.len());
+        let spectra = parallel_map_dynamic(&jobs, outer, |_, job| {
+            let _gemm_threads = gemm::scoped_workers(inner);
+            allocate::whitened_spectrum(job.1, &job.2)
+        });
+        Ok(jobs
+            .iter()
+            .zip(spectra)
+            .map(|(job, spectrum)| LayerProfile {
+                name: job.0.to_string(),
+                m: job.3,
+                n: job.4,
+                spectrum,
+            })
+            .collect())
+    }
+
+    /// Produce the per-layer [`RankPlan`]s for `spec` under `alloc`:
+    ///
+    /// * total ranks — uniform per-layer budgets, or the global
+    ///   spectrum-driven allocation (profile in parallel, then
+    ///   [`allocate::spectrum_ranks`] serially, so plans are identical at
+    ///   every worker count);
+    /// * splits — the fixed `spec` α, or the per-layer
+    ///   [`allocate::tune_alpha`] mini-sweep (`alloc.alpha_auto`, nested
+    ///   methods only), fanned out over the pool.
+    pub fn plan_model(
+        &self,
+        model_cfg: &ModelConfig,
+        weights: &Weights,
+        stats: &TapStats,
+        spec: &CompressionSpec,
+        alloc: &AllocConfig,
+        cache: &mut WhitenerCache,
+    ) -> Result<Vec<RankPlan>> {
+        self.plan_model_with_profiles(model_cfg, weights, stats, spec, alloc, None, cache)
+    }
+
+    /// [`CompressionEngine::plan_model`] with optionally pre-computed layer
+    /// profiles.  Spectra depend only on `(weights, whitener kind)` — not
+    /// on the ratio — so callers sweeping budgets (the pipeline's
+    /// ratio-per-point sweep) profile once and pass `Some(profiles)` to
+    /// every point; `None` profiles on the spot (spectrum strategy only).
+    pub fn plan_model_with_profiles(
+        &self,
+        model_cfg: &ModelConfig,
+        weights: &Weights,
+        stats: &TapStats,
+        spec: &CompressionSpec,
+        alloc: &AllocConfig,
+        profiles: Option<&[LayerProfile]>,
+        cache: &mut WhitenerCache,
+    ) -> Result<Vec<RankPlan>> {
+        let budget = self.config.thread_budget();
+        self.ensure_whiteners(model_cfg, stats, spec, cache)?;
+        let ks: Vec<usize> = match alloc.strategy {
+            AllocStrategy::Uniform => model_cfg
+                .linear_shapes
+                .iter()
+                .map(|(_, n_in, n_out)| ranks::k_budget(*n_out, *n_in, spec.ratio))
+                .collect(),
+            AllocStrategy::Spectrum => match profiles {
+                Some(p) => allocate::spectrum_ranks(p, spec.ratio, alloc.k_caps.as_deref()),
+                None => {
+                    let p = self.profile_spectra(model_cfg, weights, stats, spec, cache)?;
+                    allocate::spectrum_ranks(&p, spec.ratio, alloc.k_caps.as_deref())
+                }
+            },
+        };
+        if !(alloc.alpha_auto && spec.method.is_nested()) {
+            let alpha = spec.effective_alpha();
+            return Ok(ks.iter().map(|&k| ranks::split_k(k, alpha)).collect());
+        }
+        // Per-layer α tune: pure per-layer jobs over the same pool.
+        let mut jobs: Vec<(&str, &Tensor, Arc<Whitener>, usize)> =
+            Vec::with_capacity(model_cfg.linear_shapes.len());
+        for ((name, _, _), &k) in model_cfg.linear_shapes.iter().zip(&ks) {
+            jobs.push((name.as_str(), weights.get(name)?, Self::whitener_for(spec, cache, name), k));
+        }
+        let (outer, inner) = budget.split(jobs.len());
+        let svd = &self.config.svd;
+        let (method, ratio) = (spec.method, spec.ratio);
+        let tuned = parallel_map_dynamic(&jobs, outer, |_, job| {
+            let _gemm_threads = gemm::scoped_workers(inner);
+            allocate::tune_alpha(job.1, &job.2, method, ratio, job.3, svd)
+                .with_context(|| format!("tuning α for {}", job.0))
+        });
+        tuned.into_iter().collect()
     }
 }
 
@@ -354,6 +531,115 @@ mod tests {
             assert!(layer.p1.iter().all(|v| v.is_finite()));
             assert!(layer.q1.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn planned_uniform_is_bit_identical_to_compress_model() {
+        let mut rng = Rng::new(26);
+        let (cfg, weights, stats) = tiny_model(&mut rng);
+        let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.3, alpha: 0.8 };
+        let engine = CompressionEngine::new(EngineConfig { workers: 2, ..Default::default() });
+        let plans = crate::compress::allocate::uniform_plans(
+            &cfg.linear_shapes,
+            spec.ratio,
+            spec.effective_alpha(),
+        );
+        let mut c1 = WhitenerCache::default();
+        let mut c2 = WhitenerCache::default();
+        let direct = engine.compress_model(&cfg, &weights, &stats, &spec, &mut c1).unwrap();
+        let planned = engine
+            .compress_model_planned(&cfg, &weights, &stats, &spec, &plans, &mut c2)
+            .unwrap();
+        assert_identical(&direct, &planned);
+    }
+
+    #[test]
+    fn spectrum_allocation_is_worker_independent_and_beats_uniform() {
+        // The acceptance pin: on the tiny model, spectrum allocation at the
+        // uniform parameter budget (i) spends no more parameters, (ii) has
+        // total whitened tail error ≤ the uniform plan, and (iii) produces
+        // bit-identical plans and factors at every worker count.
+        let mut rng = Rng::new(27);
+        let (cfg, weights, stats) = tiny_model(&mut rng);
+        let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.4, alpha: 0.95 };
+        let alloc = AllocConfig { strategy: AllocStrategy::Spectrum, ..Default::default() };
+
+        let mut runs: Vec<(Vec<RankPlan>, CompressedModel)> = Vec::new();
+        for workers in [1usize, 4] {
+            let engine = CompressionEngine::new(EngineConfig {
+                workers,
+                svd: SvdPolicy::exact(),
+            });
+            let mut cache = WhitenerCache::default();
+            let profiles =
+                engine.profile_spectra(&cfg, &weights, &stats, &spec, &mut cache).unwrap();
+            let plans =
+                engine.plan_model(&cfg, &weights, &stats, &spec, &alloc, &mut cache).unwrap();
+            let cm = engine
+                .compress_model_planned(&cfg, &weights, &stats, &spec, &plans, &mut cache)
+                .unwrap();
+
+            // (i) like-for-like budget vs uniform.
+            let mut c2 = WhitenerCache::default();
+            let uniform =
+                engine.compress_model(&cfg, &weights, &stats, &spec, &mut c2).unwrap();
+            assert!(
+                cm.params() <= uniform.params(),
+                "spectrum {} params > uniform {}",
+                cm.params(),
+                uniform.params()
+            );
+
+            // (ii) total whitened tail error no worse than uniform.
+            let ks: Vec<usize> = plans.iter().map(|p| p.k).collect();
+            let uks: Vec<usize> = crate::compress::allocate::uniform_plans(
+                &cfg.linear_shapes,
+                spec.ratio,
+                spec.effective_alpha(),
+            )
+            .iter()
+            .map(|p| p.k)
+            .collect();
+            let ts = crate::compress::allocate::total_tail_sq(&profiles, &ks);
+            let tu = crate::compress::allocate::total_tail_sq(&profiles, &uks);
+            assert!(ts <= tu + 1e-12 * (1.0 + tu), "spectrum tail {ts} > uniform {tu}");
+
+            runs.push((plans, cm));
+        }
+        // (iii) identical at every worker count.
+        assert_eq!(runs[0].0, runs[1].0, "plans diverged across worker counts");
+        assert_identical(&runs[0].1, &runs[1].1);
+    }
+
+    #[test]
+    fn auto_alpha_allocation_is_deterministic_and_budget_exact() {
+        let mut rng = Rng::new(28);
+        let (cfg, weights, stats) = tiny_model(&mut rng);
+        let spec = CompressionSpec { method: Method::NsvdI, ratio: 0.3, alpha: 0.95 };
+        let alloc = AllocConfig {
+            strategy: AllocStrategy::Uniform,
+            alpha_auto: true,
+            k_caps: None,
+        };
+        let mut runs: Vec<Vec<RankPlan>> = Vec::new();
+        for workers in [1usize, 4] {
+            let engine = CompressionEngine::new(EngineConfig {
+                workers,
+                svd: SvdPolicy::exact(),
+            });
+            let mut cache = WhitenerCache::default();
+            let plans =
+                engine.plan_model(&cfg, &weights, &stats, &spec, &alloc, &mut cache).unwrap();
+            // Auto-α keeps each layer's uniform total rank; only the split moves.
+            for ((_, n_in, n_out), plan) in cfg.linear_shapes.iter().zip(&plans) {
+                let uniform = ranks::plan(*n_out, *n_in, spec.ratio, spec.alpha);
+                assert_eq!(plan.k, uniform.k, "auto-α must not change the total rank");
+                assert_eq!(plan.k1 + plan.k2, plan.k);
+                assert!(plan.k1 >= 1);
+            }
+            runs.push(plans);
+        }
+        assert_eq!(runs[0], runs[1], "auto-α plans diverged across worker counts");
     }
 
     #[test]

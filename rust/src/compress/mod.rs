@@ -1,6 +1,11 @@
 //! The paper's compression methods and the engine that runs them at scale.
 //!
-//! * [`ranks`]   — parameter budgeting: compression ratio → (k₁, k₂).
+//! * [`ranks`]   — per-layer parameter budgeting: compression ratio → (k₁, k₂).
+//! * [`allocate`] — global spectrum-driven rank allocation: one parameter
+//!                 budget water-filled across layers by whitened marginal
+//!                 gain, plus the per-layer α auto-tune (`--allocate
+//!                 spectrum`, `--alpha auto`; uniform stays the default and
+//!                 bit-identical to the paper protocol).
 //! * [`whiten`]  — activation-aware whitening transforms built from the
 //!                 calibration Gram (ASVD-0 diag, ASVD-I Cholesky, ASVD-II
 //!                 eigen, ASVD-III γ-scaled rotation).
@@ -14,12 +19,14 @@
 //! * [`lowrank`] — factored layer representation, padded marshaling for the
 //!                 fixed-shape PJRT executable, native apply + reconstruction.
 
+pub mod allocate;
 pub mod engine;
 pub mod lowrank;
 pub mod methods;
 pub mod ranks;
 pub mod whiten;
 
+pub use allocate::{AllocConfig, AllocStrategy, LayerProfile};
 pub use engine::{CompressionEngine, EngineConfig, WhitenerCache};
 pub use lowrank::{CompressedLayer, CompressedModel};
 pub use methods::{compress_layer, CompressionSpec, Method};

@@ -7,6 +7,10 @@
 //! protocol).  NSVD splits the same budget as `k₁ = round(α·k)`,
 //! `k₂ = k - k₁` (paper §4.2 sweeps α from 0.80 to 0.99).
 //!
+//! This module owns the *per-layer* arithmetic; the cross-layer
+//! spectrum-driven allocator that replaces the uniform protocol with one
+//! global budget lives in [`crate::compress::allocate`].
+//!
 //! The padded maxima (`k1_max`, `k2_max`) must match
 //! `python/compile/model.py::max_ranks` — they define the fixed shapes of the
 //! low-rank PJRT executable.
@@ -19,27 +23,80 @@ pub struct RankPlan {
     pub k2: usize,
 }
 
-/// Total rank budget at compression ratio `ratio` for an m×n weight.
+/// Total rank budget at compression ratio `ratio` for an m×n weight:
+/// `k = ⌊(1-ρ)·mn/(m+n)⌋`, at least 1.
+///
+/// ```
+/// use nsvd::compress::ranks::k_budget;
+///
+/// // 128×128 at ρ = 30%: a rank-44 pair stores (128+128)·44 = 11264 of the
+/// // original 16384 parameters — 31.25% removed (the floor rounds down).
+/// assert_eq!(k_budget(128, 128, 0.30), 44);
+/// // Extreme ratios still leave rank 1.
+/// assert_eq!(k_budget(16, 16, 0.999), 1);
+/// ```
 pub fn k_budget(m: usize, n: usize, ratio: f64) -> usize {
     let k = ((1.0 - ratio) * (m * n) as f64 / (m + n) as f64).floor() as usize;
     k.max(1)
 }
 
-/// Split the budget: `k₁ = round(α·k)` (≥1), `k₂ = k - k₁`.
-/// `alpha = 1.0` reproduces the non-nested baselines (k₂ = 0).
-pub fn plan(m: usize, n: usize, ratio: f64, alpha: f64) -> RankPlan {
-    let k = k_budget(m, n, ratio);
+/// Split a total rank into the nested pair: `k₁ = round(α·k)` clamped to
+/// `[1, k]`, `k₂ = k − k₁`.  `alpha = 1.0` reproduces the non-nested
+/// baselines (k₂ = 0).
+pub fn split_k(k: usize, alpha: f64) -> RankPlan {
     let k1 = ((alpha * k as f64).round() as usize).clamp(1, k);
     RankPlan { k, k1, k2: k - k1 }
 }
 
-/// Padded executable ranks; MUST match python `model.max_ranks(n_in, n_out)`.
-/// Note the python side passes (n_in, n_out) and the formula is symmetric.
+/// The full per-layer plan: budget at `ratio`, split at `alpha`.
+///
+/// ```
+/// use nsvd::compress::ranks::plan;
+///
+/// let p = plan(128, 128, 0.30, 0.95);
+/// assert_eq!((p.k, p.k1, p.k2), (44, 42, 2)); // round(0.95·44) = 42
+/// assert_eq!(p.k1 + p.k2, p.k);               // the split is exact
+/// // α = 1 is the non-nested baseline.
+/// assert_eq!(plan(128, 128, 0.30, 1.0).k2, 0);
+/// ```
+pub fn plan(m: usize, n: usize, ratio: f64, alpha: f64) -> RankPlan {
+    split_k(k_budget(m, n, ratio), alpha)
+}
+
+/// Padded executable ranks; MUST match python `model.max_ranks(n_in, n_out)`
+/// (verified against it by `max_ranks_match_python_contract` here and
+/// `test_max_ranks_match_rust_contract` on the python side).  The python
+/// side passes `(n_in, n_out)` where this side usually passes
+/// `(m, n) = (n_out, n_in)`; the formula is symmetric in the swap, so the
+/// two agree.  `k1_max` is the largest stage-1 rank any experiment uses
+/// (the ρ = 10% budget); `k2_max` caps stage 2 at the α = 0.75 share.
 pub fn max_ranks(m: usize, n: usize) -> (usize, usize) {
     let kmax = ((1.0 - 0.10) * (m * n) as f64 / (m + n) as f64) as usize;
     let k1max = kmax.max(1);
     let k2max = ((0.25 * kmax as f64).ceil() as usize).max(1);
     (k1max, k2max)
+}
+
+/// Largest total rank `k` whose `(k₁, k₂)` split at `alpha` fits the padded
+/// executable maxima [`max_ranks`] — the per-layer cap the spectrum
+/// allocator must respect on the PJRT path, where factors are marshaled
+/// into fixed-shape buffers ([`crate::compress::lowrank::CompressedLayer::pad_to`]).
+///
+/// Note the cap can exceed `k1_max`: a nested split at α < 1 parks part of
+/// the total rank in the stage-2 buffer (e.g. α = 0.80 fits
+/// `k ≈ 1.25·k_max` as `k₁ = k_max`, `k₂ = 0.25·k_max`).  Rank 1 always
+/// fits.
+pub fn max_k_for_alpha(m: usize, n: usize, alpha: f64) -> usize {
+    let (k1m, k2m) = max_ranks(m, n);
+    let mut k = (k1m + k2m).min(m.min(n));
+    while k > 1 {
+        let p = split_k(k, alpha);
+        if p.k1 <= k1m && p.k2 <= k2m {
+            return k;
+        }
+        k -= 1;
+    }
+    1
 }
 
 /// Parameters stored by a nested factorization of an m×n weight.
@@ -50,59 +107,6 @@ pub fn factored_params(m: usize, n: usize, plan: &RankPlan) -> usize {
 /// Achieved compression ratio of a plan (fraction of parameters removed).
 pub fn achieved_ratio(m: usize, n: usize, plan: &RankPlan) -> f64 {
     1.0 - factored_params(m, n, plan) as f64 / (m * n) as f64
-}
-
-/// Global (adaptive) rank allocation — the extension the ASVD line of work
-/// motivates: instead of compressing every layer at the same ratio, spend a
-/// single global parameter budget where the whitened spectra say the mass
-/// is.
-///
-/// Greedy water-filling: each layer ℓ offers marginal gains
-/// `σ²_{ℓ,k+1} / cost_ℓ` where `cost_ℓ = (m_ℓ + n_ℓ)` parameters per rank
-/// unit (Theorem 2: keeping singular value σ removes exactly σ² of squared
-/// activation-weighted loss).  Ranks are granted to the best offer until the
-/// budget is spent.  Every layer keeps at least rank 1.
-pub fn allocate_global(
-    layers: &[(usize, usize, Vec<f64>)], // (m, n, whitened singular values desc)
-    ratio: f64,
-    alpha: f64,
-) -> Vec<RankPlan> {
-    let total_dense: usize = layers.iter().map(|(m, n, _)| m * n).sum();
-    let budget = ((1.0 - ratio) * total_dense as f64) as usize;
-    let mut ks: Vec<usize> = vec![1; layers.len()];
-    let mut spent: usize = layers.iter().map(|(m, n, _)| m + n).sum();
-    // Greedy: repeatedly grant one rank to the layer with the best
-    // marginal (loss removed per parameter spent).
-    loop {
-        let mut best: Option<(usize, f64)> = None;
-        for (i, (m, n, s)) in layers.iter().enumerate() {
-            let k = ks[i];
-            if k >= s.len() || k >= *m.min(n) {
-                continue;
-            }
-            let cost = m + n;
-            if spent + cost > budget {
-                continue;
-            }
-            let gain = s[k] * s[k] / cost as f64;
-            if best.map(|(_, g)| gain > g).unwrap_or(true) {
-                best = Some((i, gain));
-            }
-        }
-        match best {
-            Some((i, _)) => {
-                ks[i] += 1;
-                spent += layers[i].0 + layers[i].1;
-            }
-            None => break,
-        }
-    }
-    ks.iter()
-        .map(|&k| {
-            let k1 = ((alpha * k as f64).round() as usize).clamp(1, k);
-            RankPlan { k, k1, k2: k - k1 }
-        })
-        .collect()
 }
 
 #[cfg(test)]
@@ -168,39 +172,6 @@ mod tests {
     }
 
     #[test]
-    fn global_allocation_respects_budget_and_prefers_heavy_spectra() {
-        // Layer 0 has a flat spectrum (all directions matter); layer 1 decays
-        // fast (rank-2-ish).  Global allocation should give layer 0 more rank.
-        let flat: Vec<f64> = vec![1.0; 64];
-        let decayed: Vec<f64> = (0..64).map(|i| 2.0f64.powi(-(i as i32))).collect();
-        let layers = vec![(64usize, 64usize, flat), (64, 64, decayed)];
-        let plans = allocate_global(&layers, 0.5, 1.0);
-        let spent: usize = plans.iter().enumerate().map(|(i, p)| {
-            (layers[i].0 + layers[i].1) * p.k
-        }).sum();
-        let budget = ((1.0 - 0.5) * (2 * 64 * 64) as f64) as usize;
-        assert!(spent <= budget, "spent {spent} > budget {budget}");
-        assert!(plans[0].k > plans[1].k, "flat spectrum should win ranks: {plans:?}");
-        assert!(plans.iter().all(|p| p.k >= 1));
-    }
-
-    #[test]
-    fn global_allocation_matches_uniform_on_identical_layers() {
-        check("identical layers → near-uniform global ranks", 10, |g| {
-            let n = g.usize_in(16, 64);
-            let s: Vec<f64> = (0..n).map(|i| 1.0 / (i + 1) as f64).collect();
-            let layers = vec![(n, n, s.clone()), (n, n, s.clone()), (n, n, s)];
-            let plans = allocate_global(&layers, 0.4, 1.0);
-            let ks: Vec<usize> = plans.iter().map(|p| p.k).collect();
-            let spread = ks.iter().max().unwrap() - ks.iter().min().unwrap();
-            if spread > 1 {
-                return Err(format!("identical layers diverged: {ks:?}"));
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
     fn plans_fit_within_padded_maxima() {
         // Every experiment configuration must fit the padded executable.
         for &(m, n) in &[(128usize, 128usize), (128, 256), (256, 128), (384, 128), (128, 384)] {
@@ -213,5 +184,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn max_k_for_alpha_is_tight_and_safe() {
+        check("max_k fits, max_k + 1 does not (or is dim-capped)", 40, |g| {
+            let m = g.usize_in(16, 384);
+            let n = g.usize_in(16, 384);
+            let alpha = *g.choose(&[0.80, 0.85, 0.90, 0.95, 0.99, 1.0]);
+            let (k1m, k2m) = max_ranks(m, n);
+            let k = max_k_for_alpha(m, n, alpha);
+            let p = split_k(k, alpha);
+            if p.k1 > k1m || p.k2 > k2m {
+                return Err(format!("cap {k} does not fit: {p:?} vs ({k1m},{k2m})"));
+            }
+            if k < (k1m + k2m).min(m.min(n)) {
+                // Tight: one more rank must overflow a padded buffer.
+                let q = split_k(k + 1, alpha);
+                if q.k1 <= k1m && q.k2 <= k2m {
+                    return Err(format!("cap {k} not tight: {q:?} also fits"));
+                }
+            }
+            // Every standard-protocol plan respects the cap.
+            for &ratio in &[0.10, 0.30, 0.50] {
+                if plan(m, n, ratio, alpha).k > k {
+                    return Err(format!("uniform plan exceeds cap {k} at ρ={ratio}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -239,6 +239,22 @@ impl Whitener {
         }
     }
 
+    /// `‖S‖²_F = tr(S·Sᵀ)` of the n×n whitening transform, in closed form
+    /// (no materialization): `n` for identity, `Σsᵢ²` for diag, `‖L‖²_F =
+    /// tr(G + ridge·I)` for Cholesky, `Σ λ₊` for eigen, `γ²·n` for the
+    /// γ-scaled rotation (P orthogonal).  Used by the per-layer α tune to
+    /// put activation-weighted and plain residual energies in the same
+    /// units without an O(n³) `whiten(I)` product.
+    pub fn fro_norm_sq(&self, n: usize) -> f64 {
+        match self {
+            Whitener::Identity => n as f64,
+            Whitener::Diag { s } => s.iter().map(|x| x * x).sum(),
+            Whitener::Chol { l, .. } => l.fro_norm().powi(2),
+            Whitener::Eig { eig } => eig.values.iter().map(|&v| v.max(0.0)).sum(),
+            Whitener::EigGamma { gamma, .. } => gamma * gamma * n as f64,
+        }
+    }
+
     pub fn kind(&self) -> &'static str {
         match self {
             Whitener::Identity => "identity",
@@ -439,6 +455,28 @@ mod tests {
         assert!(aw.data.iter().all(|v| v.is_finite()));
         let back = w.unwhiten_rows(&aw);
         assert!(back.dist(&Matrix::identity(4)) < 1e-9);
+    }
+
+    #[test]
+    fn fro_norm_sq_matches_materialized_transform() {
+        let mut rng = Rng::new(6);
+        let n = 7;
+        let (stats, _) = random_stats(n, n + 12, &mut rng);
+        for w in [
+            Whitener::identity(),
+            Whitener::diag(&stats),
+            Whitener::cholesky(&stats),
+            Whitener::eigen(&stats),
+            Whitener::eigen_gamma(&stats),
+        ] {
+            let direct = w.whiten(&Matrix::identity(n)).fro_norm().powi(2);
+            let closed = w.fro_norm_sq(n);
+            assert!(
+                (direct - closed).abs() < 1e-9 * (1.0 + direct),
+                "{}: materialized {direct} vs closed form {closed}",
+                w.kind()
+            );
+        }
     }
 
     #[test]

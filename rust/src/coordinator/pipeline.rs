@@ -12,18 +12,23 @@
 
 use crate::calib::collector::{collect_native, TapStats};
 use crate::calib::similarity::{similarity_stats, SimilarityReport};
+use crate::compress::allocate::{AllocConfig, AllocStrategy, LayerProfile, ALPHA_GRID};
 use crate::compress::engine::{CompressionEngine, EngineConfig, WhitenerCache};
 use crate::compress::lowrank::CompressedModel;
 use crate::compress::methods::CompressionSpec;
+use crate::compress::ranks;
 use crate::data::batch::Batcher;
 use crate::data::corpus::{Corpus, Registry, DOMAIN_NAMES};
-use crate::eval::perplexity::{evaluate, evaluate_with_workers, EvalBackend, PerplexityResult};
+use crate::eval::perplexity::{
+    evaluate, evaluate_with_workers, pooled_ppl, EvalBackend, PerplexityResult,
+};
 use crate::linalg::rsvd::SvdPolicy;
 use crate::model::config::ModelConfig;
 use crate::model::weights::Weights;
 use crate::runtime::exec::Runtime;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::path::PathBuf;
 
 /// Pipeline configuration.
@@ -53,6 +58,16 @@ pub struct PipelineConfig {
     /// ([`SvdPolicy::exact`]) reproduces the serial pipeline bit-for-bit;
     /// [`SvdPolicy::auto`] enables the certified randomized fast path.
     pub svd: SvdPolicy,
+    /// Rank allocation strategy (`--allocate`).  `Uniform` (default) is the
+    /// paper protocol and bit-identical to the pre-allocator planner;
+    /// `Spectrum` water-fills one global parameter budget across layers by
+    /// whitened spectral mass ([`crate::compress::allocate`]), spending no
+    /// more parameters than the uniform plan.  Identical results at every
+    /// worker count either way.
+    pub allocate: AllocStrategy,
+    /// Replace the single global α with a per-layer (k₁, k₂) split chosen
+    /// by the auto-tune mini-sweep (`--alpha auto`; nested methods only).
+    pub alpha_auto: bool,
 }
 
 impl PipelineConfig {
@@ -67,6 +82,8 @@ impl PipelineConfig {
             workers: 0,
             eval_workers: 1,
             svd: SvdPolicy::exact(),
+            allocate: AllocStrategy::Uniform,
+            alpha_auto: false,
         }
     }
 }
@@ -89,6 +106,20 @@ impl CompressionReport {
     }
 }
 
+/// One point of a budget-vs-perplexity sweep ([`Pipeline::run_budget_sweep`]).
+#[derive(Clone, Debug)]
+pub struct BudgetSweepPoint {
+    /// Requested compression ratio (sets the global parameter budget).
+    pub ratio: f64,
+    /// Allocation strategy label (`uniform` | `spectrum`).
+    pub strategy: &'static str,
+    /// Parameters actually stored by the compressed model.
+    pub compressed_params: usize,
+    /// Token-weighted perplexity pooled over every eval dataset
+    /// ([`pooled_ppl`]).
+    pub ppl: f64,
+}
+
 /// The pipeline: owns the runtime, weights, and cached calibration.
 pub struct Pipeline {
     pub config: PipelineConfig,
@@ -102,6 +133,10 @@ pub struct Pipeline {
     /// of a d_ff-sized Gram costs seconds, so this dominates sweep setup).
     /// `Arc`-backed so the sharded engine's worker threads can share it.
     whitener_cache: WhitenerCache,
+    /// whitener kind → per-layer whitened spectra.  Spectra depend only on
+    /// `(weights, whitener)`, never on the ratio or α, so ratio sweeps and
+    /// repeated spectrum-mode compressions profile each layer exactly once.
+    spectra_cache: HashMap<String, Vec<LayerProfile>>,
 }
 
 impl Pipeline {
@@ -135,6 +170,7 @@ impl Pipeline {
             registry,
             calib: None,
             whitener_cache: Default::default(),
+            spectra_cache: Default::default(),
         })
     }
 
@@ -205,12 +241,86 @@ impl Pipeline {
             workers: self.config.workers,
             svd: self.config.svd.clone(),
         });
-        engine.compress_model(
+        if self.config.allocate == AllocStrategy::Uniform && !self.config.alpha_auto {
+            // The paper protocol — untouched fast path, bit-identical to
+            // the pre-allocator pipeline.
+            return engine.compress_model(
+                &self.model_cfg,
+                &self.weights,
+                stats,
+                spec,
+                &mut self.whitener_cache,
+            );
+        }
+        let alloc = AllocConfig {
+            strategy: self.config.allocate,
+            alpha_auto: self.config.alpha_auto,
+            k_caps: self.pjrt_rank_caps(spec),
+        };
+        // Spectra depend only on (weights, whitener kind), so one profiling
+        // pass serves every ratio/α of a sweep.
+        let profiles: Option<&[LayerProfile]> = if self.config.allocate == AllocStrategy::Spectrum
+        {
+            let kind = spec.method.whitener_kind().to_string();
+            if !self.spectra_cache.contains_key(&kind) {
+                let p = engine.profile_spectra(
+                    &self.model_cfg,
+                    &self.weights,
+                    stats,
+                    spec,
+                    &mut self.whitener_cache,
+                )?;
+                self.spectra_cache.insert(kind.clone(), p);
+            }
+            Some(self.spectra_cache.get(&kind).unwrap().as_slice())
+        } else {
+            None
+        };
+        let plans = engine.plan_model_with_profiles(
             &self.model_cfg,
             &self.weights,
             stats,
             spec,
+            &alloc,
+            profiles,
             &mut self.whitener_cache,
+        )?;
+        engine.compress_model_planned(
+            &self.model_cfg,
+            &self.weights,
+            stats,
+            spec,
+            &plans,
+            &mut self.whitener_cache,
+        )
+    }
+
+    /// Per-layer total-rank caps for the spectrum allocator when factors
+    /// must fit the fixed-shape PJRT executables ([`ranks::max_k_for_alpha`]);
+    /// the native forward has no padded buffers, so no cap applies.  With
+    /// `--alpha auto` the cap must hold for every candidate split, so the
+    /// most restrictive grid α wins.
+    fn pjrt_rank_caps(&self, spec: &CompressionSpec) -> Option<Vec<usize>> {
+        if self.rt.is_none() {
+            return None;
+        }
+        let auto = self.config.alpha_auto && spec.method.is_nested();
+        Some(
+            self.model_cfg
+                .linear_shapes
+                .iter()
+                .map(|(_, n_in, n_out)| {
+                    if auto {
+                        ALPHA_GRID
+                            .iter()
+                            .map(|&a| ranks::max_k_for_alpha(*n_out, *n_in, a))
+                            .min()
+                            .unwrap_or(1)
+                    } else {
+                        ranks::max_k_for_alpha(*n_out, *n_in, spec.effective_alpha())
+                    }
+                })
+                .collect(),
         )
     }
 
@@ -272,6 +382,33 @@ impl Pipeline {
             compressed_params: cm.params(),
             results,
         })
+    }
+
+    /// Sweep the global parameter budget (one compression ratio per point)
+    /// under the configured allocation strategy and return the
+    /// budget-vs-perplexity curve — the axis on which `--allocate spectrum`
+    /// is compared against the uniform protocol.  The whitener cache and
+    /// (in spectrum mode) the per-layer spectra cache are shared across
+    /// points — spectra are ratio-independent, so profiling runs once and
+    /// each extra ratio costs only its decompositions + eval.
+    pub fn run_budget_sweep(
+        &mut self,
+        spec: &CompressionSpec,
+        ratios: &[f64],
+    ) -> Result<Vec<BudgetSweepPoint>> {
+        let mut out = Vec::with_capacity(ratios.len());
+        for &ratio in ratios {
+            let point_spec = CompressionSpec { ratio, ..*spec };
+            let cm = self.compress(&point_spec)?;
+            let results = self.evaluate_all(Some(&cm))?;
+            out.push(BudgetSweepPoint {
+                ratio,
+                strategy: self.config.allocate.label(),
+                compressed_params: cm.params(),
+                ppl: pooled_ppl(&results),
+            });
+        }
+        Ok(out)
     }
 
     /// Dense (uncompressed) baseline row.

@@ -51,6 +51,18 @@ impl PerplexityResult {
     }
 }
 
+/// Pool per-dataset results into one scalar perplexity:
+/// `exp(Σ nll / Σ tokens)` over every dataset — the y-axis of the
+/// budget-vs-perplexity sweeps (`Pipeline::run_budget_sweep`, the
+/// `perf_allocate` bench).  Token-weighted, i.e. the same pooling
+/// [`PerplexityResult::merge`] performs, NOT the mean of per-dataset
+/// perplexities (which would over-weight short domains).
+pub fn pooled_ppl(results: &[PerplexityResult]) -> f64 {
+    let sum_nll: f64 = results.iter().map(|r| r.sum_nll).sum();
+    let tokens: f64 = results.iter().map(|r| r.tokens).sum();
+    (sum_nll / tokens.max(1.0)).exp()
+}
+
 /// Which execution engine scores batches.
 pub enum EvalBackend<'a> {
     /// Dense PJRT evaluator.
@@ -225,6 +237,18 @@ mod tests {
         assert_eq!(a.sum_nll, 30.0);
         assert_eq!(a.tokens, 15.0);
         assert!((a.ppl() - 2.0f64.exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pooled_ppl_is_token_weighted_merge() {
+        let a = PerplexityResult { dataset: "a".into(), sum_nll: 10.0, tokens: 5.0 };
+        let b = PerplexityResult { dataset: "b".into(), sum_nll: 20.0, tokens: 10.0 };
+        // Same pooling as merging the two results into one.
+        assert!((pooled_ppl(&[a.clone(), b]) - 2.0f64.exp()).abs() < 1e-12);
+        // A single dataset pools to its own perplexity.
+        assert!((pooled_ppl(&[a.clone()]) - a.ppl()).abs() < 1e-12);
+        // Empty input degrades to exp(0) rather than NaN.
+        assert_eq!(pooled_ppl(&[]), 1.0);
     }
 
     #[test]

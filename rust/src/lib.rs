@@ -19,7 +19,8 @@
 //! * [`data`] — byte-level corpora, splits, batching.
 //! * [`model`] — transformer configs, NSVDW weight loading, native forward.
 //! * [`compress`] — the paper's methods: SVD, ASVD-0/I/II/III, NSVD-I/II,
-//!   NID-I/II, rank budgeting, padded low-rank layers, and the parallel
+//!   NID-I/II, rank budgeting, the global spectrum-driven rank allocator
+//!   ([`compress::allocate`]), padded low-rank layers, and the parallel
 //!   sharded decomposition engine ([`compress::engine`]).
 //! * [`calib`] — activation Gram collection + similarity analysis.
 //! * [`eval`] — perplexity evaluation.
@@ -27,9 +28,11 @@
 //! * [`coordinator`] — pipeline orchestration, scheduler, serving, reports.
 //! * [`bench`] — the criterion-free benchmark harness used by `cargo bench`.
 //!
-//! New readers: start with the repo-root `README.md` (quickstart, layout)
-//! and `ARCHITECTURE.md` (layering, data flow, where the engine and rsvd
-//! fast path sit); then come back here for API-level docs.
+//! New readers: start with the repo-root `README.md` (quickstart, layout),
+//! `ARCHITECTURE.md` (layering, data flow, where the engine and rsvd fast
+//! path sit), and `METHODS.md` (the paper-to-code map: every equation and
+//! theorem linked to its implementing function and pinning test); then
+//! come back here for API-level docs.
 
 pub mod bench;
 pub mod calib;

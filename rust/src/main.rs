@@ -51,7 +51,9 @@ fn build_cli() -> Cli {
                 .flag("model", "model name", Some("llama-t"))
                 .flag("method", "svd | asvd-0 | asvd-i | asvd-ii | asvd-iii | nsvd-i | nsvd-ii | nid-i | nid-ii", Some("nsvd-i"))
                 .flag("ratio", "compression ratio (0-1)", Some("0.3"))
-                .flag("alpha", "k1 share for nested methods", Some("0.95"))
+                .flag("alpha", "k1 share for nested methods, or 'auto' (per-layer tune)", Some("0.95"))
+                .flag("allocate", "rank allocation: uniform (paper protocol) | spectrum (global water-filling)", Some("uniform"))
+                .flag("sweep-ratios", "comma-separated ratios: print the budget-vs-perplexity curve instead of one run", None)
                 .flag("windows", "eval windows per dataset", Some("64"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
@@ -98,7 +100,9 @@ fn build_cli() -> Cli {
                 .flag("model", "model name", Some("llama-t"))
                 .flag("method", "compression method", Some("nsvd-i"))
                 .flag("ratio", "compression ratio", Some("0.3"))
-                .flag("alpha", "k1 share", Some("0.95"))
+                .flag("alpha", "k1 share, or 'auto' (per-layer tune)", Some("0.95"))
+                .flag("allocate", "rank allocation: uniform | spectrum", Some("uniform"))
+                .flag("sweep-ratios", "comma-separated ratios: print the budget-vs-perplexity curve instead of one run", None)
                 .flag("windows", "eval windows per dataset", Some("32"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
@@ -137,7 +141,25 @@ fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> 
         }
         other => anyhow::bail!("--jacobi expects 'cyclic' or 'tournament', got '{other}'"),
     }
+    if let Some(strategy) = args.get("allocate") {
+        cfg.allocate = nsvd::compress::AllocStrategy::parse(strategy)?;
+    }
+    // `--alpha auto` switches the per-layer split tune on; a numeric value
+    // (or the flag's absence) keeps the fixed global α carried by the spec.
+    if args.get("alpha").is_some() && args.get_f64_or_auto("alpha").is_none() {
+        anyhow::bail!("--alpha expects a number in (0, 1] or 'auto'");
+    }
+    if args.get_f64_or_auto("alpha") == Some(None) {
+        cfg.alpha_auto = true;
+    }
     Pipeline::new(cfg)
+}
+
+/// The spec's fixed α: the numeric `--alpha` when given, the paper default
+/// otherwise (also the fallback the spec carries under `--alpha auto`,
+/// where the per-layer tune overrides it).
+fn alpha_from(args: &nsvd::util::cli::Args) -> f64 {
+    args.get_f64_or_auto("alpha").flatten().unwrap_or(0.95)
 }
 
 fn cmd_info(args: &nsvd::util::cli::Args) -> Result<()> {
@@ -165,8 +187,30 @@ fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
     let spec = CompressionSpec {
         method: Method::parse(args.get_or("method", "nsvd-i"))?,
         ratio: args.get_f64("ratio").unwrap_or(0.3),
-        alpha: args.get_f64("alpha").unwrap_or(0.95),
+        alpha: alpha_from(args),
     };
+    let mut sweep: Vec<f64> = Vec::new();
+    for s in args.get_list("sweep-ratios") {
+        sweep.push(s.parse().map_err(|_| {
+            anyhow::anyhow!("--sweep-ratios: '{s}' is not a number (expected e.g. 0.2,0.3,0.5)")
+        })?);
+    }
+    if !sweep.is_empty() {
+        let t = Timer::start();
+        let points = pipeline.run_budget_sweep(&spec, &sweep)?;
+        println!(
+            "budget-vs-perplexity sweep — model={model} method={} allocate={} α={}",
+            spec.method.label(),
+            pipeline.config.allocate.label(),
+            if pipeline.config.alpha_auto { "auto".to_string() } else { spec.alpha.to_string() },
+        );
+        println!("{:>8} {:>12} {:>12}", "ratio", "params", "pooled ppl");
+        for p in &points {
+            println!("{:>7.0}% {:>12} {:>12.2}", p.ratio * 100.0, p.compressed_params, p.ppl);
+        }
+        println!("({} points in {:.1}s)", points.len(), t.elapsed_s());
+        return Ok(());
+    }
     let t = Timer::start();
     let report = pipeline.run(&spec)?;
     println!(

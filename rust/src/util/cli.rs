@@ -54,6 +54,16 @@ impl Args {
         }
     }
 
+    /// Parse a flag that accepts either the literal `auto` or a float
+    /// (e.g. `--alpha auto` vs `--alpha 0.95`): `Some(None)` for `auto`,
+    /// `Some(Some(v))` for a number, `None` when absent or malformed.
+    pub fn get_f64_or_auto(&self, name: &str) -> Option<Option<f64>> {
+        match self.get(name)? {
+            "auto" => Some(None),
+            s => s.parse().ok().map(Some),
+        }
+    }
+
     /// Parse a comma-separated list flag.
     pub fn get_list(&self, name: &str) -> Vec<String> {
         self.get(name)
@@ -280,6 +290,24 @@ mod tests {
         );
         assert_eq!(
             cmd.parse(&argv(&["--workers", "lots"])).unwrap().get_workers("workers"),
+            None
+        );
+    }
+
+    #[test]
+    fn f64_or_auto_flag() {
+        let cmd = Command::new("t", "t").flag("alpha", "k1 share or auto", Some("0.95"));
+        assert_eq!(cmd.parse(&argv(&[])).unwrap().get_f64_or_auto("alpha"), Some(Some(0.95)));
+        assert_eq!(
+            cmd.parse(&argv(&["--alpha", "auto"])).unwrap().get_f64_or_auto("alpha"),
+            Some(None)
+        );
+        assert_eq!(
+            cmd.parse(&argv(&["--alpha", "0.8"])).unwrap().get_f64_or_auto("alpha"),
+            Some(Some(0.8))
+        );
+        assert_eq!(
+            cmd.parse(&argv(&["--alpha", "lots"])).unwrap().get_f64_or_auto("alpha"),
             None
         );
     }

@@ -7,6 +7,7 @@
 //!
 //! Skipped when `artifacts/` is missing.
 
+use nsvd::compress::allocate::{self, LayerProfile};
 use nsvd::compress::methods::{compress_layer, layer_error, CompressionSpec, Method};
 use nsvd::compress::ranks;
 use nsvd::compress::whiten::Whitener;
@@ -121,17 +122,24 @@ fn global_rank_allocation_beats_uniform_on_weighted_error() {
     let stats = pipeline.calibrate().unwrap().clone();
     let names: Vec<(String, usize, usize)> = pipeline.model_cfg.linear_shapes.clone();
     // Whitened spectra per layer.
-    let mut spectra = Vec::new();
+    let mut profiles = Vec::new();
     for (name, n_in, n_out) in &names {
         let t = pipeline.weights.get(name).unwrap();
         let s = stats.for_linear(name).unwrap();
         let a = Matrix::from_f32(*n_in, *n_out, &t.data).transpose();
         let w = Whitener::cholesky(s);
         let svd = svd_thin(&w.whiten(&a));
-        spectra.push((*n_out, *n_in, svd.s));
+        profiles.push(LayerProfile {
+            name: name.clone(),
+            m: *n_out,
+            n: *n_in,
+            spectrum: svd.s,
+        });
     }
     let ratio = 0.40;
-    let global_plans = ranks::allocate_global(&spectra, ratio, 1.0);
+    let ks = allocate::spectrum_ranks(&profiles, ratio, None);
+    let global_plans: Vec<ranks::RankPlan> =
+        ks.iter().map(|&k| ranks::split_k(k, 1.0)).collect();
     let spec = CompressionSpec::new(Method::AsvdI, ratio);
     let mut uniform_err = 0.0;
     let mut global_err = 0.0;
