@@ -32,6 +32,16 @@
 #                                     --quick mode (asserts spectrum never
 #                                     loses to uniform on the synthetic
 #                                     model)
+#   4e. serve smoke                 — the generation-server tests run by
+#                                     name (KV pool recycling, batched-
+#                                     step bit-parity incl. mid-stream
+#                                     joins, streaming) plus perf_serve's
+#                                     parity section in --quick mode
+#                                     (served tokens == sequential
+#                                     generate at batch {1,3,8} × workers
+#                                     {1,4}, dense and compressed);
+#                                     perf_serve also compiles under the
+#                                     gate-3 `cargo bench --no-run`
 #   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
@@ -77,6 +87,10 @@ cargo test -q tournament
 step "allocator smoke (tests + perf_allocate greedy --quick)"
 cargo test -q allocat
 cargo bench --bench perf_allocate -- allocate_greedy --quick
+
+step "serve smoke (generation-server tests + perf_serve parity --quick)"
+cargo test -q serve
+cargo bench --bench perf_serve -- parity --quick
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,148 @@
+//! Perf: continuous-batching generation server — decode tokens/s vs batch
+//! size for dense vs NSVD-shaped low-rank overrides, plus the
+//! batched-vs-sequential parity smoke.
+//!
+//! Artifact-free (random weights, synthetic factors): the subject is the
+//! serving system — the slotted KV pool, the step scheduler, and the
+//! one-GEMM-per-weight batched decode — not model quality.
+//!
+//! The stable summary is written to the top-level `BENCH_serve.json`
+//! (same convention as `BENCH_gemm.json` / `BENCH_allocate.json`): decode
+//! tokens/s per batch size and the batched-over-b1 speedup, so the decode
+//! throughput trajectory is tracked across PRs.  The acceptance number is
+//! `speedup_vs_b1 > 1` for b > 1 on multi-core hardware.
+//!
+//!   cargo bench --bench perf_serve              # full run, refreshes JSON
+//!   cargo bench --bench perf_serve -- parity --quick   # ci.sh smoke
+
+use nsvd::bench::{drive_preloaded, synthetic_nsvd, tiny_model, Suite};
+use nsvd::model::config::ModelConfig;
+use nsvd::model::forward::{random_weights, LinearOverride, NoOverride};
+use nsvd::model::generate::{generate, SampleConfig};
+use nsvd::model::weights::Weights;
+use nsvd::serve::GenConfig;
+
+/// Deterministic synthetic prompt for request `i` — the SINGLE source for
+/// both the served requests and the parity expectations below.
+fn bench_prompt(i: usize, len: usize) -> Vec<u8> {
+    (0..len).map(|t| ((t * 31 + i * 7) % 256) as u8).collect()
+}
+
+fn bench_sample(i: usize) -> SampleConfig {
+    SampleConfig { temperature: 0.8, top_k: 16, seed: i as u64 }
+}
+
+/// Serve `n_req` preloaded requests to completion on this thread; returns
+/// the streamed outputs (request order) and generated-token count.
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    n_req: usize,
+    prompt_len: usize,
+    max_new: usize,
+    max_batch: usize,
+    workers: usize,
+) -> (Vec<Vec<u8>>, usize) {
+    let reqs = (0..n_req)
+        .map(|i| (bench_prompt(i, prompt_len), max_new, bench_sample(i)))
+        .collect();
+    let gen_cfg = GenConfig {
+        max_batch,
+        slots: max_batch,
+        slot_cap: prompt_len + max_new,
+        workers,
+    };
+    let (outs, metrics) = drive_preloaded(cfg, weights, overrides, &gen_cfg, reqs);
+    (outs, metrics.generated)
+}
+
+fn main() {
+    let mut suite = Suite::from_args("perf_serve");
+    let quick = suite.quick();
+
+    // ---- parity smoke: served tokens == sequential generate, bit-exact,
+    // at batch sizes {1, 3, 8} × workers {1, 4} (ci.sh runs this filter) ----
+    if suite.enabled("serve_parity") {
+        let (cfg, weights) = tiny_model("llama-t", 3);
+        let cm = synthetic_nsvd(&cfg, 0.30, 0.95, 4);
+        suite.bench("serve_parity", 1, || {
+            for overrides in [&NoOverride as &dyn LinearOverride, &cm] {
+                for &b in &[1usize, 3, 8] {
+                    for &workers in &[1usize, 4] {
+                        let (outs, _) =
+                            run_batch(&cfg, &weights, overrides, 8, 5, 6, b, workers);
+                        for (i, out) in outs.iter().enumerate() {
+                            let expect = generate(
+                                &cfg,
+                                &weights,
+                                overrides,
+                                &bench_prompt(i, 5),
+                                6,
+                                bench_sample(i),
+                            )
+                            .unwrap();
+                            assert_eq!(
+                                *out, expect,
+                                "parity failure: batch={b} workers={workers} request {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+        suite.record_metric("serve_parity", "parity_ok", 1.0);
+    }
+
+    // ---- decode throughput vs batch size, dense vs NSVD override ----
+    let cfg = ModelConfig::builtin("llama-t").unwrap();
+    let weights = random_weights(&cfg, 1);
+    let cm = synthetic_nsvd(&cfg, 0.30, 0.95, 2);
+    let max_new = if quick { 8 } else { 48 };
+    // prompt_len 1: the single prompt token's step already samples, so
+    // EVERY timed step generates one token per active row — tokens/s here
+    // is pure decode throughput, not diluted by prefill steps.  (The
+    // parity smoke above uses longer prompts to exercise prefill.)
+    let prompt_len = 1;
+    for (variant, overrides) in
+        [("dense", &NoOverride as &dyn LinearOverride), ("nsvd", &cm)]
+    {
+        for b in [1usize, 2, 4, 8] {
+            let name = format!("serve_decode_b{b}_{variant}");
+            if !suite.enabled(&name) {
+                continue;
+            }
+            let tokens_per_iter = (b * max_new) as f64;
+            // Plain bench(), not bench_throughput(): write_summary would
+            // report `items` as (meaningless) gflops in the tracked JSON.
+            suite.bench(&name, if quick { 1 } else { 3 }, || {
+                let (_, generated) =
+                    run_batch(&cfg, &weights, overrides, b, prompt_len, max_new, b, 0);
+                assert_eq!(generated, b * max_new);
+            });
+            if let Some(mb) = suite.mean_of(&name).filter(|&m| m > 0.0) {
+                let tps = tokens_per_iter / mb;
+                suite.record_metric(&name, "tokens_per_s", tps);
+                // Batched tokens/s over batch-1 tokens/s on the same
+                // hardware — the continuous-batching win (only computable
+                // when the b1 bench ran under the current filter).
+                if let Some(m1) = suite
+                    .mean_of(&format!("serve_decode_b1_{variant}"))
+                    .filter(|&m| m > 0.0)
+                {
+                    suite.record_metric(&name, "speedup_vs_b1", tps / (max_new as f64 / m1));
+                }
+            }
+        }
+    }
+
+    // Stable top-level summary, matching the BENCH_gemm.json convention.
+    // Skipped under a filter that excludes the decode benches and in
+    // --quick mode, so the ci.sh parity smoke never clobbers the tracked
+    // throughput numbers.
+    if suite.enabled("serve_decode_b1_dense") && !suite.quick() {
+        suite.write_summary(std::path::Path::new("BENCH_serve.json"), "serve");
+    }
+    suite.finish();
+}

@@ -37,6 +37,156 @@ pub fn table_windows(quick: bool) -> usize {
     }
 }
 
+/// NSVD-shaped low-rank override with random factors at the exact ranks a
+/// `ratio` compression with k₁ share `alpha` stores (per-layer plan from
+/// [`crate::compress::ranks::plan`], the paper protocol) — the synthetic
+/// model the artifact-free serving bench and example share.  Throughput
+/// shape only, not fitted quality: factor variance is scaled so the
+/// reconstructed product matches `random_weights`' `1/√n_in` layers and
+/// activations stay sane through the nonlinearity.
+pub fn synthetic_nsvd(
+    cfg: &crate::model::ModelConfig,
+    ratio: f64,
+    alpha: f64,
+    seed: u64,
+) -> crate::compress::CompressedModel {
+    use crate::compress::{ranks, CompressedLayer, CompressedModel};
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut cm = CompressedModel::default();
+    for (name, n_in, n_out) in &cfg.linear_shapes {
+        let (m, n) = (*n_in, *n_out);
+        let plan = ranks::plan(m, n, ratio, alpha);
+        // Per-branch product variance 1/(m·branches), so the SUM of the
+        // independent P1·Q1 + P2·Q2 branches matches random_weights' 1/m
+        // weight variance: each factor element gets std (m·k·branches)^-¼
+        // (k·std⁴ per branch = 1/(m·branches)).
+        let branches = if plan.k2 > 0 { 2.0 } else { 1.0 };
+        let std =
+            |k: usize| (1.0 / ((m * k.max(1)) as f64 * branches)).powf(0.25);
+        let p1 = Matrix::randn(m, plan.k1, std(plan.k1), &mut rng);
+        let q1 = Matrix::randn(plan.k1, n, std(plan.k1), &mut rng);
+        let p2 = Matrix::randn(m, plan.k2, std(plan.k2), &mut rng);
+        let q2 = Matrix::randn(plan.k2, n, std(plan.k2), &mut rng);
+        cm.insert(name, CompressedLayer::from_matrices(&p1, &q1, &p2, &q2));
+    }
+    cm
+}
+
+/// A 2-layer cut of a builtin model family with `random_weights` — the
+/// fast fixture behind the serve parity tests (`serve::test_util`) and
+/// `perf_serve`'s parity smoke, kept in one place so the two suites can
+/// never drift apart.  `mistral-t` gets `window = 4` so the
+/// sliding-window cache path runs.
+pub fn tiny_model(name: &str, seed: u64) -> (crate::model::ModelConfig, crate::model::Weights) {
+    let mut cfg = crate::model::ModelConfig::builtin(name).expect("builtin model");
+    cfg.n_layers = 2;
+    cfg.linear_shapes
+        .retain(|(n, _, _)| n.starts_with("blocks.0.") || n.starts_with("blocks.1."));
+    if name == "mistral-t" {
+        cfg.window = 4;
+    }
+    let w = crate::model::forward::random_weights(&cfg, seed);
+    (cfg, w)
+}
+
+/// Drive the generation server with a preloaded batch of `(prompt,
+/// max_new, sample)` requests on the calling thread: send everything,
+/// close the channel, serve to completion, and return each request's
+/// streamed tokens (request order) plus the server metrics.  The shared
+/// harness behind the serve parity tests and `perf_serve`
+/// (`examples/serving_throughput.rs` keeps its own concurrent
+/// closed-loop clients — that concurrency is what it demonstrates).
+pub fn drive_preloaded(
+    cfg: &crate::model::ModelConfig,
+    weights: &crate::model::Weights,
+    overrides: &dyn crate::model::forward::LinearOverride,
+    gen: &crate::serve::GenConfig,
+    reqs: Vec<(Vec<u8>, usize, crate::model::generate::SampleConfig)>,
+) -> (Vec<Vec<u8>>, crate::coordinator::metrics::GenServerMetrics) {
+    use crate::serve::{collect_stream, serve_generation, stream_channel, GenRequest};
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut streams = Vec::new();
+    for (i, (prompt, max_new, sample)) in reqs.into_iter().enumerate() {
+        let (stream, events) = stream_channel();
+        tx.send(GenRequest {
+            id: i as u64,
+            prompt,
+            max_new,
+            sample,
+            stream,
+            enqueued: std::time::Instant::now(),
+        })
+        .expect("request channel open");
+        streams.push(events);
+    }
+    drop(tx);
+    let metrics =
+        serve_generation(cfg, weights, overrides, gen, rx).expect("serve_generation");
+    let outs = streams.iter().map(|rx| collect_stream(rx).0).collect();
+    (outs, metrics)
+}
+
+/// Drive the generation server with `clients` concurrent closed-loop
+/// client threads on top of the calling thread (which becomes the
+/// scheduler): client `c` sends requests `c, c+clients, …` of
+/// `0..total`, each built by `make(i) -> (prompt, max_new, sample)`, and
+/// sends the next only after the previous stream finishes.  Returns the
+/// server metrics plus every [`crate::serve::DoneStats`] the clients
+/// collected.  The shared harness behind `serve-gen` and
+/// `examples/serving_throughput.rs`.
+pub fn drive_concurrent(
+    cfg: &crate::model::ModelConfig,
+    weights: &crate::model::Weights,
+    overrides: &dyn crate::model::forward::LinearOverride,
+    gen: &crate::serve::GenConfig,
+    clients: usize,
+    total: usize,
+    make: &(dyn Fn(usize) -> (Vec<u8>, usize, crate::model::generate::SampleConfig) + Sync),
+) -> crate::Result<(
+    crate::coordinator::metrics::GenServerMetrics,
+    Vec<crate::serve::DoneStats>,
+)> {
+    use crate::serve::{collect_stream, serve_generation, stream_channel, GenRequest};
+    let clients = clients.max(1).min(total.max(1));
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    std::thread::scope(|scope| {
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        for c in 0..clients {
+            let req_tx = req_tx.clone();
+            let done_tx = done_tx.clone();
+            scope.spawn(move || {
+                let mut i = c;
+                while i < total {
+                    let (prompt, max_new, sample) = make(i);
+                    let (stream, events) = stream_channel();
+                    let req = GenRequest {
+                        id: i as u64,
+                        prompt,
+                        max_new,
+                        sample,
+                        stream,
+                        enqueued: std::time::Instant::now(),
+                    };
+                    if req_tx.send(req).is_err() {
+                        return;
+                    }
+                    let (_tokens, stats) = collect_stream(&events);
+                    if let Some(s) = stats {
+                        let _ = done_tx.send(s);
+                    }
+                    i += clients;
+                }
+            });
+        }
+        drop(done_tx);
+        drop(req_tx);
+        let metrics = serve_generation(cfg, weights, overrides, gen, req_rx)?;
+        Ok((metrics, done_rx.iter().collect()))
+    })
+}
+
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
 pub struct Measurement {

@@ -1,4 +1,11 @@
-//! Serving metrics: latency, queue wait, batch-size distribution.
+//! Serving metrics: latency, queue wait, batch-size distribution — for the
+//! scoring server ([`ServerMetrics`]) and the continuous-batching
+//! generation server ([`GenServerMetrics`]).
+//!
+//! Both keep full sample buffers and report latency percentiles
+//! (p50/p95/p99 via [`Stats`], which sorts the buffer) rather than means:
+//! serving tails are what capacity planning cares about, and a mean hides
+//! the convoy effects dynamic batching can introduce.
 
 use crate::util::timer::Stats;
 
@@ -48,14 +55,138 @@ impl ServerMetrics {
         let lat = self.latency();
         format!(
             "requests={} batches={} throughput={:.1} req/s mean_fill={:.2} \
-             latency p50={:.1}ms p99={:.1}ms max={:.1}ms",
+             latency p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms",
             self.completed,
             self.batches,
             self.throughput_rps(),
             self.mean_batch_fill(),
             lat.p50 * 1e3,
+            lat.p95 * 1e3,
             lat.p99 * 1e3,
             lat.max * 1e3,
+        )
+    }
+}
+
+/// Cap on each percentile sample buffer of [`GenServerMetrics`]: beyond
+/// it the buffers turn into rings over the most recent observations, so a
+/// generation server that runs indefinitely holds bounded metric memory
+/// (~0.5 MB) while its counters stay exact.
+pub const GEN_MAX_SAMPLES: usize = 16_384;
+
+/// Accumulated observations of the continuous-batching generation server
+/// ([`crate::serve::batcher::serve_generation`]).
+///
+/// The sample buffers are bounded ([`GEN_MAX_SAMPLES`] most recent via
+/// [`GenServerMetrics::record_step`] / [`record_finish`]); the scalar
+/// counters are exact over the whole serving window.
+///
+/// [`record_finish`]: GenServerMetrics::record_finish
+#[derive(Clone, Debug, Default)]
+pub struct GenServerMetrics {
+    /// End-to-end request latency: enqueue → finished (seconds;
+    /// bounded ring, most recent [`GEN_MAX_SAMPLES`]).
+    pub latency_s: Vec<f64>,
+    /// Time to first generated token per request (seconds; bounded ring).
+    pub ttft_s: Vec<f64>,
+    /// Wall-clock of each batched decode step (seconds; bounded ring).
+    pub step_s: Vec<f64>,
+    /// Active sequences per executed step (bounded ring).
+    pub batch_fill: Vec<f64>,
+    /// Requests retired (completed + cancelled mid-stream).
+    pub completed: usize,
+    /// Requests retired because the client dropped its stream receiver.
+    pub cancelled: usize,
+    /// Requests refused at admission (bad prompt / over slot capacity).
+    pub rejected: usize,
+    /// Total tokens generated (across all requests).
+    pub generated: usize,
+    /// Batched decode steps executed.
+    pub steps: usize,
+    /// Wall-clock of the serving window (seconds).
+    pub wall_s: f64,
+}
+
+impl GenServerMetrics {
+    fn push_capped(buf: &mut Vec<f64>, count: usize, v: f64) {
+        if buf.len() < GEN_MAX_SAMPLES {
+            buf.push(v);
+        } else {
+            buf[count % GEN_MAX_SAMPLES] = v;
+        }
+    }
+
+    /// Record one executed decode step (wall-clock + active sequences);
+    /// bumps `steps` and feeds the bounded sample rings.
+    pub fn record_step(&mut self, step_s: f64, fill: f64) {
+        Self::push_capped(&mut self.step_s, self.steps, step_s);
+        Self::push_capped(&mut self.batch_fill, self.steps, fill);
+        self.steps += 1;
+    }
+
+    /// Record one retired request (completed or cancelled); bumps
+    /// `completed` and feeds the bounded latency/TTFT rings.
+    pub fn record_finish(&mut self, latency_s: f64, ttft_s: f64) {
+        Self::push_capped(&mut self.latency_s, self.completed, latency_s);
+        Self::push_capped(&mut self.ttft_s, self.completed, ttft_s);
+        self.completed += 1;
+    }
+
+    /// Generated tokens per second of serving wall-clock — THE number
+    /// continuous batching exists to raise.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.generated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// End-to-end latency percentiles (sorted-sample buffer).
+    pub fn latency(&self) -> Stats {
+        Stats::from(&self.latency_s)
+    }
+
+    /// Time-to-first-token percentiles.
+    pub fn ttft(&self) -> Stats {
+        Stats::from(&self.ttft_s)
+    }
+
+    /// Per-step wall-clock percentiles.
+    pub fn step(&self) -> Stats {
+        Stats::from(&self.step_s)
+    }
+
+    /// Mean active sequences per step (the continuous-batching fill),
+    /// over the bounded sample window.
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batch_fill.is_empty() {
+            0.0
+        } else {
+            self.batch_fill.iter().sum::<f64>() / self.batch_fill.len() as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let lat = self.latency();
+        let ttft = self.ttft();
+        format!(
+            "requests={} rejected={} cancelled={} tokens={} steps={} \
+             tok/s={:.1} mean_fill={:.2} latency p50={:.1}ms p95={:.1}ms \
+             p99={:.1}ms ttft p50={:.1}ms p95={:.1}ms",
+            self.completed,
+            self.rejected,
+            self.cancelled,
+            self.generated,
+            self.steps,
+            self.tokens_per_s(),
+            self.mean_batch_fill(),
+            lat.p50 * 1e3,
+            lat.p95 * 1e3,
+            lat.p99 * 1e3,
+            ttft.p50 * 1e3,
+            ttft.p95 * 1e3,
         )
     }
 }
@@ -84,5 +215,57 @@ mod tests {
         let m = ServerMetrics::default();
         assert_eq!(m.throughput_rps(), 0.0);
         assert_eq!(m.mean_batch_fill(), 0.0);
+    }
+
+    #[test]
+    fn serve_gen_metrics_tokens_per_s_and_percentiles() {
+        let m = GenServerMetrics {
+            latency_s: vec![0.010, 0.020, 0.040, 0.080],
+            ttft_s: vec![0.004, 0.006, 0.005, 0.007],
+            step_s: vec![0.001; 10],
+            batch_fill: vec![2.0, 4.0],
+            completed: 4,
+            cancelled: 1,
+            rejected: 2,
+            generated: 120,
+            steps: 10,
+            wall_s: 2.0,
+        };
+        assert_eq!(m.tokens_per_s(), 60.0);
+        assert_eq!(m.mean_batch_fill(), 3.0);
+        // Percentiles come from the sorted sample buffer, not the mean.
+        assert_eq!(m.latency().p50, 0.020);
+        assert_eq!(m.latency().p95, 0.080);
+        assert_eq!(m.latency().p99, 0.080);
+        let s = m.summary();
+        assert!(s.contains("requests=4"));
+        assert!(s.contains("rejected=2"));
+        assert!(s.contains("p95="));
+    }
+
+    #[test]
+    fn serve_gen_sample_buffers_are_bounded() {
+        let mut m = GenServerMetrics::default();
+        for i in 0..GEN_MAX_SAMPLES + 100 {
+            m.record_step(i as f64, 1.0);
+            m.record_finish(i as f64, i as f64 / 2.0);
+        }
+        assert_eq!(m.steps, GEN_MAX_SAMPLES + 100);
+        assert_eq!(m.completed, GEN_MAX_SAMPLES + 100);
+        assert_eq!(m.step_s.len(), GEN_MAX_SAMPLES);
+        assert_eq!(m.latency_s.len(), GEN_MAX_SAMPLES);
+        // The ring overwrote the oldest entries with the most recent.
+        assert_eq!(m.step_s[0], GEN_MAX_SAMPLES as f64);
+        assert_eq!(m.step_s[99], (GEN_MAX_SAMPLES + 99) as f64);
+        assert_eq!(m.step_s[100], 100.0);
+    }
+
+    #[test]
+    fn serve_gen_empty_metrics_are_safe() {
+        let m = GenServerMetrics::default();
+        assert_eq!(m.tokens_per_s(), 0.0);
+        assert_eq!(m.mean_batch_fill(), 0.0);
+        assert_eq!(m.latency().n, 0);
+        assert!(m.summary().contains("requests=0"));
     }
 }

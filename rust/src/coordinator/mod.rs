@@ -6,10 +6,13 @@
 //!   [`crate::compress::engine::CompressionEngine`].
 //! * [`scheduler`] — multi-job experiment scheduler
 //!   (used by the table regenerators to sweep ratios/methods).
-//! * [`server`]    — the serving loop: request queue, dynamic batcher over
-//!   the per-row serving executable, latency metrics.
-//! * [`reports`]   — renders the paper's tables (markdown + JSON).
-//! * [`metrics`]   — latency/throughput instrumentation.
+//! * [`server`]    — the scoring serving loop: request queue, dynamic
+//!   batcher over the per-row serving executable, latency metrics.  (The
+//!   continuous-batching *generation* server lives in [`crate::serve`].)
+//! * [`reports`]   — renders the paper's tables (markdown + JSON) and the
+//!   serving latency-percentile blocks.
+//! * [`metrics`]   — latency/throughput instrumentation for both servers
+//!   (percentiles from sorted sample buffers).
 
 pub mod metrics;
 pub mod pipeline;

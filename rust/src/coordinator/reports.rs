@@ -6,6 +6,7 @@
 
 use crate::data::corpus::{paper_label, DOMAIN_NAMES};
 use crate::util::json::Json;
+use crate::util::timer::Stats;
 
 /// A generic table (headers + rows of strings).
 #[derive(Clone, Debug, Default)]
@@ -127,6 +128,30 @@ pub fn render_method_block(title: &str, rows: &[MethodRow], baseline: usize) -> 
     table
 }
 
+/// Render serving latency percentiles as a table: one row per labeled
+/// series, p50/p95/p99 (plus mean/max) in milliseconds from the sorted
+/// sample buffer behind [`Stats`].  Used by both the scoring server
+/// (`serve`) and the generation server (`serve-gen`) CLI modes.
+pub fn render_latency_block(title: &str, rows: &[(String, Stats)]) -> Table {
+    let headers = ["Series", "n", "mean ms", "p50 ms", "p95 ms", "p99 ms", "max ms"]
+        .iter()
+        .map(|h| h.to_string())
+        .collect();
+    let mut table = Table::new(title, headers);
+    for (label, s) in rows {
+        table.push_row(vec![
+            label.clone(),
+            s.n.to_string(),
+            format!("{:.2}", s.mean * 1e3),
+            format!("{:.2}", s.p50 * 1e3),
+            format!("{:.2}", s.p95 * 1e3),
+            format!("{:.2}", s.p99 * 1e3),
+            format!("{:.2}", s.max * 1e3),
+        ]);
+    }
+    table
+}
+
 /// Write a table to `target/reports/<slug>.md` and `.json`.
 pub fn save_table(table: &Table, slug: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::Path::new("target/reports");
@@ -176,6 +201,22 @@ mod tests {
         assert!(md.contains("(↑10.0%)")); // wiki got worse
         // Avg improvement over non-wiki sets: (10+10+10+10+10+50+50)/7 = 21.4%.
         assert!(md.contains("21.4%"), "md:\n{md}");
+    }
+
+    #[test]
+    fn latency_block_reports_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 / 1e3).collect();
+        let t = render_latency_block(
+            "Serving latency",
+            &[("end-to-end".to_string(), Stats::from(&samples))],
+        );
+        let md = t.to_markdown();
+        assert!(md.contains("p50 ms"));
+        assert!(md.contains("p95 ms"));
+        assert!(md.contains("p99 ms"));
+        // 95th percentile of 1..=100 ms is 95 ms.
+        assert!(md.contains("95.00"), "md:\n{md}");
+        assert!(md.contains("99.00"));
     }
 
     #[test]

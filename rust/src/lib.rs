@@ -25,7 +25,11 @@
 //! * [`calib`] — activation Gram collection + similarity analysis.
 //! * [`eval`] — perplexity evaluation.
 //! * [`runtime`] — PJRT client, artifact registry, executors.
-//! * [`coordinator`] — pipeline orchestration, scheduler, serving, reports.
+//! * [`coordinator`] — pipeline orchestration, scheduler, scoring serving,
+//!   reports.
+//! * [`serve`] — the continuous-batching **generation** server: slotted KV
+//!   pool, step-level batch scheduler, batched decode through the GEMM
+//!   layer, per-request token streaming.
 //! * [`bench`] — the criterion-free benchmark harness used by `cargo bench`.
 //!
 //! New readers: start with the repo-root `README.md` (quickstart, layout),
@@ -43,6 +47,7 @@ pub mod eval;
 pub mod linalg;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result type (anyhow-backed).

@@ -6,10 +6,15 @@
 use anyhow::Result;
 use nsvd::compress::methods::{CompressionSpec, Method};
 use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
-use nsvd::coordinator::reports::{render_method_block, save_table, MethodRow, Table};
+use nsvd::bench::drive_concurrent;
+use nsvd::coordinator::reports::{
+    render_latency_block, render_method_block, save_table, MethodRow, Table,
+};
 use nsvd::coordinator::scheduler::{run_jobs, sweeps, Job};
 use nsvd::coordinator::server;
 use nsvd::data::corpus::{paper_label, Registry, DOMAIN_NAMES};
+use nsvd::model::generate::SampleConfig;
+use nsvd::serve::GenConfig;
 use nsvd::util::cli::{Cli, Command};
 use nsvd::util::timer::Timer;
 use std::path::PathBuf;
@@ -30,6 +35,7 @@ fn main() {
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "serve" => cmd_serve(&args),
+        "serve-gen" => cmd_serve_gen(&args),
         "e2e" => cmd_e2e(&args),
         _ => unreachable!(),
     };
@@ -95,6 +101,31 @@ fn build_cli() -> Cli {
                 .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic")),
         )
         .command(
+            Command::new(
+                "serve-gen",
+                "continuous-batching generation server over a compressed model",
+            )
+            .flag("artifacts", "artifacts directory", Some("artifacts"))
+            .flag("model", "model name", Some("llama-t"))
+            .flag("method", "compression method", Some("nsvd-i"))
+            .flag("ratio", "compression ratio", Some("0.3"))
+            .flag("requests", "total generation requests", Some("32"))
+            .flag("clients", "concurrent closed-loop client threads", Some("4"))
+            .flag("max-batch", "max sequences decoded per step", Some("8"))
+            .flag("slots", "KV pool slot count (clamped to max-batch)", Some("8"))
+            .flag("max-new", "new tokens per request", Some("32"))
+            .flag("prompt-len", "prompt length (bytes, windowed from the corpus)", Some("16"))
+            .flag("temperature", "sampling temperature (0 = greedy)", Some("0.8"))
+            .flag("top-k", "top-k sampling cutoff (0 = full distribution)", Some("20"))
+            .flag("seed", "base sampling seed (request i uses seed + i)", Some("0"))
+            .flag("workers", "thread budget for BOTH the compression phase and the batched decode step's GEMMs (auto = all cores)", Some("auto"))
+            .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
+            .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
+            .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
+            .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic"))
+            .switch("native", "calibrate/compress through the native forward instead of PJRT (generation itself is always native)"),
+        )
+        .command(
             Command::new("e2e", "full pipeline demo: calibrate → compress → evaluate")
                 .flag("artifacts", "artifacts directory", Some("artifacts"))
                 .flag("model", "model name", Some("llama-t"))
@@ -145,12 +176,19 @@ fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> 
         cfg.allocate = nsvd::compress::AllocStrategy::parse(strategy)?;
     }
     // `--alpha auto` switches the per-layer split tune on; a numeric value
-    // (or the flag's absence) keeps the fixed global α carried by the spec.
-    if args.get("alpha").is_some() && args.get_f64_or_auto("alpha").is_none() {
-        anyhow::bail!("--alpha expects a number in (0, 1] or 'auto'");
-    }
-    if args.get_f64_or_auto("alpha") == Some(None) {
-        cfg.alpha_auto = true;
+    // (or the flag's absence) keeps the fixed global α carried by the
+    // spec.  One parse, three cases — an out-of-range numeric α would
+    // otherwise be silently clamped by split_k into a different
+    // experiment than the one requested.
+    if args.get("alpha").is_some() {
+        match args.get_f64_or_auto("alpha") {
+            None => anyhow::bail!("--alpha expects a number in (0, 1] or 'auto'"),
+            Some(None) => cfg.alpha_auto = true,
+            Some(Some(a)) if !(a > 0.0 && a <= 1.0) => {
+                anyhow::bail!("--alpha expects a number in (0, 1] or 'auto', got {a}")
+            }
+            Some(Some(_)) => {}
+        }
     }
     Pipeline::new(cfg)
 }
@@ -413,9 +451,94 @@ fn cmd_serve(args: &nsvd::util::cli::Args) -> Result<()> {
     let responses: Vec<_> = resp_rx.iter().collect();
     println!("served {} responses", responses.len());
     println!("{}", metrics.summary());
+    let table = render_latency_block(
+        "Scoring latency percentiles",
+        &[
+            ("end-to-end".to_string(), metrics.latency()),
+            ("queue wait".to_string(), metrics.queue_wait()),
+        ],
+    );
+    println!("{}", table.to_markdown());
     let mean_ppl: f64 =
         responses.iter().map(|r| r.ppl).sum::<f64>() / responses.len().max(1) as f64;
     println!("mean request ppl: {mean_ppl:.2}");
+    Ok(())
+}
+
+fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
+    let model = args.get_or("model", "llama-t").to_string();
+    let mut pipeline = pipeline_from(args, &model)?;
+    let spec = CompressionSpec {
+        method: Method::parse(args.get_or("method", "nsvd-i"))?,
+        ratio: args.get_f64("ratio").unwrap_or(0.3),
+        alpha: 0.95,
+    };
+    println!(
+        "compressing {model} with {} at {:.0}%...",
+        spec.method.label(),
+        spec.ratio * 100.0
+    );
+    let cm = pipeline.compress(&spec)?;
+
+    let n = args.get_usize("requests").unwrap_or(32).max(1);
+    let clients = args.get_usize("clients").unwrap_or(4).max(1).min(n);
+    let prompt_len = args.get_usize("prompt-len").unwrap_or(16).max(1);
+    let max_new = args.get_usize("max-new").unwrap_or(32).max(1);
+    let gen_cfg = GenConfig {
+        max_batch: args.get_usize("max-batch").unwrap_or(8).max(1),
+        slots: args.get_usize("slots").unwrap_or(8).max(1),
+        slot_cap: prompt_len + max_new,
+        workers: args.get_workers("workers").unwrap_or(0),
+    };
+    let sample = SampleConfig {
+        temperature: args.get_f64("temperature").unwrap_or(0.8) as f32,
+        top_k: args.get_usize("top-k").unwrap_or(20),
+        seed: args.get_u64("seed").unwrap_or(0),
+    };
+    let registry = Registry::new(&PathBuf::from(args.get_or("artifacts", "artifacts")));
+    let corpus = registry.load("alpaca", "test")?;
+    let prompts: Vec<Vec<u8>> = corpus
+        .tokens
+        .chunks_exact(prompt_len)
+        .take(n)
+        .map(|w| w.to_vec())
+        .collect();
+    anyhow::ensure!(!prompts.is_empty(), "corpus too small for --prompt-len {prompt_len}");
+
+    println!(
+        "serving {n} requests from {clients} clients \
+         (max_batch={}, slots={}, max_new={max_new})...",
+        gen_cfg.max_batch, gen_cfg.slots
+    );
+    // Producers fan in over mpsc from `clients` closed-loop threads; the
+    // main thread becomes the scheduler and owns the KV pool (shared
+    // harness: nsvd::bench::drive_concurrent).
+    let (metrics, client_stats) = drive_concurrent(
+        &pipeline.model_cfg,
+        &pipeline.weights,
+        &cm,
+        &gen_cfg,
+        clients,
+        n,
+        &|i| {
+            (
+                prompts[i % prompts.len()].clone(),
+                max_new,
+                SampleConfig { seed: sample.seed.wrapping_add(i as u64), ..sample },
+            )
+        },
+    )?;
+    println!("{}", metrics.summary());
+    println!("clients saw {} completed streams", client_stats.len());
+    let table = render_latency_block(
+        "Generation latency percentiles",
+        &[
+            ("end-to-end".to_string(), metrics.latency()),
+            ("time-to-first-token".to_string(), metrics.ttft()),
+            ("per decode step".to_string(), metrics.step()),
+        ],
+    );
+    println!("{}", table.to_markdown());
     Ok(())
 }
 

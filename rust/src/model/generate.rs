@@ -22,10 +22,26 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Cache sized for the model's configured maximum sequence length
+    /// (`cfg.max_seq`).  Use [`KvCache::with_capacity`] when the caller
+    /// knows the exact prompt + generation length.
     pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache::with_capacity(cfg, cfg.max_seq)
+    }
+
+    /// Preallocate per-layer K/V storage for `max_len` positions so the hot
+    /// decode loop never reallocates mid-generation.  `max_len` is a
+    /// capacity hint, not a hard limit — pushing past it still works (the
+    /// backing `Vec`s grow), it just pays the reallocation the hint was
+    /// meant to avoid.
+    pub fn with_capacity(cfg: &ModelConfig, max_len: usize) -> KvCache {
         KvCache {
-            k: vec![Vec::new(); cfg.n_layers],
-            v: vec![Vec::new(); cfg.n_layers],
+            k: (0..cfg.n_layers)
+                .map(|_| Vec::with_capacity(max_len * cfg.d_model))
+                .collect(),
+            v: (0..cfg.n_layers)
+                .map(|_| Vec::with_capacity(max_len * cfg.d_model))
+                .collect(),
             len: 0,
             d: cfg.d_model,
         }
@@ -36,16 +52,18 @@ impl KvCache {
         self.v[layer].extend_from_slice(v_row);
     }
 
-    fn k_at(&self, layer: usize, t: usize) -> &[f32] {
-        &self.k[layer][t * self.d..(t + 1) * self.d]
+    /// Contiguous K rows `[0, t_now)` of `layer` ([t_now * d_model]).
+    fn k_hist(&self, layer: usize, t_now: usize) -> &[f32] {
+        &self.k[layer][..t_now * self.d]
     }
 
-    fn v_at(&self, layer: usize, t: usize) -> &[f32] {
-        &self.v[layer][t * self.d..(t + 1) * self.d]
+    /// Contiguous V rows `[0, t_now)` of `layer` ([t_now * d_model]).
+    fn v_hist(&self, layer: usize, t_now: usize) -> &[f32] {
+        &self.v[layer][..t_now * self.d]
     }
 }
 
-fn rmsnorm_row(x: &mut [f32], w: &[f32]) {
+pub(crate) fn rmsnorm_row(x: &mut [f32], w: &[f32]) {
     let d = x.len();
     let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / d as f32;
     let inv = 1.0 / (ms + 1e-5).sqrt();
@@ -54,7 +72,7 @@ fn rmsnorm_row(x: &mut [f32], w: &[f32]) {
     }
 }
 
-fn layernorm_row(x: &mut [f32], w: &[f32], b: &[f32]) {
+pub(crate) fn layernorm_row(x: &mut [f32], w: &[f32], b: &[f32]) {
     let d = x.len();
     let mu: f32 = x.iter().sum::<f32>() / d as f32;
     let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
@@ -64,7 +82,7 @@ fn layernorm_row(x: &mut [f32], w: &[f32], b: &[f32]) {
     }
 }
 
-fn rope_row(x: &mut [f32], heads: usize, hd: usize, pos: usize) {
+pub(crate) fn rope_row(x: &mut [f32], heads: usize, hd: usize, pos: usize) {
     let half = hd / 2;
     for h in 0..heads {
         let base = h * hd;
@@ -79,7 +97,69 @@ fn rope_row(x: &mut [f32], heads: usize, hd: usize, pos: usize) {
     }
 }
 
+/// Causal attention of ONE query row over a contiguous K/V history.
+///
+/// `q` is the RoPE'd query row (`[heads * hd]`), `k_hist`/`v_hist` are the
+/// first `t_now` cached rows of one layer (`[t_now * heads * hd]`), and the
+/// scores run over positions `[lo, t_now)` (sliding window already folded
+/// into `lo`).  Results accumulate into `att` (caller zeroes it).
+///
+/// This is the single implementation shared by the sequential
+/// [`decode_step`] and the batched step of the generation server
+/// ([`crate::serve::step::decode_step_batched`]) — sharing it (and the
+/// exact float-op order inside) is what makes the batched path
+/// bit-identical to the sequential one per request.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_row(
+    q: &[f32],
+    k_hist: &[f32],
+    v_hist: &[f32],
+    heads: usize,
+    hd: usize,
+    scale: f32,
+    lo: usize,
+    t_now: usize,
+    att: &mut [f32],
+) {
+    let d = heads * hd;
+    // One scores buffer reused across heads (clear keeps the capacity);
+    // the per-element float-op order is untouched.
+    let mut scores = Vec::with_capacity(t_now - lo);
+    for hh in 0..heads {
+        let qoff = hh * hd;
+        scores.clear();
+        let mut max_s = f32::NEG_INFINITY;
+        for si in lo..t_now {
+            let krow = &k_hist[si * d..(si + 1) * d];
+            let mut dot = 0.0f32;
+            for u in 0..hd {
+                dot += q[qoff + u] * krow[qoff + u];
+            }
+            let s = dot * scale;
+            max_s = max_s.max(s);
+            scores.push(s);
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - max_s).exp();
+            denom += *s;
+        }
+        for (idx, si) in (lo..t_now).enumerate() {
+            let w = scores[idx] / denom;
+            let vrow = &v_hist[si * d..(si + 1) * d];
+            for u in 0..hd {
+                att[qoff + u] += w * vrow[qoff + u];
+            }
+        }
+    }
+}
+
 /// One incremental decode step: feed token at position `pos`, return logits.
+///
+/// LOCKSTEP WARNING: the generation server's batched twin
+/// ([`crate::serve::step::decode_step_batched`]) mirrors this function
+/// operation-for-operation and is pinned bit-identical per request by the
+/// serve parity tests — any model change here must be made there too.
 pub fn decode_step(
     cfg: &ModelConfig,
     weights: &Weights,
@@ -127,33 +207,17 @@ pub fn decode_step(
         let t_now = pos + 1;
         let lo = if cfg.window > 0 { t_now.saturating_sub(cfg.window) } else { 0 };
         let mut att = vec![0.0f32; d];
-        for hh in 0..heads {
-            let qoff = hh * hd;
-            let mut scores = Vec::with_capacity(t_now - lo);
-            let mut max_s = f32::NEG_INFINITY;
-            for si in lo..t_now {
-                let krow = cache.k_at(i, si);
-                let mut dot = 0.0f32;
-                for u in 0..hd {
-                    dot += q[qoff + u] * krow[qoff + u];
-                }
-                let s = dot * scale;
-                max_s = max_s.max(s);
-                scores.push(s);
-            }
-            let mut denom = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - max_s).exp();
-                denom += *s;
-            }
-            for (idx, si) in (lo..t_now).enumerate() {
-                let w = scores[idx] / denom;
-                let vrow = cache.v_at(i, si);
-                for u in 0..hd {
-                    att[qoff + u] += w * vrow[qoff + u];
-                }
-            }
-        }
+        attend_row(
+            &q,
+            cache.k_hist(i, t_now),
+            cache.v_hist(i, t_now),
+            heads,
+            hd,
+            scale,
+            lo,
+            t_now,
+            &mut att,
+        );
         let o = lin(&format!("blocks.{i}.attn.wo"), &att)?;
         for (xv, ov) in x.iter_mut().zip(&o) {
             *xv += ov;
@@ -223,7 +287,12 @@ pub fn generate(
     sample: SampleConfig,
 ) -> Result<Vec<u8>> {
     assert!(!prompt.is_empty(), "prompt must be non-empty");
-    let mut cache = KvCache::new(cfg);
+    // The final sampled token is never fed back (its logits would be
+    // discarded), so the cache holds prompt + n_new - 1 positions and the
+    // last loop iteration skips the decode — same tokens, one fewer full
+    // transformer step per request.  The generation server's batched path
+    // makes the same skip.
+    let mut cache = KvCache::with_capacity(cfg, prompt.len() + n_new.saturating_sub(1));
     let mut rng = Rng::new(sample.seed);
     let mut logits = Vec::new();
     for (pos, &t) in prompt.iter().enumerate() {
@@ -231,16 +300,23 @@ pub fn generate(
     }
     let mut out = Vec::with_capacity(n_new);
     let mut pos = prompt.len();
-    for _ in 0..n_new {
+    for i in 0..n_new {
         let next = sample_token(&logits, sample, &mut rng);
         out.push(next);
-        logits = decode_step(cfg, weights, overrides, &mut cache, next, pos)?;
-        pos += 1;
+        if i + 1 < n_new {
+            logits = decode_step(cfg, weights, overrides, &mut cache, next, pos)?;
+            pos += 1;
+        }
     }
     Ok(out)
 }
 
-fn sample_token(logits: &[f32], sc: SampleConfig, rng: &mut Rng) -> u8 {
+/// Sample the next token from `logits` under `sc` (greedy when
+/// `temperature <= 0`, top-k softmax otherwise).  Pure function of
+/// `(logits, sc, rng state)` — the generation server gives every request
+/// its own seeded [`Rng`] so co-batched neighbors can never perturb a
+/// request's sampling stream.
+pub fn sample_token(logits: &[f32], sc: SampleConfig, rng: &mut Rng) -> u8 {
     if sc.temperature <= 0.0 {
         let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
         for (i, &l) in logits.iter().enumerate() {
@@ -326,6 +402,20 @@ mod tests {
                 assert!((a - b).abs() < 5e-4, "{name}: decode {a} vs batch {b}");
             }
         }
+    }
+
+    #[test]
+    fn kv_cache_preallocates_capacity() {
+        // The hot decode loop must never reallocate: with_capacity reserves
+        // max_len rows per layer up front, and new() defaults to max_seq.
+        let (cfg, _w) = tiny();
+        let c = KvCache::with_capacity(&cfg, 40);
+        assert_eq!(c.k.len(), cfg.n_layers);
+        assert!(c.k.iter().all(|v| v.capacity() >= 40 * cfg.d_model));
+        assert!(c.v.iter().all(|v| v.capacity() >= 40 * cfg.d_model));
+        assert_eq!(c.len, 0);
+        let c = KvCache::new(&cfg);
+        assert!(c.k.iter().all(|v| v.capacity() >= cfg.max_seq * cfg.d_model));
     }
 
     #[test]

@@ -1,0 +1,418 @@
+//! The step-level scheduler: continuous batching over the slotted KV pool.
+//!
+//! One scheduler thread owns the [`KvPool`] and the decode loop; producers
+//! fan [`GenRequest`]s in over an mpsc channel from any number of threads.
+//! Between decode steps the scheduler (a) retires finished or cancelled
+//! sequences, recycling their slots in O(1), and (b) admits queued
+//! requests into free slots — a request admitted at step *t* starts
+//! prefilling at step *t* while its neighbors keep decoding, and its
+//! output is bit-identical to a fresh single-request run
+//! ([`crate::model::generate::generate`]) because the batched step is
+//! bit-identical per row and sampling state is per-request
+//! (seeded [`Rng`] from the request's own [`SampleConfig::seed`]).
+
+use super::kv_pool::KvPool;
+use super::step::{decode_step_batched, StepRow};
+use super::stream::{DoneStats, FinishReason, StreamEvent, TokenStream};
+use crate::coordinator::metrics::GenServerMetrics;
+use crate::model::config::ModelConfig;
+use crate::model::forward::LinearOverride;
+use crate::model::generate::{sample_token, SampleConfig};
+use crate::model::weights::Weights;
+use crate::util::rng::Rng;
+use crate::util::threads::ThreadBudget;
+use crate::util::timer::Timer;
+use anyhow::Result;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::time::Instant;
+
+/// One generation request.
+#[derive(Debug)]
+pub struct GenRequest {
+    /// Caller-chosen id, echoed in [`DoneStats`].
+    pub id: u64,
+    /// Prompt tokens (must be non-empty).
+    pub prompt: Vec<u8>,
+    /// Tokens to generate (must be ≥ 1).
+    pub max_new: usize,
+    /// Per-request sampling configuration; `seed` makes the output
+    /// deterministic regardless of co-batched neighbors.
+    pub sample: SampleConfig,
+    /// Streaming delivery channel back to the client.
+    pub stream: TokenStream,
+    /// When the client enqueued the request (for latency metrics).
+    pub enqueued: Instant,
+}
+
+/// Generation-server knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct GenConfig {
+    /// Maximum sequences decoded per step (the GEMM row count cap).
+    pub max_batch: usize,
+    /// KV pool slot count (resident-sequence cap; a separate knob from
+    /// `max_batch` for schedulers that admit more residents than they
+    /// decode per step).  The current step scheduler decodes every
+    /// resident each step, so it clamps this to `max_batch` — more slots
+    /// would preallocate KV storage no sequence could occupy.
+    pub slots: usize,
+    /// Per-slot KV capacity: admission rejects requests needing more than
+    /// `slot_cap` KV rows (`prompt + max_new - 1` — the final sampled
+    /// token is never fed back).
+    pub slot_cap: usize,
+    /// Thread budget for the batched step's GEMMs (0 = all cores);
+    /// bit-identical results at every value.
+    pub workers: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { max_batch: 8, slots: 8, slot_cap: 128, workers: 0 }
+    }
+}
+
+/// One admitted sequence's scheduler state.
+struct Active {
+    req: GenRequest,
+    slot: usize,
+    rng: Rng,
+    /// Position of the token fed next step.
+    pos: usize,
+    /// Token fed next step.
+    token: u8,
+    /// Tokens generated so far.
+    produced: usize,
+    /// Enqueue → first generated token, set once.
+    ttft_s: Option<f64>,
+}
+
+/// Run the generation server until the request channel closes and every
+/// admitted sequence has finished.  Blocks the calling thread (which
+/// becomes the scheduler/owner of the pool); returns accumulated metrics.
+pub fn serve_generation(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    gen: &GenConfig,
+    requests: Receiver<GenRequest>,
+) -> Result<GenServerMetrics> {
+    let max_batch = gen.max_batch.max(1);
+    // Admission caps at max_batch, so slots beyond it could never hold a
+    // sequence — clamp rather than preallocate dead KV storage.
+    let slots = gen.slots.max(1).min(max_batch);
+    let slot_cap = gen.slot_cap.max(1);
+    let step_workers = ThreadBudget::new(gen.workers).total();
+    let mut pool = KvPool::new(cfg, slots, slot_cap);
+    let mut active: Vec<Active> = Vec::new();
+    let mut metrics = GenServerMetrics::default();
+    let mut open = true;
+    let wall = Timer::start();
+    loop {
+        // ---- admission: only between steps, never past free capacity ----
+        while open && active.len() < max_batch && pool.free_count() > 0 {
+            let next = if active.is_empty() {
+                // Nothing in flight: block for work (or shutdown).
+                match requests.recv() {
+                    Ok(r) => Some(r),
+                    Err(_) => {
+                        open = false;
+                        None
+                    }
+                }
+            } else {
+                match requests.try_recv() {
+                    Ok(r) => Some(r),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        None
+                    }
+                }
+            };
+            let Some(req) = next else { break };
+            // A request feeds prompt + max_new - 1 positions (the final
+            // sampled token is never fed back), so that is the KV rows it
+            // needs.
+            if req.prompt.is_empty()
+                || req.max_new == 0
+                || req.prompt.len() + req.max_new - 1 > pool.cap()
+            {
+                let latency = req.enqueued.elapsed().as_secs_f64();
+                let _ = req.stream.send(StreamEvent::Done(DoneStats {
+                    id: req.id,
+                    generated: 0,
+                    finish: FinishReason::Rejected,
+                    latency_s: latency,
+                    ttft_s: latency,
+                }));
+                metrics.rejected += 1;
+                continue;
+            }
+            let slot = pool.acquire().expect("free slot checked above");
+            let rng = Rng::new(req.sample.seed);
+            let token = req.prompt[0];
+            active.push(Active { req, slot, rng, pos: 0, token, produced: 0, ttft_s: None });
+        }
+        if active.is_empty() {
+            if !open {
+                break;
+            }
+            continue; // back to the blocking recv
+        }
+        // ---- one batched decode step over every active sequence ----
+        let rows: Vec<StepRow> = active
+            .iter()
+            .map(|a| StepRow {
+                slot: a.slot,
+                token: a.token,
+                pos: a.pos,
+                // Prefill rows (all but the last prompt token) never have
+                // their logits read — the step skips their lm_head rows.
+                needs_logits: a.pos + 1 >= a.req.prompt.len(),
+            })
+            .collect();
+        let step_t = Timer::start();
+        let logits = decode_step_batched(cfg, weights, overrides, &mut pool, &rows, step_workers)?;
+        metrics.record_step(step_t.elapsed_s(), active.len() as f64);
+        // ---- advance every row; collect finished ones ----
+        let vocab = cfg.vocab;
+        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
+        for (r, a) in active.iter_mut().enumerate() {
+            a.pos += 1;
+            if a.pos < a.req.prompt.len() {
+                a.token = a.req.prompt[a.pos]; // still prefilling
+                continue;
+            }
+            let row_logits = &logits[r * vocab..(r + 1) * vocab];
+            let next = sample_token(row_logits, a.req.sample, &mut a.rng);
+            let index = a.produced;
+            a.produced += 1;
+            metrics.generated += 1;
+            if a.ttft_s.is_none() {
+                a.ttft_s = Some(a.req.enqueued.elapsed().as_secs_f64());
+            }
+            let delivered = a.req.stream.send(StreamEvent::Token { index, byte: next });
+            if !delivered {
+                finished.push((r, FinishReason::Cancelled));
+            } else if a.produced == a.req.max_new {
+                finished.push((r, FinishReason::Completed));
+            } else {
+                a.token = next;
+            }
+        }
+        // Retire in reverse index order so swap_remove never disturbs a
+        // lower pending index; slots recycle in O(1).
+        for (r, finish) in finished.into_iter().rev() {
+            let a = active.swap_remove(r);
+            pool.release(a.slot);
+            let latency = a.req.enqueued.elapsed().as_secs_f64();
+            let ttft = a.ttft_s.unwrap_or(latency);
+            metrics.record_finish(latency, ttft);
+            if finish == FinishReason::Cancelled {
+                metrics.cancelled += 1;
+            }
+            let _ = a.req.stream.send(StreamEvent::Done(DoneStats {
+                id: a.req.id,
+                generated: a.produced,
+                finish,
+                latency_s: latency,
+                ttft_s: ttft,
+            }));
+        }
+    }
+    metrics.wall_s = wall.elapsed_s();
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::NoOverride;
+    use crate::model::generate::generate;
+    use crate::serve::stream::collect_stream;
+    use crate::util::prop::check;
+    use std::sync::mpsc::channel;
+
+    fn tiny(name: &str) -> (ModelConfig, Weights) {
+        crate::serve::test_util::tiny(name, 47)
+    }
+
+    /// Preload `reqs`, serve to completion on this thread, return each
+    /// request's streamed tokens (in request order) and the metrics —
+    /// the shared harness from `crate::bench`.
+    fn run_server(
+        cfg: &ModelConfig,
+        w: &Weights,
+        gen: &GenConfig,
+        reqs: Vec<(Vec<u8>, usize, SampleConfig)>,
+    ) -> (Vec<Vec<u8>>, GenServerMetrics) {
+        crate::bench::drive_preloaded(cfg, w, &NoOverride, gen, reqs)
+    }
+
+    fn reference(cfg: &ModelConfig, w: &Weights, reqs: &[(Vec<u8>, usize, SampleConfig)]) -> Vec<Vec<u8>> {
+        reqs.iter()
+            .map(|(prompt, max_new, sample)| {
+                generate(cfg, w, &NoOverride, prompt, *max_new, *sample).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serve_matches_sequential_generate_all_families() {
+        for name in ["llama-t", "opt-t", "mistral-t"] {
+            let (cfg, w) = tiny(name);
+            let reqs: Vec<(Vec<u8>, usize, SampleConfig)> = (0..3)
+                .map(|i| {
+                    (
+                        (0..(2 + i)).map(|t| ((t * 67 + i * 13) % 251) as u8).collect(),
+                        4 + i,
+                        SampleConfig { temperature: 0.9, top_k: 20, seed: 100 + i as u64 },
+                    )
+                })
+                .collect();
+            let expect = reference(&cfg, &w, &reqs);
+            let gen = GenConfig { max_batch: 3, slots: 3, slot_cap: 16, workers: 1 };
+            let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
+            assert_eq!(got, expect, "{name}: served tokens must equal sequential generate");
+            assert_eq!(metrics.completed, 3);
+            assert_eq!(metrics.generated, 4 + 5 + 6);
+        }
+    }
+
+    #[test]
+    fn serve_bit_identical_across_batch_sizes_and_workers() {
+        let (cfg, w) = tiny("llama-t");
+        let reqs: Vec<(Vec<u8>, usize, SampleConfig)> = (0..8)
+            .map(|i| {
+                (
+                    (0..(1 + i % 4)).map(|t| ((t * 41 + i * 7) % 256) as u8).collect(),
+                    3 + i % 3,
+                    SampleConfig { temperature: 0.8, top_k: 12, seed: i as u64 },
+                )
+            })
+            .collect();
+        let expect = reference(&cfg, &w, &reqs);
+        // The FULL advertised grid: batch {1, 3, 8} × workers {1, 4}.
+        for &max_batch in &[1usize, 3, 8] {
+            for &workers in &[1usize, 4] {
+                let gen = GenConfig { max_batch, slots: max_batch, slot_cap: 16, workers };
+                let (got, metrics) = run_server(&cfg, &w, &gen, reqs.clone());
+                assert_eq!(
+                    got, expect,
+                    "batch={max_batch} workers={workers}: output must be bit-identical"
+                );
+                assert!(metrics.batch_fill.iter().all(|&f| f <= max_batch as f64));
+                assert_eq!(metrics.completed, 8);
+            }
+        }
+    }
+
+    /// Mid-stream join/leave: with fewer slots than requests, sequences
+    /// join as slots free up at arbitrary steps t and must still match a
+    /// fresh sequential run — across families, batch shapes, and workers.
+    #[test]
+    fn serve_mid_stream_join_leave_matches_sequential() {
+        check("continuous-batching parity", 4, |g| {
+            let name = *g.choose(&["llama-t", "opt-t", "mistral-t"]);
+            let (cfg, w) = tiny(name);
+            let n_req = g.usize_in(3, 6);
+            let reqs: Vec<(Vec<u8>, usize, SampleConfig)> = (0..n_req)
+                .map(|i| {
+                    let plen = g.usize_in(1, 5);
+                    let prompt = (0..plen).map(|_| g.usize_in(0, 256) as u8).collect();
+                    let max_new = g.usize_in(1, 6);
+                    let sample = SampleConfig {
+                        temperature: 1.0,
+                        top_k: 8,
+                        seed: g.rng.next_u64(),
+                    };
+                    (prompt, max_new, sample)
+                })
+                .collect();
+            let expect = reference(&cfg, &w, &reqs);
+            let workers = *g.choose(&[1usize, 4]);
+            let gen = GenConfig { max_batch: 2, slots: 2, slot_cap: 16, workers };
+            let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
+            if got != expect {
+                return Err(format!("{name}: mid-stream join output diverged"));
+            }
+            if metrics.completed != n_req {
+                return Err(format!("completed {} != {n_req}", metrics.completed));
+            }
+            // With 2 slots and >2 requests, some admission happened at t>0.
+            if metrics.batch_fill.iter().any(|&f| f > 2.0) {
+                return Err("batch exceeded max_batch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn serve_rejects_invalid_requests() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig { max_batch: 2, slots: 2, slot_cap: 8, workers: 1 };
+        let (tx, rx) = channel();
+        let (s1, r1) = super::super::stream::stream_channel();
+        let (s2, r2) = super::super::stream::stream_channel();
+        let (s3, r3) = super::super::stream::stream_channel();
+        let (s4, r4) = super::super::stream::stream_channel();
+        let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 1 };
+        // Empty prompt; needs prompt+max_new-1 = 9 > cap 8; max_new == 0.
+        let bad = [
+            GenRequest { id: 0, prompt: vec![], max_new: 2, sample: sc, stream: s1, enqueued: Instant::now() },
+            GenRequest { id: 1, prompt: vec![1; 6], max_new: 4, sample: sc, stream: s2, enqueued: Instant::now() },
+            GenRequest { id: 2, prompt: vec![1; 2], max_new: 0, sample: sc, stream: s3, enqueued: Instant::now() },
+        ];
+        for r in bad {
+            tx.send(r).unwrap();
+        }
+        // Exact fit: 5 + 4 - 1 = 8 == cap must be ADMITTED, not rejected.
+        tx.send(GenRequest {
+            id: 3, prompt: vec![1; 5], max_new: 4, sample: sc, stream: s4,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        let metrics = serve_generation(&cfg, &w, &NoOverride, &gen, rx).unwrap();
+        assert_eq!(metrics.rejected, 3);
+        assert_eq!(metrics.completed, 1);
+        for rx in [r1, r2, r3] {
+            let (tokens, done) = collect_stream(&rx);
+            assert!(tokens.is_empty());
+            assert_eq!(done.unwrap().finish, FinishReason::Rejected);
+        }
+        let (tokens, done) = collect_stream(&r4);
+        assert_eq!(tokens.len(), 4);
+        assert_eq!(done.unwrap().finish, FinishReason::Completed);
+    }
+
+    #[test]
+    fn serve_cancelled_client_frees_slot_for_queued_request() {
+        let (cfg, w) = tiny("llama-t");
+        // One slot, two requests: the first client hangs up immediately, so
+        // the second only runs if cancellation recycles the slot.
+        let gen = GenConfig { max_batch: 1, slots: 1, slot_cap: 32, workers: 1 };
+        let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 5 };
+        let (tx, rx) = channel();
+        let (s1, r1) = super::super::stream::stream_channel();
+        drop(r1); // client 1 gone before serving starts
+        tx.send(GenRequest {
+            id: 0, prompt: vec![3, 4], max_new: 20, sample: sc, stream: s1,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        let (s2, r2) = super::super::stream::stream_channel();
+        tx.send(GenRequest {
+            id: 1, prompt: vec![9, 8, 7], max_new: 5, sample: sc, stream: s2,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        let metrics = serve_generation(&cfg, &w, &NoOverride, &gen, rx).unwrap();
+        assert_eq!(metrics.cancelled, 1);
+        assert_eq!(metrics.completed, 2); // cancelled + completed both retire
+        let (tokens, done) = collect_stream(&r2);
+        let expect = generate(&cfg, &w, &NoOverride, &[9, 8, 7], 5, sc).unwrap();
+        assert_eq!(tokens, expect);
+        assert_eq!(done.unwrap().finish, FinishReason::Completed);
+    }
+}

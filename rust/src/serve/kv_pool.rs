@@ -1,0 +1,188 @@
+//! Slotted KV pool: fixed-capacity per-slot K/V storage with O(1) recycle.
+//!
+//! Each slot holds one sequence's per-layer key/value rows in storage
+//! preallocated for `cap` positions, so the decode hot loop never allocates
+//! and a finished sequence's slot is recycled with a free-list push —
+//! no zeroing, no reallocation (`len` guards stale rows).  The pool is
+//! owned by the scheduler thread ([`super::batcher::serve_generation`]);
+//! it is deliberately not `Sync` — all mutation happens between decode
+//! steps on that one thread.
+
+use crate::model::config::ModelConfig;
+
+/// Fixed-capacity slotted K/V storage for concurrent sequences.
+#[derive(Debug)]
+pub struct KvPool {
+    layers: usize,
+    cap: usize,
+    d: usize,
+    /// `[slot * layers + layer]` → row storage `[cap * d_model]`.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Valid rows per slot (identical across that slot's layers).
+    len: Vec<usize>,
+    /// LIFO free list — `acquire`/`release` are O(1).
+    free: Vec<usize>,
+}
+
+impl KvPool {
+    /// Pool with `slots` sequences of at most `cap` positions each.
+    /// Allocates everything up front: `2 · slots · layers · cap · d_model`
+    /// f32s.
+    pub fn new(cfg: &ModelConfig, slots: usize, cap: usize) -> KvPool {
+        assert!(slots > 0, "KvPool needs at least one slot");
+        assert!(cap > 0, "KvPool needs capacity for at least one position");
+        let d = cfg.d_model;
+        let layers = cfg.n_layers;
+        KvPool {
+            layers,
+            cap,
+            d,
+            k: (0..slots * layers).map(|_| vec![0.0f32; cap * d]).collect(),
+            v: (0..slots * layers).map(|_| vec![0.0f32; cap * d]).collect(),
+            len: vec![0; slots],
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Total slot count.
+    pub fn slots(&self) -> usize {
+        self.len.len()
+    }
+
+    /// Maximum positions per slot.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Slots currently on the free list.
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Slots currently held by sequences.
+    pub fn in_use(&self) -> usize {
+        self.slots() - self.free.len()
+    }
+
+    /// Valid rows currently stored in `slot`.
+    pub fn len(&self, slot: usize) -> usize {
+        self.len[slot]
+    }
+
+    /// Claim a free slot (its length reset to 0), or `None` when the pool
+    /// is fully occupied.  O(1).
+    pub fn acquire(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.len[slot] = 0;
+        Some(slot)
+    }
+
+    /// Return `slot` to the free list.  O(1); the storage is retained and
+    /// overwritten by the next occupant (`len` guards stale rows).
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(
+            !self.free.contains(&slot),
+            "double release of KV slot {slot}"
+        );
+        self.len[slot] = 0;
+        self.free.push(slot);
+    }
+
+    /// Write the K/V rows for `(slot, layer)` at position `pos`.
+    /// Positions must be written contiguously per slot; `set_len` commits
+    /// the step's new length once every layer has been written.
+    pub fn push_row(&mut self, slot: usize, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        assert!(
+            pos < self.cap,
+            "KV slot {slot} overflow: position {pos} >= capacity {}",
+            self.cap
+        );
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let idx = slot * self.layers + layer;
+        self.k[idx][pos * self.d..(pos + 1) * self.d].copy_from_slice(k_row);
+        self.v[idx][pos * self.d..(pos + 1) * self.d].copy_from_slice(v_row);
+    }
+
+    /// Commit `slot`'s valid-row count after a decode step.
+    pub fn set_len(&mut self, slot: usize, len: usize) {
+        assert!(len <= self.cap, "KV slot {slot}: len {len} > capacity {}", self.cap);
+        self.len[slot] = len;
+    }
+
+    /// Contiguous K rows `[0, t_now)` of `(slot, layer)` — the same view
+    /// `KvCache::k_hist` gives the sequential decoder.
+    pub fn k_hist(&self, slot: usize, layer: usize, t_now: usize) -> &[f32] {
+        &self.k[slot * self.layers + layer][..t_now * self.d]
+    }
+
+    /// Contiguous V rows `[0, t_now)` of `(slot, layer)`.
+    pub fn v_hist(&self, slot: usize, layer: usize, t_now: usize) -> &[f32] {
+        &self.v[slot * self.layers + layer][..t_now * self.d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::builtin("llama-t").unwrap();
+        cfg.n_layers = 2;
+        cfg
+    }
+
+    #[test]
+    fn serve_pool_acquire_release_recycles() {
+        let cfg = cfg();
+        let mut pool = KvPool::new(&cfg, 3, 8);
+        assert_eq!(pool.free_count(), 3);
+        let a = pool.acquire().unwrap();
+        let b = pool.acquire().unwrap();
+        let c = pool.acquire().unwrap();
+        assert_eq!(pool.acquire(), None, "exhausted pool must refuse");
+        assert_eq!(pool.in_use(), 3);
+        // Release the middle one; the next acquire reuses it (LIFO).
+        pool.release(b);
+        assert_eq!(pool.free_count(), 1);
+        let b2 = pool.acquire().unwrap();
+        assert_eq!(b2, b);
+        assert_ne!(b2, a);
+        assert_ne!(b2, c);
+    }
+
+    #[test]
+    fn serve_pool_roundtrip_and_len_reset() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut pool = KvPool::new(&cfg, 2, 4);
+        let s = pool.acquire().unwrap();
+        let k0: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let v0: Vec<f32> = (0..d).map(|i| -(i as f32)).collect();
+        for layer in 0..2 {
+            pool.push_row(s, layer, 0, &k0, &v0);
+        }
+        pool.set_len(s, 1);
+        assert_eq!(pool.len(s), 1);
+        assert_eq!(pool.k_hist(s, 1, 1), &k0[..]);
+        assert_eq!(pool.v_hist(s, 0, 1), &v0[..]);
+        // Recycle: the stale row must be invisible to the next occupant.
+        pool.release(s);
+        let s2 = pool.acquire().unwrap();
+        assert_eq!(s2, s);
+        assert_eq!(pool.len(s2), 0);
+        assert!(pool.k_hist(s2, 0, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn serve_pool_rejects_overflow() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut pool = KvPool::new(&cfg, 1, 2);
+        let s = pool.acquire().unwrap();
+        let row = vec![0.0f32; d];
+        pool.push_row(s, 0, 2, &row, &row);
+    }
+}

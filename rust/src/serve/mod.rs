@@ -1,0 +1,57 @@
+//! Continuous-batching generation serving — the deployment subsystem the
+//! paper motivates: many concurrent *generation* requests decoded together
+//! over a compressed (or dense) model.
+//!
+//! The scoring server ([`crate::coordinator::server`]) batches whole token
+//! windows; generation cannot be batched that way because requests arrive,
+//! prefill, decode, and finish on their own schedules.  This module batches
+//! at the **step** level instead (Orca-style continuous batching): every
+//! active sequence contributes exactly one token row per decode step, and
+//! the scheduler admits queued requests into free KV slots *between* steps
+//! — prefilling arrivals token-by-token alongside in-flight decodes, never
+//! stalling them.
+//!
+//! * [`kv_pool`]  — slotted KV storage: fixed-capacity per-slot K/V rows,
+//!   O(1) acquire/release through a free list, zero allocation per step.
+//! * [`step`]     — [`step::decode_step_batched`]: stacks the B active rows
+//!   and routes every projection through the tiled GEMM kernel
+//!   ([`crate::linalg::gemm`]) — one GEMM per weight instead of B matvecs —
+//!   while staying **bit-identical per request** to the sequential
+//!   [`crate::model::generate::decode_step`] at every batch size and
+//!   worker count.
+//! * [`batcher`]  — [`batcher::serve_generation`]: the scheduler loop that
+//!   owns the pool; producers fan requests in over an mpsc channel from any
+//!   number of threads.
+//! * [`stream`]   — per-request streaming delivery: each generated token is
+//!   sent over the request's own channel as it is produced, with a final
+//!   [`stream::StreamEvent::Done`] carrying latency stats.
+//!
+//! Determinism contract: a request's output depends only on
+//! `(weights, overrides, prompt, SampleConfig)` — per-request seeded RNGs
+//! and the bit-identical batched step make the served tokens equal to a
+//! fresh single-request [`crate::model::generate::generate`] run no matter
+//! which neighbors shared its batches (pinned by the parity tests in
+//! [`batcher`] and [`step`]).
+
+pub mod batcher;
+pub mod kv_pool;
+pub mod step;
+pub mod stream;
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::Weights;
+
+    /// The serve parity fixture — delegates to the crate-wide
+    /// [`crate::bench::tiny_model`] so the unit-test parity suites and
+    /// `perf_serve`'s parity smoke always exercise the same model shape.
+    pub fn tiny(name: &str, seed: u64) -> (ModelConfig, Weights) {
+        crate::bench::tiny_model(name, seed)
+    }
+}
+
+pub use batcher::{serve_generation, GenConfig, GenRequest};
+pub use kv_pool::KvPool;
+pub use step::{decode_step_batched, StepRow};
+pub use stream::{collect_stream, stream_channel, DoneStats, FinishReason, StreamEvent, TokenStream};

@@ -1,0 +1,369 @@
+//! The batched decode step: B active sequences, one token row each, every
+//! projection as ONE GEMM over the stacked rows.
+//!
+//! This is where the kernel layer finally earns decode throughput: the
+//! sequential [`decode_step`](crate::model::generate::decode_step) runs
+//! each of the ~7 projections per layer as a 1-row GEMM (a matvec), so a
+//! batch of B sequences costs `B × layers × 7` matvecs.  Stacking the B
+//! rows turns that into `layers × 7` GEMMs of height B — same flops, far
+//! better operand reuse through [`crate::linalg::gemm`]'s packed panels.
+//!
+//! **Bit-identity contract.**  Per request, the batched step reproduces the
+//! sequential step bit-for-bit at every batch size and worker count:
+//!
+//! * the GEMM's per-element accumulation order is ascending-k within K
+//!   blocks regardless of the row count, row position, or worker count, so
+//!   row r of `[B, d] @ W` equals the 1-row product of that row alone;
+//! * everything that is *not* a GEMM (norms, RoPE, attention over the
+//!   sequence's own KV slot, activation nonlinearities) runs per row
+//!   through the same crate-private helpers the sequential path calls
+//!   (`rmsnorm_row`, `rope_row`, `attend_row`, …);
+//! * compressed overrides ([`LinearOverride`]) route through the same
+//!   factor GEMMs, which batch the same way.
+//!
+//! The parity tests at the bottom pin logits bit-equality against
+//! `decode_step`, including staggered positions (mid-stream joins).
+
+use super::kv_pool::KvPool;
+use crate::linalg::gemm;
+use crate::model::config::{Family, ModelConfig};
+use crate::model::forward::{matmul_f32, LinearOverride};
+use crate::model::generate::{attend_row, layernorm_row, rmsnorm_row, rope_row};
+use crate::model::weights::Weights;
+use anyhow::Result;
+
+/// Normalize every d-wide row of `h` in place — RMSNorm when `bias` is
+/// `None`, OPT LayerNorm otherwise.  The caller fetches the norm weights
+/// once per layer; the per-row math is the sequential path's helpers.
+fn norm_rows(h: &mut [f32], d: usize, w: &[f32], bias: Option<&[f32]>) {
+    for hr in h.chunks_mut(d) {
+        match bias {
+            Some(bias) => layernorm_row(hr, w, bias),
+            None => rmsnorm_row(hr, w),
+        }
+    }
+}
+
+/// One active sequence's contribution to a decode step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRow {
+    /// KV-pool slot owned by this sequence (distinct per row).
+    pub slot: usize,
+    /// Token fed this step (prompt token while prefilling, last sampled
+    /// token while decoding).
+    pub token: u8,
+    /// Position of `token` in the sequence (0-based).
+    pub pos: usize,
+    /// Will the caller read this row's logits?  `false` while prefilling
+    /// (all but the last prompt token): the row still updates its KV slot,
+    /// but the lm_head GEMM — the dominant per-step cost at real vocab
+    /// sizes — skips it and its logits row is returned zeroed.
+    pub needs_logits: bool,
+}
+
+/// One decode step over `rows.len()` sequences: feed each row's token at
+/// its own position, append K/V to each row's slot, and return the stacked
+/// logits `[rows.len(), vocab]` (row order = `rows` order; rows with
+/// `needs_logits == false` are zeroed — their lm_head product is skipped).
+///
+/// `workers` is the GEMM thread share for the stacked products
+/// (0 = all cores); results are bit-identical for every value.  Rows must
+/// reference **distinct** slots, and each slot's positions must advance
+/// contiguously (`pos == pool.len(slot)`), which the batcher guarantees
+/// (both are debug-asserted).
+///
+/// LOCKSTEP WARNING: this is the batched twin of the sequential
+/// [`decode_step`](crate::model::generate::decode_step) — the transformer
+/// math here must mirror that function operation-for-operation (the
+/// layering rule keeps it out of `model/`, which cannot import the L3 KV
+/// pool).  Any model change must be made in BOTH, and the ci.sh parity
+/// smokes (`cargo test -q serve`, `perf_serve -- parity`) pin the
+/// bit-identity.
+pub fn decode_step_batched(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    pool: &mut KvPool,
+    rows: &[StepRow],
+    workers: usize,
+) -> Result<Vec<f32>> {
+    let b = rows.len();
+    if b == 0 {
+        return Ok(Vec::new());
+    }
+    #[cfg(debug_assertions)]
+    for (r, row) in rows.iter().enumerate() {
+        debug_assert_eq!(
+            row.pos,
+            pool.len(row.slot),
+            "step row {r}: pos must equal the slot's committed length \
+             (positions advance contiguously per slot)"
+        );
+        for prev in &rows[..r] {
+            debug_assert_ne!(
+                prev.slot, row.slot,
+                "step rows must reference distinct KV slots"
+            );
+        }
+    }
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let _gemm_threads = gemm::scoped_workers(if workers == 0 {
+        crate::util::threads::default_workers()
+    } else {
+        workers
+    });
+
+    let tok_emb = weights.get("tok_emb")?;
+    let mut x = vec![0.0f32; b * d];
+    for (r, row) in rows.iter().enumerate() {
+        x[r * d..(r + 1) * d].copy_from_slice(tok_emb.row(row.token as usize));
+    }
+    if cfg.family == Family::Opt {
+        let pos_emb = weights.get("pos_emb")?;
+        for (r, row) in rows.iter().enumerate() {
+            for j in 0..d {
+                x[r * d + j] += pos_emb.at2(row.pos.min(cfg.max_seq - 1), j);
+            }
+        }
+    }
+    // One GEMM per weight over the stacked rows (or the override's factor
+    // GEMMs — CompressedLayer::apply batches identically).
+    let lin = |name: &str, h: &[f32], in_dim: usize| -> Result<Vec<f32>> {
+        if let Some(y) = overrides.apply(name, h, b, in_dim) {
+            return Ok(y);
+        }
+        Ok(matmul_f32(h, b, in_dim, weights.get(name)?))
+    };
+    for i in 0..cfg.n_layers {
+        let mut h = x.clone();
+        let nw = &weights.get(&format!("blocks.{i}.attn_norm.w"))?.data;
+        let nb = match cfg.family {
+            Family::Opt => Some(weights.get(&format!("blocks.{i}.attn_norm.b"))?.data.as_slice()),
+            _ => None,
+        };
+        norm_rows(&mut h, d, nw, nb);
+        let mut q = lin(&format!("blocks.{i}.attn.wq"), &h, d)?;
+        let mut k = lin(&format!("blocks.{i}.attn.wk"), &h, d)?;
+        let v = lin(&format!("blocks.{i}.attn.wv"), &h, d)?;
+        for (r, row) in rows.iter().enumerate() {
+            if cfg.family.uses_rope() {
+                rope_row(&mut q[r * d..(r + 1) * d], heads, hd, row.pos);
+                rope_row(&mut k[r * d..(r + 1) * d], heads, hd, row.pos);
+            }
+            pool.push_row(row.slot, i, row.pos, &k[r * d..(r + 1) * d], &v[r * d..(r + 1) * d]);
+        }
+        // Attention stays per row: each sequence attends over its own slot
+        // (identical float-op order to the sequential path via attend_row).
+        let mut att = vec![0.0f32; b * d];
+        for (r, row) in rows.iter().enumerate() {
+            let t_now = row.pos + 1;
+            let lo = if cfg.window > 0 { t_now.saturating_sub(cfg.window) } else { 0 };
+            attend_row(
+                &q[r * d..(r + 1) * d],
+                pool.k_hist(row.slot, i, t_now),
+                pool.v_hist(row.slot, i, t_now),
+                heads,
+                hd,
+                scale,
+                lo,
+                t_now,
+                &mut att[r * d..(r + 1) * d],
+            );
+        }
+        let o = lin(&format!("blocks.{i}.attn.wo"), &att, d)?;
+        for (xv, ov) in x.iter_mut().zip(&o) {
+            *xv += ov;
+        }
+        let mut h = x.clone();
+        let nw = &weights.get(&format!("blocks.{i}.mlp_norm.w"))?.data;
+        let nb = match cfg.family {
+            Family::Opt => Some(weights.get(&format!("blocks.{i}.mlp_norm.b"))?.data.as_slice()),
+            _ => None,
+        };
+        norm_rows(&mut h, d, nw, nb);
+        let m = if cfg.family == Family::Opt {
+            let mut u = lin(&format!("blocks.{i}.mlp.fc1"), &h, d)?;
+            for uv in u.iter_mut() {
+                *uv = uv.max(0.0);
+            }
+            lin(&format!("blocks.{i}.mlp.fc2"), &u, cfg.d_ff)?
+        } else {
+            let mut g = lin(&format!("blocks.{i}.mlp.w_gate"), &h, d)?;
+            let u = lin(&format!("blocks.{i}.mlp.w_up"), &h, d)?;
+            for (gv, uv) in g.iter_mut().zip(&u) {
+                let sg = *gv / (1.0 + (-*gv).exp());
+                *gv = sg * uv;
+            }
+            lin(&format!("blocks.{i}.mlp.w_down"), &g, cfg.d_ff)?
+        };
+        for (xv, mv) in x.iter_mut().zip(&m) {
+            *xv += mv;
+        }
+    }
+    let nw = &weights.get("final_norm.w")?.data;
+    let nb = match cfg.family {
+        Family::Opt => Some(weights.get("final_norm.b")?.data.as_slice()),
+        _ => None,
+    };
+    norm_rows(&mut x, d, nw, nb);
+    for row in rows {
+        pool.set_len(row.slot, row.pos + 1);
+    }
+    // lm_head only over the rows whose logits the caller reads — prefill
+    // rows' logits are discarded, and at a real vocab the lm_head GEMM
+    // dominates the step.  The GEMM is row-independent, so the computed
+    // rows are bit-identical to the all-rows product; skipped rows come
+    // back zeroed.
+    let lm_head = weights.get("lm_head")?;
+    if rows.iter().all(|row| row.needs_logits) {
+        return Ok(matmul_f32(&x, b, d, lm_head));
+    }
+    let need: Vec<usize> = (0..b).filter(|&r| rows[r].needs_logits).collect();
+    let vocab = cfg.vocab;
+    let mut logits = vec![0.0f32; b * vocab];
+    if !need.is_empty() {
+        let mut xs = vec![0.0f32; need.len() * d];
+        for (j, &r) in need.iter().enumerate() {
+            xs[j * d..(j + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
+        }
+        let sub = matmul_f32(&xs, need.len(), d, lm_head);
+        for (j, &r) in need.iter().enumerate() {
+            logits[r * vocab..(r + 1) * vocab].copy_from_slice(&sub[j * vocab..(j + 1) * vocab]);
+        }
+    }
+    Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::NoOverride;
+    use crate::model::generate::{decode_step, KvCache};
+
+    fn tiny(name: &str) -> (ModelConfig, Weights) {
+        crate::serve::test_util::tiny(name, 31)
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+        }
+    }
+
+    /// Lockstep batched decode vs B independent sequential decoders must be
+    /// bit-identical per row, for every family and worker count.
+    #[test]
+    fn serve_batched_step_bit_identical_lockstep() {
+        for name in ["llama-t", "opt-t", "mistral-t"] {
+            let (cfg, w) = tiny(name);
+            for &workers in &[1usize, 4] {
+                let b = 3usize;
+                let mut pool = KvPool::new(&cfg, b, 10);
+                let slots: Vec<usize> = (0..b).map(|_| pool.acquire().unwrap()).collect();
+                let mut caches: Vec<KvCache> = (0..b).map(|_| KvCache::new(&cfg)).collect();
+                let seqs: Vec<Vec<u8>> = (0..b)
+                    .map(|s| (0..8).map(|t| ((s * 91 + t * 37) % 251) as u8).collect())
+                    .collect();
+                for pos in 0..8 {
+                    let rows: Vec<StepRow> = (0..b)
+                        .map(|s| StepRow {
+                            slot: slots[s],
+                            token: seqs[s][pos],
+                            pos,
+                            needs_logits: true,
+                        })
+                        .collect();
+                    let batched =
+                        decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, workers)
+                            .unwrap();
+                    for s in 0..b {
+                        let seq = decode_step(
+                            &cfg, &w, &NoOverride, &mut caches[s], seqs[s][pos], pos,
+                        )
+                        .unwrap();
+                        assert_bits_eq(
+                            &batched[s * cfg.vocab..(s + 1) * cfg.vocab],
+                            &seq,
+                            &format!("{name} w={workers} seq {s} pos {pos}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// A sequence joining mid-stream (staggered positions within one batch)
+    /// must match a fresh sequential run bit-for-bit.
+    #[test]
+    fn serve_batched_step_bit_identical_staggered_join() {
+        let (cfg, w) = tiny("llama-t");
+        let mut pool = KvPool::new(&cfg, 2, 12);
+        let sa = pool.acquire().unwrap();
+        let seq_a: Vec<u8> = (0..9).map(|t| (t * 53 % 256) as u8).collect();
+        let seq_b: Vec<u8> = (0..6).map(|t| (t * 29 + 7) as u8).collect();
+        let mut cache_a = KvCache::new(&cfg);
+        let mut cache_b = KvCache::new(&cfg);
+        // A runs alone for 3 steps.
+        for pos in 0..3 {
+            let rows =
+                [StepRow { slot: sa, token: seq_a[pos], pos, needs_logits: true }];
+            let batched =
+                decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 1).unwrap();
+            let seq = decode_step(&cfg, &w, &NoOverride, &mut cache_a, seq_a[pos], pos).unwrap();
+            assert_bits_eq(&batched, &seq, &format!("solo A pos {pos}"));
+        }
+        // B joins at step 3: batch rows now at staggered positions.
+        let sb = pool.acquire().unwrap();
+        for t in 0..6 {
+            let pos_a = 3 + t;
+            let rows = [
+                StepRow { slot: sa, token: seq_a[pos_a], pos: pos_a, needs_logits: true },
+                StepRow { slot: sb, token: seq_b[t], pos: t, needs_logits: true },
+            ];
+            let batched =
+                decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 4).unwrap();
+            let ref_a =
+                decode_step(&cfg, &w, &NoOverride, &mut cache_a, seq_a[pos_a], pos_a).unwrap();
+            let ref_b = decode_step(&cfg, &w, &NoOverride, &mut cache_b, seq_b[t], t).unwrap();
+            let v = cfg.vocab;
+            assert_bits_eq(&batched[..v], &ref_a, &format!("joined A step {t}"));
+            assert_bits_eq(&batched[v..2 * v], &ref_b, &format!("joined B step {t}"));
+        }
+        assert_eq!(pool.len(sa), 9);
+        assert_eq!(pool.len(sb), 6);
+    }
+
+    #[test]
+    fn serve_batched_step_skips_prefill_logits() {
+        let (cfg, w) = tiny("llama-t");
+        let mut pool = KvPool::new(&cfg, 2, 4);
+        let s0 = pool.acquire().unwrap();
+        let s1 = pool.acquire().unwrap();
+        let rows = [
+            StepRow { slot: s0, token: 9, pos: 0, needs_logits: true },
+            StepRow { slot: s1, token: 17, pos: 0, needs_logits: false },
+        ];
+        let both = decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 1).unwrap();
+        let v = cfg.vocab;
+        // The prefill row's logits come back zeroed, the other row stays
+        // bit-identical to a sequential decode of it alone.
+        assert!(both[v..2 * v].iter().all(|&x| x == 0.0));
+        let mut cache = KvCache::new(&cfg);
+        let seq = decode_step(&cfg, &w, &NoOverride, &mut cache, 9, 0).unwrap();
+        assert_bits_eq(&both[..v], &seq, "needs_logits row");
+        // The skipped row's KV still advanced.
+        assert_eq!(pool.len(s1), 1);
+    }
+
+    #[test]
+    fn serve_batched_step_empty_batch_is_noop() {
+        let (cfg, w) = tiny("llama-t");
+        let mut pool = KvPool::new(&cfg, 1, 4);
+        let out = decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &[], 1).unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,139 @@
+//! Per-request streaming token delivery.
+//!
+//! Each generation request carries its own [`TokenStream`] sender; the
+//! scheduler pushes every sampled token into it the moment the step that
+//! produced it finishes, so clients see tokens with per-step latency
+//! instead of per-request latency.  The channel doubles as the
+//! cancellation signal: when the client drops its receiver, the next
+//! *token* send fails and the batcher retires the sequence and recycles
+//! its KV slot.  (mpsc reports disconnection only on send and prefill
+//! steps send nothing, so a request cancelled mid-prompt is detected at
+//! its first generated token — prefill of a dead request still runs,
+//! bounded by the prompt length.)
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Why a request left the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new` tokens.
+    Completed,
+    /// The client dropped its stream receiver mid-generation.
+    Cancelled,
+    /// Refused at admission (empty prompt, `max_new == 0`, or the
+    /// `prompt + max_new - 1` KV rows the request needs exceeding the
+    /// slot capacity).
+    Rejected,
+}
+
+/// Final per-request summary, sent after the last token.
+#[derive(Clone, Debug)]
+pub struct DoneStats {
+    /// The request's id (echoed from [`super::batcher::GenRequest`]).
+    pub id: u64,
+    /// Tokens actually generated (sampled — including any the client
+    /// never saw because it hung up).
+    pub generated: usize,
+    /// Why the request finished.
+    pub finish: FinishReason,
+    /// Enqueue → finish, seconds.
+    pub latency_s: f64,
+    /// Enqueue → first generated token, seconds (equals `latency_s` when
+    /// no token was produced).
+    pub ttft_s: f64,
+}
+
+/// Events delivered over a request's stream channel.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// One generated token: `index` is 0-based within this request's
+    /// output, `byte` the sampled token.
+    Token {
+        /// 0-based output index of this token.
+        index: usize,
+        /// The sampled token (byte-level vocab).
+        byte: u8,
+    },
+    /// Generation finished — always the stream's last event.
+    Done(DoneStats),
+}
+
+/// The server-side half of a request's stream.
+#[derive(Clone, Debug)]
+pub struct TokenStream {
+    tx: Sender<StreamEvent>,
+}
+
+impl TokenStream {
+    /// Deliver an event; `false` means the client hung up (the batcher
+    /// treats that as cancellation).
+    pub fn send(&self, event: StreamEvent) -> bool {
+        self.tx.send(event).is_ok()
+    }
+}
+
+/// Create a request's stream pair: the [`TokenStream`] travels to the
+/// server inside the request, the receiver stays with the client.
+pub fn stream_channel() -> (TokenStream, Receiver<StreamEvent>) {
+    let (tx, rx) = channel();
+    (TokenStream { tx }, rx)
+}
+
+/// Drain a stream to completion: blocks until [`StreamEvent::Done`] (or
+/// the server dropped the sender) and returns the tokens in order plus the
+/// final stats.
+pub fn collect_stream(rx: &Receiver<StreamEvent>) -> (Vec<u8>, Option<DoneStats>) {
+    let mut tokens = Vec::new();
+    let mut done = None;
+    for event in rx.iter() {
+        match event {
+            StreamEvent::Token { byte, .. } => tokens.push(byte),
+            StreamEvent::Done(stats) => {
+                done = Some(stats);
+                break;
+            }
+        }
+    }
+    (tokens, done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_stream_collects_tokens_then_done() {
+        let (tx, rx) = stream_channel();
+        assert!(tx.send(StreamEvent::Token { index: 0, byte: 7 }));
+        assert!(tx.send(StreamEvent::Token { index: 1, byte: 9 }));
+        assert!(tx.send(StreamEvent::Done(DoneStats {
+            id: 3,
+            generated: 2,
+            finish: FinishReason::Completed,
+            latency_s: 0.5,
+            ttft_s: 0.1,
+        })));
+        let (tokens, done) = collect_stream(&rx);
+        assert_eq!(tokens, vec![7, 9]);
+        let done = done.unwrap();
+        assert_eq!(done.id, 3);
+        assert_eq!(done.finish, FinishReason::Completed);
+    }
+
+    #[test]
+    fn serve_stream_detects_hangup() {
+        let (tx, rx) = stream_channel();
+        drop(rx);
+        assert!(!tx.send(StreamEvent::Token { index: 0, byte: 1 }));
+    }
+
+    #[test]
+    fn serve_stream_collect_survives_dropped_sender() {
+        let (tx, rx) = stream_channel();
+        assert!(tx.send(StreamEvent::Token { index: 0, byte: 4 }));
+        drop(tx);
+        let (tokens, done) = collect_stream(&rx);
+        assert_eq!(tokens, vec![4]);
+        assert!(done.is_none());
+    }
+}

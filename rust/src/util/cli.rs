@@ -40,6 +40,11 @@ impl Args {
         self.get(name).and_then(|s| s.parse().ok())
     }
 
+    /// Parse a u64 flag (e.g. sampling seeds, request ids).
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
     pub fn switch(&self, name: &str) -> bool {
         self.switches.get(name).copied().unwrap_or(false)
     }
@@ -310,6 +315,19 @@ mod tests {
             cmd.parse(&argv(&["--alpha", "lots"])).unwrap().get_f64_or_auto("alpha"),
             None
         );
+    }
+
+    #[test]
+    fn u64_flag() {
+        let cmd = Command::new("t", "t").flag("seed", "sampling seed", Some("0"));
+        assert_eq!(cmd.parse(&argv(&[])).unwrap().get_u64("seed"), Some(0));
+        assert_eq!(
+            cmd.parse(&argv(&["--seed", "18446744073709551615"]))
+                .unwrap()
+                .get_u64("seed"),
+            Some(u64::MAX)
+        );
+        assert_eq!(cmd.parse(&argv(&["--seed", "-1"])).unwrap().get_u64("seed"), None);
     }
 
     #[test]

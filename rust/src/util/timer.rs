@@ -37,6 +37,7 @@ pub struct Stats {
     pub max: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
 }
 
@@ -60,6 +61,7 @@ impl Stats {
             max: sorted[n - 1],
             p50: pct(0.50),
             p90: pct(0.90),
+            p95: pct(0.95),
             p99: pct(0.99),
         }
     }
@@ -67,8 +69,9 @@ impl Stats {
     /// Human-friendly one-liner with a unit suffix.
     pub fn display(&self, unit: &str) -> String {
         format!(
-            "n={} mean={:.4}{u} std={:.4}{u} p50={:.4}{u} p90={:.4}{u} p99={:.4}{u} max={:.4}{u}",
-            self.n, self.mean, self.std, self.p50, self.p90, self.p99, self.max,
+            "n={} mean={:.4}{u} std={:.4}{u} p50={:.4}{u} p90={:.4}{u} p95={:.4}{u} \
+             p99={:.4}{u} max={:.4}{u}",
+            self.n, self.mean, self.std, self.p50, self.p90, self.p95, self.p99, self.max,
             u = unit
         )
     }
@@ -88,6 +91,7 @@ mod tests {
         assert_eq!(s.max, 100.0);
         assert_eq!(s.p50, 50.0);
         assert_eq!(s.p90, 90.0);
+        assert_eq!(s.p95, 95.0);
         assert_eq!(s.p99, 99.0);
     }
 
