@@ -33,15 +33,27 @@
 #                                     loses to uniform on the synthetic
 #                                     model)
 #   4e. serve smoke                 — the generation-server tests run by
-#                                     name (KV pool recycling, batched-
-#                                     step bit-parity incl. mid-stream
-#                                     joins, streaming) plus perf_serve's
-#                                     parity section in --quick mode
-#                                     (served tokens == sequential
-#                                     generate at batch {1,3,8} × workers
-#                                     {1,4}, dense and compressed);
-#                                     perf_serve also compiles under the
-#                                     gate-3 `cargo bench --no-run`
+#                                     name (paged KV pool allocator, prefix
+#                                     trie, batched-step bit-parity incl.
+#                                     chunked prefill and replay rows,
+#                                     scheduler parity incl. preemption +
+#                                     resume, streaming, and the randomized
+#                                     32-seed serve-schedule fuzz grid)
+#                                     plus perf_serve's parity section in
+#                                     --quick mode (served tokens ==
+#                                     sequential generate at batch {1,3,8}
+#                                     × workers {1,4}, dense and
+#                                     compressed); perf_serve also compiles
+#                                     under the gate-3 `cargo bench
+#                                     --no-run`
+#   4f. paged-pool memory smoke     — perf_serve's `paged` section in
+#                                     --quick mode: a pool at HALF the old
+#                                     worst-case reservation must complete
+#                                     every request AND sustain strictly
+#                                     more concurrent sequences than
+#                                     worst-case slot reservation fits in
+#                                     the same memory (fault-in + prefix
+#                                     sharing + preemption)
 #   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
@@ -91,6 +103,9 @@ cargo bench --bench perf_allocate -- allocate_greedy --quick
 step "serve smoke (generation-server tests + perf_serve parity --quick)"
 cargo test -q serve
 cargo bench --bench perf_serve -- parity --quick
+
+step "paged-pool memory smoke (perf_serve paged --quick)"
+cargo bench --bench perf_serve -- paged --quick
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -93,12 +93,28 @@ pub struct GenServerMetrics {
     pub step_s: Vec<f64>,
     /// Active sequences per executed step (bounded ring).
     pub batch_fill: Vec<f64>,
+    /// KV-pool page occupancy per executed step, `pages_in_use / pages`
+    /// in `[0, 1]` (bounded ring).
+    pub page_occupancy: Vec<f64>,
     /// Requests retired (completed + cancelled mid-stream).
     pub completed: usize,
     /// Requests retired because the client dropped its stream receiver.
     pub cancelled: usize,
-    /// Requests refused at admission (bad prompt / over slot capacity).
+    /// Requests refused at admission (bad prompt / infeasible page need).
     pub rejected: usize,
+    /// Sequences evicted back to the queue on pool exhaustion (each later
+    /// resumes; double-counted if preempted twice).
+    pub preemptions: usize,
+    /// Most sequences concurrently active in any one step — what a paged
+    /// pool raises over worst-case reservation at equal memory.
+    pub peak_active: usize,
+    /// Prompt positions served from the prefix trie instead of prefill.
+    pub prefix_hit_tokens: u64,
+    /// Prompt positions that had to be prefilled (trie miss or disabled).
+    pub prefix_miss_tokens: u64,
+    /// Prompt rows fed through chunked prefill (excludes replayed and
+    /// prefix-shared positions).
+    pub prefill_rows: usize,
     /// Total tokens generated (across all requests).
     pub generated: usize,
     /// Batched decode steps executed.
@@ -116,11 +132,14 @@ impl GenServerMetrics {
         }
     }
 
-    /// Record one executed decode step (wall-clock + active sequences);
-    /// bumps `steps` and feeds the bounded sample rings.
-    pub fn record_step(&mut self, step_s: f64, fill: f64) {
+    /// Record one executed decode step (wall-clock, active sequences, and
+    /// pool page occupancy in `[0, 1]`); bumps `steps`, tracks the peak
+    /// concurrency, and feeds the bounded sample rings.
+    pub fn record_step(&mut self, step_s: f64, fill: f64, occupancy: f64) {
         Self::push_capped(&mut self.step_s, self.steps, step_s);
         Self::push_capped(&mut self.batch_fill, self.steps, fill);
+        Self::push_capped(&mut self.page_occupancy, self.steps, occupancy);
+        self.peak_active = self.peak_active.max(fill as usize);
         self.steps += 1;
     }
 
@@ -167,21 +186,47 @@ impl GenServerMetrics {
         }
     }
 
+    /// Mean pool page occupancy per step in `[0, 1]`, over the bounded
+    /// sample window.
+    pub fn mean_page_occupancy(&self) -> f64 {
+        if self.page_occupancy.is_empty() {
+            0.0
+        } else {
+            self.page_occupancy.iter().sum::<f64>() / self.page_occupancy.len() as f64
+        }
+    }
+
+    /// Fraction of prompt positions served from the prefix trie instead of
+    /// being prefilled (0 when sharing is off or no prompt was seen).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hit_tokens + self.prefix_miss_tokens;
+        if total > 0 {
+            self.prefix_hit_tokens as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         let lat = self.latency();
         let ttft = self.ttft();
         format!(
-            "requests={} rejected={} cancelled={} tokens={} steps={} \
-             tok/s={:.1} mean_fill={:.2} latency p50={:.1}ms p95={:.1}ms \
-             p99={:.1}ms ttft p50={:.1}ms p95={:.1}ms",
+            "requests={} rejected={} cancelled={} preempted={} tokens={} \
+             steps={} tok/s={:.1} mean_fill={:.2} peak_active={} \
+             occupancy={:.2} prefix_hit={:.2} latency p50={:.1}ms \
+             p95={:.1}ms p99={:.1}ms ttft p50={:.1}ms p95={:.1}ms",
             self.completed,
             self.rejected,
             self.cancelled,
+            self.preemptions,
             self.generated,
             self.steps,
             self.tokens_per_s(),
             self.mean_batch_fill(),
+            self.peak_active,
+            self.mean_page_occupancy(),
+            self.prefix_hit_rate(),
             lat.p50 * 1e3,
             lat.p95 * 1e3,
             lat.p99 * 1e3,
@@ -224,15 +269,22 @@ mod tests {
             ttft_s: vec![0.004, 0.006, 0.005, 0.007],
             step_s: vec![0.001; 10],
             batch_fill: vec![2.0, 4.0],
+            page_occupancy: vec![0.25, 0.75],
             completed: 4,
             cancelled: 1,
             rejected: 2,
+            preemptions: 3,
+            prefix_hit_tokens: 30,
+            prefix_miss_tokens: 10,
             generated: 120,
             steps: 10,
             wall_s: 2.0,
+            ..Default::default()
         };
         assert_eq!(m.tokens_per_s(), 60.0);
         assert_eq!(m.mean_batch_fill(), 3.0);
+        assert_eq!(m.mean_page_occupancy(), 0.5);
+        assert_eq!(m.prefix_hit_rate(), 0.75);
         // Percentiles come from the sorted sample buffer, not the mean.
         assert_eq!(m.latency().p50, 0.020);
         assert_eq!(m.latency().p95, 0.080);
@@ -240,6 +292,8 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=4"));
         assert!(s.contains("rejected=2"));
+        assert!(s.contains("preempted=3"));
+        assert!(s.contains("prefix_hit=0.75"));
         assert!(s.contains("p95="));
     }
 
@@ -247,13 +301,14 @@ mod tests {
     fn serve_gen_sample_buffers_are_bounded() {
         let mut m = GenServerMetrics::default();
         for i in 0..GEN_MAX_SAMPLES + 100 {
-            m.record_step(i as f64, 1.0);
+            m.record_step(i as f64, 1.0, 0.5);
             m.record_finish(i as f64, i as f64 / 2.0);
         }
         assert_eq!(m.steps, GEN_MAX_SAMPLES + 100);
         assert_eq!(m.completed, GEN_MAX_SAMPLES + 100);
         assert_eq!(m.step_s.len(), GEN_MAX_SAMPLES);
         assert_eq!(m.latency_s.len(), GEN_MAX_SAMPLES);
+        assert_eq!(m.page_occupancy.len(), GEN_MAX_SAMPLES);
         // The ring overwrote the oldest entries with the most recent.
         assert_eq!(m.step_s[0], GEN_MAX_SAMPLES as f64);
         assert_eq!(m.step_s[99], (GEN_MAX_SAMPLES + 99) as f64);
@@ -261,10 +316,21 @@ mod tests {
     }
 
     #[test]
+    fn serve_gen_peak_active_tracks_max_fill() {
+        let mut m = GenServerMetrics::default();
+        for &fill in &[1.0, 5.0, 3.0] {
+            m.record_step(0.001, fill, 0.1);
+        }
+        assert_eq!(m.peak_active, 5);
+    }
+
+    #[test]
     fn serve_gen_empty_metrics_are_safe() {
         let m = GenServerMetrics::default();
         assert_eq!(m.tokens_per_s(), 0.0);
         assert_eq!(m.mean_batch_fill(), 0.0);
+        assert_eq!(m.mean_page_occupancy(), 0.0);
+        assert_eq!(m.prefix_hit_rate(), 0.0);
         assert_eq!(m.latency().n, 0);
         assert!(m.summary().contains("requests=0"));
     }

@@ -112,7 +112,10 @@ fn build_cli() -> Cli {
             .flag("requests", "total generation requests", Some("32"))
             .flag("clients", "concurrent closed-loop client threads", Some("4"))
             .flag("max-batch", "max sequences decoded per step", Some("8"))
-            .flag("slots", "KV pool slot count (clamped to max-batch)", Some("8"))
+            .flag("pages", "KV pool size in pages (0 = auto: max-batch sequences' worst case)", Some("0"))
+            .flag("page-size", "token positions per KV page", Some("16"))
+            .flag("prefill-chunk", "max prompt rows fed per sequence per step (0 = whole prompt)", Some("16"))
+            .flag("prefix-share", "dedupe common prompt prefixes across requests: on | off", Some("on"))
             .flag("max-new", "new tokens per request", Some("32"))
             .flag("prompt-len", "prompt length (bytes, windowed from the corpus)", Some("16"))
             .flag("temperature", "sampling temperature (0 = greedy)", Some("0.8"))
@@ -484,10 +487,27 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
     let clients = args.get_usize("clients").unwrap_or(4).max(1).min(n);
     let prompt_len = args.get_usize("prompt-len").unwrap_or(16).max(1);
     let max_new = args.get_usize("max-new").unwrap_or(32).max(1);
+    let max_batch = args.get_usize("max-batch").unwrap_or(8).max(1);
+    let page_size = args.get_usize("page-size").unwrap_or(16).max(1);
+    // Auto pool size: room for max_batch worst-case sequences — the
+    // pre-paging behavior.  Undersize it deliberately (e.g. half) to watch
+    // fault-in + preemption sustain more concurrency at equal memory.
+    let auto_pages = max_batch * (prompt_len + max_new - 1).div_ceil(page_size);
+    let pages = match args.get_usize("pages").unwrap_or(0) {
+        0 => auto_pages,
+        p => p,
+    };
+    let prefix_share = match args.get_or("prefix-share", "on") {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--prefix-share must be on|off, got {other}"),
+    };
     let gen_cfg = GenConfig {
-        max_batch: args.get_usize("max-batch").unwrap_or(8).max(1),
-        slots: args.get_usize("slots").unwrap_or(8).max(1),
-        slot_cap: prompt_len + max_new,
+        max_batch,
+        pages,
+        page_size,
+        prefill_chunk: args.get_usize("prefill-chunk").unwrap_or(16),
+        prefix_share,
         workers: args.get_workers("workers").unwrap_or(0),
     };
     let sample = SampleConfig {
@@ -507,8 +527,10 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
 
     println!(
         "serving {n} requests from {clients} clients \
-         (max_batch={}, slots={}, max_new={max_new})...",
-        gen_cfg.max_batch, gen_cfg.slots
+         (max_batch={}, pages={}x{}, prefill_chunk={}, prefix_share={}, \
+         max_new={max_new})...",
+        gen_cfg.max_batch, gen_cfg.pages, gen_cfg.page_size, gen_cfg.prefill_chunk,
+        gen_cfg.prefix_share
     );
     // Producers fan in over mpsc from `clients` closed-loop threads; the
     // main thread becomes the scheduler and owns the KV pool (shared

@@ -1,17 +1,42 @@
-//! The step-level scheduler: continuous batching over the slotted KV pool.
+//! The step-level scheduler: continuous batching over the paged KV pool.
 //!
-//! One scheduler thread owns the [`KvPool`] and the decode loop; producers
-//! fan [`GenRequest`]s in over an mpsc channel from any number of threads.
-//! Between decode steps the scheduler (a) retires finished or cancelled
-//! sequences, recycling their slots in O(1), and (b) admits queued
-//! requests into free slots — a request admitted at step *t* starts
-//! prefilling at step *t* while its neighbors keep decoding, and its
-//! output is bit-identical to a fresh single-request run
-//! ([`crate::model::generate::generate`]) because the batched step is
-//! bit-identical per row and sampling state is per-request
-//! (seeded [`Rng`] from the request's own [`SampleConfig::seed`]).
+//! One scheduler thread owns the [`KvPool`] and [`PrefixTrie`] and the
+//! decode loop; producers fan [`GenRequest`]s in over an mpsc channel from
+//! any number of threads.  Between decode steps the scheduler:
+//!
+//! 1. **resumes** previously preempted sequences (oldest first),
+//! 2. **admits** queued requests — admission checks *feasibility* (the
+//!    request's worst-case page need fits the whole pool), not worst-case
+//!    reservation: a sequence claims its first page on first write and
+//!    faults in the rest as it grows,
+//! 3. **plans** one batched step, oldest sequence first: prompt prefills
+//!    are split into `prefill_chunk`-row pieces interleaved with neighbors'
+//!    decode rows (one long arrival can't stall in-flight streams), prompts
+//!    covered by the prefix trie skip straight past the shared pages, and a
+//!    prompt *fully* covered replays its last position for logits without
+//!    writing KV,
+//! 4. on pool exhaustion mid-plan, **evicts** reusable prefix-trie pages
+//!    (LRU), then **preempts** the youngest not-yet-planned sequence that
+//!    is younger than the starved one — its pages are released and it
+//!    re-queues with its fed-token history intact, resuming later by
+//!    re-prefilling `prompt ++ already-sampled tokens` deterministically
+//!    (tokens already streamed are never re-sampled or re-sent).
+//!
+//! Output stays bit-identical to a fresh single-request run
+//! ([`crate::model::generate::generate`]) through all of it: the batched
+//! step is bit-identical per row, KV at a position is a deterministic
+//! function of the token prefix (which makes shared pages and re-prefilled
+//! resumes exact), and sampling state is per-request (seeded [`Rng`] from
+//! the request's own [`SampleConfig::seed`], advanced once per generated
+//! token regardless of scheduling).
+//!
+//! Progress guarantee: admission rejects any request whose worst-case page
+//! need exceeds the pool, and the oldest active sequence plans first with
+//! the whole trie evictable and every younger sequence preemptable — so the
+//! oldest always advances, and induction retires everything.
 
-use super::kv_pool::KvPool;
+use super::kv_pool::{KvPool, SeqId};
+use super::prefix::{PrefixTrie, ROOT};
 use super::step::{decode_step_batched, StepRow};
 use super::stream::{DoneStats, FinishReason, StreamEvent, TokenStream};
 use crate::coordinator::metrics::GenServerMetrics;
@@ -23,6 +48,7 @@ use crate::util::rng::Rng;
 use crate::util::threads::ThreadBudget;
 use crate::util::timer::Timer;
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::time::Instant;
 
@@ -47,18 +73,24 @@ pub struct GenRequest {
 /// Generation-server knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct GenConfig {
-    /// Maximum sequences decoded per step (the GEMM row count cap).
+    /// Maximum sequences active per step (the continuous-batching width;
+    /// a prefill chunk adds rows beyond this, bounded by `prefill_chunk`).
     pub max_batch: usize,
-    /// KV pool slot count (resident-sequence cap; a separate knob from
-    /// `max_batch` for schedulers that admit more residents than they
-    /// decode per step).  The current step scheduler decodes every
-    /// resident each step, so it clamps this to `max_batch` — more slots
-    /// would preallocate KV storage no sequence could occupy.
-    pub slots: usize,
-    /// Per-slot KV capacity: admission rejects requests needing more than
-    /// `slot_cap` KV rows (`prompt + max_new - 1` — the final sampled
-    /// token is never fed back).
-    pub slot_cap: usize,
+    /// Total KV pages in the pool — the real memory budget.  Admission
+    /// rejects a request only when its worst-case need
+    /// (`⌈(prompt + max_new − 1) / page_size⌉`) exceeds this; pressure
+    /// between admitted sequences is resolved by fault-in + preemption,
+    /// not reservation.
+    pub pages: usize,
+    /// Positions per page.  Small pages waste less on short tails and
+    /// share prefixes at finer grain; large pages gather less.
+    pub page_size: usize,
+    /// Max prompt rows fed per sequence per step (0 = whole prompt in one
+    /// chunk).  Caps the latency a long arrival adds to neighbors' steps.
+    pub prefill_chunk: usize,
+    /// Dedupe common prompt prefixes across requests via the page trie
+    /// (full pages only; output-invariant either way).
+    pub prefix_share: bool,
     /// Thread budget for the batched step's GEMMs (0 = all cores);
     /// bit-identical results at every value.
     pub workers: usize,
@@ -66,28 +98,87 @@ pub struct GenConfig {
 
 impl Default for GenConfig {
     fn default() -> Self {
-        GenConfig { max_batch: 8, slots: 8, slot_cap: 128, workers: 0 }
+        GenConfig {
+            max_batch: 8,
+            pages: 64,
+            page_size: 16,
+            prefill_chunk: 16,
+            prefix_share: true,
+            workers: 0,
+        }
     }
 }
 
-/// One admitted sequence's scheduler state.
+/// One admitted sequence's scheduler state.  Survives preemption — only
+/// `seq` and the trie cursor are rebuilt on resume.
 struct Active {
     req: GenRequest,
-    slot: usize,
+    seq: SeqId,
     rng: Rng,
-    /// Position of the token fed next step.
-    pos: usize,
-    /// Token fed next step.
-    token: u8,
-    /// Tokens generated so far.
+    /// Every token fed (or queued to feed): `prompt ++ sampled tokens that
+    /// were fed back`.  `pool.len(seq)` positions of it are committed; the
+    /// gap is what prefill chunks (or a resume) still owe.
+    fed: Vec<u8>,
+    /// Tokens generated so far (streamed tokens are never re-sent).
     produced: usize,
-    /// Enqueue → first generated token, set once.
+    /// Enqueue → first generated token, set once (survives preemption).
     ttft_s: Option<f64>,
+    /// Admission order — planning priority and preemption seniority.
+    arrival: u64,
+    /// Trie node of the last matched/registered prompt chunk ([`ROOT`]
+    /// when none) — the parent for the next chunk this request registers.
+    trie_tail: usize,
+    /// Prompt chunks already matched or registered into the trie.
+    trie_chunks: usize,
+}
+
+/// What happens to an active sequence at the end of a step.
+#[derive(Clone, Copy)]
+enum Fate {
+    Continue,
+    Finish(FinishReason),
+    Preempt,
+}
+
+/// Give `a` a pool sequence: fork over the trie's longest registered
+/// prefix of its fed history when sharing is on (sound for positions past
+/// the prompt too — a chain match pins the entire token prefix, and KV at
+/// a position is a deterministic function of that prefix).
+fn attach_seq(a: &mut Active, pool: &mut KvPool, trie: &mut PrefixTrie, share: bool) {
+    if share {
+        let chain = trie.lookup(&a.fed);
+        let pages: Vec<usize> = chain.iter().map(|&(_, p)| p).collect();
+        a.trie_tail = chain.last().map_or(ROOT, |&(n, _)| n);
+        a.trie_chunks = chain.len();
+        a.seq = pool.fork_seq(&pages);
+    } else {
+        a.trie_tail = ROOT;
+        a.trie_chunks = 0;
+        a.seq = pool.new_seq();
+    }
+}
+
+/// Trie nodes eviction must skip: the registration tail of every live
+/// (non-evicted) active that still has prompt chunks to register — a
+/// recycled tail would chain later chunks under the wrong parent.
+fn pinned_tails(active: &[Active], evicted: &[usize], page_size: usize) -> Vec<usize> {
+    active
+        .iter()
+        .enumerate()
+        .filter(|(i, a)| {
+            !evicted.contains(i)
+                && a.trie_tail != ROOT
+                && (a.trie_chunks + 1) * page_size <= a.req.prompt.len()
+        })
+        .map(|(_, a)| a.trie_tail)
+        .collect()
 }
 
 /// Run the generation server until the request channel closes and every
 /// admitted sequence has finished.  Blocks the calling thread (which
-/// becomes the scheduler/owner of the pool); returns accumulated metrics.
+/// becomes the scheduler/owner of the pool and trie — all page refcounts
+/// mutate here, between steps, which is why none of it needs locks);
+/// returns accumulated metrics.
 pub fn serve_generation(
     cfg: &ModelConfig,
     weights: &Weights,
@@ -96,20 +187,37 @@ pub fn serve_generation(
     requests: Receiver<GenRequest>,
 ) -> Result<GenServerMetrics> {
     let max_batch = gen.max_batch.max(1);
-    // Admission caps at max_batch, so slots beyond it could never hold a
-    // sequence — clamp rather than preallocate dead KV storage.
-    let slots = gen.slots.max(1).min(max_batch);
-    let slot_cap = gen.slot_cap.max(1);
+    let page_size = gen.page_size.max(1);
+    let pages = gen.pages.max(1);
+    let chunk_cap = if gen.prefill_chunk == 0 { usize::MAX } else { gen.prefill_chunk };
     let step_workers = ThreadBudget::new(gen.workers).total();
-    let mut pool = KvPool::new(cfg, slots, slot_cap);
+    let mut pool = KvPool::new(cfg, pages, page_size);
+    let mut trie = PrefixTrie::new(page_size);
     let mut active: Vec<Active> = Vec::new();
+    let mut preempted: VecDeque<Active> = VecDeque::new();
     let mut metrics = GenServerMetrics::default();
     let mut open = true;
+    let mut arrivals: u64 = 0;
     let wall = Timer::start();
     loop {
-        // ---- admission: only between steps, never past free capacity ----
-        while open && active.len() < max_batch && pool.free_count() > 0 {
-            let next = if active.is_empty() {
+        // ---- resume preempted sequences first (they keep seniority) ----
+        while active.len() < max_batch && !preempted.is_empty() {
+            while pool.free_pages() == 0 {
+                let pins = pinned_tails(&active, &[], page_size);
+                if !trie.evict_lru(&mut pool, &pins) {
+                    break;
+                }
+            }
+            if pool.free_pages() == 0 {
+                break;
+            }
+            let mut a = preempted.pop_front().expect("checked non-empty");
+            attach_seq(&mut a, &mut pool, &mut trie, gen.prefix_share);
+            active.push(a);
+        }
+        // ---- admission: feasibility-checked, first page faults in later ----
+        while open && active.len() < max_batch && (pool.free_pages() > 0 || trie.entries() > 0) {
+            let next = if active.is_empty() && preempted.is_empty() {
                 // Nothing in flight: block for work (or shutdown).
                 match requests.recv() {
                     Ok(r) => Some(r),
@@ -130,12 +238,13 @@ pub fn serve_generation(
             };
             let Some(req) = next else { break };
             // A request feeds prompt + max_new - 1 positions (the final
-            // sampled token is never fed back), so that is the KV rows it
-            // needs.
-            if req.prompt.is_empty()
-                || req.max_new == 0
-                || req.prompt.len() + req.max_new - 1 > pool.cap()
-            {
+            // sampled token is never fed back).  It is infeasible only if
+            // that worst case cannot fit the ENTIRE pool — there is no
+            // per-slot cap anymore.
+            let infeasible = req.prompt.is_empty() || req.max_new == 0 || {
+                (req.prompt.len() + req.max_new - 1).div_ceil(page_size) > pool.pages()
+            };
+            if infeasible {
                 let latency = req.enqueued.elapsed().as_secs_f64();
                 let _ = req.stream.send(StreamEvent::Done(DoneStats {
                     id: req.id,
@@ -147,43 +256,129 @@ pub fn serve_generation(
                 metrics.rejected += 1;
                 continue;
             }
-            let slot = pool.acquire().expect("free slot checked above");
             let rng = Rng::new(req.sample.seed);
-            let token = req.prompt[0];
-            active.push(Active { req, slot, rng, pos: 0, token, produced: 0, ttft_s: None });
+            let fed = req.prompt.clone();
+            let mut a = Active {
+                req,
+                seq: 0,
+                rng,
+                fed,
+                produced: 0,
+                ttft_s: None,
+                arrival: arrivals,
+                trie_tail: ROOT,
+                trie_chunks: 0,
+            };
+            arrivals += 1;
+            attach_seq(&mut a, &mut pool, &mut trie, gen.prefix_share);
+            active.push(a);
         }
         if active.is_empty() {
-            if !open {
-                break;
+            if preempted.is_empty() {
+                if !open {
+                    break;
+                }
+                continue; // back to the blocking recv
             }
-            continue; // back to the blocking recv
+            continue; // retry resuming (eviction above frees pages)
         }
-        // ---- one batched decode step over every active sequence ----
-        let rows: Vec<StepRow> = active
-            .iter()
-            .map(|a| StepRow {
-                slot: a.slot,
-                token: a.token,
-                pos: a.pos,
-                // Prefill rows (all but the last prompt token) never have
-                // their logits read — the step skips their lm_head rows.
-                needs_logits: a.pos + 1 >= a.req.prompt.len(),
-            })
-            .collect();
-        let step_t = Timer::start();
-        let logits = decode_step_batched(cfg, weights, overrides, &mut pool, &rows, step_workers)?;
-        metrics.record_step(step_t.elapsed_s(), active.len() as f64);
-        // ---- advance every row; collect finished ones ----
-        let vocab = cfg.vocab;
-        let mut finished: Vec<(usize, FinishReason)> = Vec::new();
-        for (r, a) in active.iter_mut().enumerate() {
-            a.pos += 1;
-            if a.pos < a.req.prompt.len() {
-                a.token = a.req.prompt[a.pos]; // still prefilling
+        // ---- plan one step: oldest first, chunked prefill, fault-in ----
+        let mut order: Vec<usize> = (0..active.len()).collect();
+        order.sort_by_key(|&i| active[i].arrival);
+        let mut rows: Vec<StepRow> = Vec::new();
+        let mut logits_row: Vec<Option<usize>> = vec![None; active.len()];
+        let mut planned: Vec<bool> = vec![false; active.len()];
+        let mut evicted: Vec<usize> = Vec::new();
+        for &i in &order {
+            if evicted.contains(&i) {
                 continue;
             }
-            let row_logits = &logits[r * vocab..(r + 1) * vocab];
-            let next = sample_token(row_logits, a.req.sample, &mut a.rng);
+            let seq = active[i].seq;
+            let committed = pool.len(seq);
+            let flen = active[i].fed.len();
+            if committed == flen {
+                // The whole fed history is already cached (full prefix
+                // cover): replay the last position for its logits only.
+                rows.push(StepRow {
+                    seq,
+                    token: active[i].fed[flen - 1],
+                    pos: flen - 1,
+                    needs_logits: true,
+                    write_kv: false,
+                });
+                logits_row[i] = Some(rows.len() - 1);
+                planned[i] = true;
+                continue;
+            }
+            let mut end = committed + (flen - committed).min(chunk_cap);
+            let mut pos = committed;
+            while pos < end {
+                if pool.prepare(seq, pos).is_some() {
+                    pos += 1;
+                    continue;
+                }
+                // Pool exhausted: shed reusable prefix pages first...
+                let pins = pinned_tails(&active, &evicted, page_size);
+                if trie.evict_lru(&mut pool, &pins) {
+                    continue;
+                }
+                // ...then preempt the youngest unplanned sequence younger
+                // than this one (never a senior — that would livelock),
+                // preferring fully-private victims (they free every page).
+                let victim = (0..active.len())
+                    .filter(|&j| {
+                        !planned[j]
+                            && !evicted.contains(&j)
+                            && active[j].arrival > active[i].arrival
+                    })
+                    .max_by_key(|&j| (!pool.seq_is_shared(active[j].seq), active[j].arrival));
+                match victim {
+                    Some(v) => {
+                        pool.release_seq(active[v].seq);
+                        evicted.push(v);
+                        metrics.preemptions += 1;
+                    }
+                    None => end = pos, // nothing left to shed: feed a short
+                                       // (possibly empty) chunk this step
+                }
+            }
+            for p in committed..end {
+                rows.push(StepRow {
+                    seq,
+                    token: active[i].fed[p],
+                    pos: p,
+                    needs_logits: p + 1 == flen,
+                    write_kv: true,
+                });
+                if p < active[i].req.prompt.len() {
+                    metrics.prefill_rows += 1;
+                }
+            }
+            if end > committed {
+                planned[i] = true;
+                if end == flen {
+                    logits_row[i] = Some(rows.len() - 1);
+                }
+            }
+        }
+        // ---- one batched decode step over the planned rows ----
+        let step_t = Timer::start();
+        let logits = decode_step_batched(cfg, weights, overrides, &mut pool, &rows, step_workers)?;
+        metrics.record_step(
+            step_t.elapsed_s(),
+            (active.len() - evicted.len()) as f64,
+            pool.pages_in_use() as f64 / pool.pages() as f64,
+        );
+        // ---- sample / stream for every sequence whose logits we read ----
+        let vocab = cfg.vocab;
+        let mut fate: Vec<Fate> = (0..active.len()).map(|_| Fate::Continue).collect();
+        for &v in &evicted {
+            fate[v] = Fate::Preempt;
+        }
+        for i in 0..active.len() {
+            let Some(ri) = logits_row[i] else { continue };
+            let a = &mut active[i];
+            let next = sample_token(&logits[ri * vocab..(ri + 1) * vocab], a.req.sample, &mut a.rng);
             let index = a.produced;
             a.produced += 1;
             metrics.generated += 1;
@@ -192,33 +387,62 @@ pub fn serve_generation(
             }
             let delivered = a.req.stream.send(StreamEvent::Token { index, byte: next });
             if !delivered {
-                finished.push((r, FinishReason::Cancelled));
+                fate[i] = Fate::Finish(FinishReason::Cancelled);
             } else if a.produced == a.req.max_new {
-                finished.push((r, FinishReason::Completed));
+                fate[i] = Fate::Finish(FinishReason::Completed);
             } else {
-                a.token = next;
+                a.fed.push(next);
             }
         }
-        // Retire in reverse index order so swap_remove never disturbs a
-        // lower pending index; slots recycle in O(1).
-        for (r, finish) in finished.into_iter().rev() {
-            let a = active.swap_remove(r);
-            pool.release(a.slot);
-            let latency = a.req.enqueued.elapsed().as_secs_f64();
-            let ttft = a.ttft_s.unwrap_or(latency);
-            metrics.record_finish(latency, ttft);
-            if finish == FinishReason::Cancelled {
-                metrics.cancelled += 1;
+        // ---- register newly completed full prompt pages in the trie ----
+        // Before retirement on purpose: a finishing request's prompt stays
+        // shareable (the trie's refs keep its pages alive past release).
+        if gen.prefix_share {
+            for (i, a) in active.iter_mut().enumerate() {
+                if matches!(fate[i], Fate::Preempt) {
+                    continue;
+                }
+                let committed = pool.len(a.seq);
+                let shareable = a.req.prompt.len().min(committed);
+                while (a.trie_chunks + 1) * page_size <= shareable {
+                    let idx = a.trie_chunks;
+                    let chunk = &a.fed[idx * page_size..(idx + 1) * page_size];
+                    let page = pool.page_at(a.seq, idx);
+                    a.trie_tail = trie.register(&mut pool, a.trie_tail, chunk, page);
+                    a.trie_chunks += 1;
+                }
             }
-            let _ = a.req.stream.send(StreamEvent::Done(DoneStats {
-                id: a.req.id,
-                generated: a.produced,
-                finish,
-                latency_s: latency,
-                ttft_s: ttft,
-            }));
         }
+        // ---- retire / requeue ----
+        let mut still: Vec<Active> = Vec::with_capacity(active.len());
+        for (i, a) in active.drain(..).enumerate() {
+            match fate[i] {
+                Fate::Continue => still.push(a),
+                Fate::Preempt => preempted.push_back(a), // seq already released
+                Fate::Finish(finish) => {
+                    pool.release_seq(a.seq);
+                    let latency = a.req.enqueued.elapsed().as_secs_f64();
+                    let ttft = a.ttft_s.unwrap_or(latency);
+                    metrics.record_finish(latency, ttft);
+                    if finish == FinishReason::Cancelled {
+                        metrics.cancelled += 1;
+                    }
+                    let _ = a.req.stream.send(StreamEvent::Done(DoneStats {
+                        id: a.req.id,
+                        generated: a.produced,
+                        finish,
+                        latency_s: latency,
+                        ttft_s: ttft,
+                    }));
+                }
+            }
+        }
+        active = still;
+        preempted.make_contiguous().sort_by_key(|a| a.arrival);
     }
+    trie.clear(&mut pool);
+    metrics.prefix_hit_tokens = trie.hit_positions;
+    metrics.prefix_miss_tokens = trie.miss_positions;
     metrics.wall_s = wall.elapsed_s();
     Ok(metrics)
 }
@@ -270,7 +494,14 @@ mod tests {
                 })
                 .collect();
             let expect = reference(&cfg, &w, &reqs);
-            let gen = GenConfig { max_batch: 3, slots: 3, slot_cap: 16, workers: 1 };
+            let gen = GenConfig {
+                max_batch: 3,
+                pages: 12,
+                page_size: 4,
+                prefill_chunk: 2,
+                prefix_share: true,
+                workers: 1,
+            };
             let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
             assert_eq!(got, expect, "{name}: served tokens must equal sequential generate");
             assert_eq!(metrics.completed, 3);
@@ -294,7 +525,14 @@ mod tests {
         // The FULL advertised grid: batch {1, 3, 8} × workers {1, 4}.
         for &max_batch in &[1usize, 3, 8] {
             for &workers in &[1usize, 4] {
-                let gen = GenConfig { max_batch, slots: max_batch, slot_cap: 16, workers };
+                let gen = GenConfig {
+                    max_batch,
+                    pages: 24,
+                    page_size: 4,
+                    prefill_chunk: 3,
+                    prefix_share: true,
+                    workers,
+                };
                 let (got, metrics) = run_server(&cfg, &w, &gen, reqs.clone());
                 assert_eq!(
                     got, expect,
@@ -306,9 +544,9 @@ mod tests {
         }
     }
 
-    /// Mid-stream join/leave: with fewer slots than requests, sequences
-    /// join as slots free up at arbitrary steps t and must still match a
-    /// fresh sequential run — across families, batch shapes, and workers.
+    /// Mid-stream join/leave: with a narrow batch, sequences join as pool
+    /// room frees up at arbitrary steps and must still match a fresh
+    /// sequential run — across families, page sizes, sharing, and workers.
     #[test]
     fn serve_mid_stream_join_leave_matches_sequential() {
         check("continuous-batching parity", 4, |g| {
@@ -316,7 +554,7 @@ mod tests {
             let (cfg, w) = tiny(name);
             let n_req = g.usize_in(3, 6);
             let reqs: Vec<(Vec<u8>, usize, SampleConfig)> = (0..n_req)
-                .map(|i| {
+                .map(|_| {
                     let plen = g.usize_in(1, 5);
                     let prompt = (0..plen).map(|_| g.usize_in(0, 256) as u8).collect();
                     let max_new = g.usize_in(1, 6);
@@ -330,7 +568,14 @@ mod tests {
                 .collect();
             let expect = reference(&cfg, &w, &reqs);
             let workers = *g.choose(&[1usize, 4]);
-            let gen = GenConfig { max_batch: 2, slots: 2, slot_cap: 16, workers };
+            let gen = GenConfig {
+                max_batch: 2,
+                pages: 24,
+                page_size: *g.choose(&[1usize, 4, 16]),
+                prefill_chunk: *g.choose(&[0usize, 1, 3]),
+                prefix_share: g.bool(),
+                workers,
+            };
             let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
             if got != expect {
                 return Err(format!("{name}: mid-stream join output diverged"));
@@ -338,7 +583,8 @@ mod tests {
             if metrics.completed != n_req {
                 return Err(format!("completed {} != {n_req}", metrics.completed));
             }
-            // With 2 slots and >2 requests, some admission happened at t>0.
+            // With 2 active slots and >2 requests, some admission happened
+            // mid-stream.
             if metrics.batch_fill.iter().any(|&f| f > 2.0) {
                 return Err("batch exceeded max_batch".into());
             }
@@ -349,14 +595,21 @@ mod tests {
     #[test]
     fn serve_rejects_invalid_requests() {
         let (cfg, w) = tiny("llama-t");
-        let gen = GenConfig { max_batch: 2, slots: 2, slot_cap: 8, workers: 1 };
+        let gen = GenConfig {
+            max_batch: 2,
+            pages: 2,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+        };
         let (tx, rx) = channel();
         let (s1, r1) = super::super::stream::stream_channel();
         let (s2, r2) = super::super::stream::stream_channel();
         let (s3, r3) = super::super::stream::stream_channel();
         let (s4, r4) = super::super::stream::stream_channel();
         let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 1 };
-        // Empty prompt; needs prompt+max_new-1 = 9 > cap 8; max_new == 0.
+        // Empty prompt; needs ⌈(6+4-1)/4⌉ = 3 pages > 2; max_new == 0.
         let bad = [
             GenRequest { id: 0, prompt: vec![], max_new: 2, sample: sc, stream: s1, enqueued: Instant::now() },
             GenRequest { id: 1, prompt: vec![1; 6], max_new: 4, sample: sc, stream: s2, enqueued: Instant::now() },
@@ -365,7 +618,7 @@ mod tests {
         for r in bad {
             tx.send(r).unwrap();
         }
-        // Exact fit: 5 + 4 - 1 = 8 == cap must be ADMITTED, not rejected.
+        // Exact fit: ⌈(5+4-1)/4⌉ = 2 == pool pages must be ADMITTED.
         tx.send(GenRequest {
             id: 3, prompt: vec![1; 5], max_new: 4, sample: sc, stream: s4,
             enqueued: Instant::now(),
@@ -385,12 +638,142 @@ mod tests {
         assert_eq!(done.unwrap().finish, FinishReason::Completed);
     }
 
+    /// Satellite regression: the old scheduler capped every request at the
+    /// per-slot reservation (capacity / slots rows).  A request needing far
+    /// more than that — but fitting the pool as a whole — must now be
+    /// admitted and complete bit-identically.
     #[test]
-    fn serve_cancelled_client_frees_slot_for_queued_request() {
+    fn serve_admits_request_beyond_old_per_slot_cap() {
         let (cfg, w) = tiny("llama-t");
-        // One slot, two requests: the first client hangs up immediately, so
-        // the second only runs if cancellation recycles the slot.
-        let gen = GenConfig { max_batch: 1, slots: 1, slot_cap: 32, workers: 1 };
+        // 8 pages × 4 positions = 32 rows of pool; the old per-slot cap at
+        // max_batch 4 would have been 32 / 4 = 8 rows.  This request needs
+        // 6 + 15 - 1 = 20 rows: over the old cap, within the pool.
+        let gen = GenConfig {
+            max_batch: 4,
+            pages: 8,
+            page_size: 4,
+            prefill_chunk: 4,
+            prefix_share: true,
+            workers: 1,
+        };
+        let sc = SampleConfig { temperature: 0.7, top_k: 16, seed: 9 };
+        let prompt: Vec<u8> = (0..6).map(|t| (t * 39 + 1) as u8).collect();
+        let reqs = vec![(prompt.clone(), 15, sc)];
+        let expect = reference(&cfg, &w, &reqs);
+        let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
+        assert_eq!(metrics.rejected, 0, "must not be rejected");
+        assert_eq!(metrics.completed, 1);
+        assert_eq!(got, expect);
+    }
+
+    /// Two requests sharing a long prompt prefix: the second skips the
+    /// shared pages' prefill entirely, output stays bit-identical to both
+    /// sequential generate and a no-sharing server run.
+    #[test]
+    fn serve_prefix_sharing_skips_prefill_bit_identically() {
+        let (cfg, w) = tiny("llama-t");
+        let system: Vec<u8> = (0..8).map(|t| (t * 23 + 5) as u8).collect(); // 2 full pages
+        let mut p1 = system.clone();
+        p1.extend([70, 71]);
+        let mut p2 = system.clone();
+        p2.extend([90, 91, 92]);
+        let reqs = vec![
+            (p1, 4, SampleConfig { temperature: 0.8, top_k: 10, seed: 21 }),
+            (p2, 5, SampleConfig { temperature: 0.8, top_k: 10, seed: 22 }),
+        ];
+        let expect = reference(&cfg, &w, &reqs);
+        // max_batch 1 serializes the two requests, so the first has
+        // registered its prompt pages before the second is admitted.
+        let base = GenConfig {
+            max_batch: 1,
+            pages: 8,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: true,
+            workers: 1,
+        };
+        let (got, metrics) = run_server(&cfg, &w, &base, reqs.clone());
+        assert_eq!(got, expect, "shared-prefix output must equal sequential");
+        // Request 2's first 8 positions came from the trie: its prefill fed
+        // only the 3-token tail (plus request 1's full 10 rows).
+        assert_eq!(metrics.prefix_hit_tokens, 8);
+        assert_eq!(metrics.prefill_rows, 10 + 3);
+        assert!(metrics.prefix_hit_rate() > 0.0);
+        // And sharing must be output-invariant.
+        let off = GenConfig { prefix_share: false, ..base };
+        let (got_off, m_off) = run_server(&cfg, &w, &off, reqs);
+        assert_eq!(got_off, expect);
+        assert_eq!(m_off.prefix_hit_tokens, 0);
+        assert_eq!(m_off.prefill_rows, 10 + 11);
+    }
+
+    /// A prompt FULLY covered by shared pages (length an exact multiple of
+    /// the page size) takes the replay path — no prefill rows at all — and
+    /// still matches sequential generate.
+    #[test]
+    fn serve_full_prefix_cover_replays_last_position() {
+        let (cfg, w) = tiny("opt-t");
+        let prompt: Vec<u8> = (0..8).map(|t| (t * 31 + 9) as u8).collect(); // exactly 2 pages
+        let reqs = vec![
+            (prompt.clone(), 3, SampleConfig { temperature: 0.6, top_k: 8, seed: 31 }),
+            (prompt.clone(), 4, SampleConfig { temperature: 0.6, top_k: 8, seed: 32 }),
+        ];
+        let expect = reference(&cfg, &w, &reqs);
+        let gen = GenConfig {
+            max_batch: 1,
+            pages: 8,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: true,
+            workers: 1,
+        };
+        let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
+        assert_eq!(got, expect);
+        assert_eq!(metrics.prefix_hit_tokens, 8, "request 2's whole prompt was cached");
+        assert_eq!(metrics.prefill_rows, 8, "only request 1 prefilled");
+    }
+
+    /// A pool too small for both requests' worst case forces preemption:
+    /// the younger request is evicted mid-flight, resumes after the older
+    /// finishes, and both outputs stay bit-identical to sequential runs.
+    #[test]
+    fn serve_preemption_resumes_bit_identically() {
+        let (cfg, w) = tiny("llama-t");
+        // Each request needs 3 + 3 - 1 = 5 rows → 3 pages of 2; the pool
+        // holds exactly 3 pages, so both can never be resident at full
+        // length simultaneously.
+        let gen = GenConfig {
+            max_batch: 2,
+            pages: 3,
+            page_size: 2,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+        };
+        let reqs = vec![
+            (vec![11, 12, 13], 3, SampleConfig { temperature: 0.9, top_k: 6, seed: 41 }),
+            (vec![21, 22, 23], 3, SampleConfig { temperature: 0.9, top_k: 6, seed: 42 }),
+        ];
+        let expect = reference(&cfg, &w, &reqs);
+        let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
+        assert_eq!(got, expect, "preempted + resumed output must be bit-identical");
+        assert_eq!(metrics.completed, 2);
+        assert!(metrics.preemptions >= 1, "this pool must have preempted");
+    }
+
+    #[test]
+    fn serve_cancelled_client_frees_pool_for_queued_request() {
+        let (cfg, w) = tiny("llama-t");
+        // One active slot, two requests: the first client hangs up
+        // immediately, so the second only runs if cancellation frees room.
+        let gen = GenConfig {
+            max_batch: 1,
+            pages: 16,
+            page_size: 2,
+            prefill_chunk: 0,
+            prefix_share: true,
+            workers: 1,
+        };
         let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 5 };
         let (tx, rx) = channel();
         let (s1, r1) = super::super::stream::stream_channel();

@@ -1,0 +1,232 @@
+//! Randomized serve-schedule fuzzing: the lockdown harness for the paged
+//! serving stack's bit-parity contract.
+//!
+//! Each case derives a whole serving scenario from one seed — a request
+//! mix with shared and distinct prompt prefixes (single- and multi-page),
+//! admission staggered by a narrow `max_batch`, clients that hang up
+//! mid-stream, and pool sizes tight enough to force preemption — serves
+//! it, and checks every request's token stream bit-equal to a fresh
+//! sequential [`generate`] run (a bit-equal *prefix* of it, for clients
+//! that cancelled).  The scheduler is free to pick any page size, chunk
+//! split, sharing, or preemption schedule; none of it may leak into the
+//! tokens.
+//!
+//! A failure panics with the exact `(seed, page_size, workers)` triple, so
+//! any red run reproduces with a one-line `run_case(seed, ps, w)` call.
+//!
+//! The default test covers the fixed 32-seed grid with the
+//! `page_size × workers` combos round-robined across seeds; the `#[ignore]`d
+//! full grid runs every seed against every combo (32 × {1,4,16} × {1,4}).
+
+use super::batcher::{serve_generation, GenConfig, GenRequest};
+use super::stream::{stream_channel, FinishReason, StreamEvent};
+use crate::model::forward::NoOverride;
+use crate::model::generate::{generate, SampleConfig};
+use crate::util::rng::Rng;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+const FAMILIES: [&str; 3] = ["llama-t", "opt-t", "mistral-t"];
+const PAGE_SIZES: [usize; 3] = [1, 4, 16];
+const WORKER_COUNTS: [usize; 2] = [1, 4];
+const SEEDS: u64 = 32;
+
+struct FuzzReq {
+    prompt: Vec<u8>,
+    max_new: usize,
+    sample: SampleConfig,
+    /// Tokens the client reads before hanging up (`>= max_new` reads the
+    /// whole stream and waits for Done).
+    consume: usize,
+}
+
+/// Run one seeded scenario end to end; `Err` carries the divergence
+/// detail (the caller adds the reproducing triple).
+fn run_case(seed: u64, page_size: usize, workers: usize) -> Result<(), String> {
+    let mut rng = Rng::new(seed ^ 0x5EED_F00D);
+    let family = FAMILIES[rng.below(FAMILIES.len())];
+    let (cfg, w) = super::test_util::tiny(family, 47);
+    // Base prefixes some requests share (multi-page when the draw is long
+    // enough) — the trie only ever sees full pages, so sharing kicks in
+    // exactly when a base spans one.
+    let n_bases = 1 + rng.below(3);
+    let bases: Vec<Vec<u8>> = (0..n_bases)
+        .map(|_| {
+            let len = rng.below(2 * page_size + 4);
+            (0..len).map(|_| rng.below(256) as u8).collect()
+        })
+        .collect();
+    let n_req = 3 + rng.below(5);
+    let reqs: Vec<FuzzReq> = (0..n_req)
+        .map(|_| {
+            let mut prompt: Vec<u8> = if rng.below(2) == 0 {
+                bases[rng.below(n_bases)].clone()
+            } else {
+                Vec::new()
+            };
+            let tail = 1 + rng.below(page_size + 3);
+            prompt.extend((0..tail).map(|_| rng.below(256) as u8));
+            let max_new = 1 + rng.below(6);
+            // Biased toward reading everything; 0 = hang up before the
+            // first token even arrives.
+            let consume = rng.below(max_new + 2).min(max_new);
+            let sample = SampleConfig {
+                temperature: 0.5 + 0.1 * rng.below(8) as f32,
+                top_k: 4 + rng.below(20),
+                seed: rng.next_u64(),
+            };
+            FuzzReq { prompt, max_new, sample, consume }
+        })
+        .collect();
+    // Feasible for every request by construction (no rejections), but
+    // often tight enough that concurrent sequences fight for pages and
+    // the scheduler must evict prefixes / preempt.
+    let worst = reqs
+        .iter()
+        .map(|r| (r.prompt.len() + r.max_new - 1).div_ceil(page_size))
+        .max()
+        .expect("non-empty mix");
+    let gen = GenConfig {
+        max_batch: 1 + rng.below(4),
+        pages: worst + rng.below(2 * worst + 2),
+        page_size,
+        prefill_chunk: [0usize, 1, 2, 5][rng.below(4)],
+        prefix_share: rng.below(2) == 0,
+        workers,
+    };
+    let expect: Vec<Vec<u8>> = reqs
+        .iter()
+        .map(|r| {
+            generate(&cfg, &w, &NoOverride, &r.prompt, r.max_new, r.sample)
+                .expect("sequential generate")
+        })
+        .collect();
+    // Serve on this thread; one client thread per request so hang-ups
+    // happen while the server is mid-schedule.
+    let (tx, rx) = channel();
+    let (metrics, results) = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            let (stream, events) = stream_channel();
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                sample: r.sample,
+                stream,
+                enqueued: Instant::now(),
+            })
+            .expect("request channel open");
+            let (consume, max_new) = (r.consume, r.max_new);
+            handles.push(scope.spawn(move || {
+                let mut got = Vec::new();
+                let mut finish = None;
+                if consume < max_new {
+                    // Read a prefix, then hang up mid-stream (dropping
+                    // `events` on return is the cancellation).
+                    while got.len() < consume {
+                        match events.recv() {
+                            Ok(StreamEvent::Token { byte, .. }) => got.push(byte),
+                            Ok(StreamEvent::Done(d)) => {
+                                finish = Some(d.finish);
+                                break;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                } else {
+                    for event in events.iter() {
+                        match event {
+                            StreamEvent::Token { byte, .. } => got.push(byte),
+                            StreamEvent::Done(d) => {
+                                finish = Some(d.finish);
+                                break;
+                            }
+                        }
+                    }
+                }
+                (got, finish)
+            }));
+        }
+        drop(tx);
+        let metrics = serve_generation(&cfg, &w, &NoOverride, &gen, rx).expect("serve_generation");
+        let results: Vec<(Vec<u8>, Option<FinishReason>)> =
+            handles.into_iter().map(|h| h.join().expect("client thread")).collect();
+        (metrics, results)
+    });
+    for (i, (got, finish)) in results.iter().enumerate() {
+        let want = &expect[i];
+        let r = &reqs[i];
+        if r.consume >= r.max_new {
+            if got != want {
+                return Err(format!(
+                    "{family}: request {i} diverged: got {got:?}, want {want:?} \
+                     (gen={gen:?})"
+                ));
+            }
+            if *finish != Some(FinishReason::Completed) {
+                return Err(format!("{family}: request {i} finished {finish:?}, want Completed"));
+            }
+        } else {
+            // A cancelled client must have seen exactly its consumed
+            // prefix of the sequential output — never a wrong token.
+            if got.len() != r.consume || got[..] != want[..got.len()] {
+                return Err(format!(
+                    "{family}: cancelled request {i} stream {got:?} is not the \
+                     {}-token prefix of {want:?} (gen={gen:?})",
+                    r.consume
+                ));
+            }
+        }
+    }
+    if metrics.rejected != 0 {
+        return Err(format!("{family}: {} feasible requests rejected", metrics.rejected));
+    }
+    if metrics.completed != n_req {
+        return Err(format!(
+            "{family}: {} of {n_req} requests retired (gen={gen:?})",
+            metrics.completed
+        ));
+    }
+    Ok(())
+}
+
+fn combo(seed: u64) -> (usize, usize) {
+    let ps = PAGE_SIZES[(seed as usize) % PAGE_SIZES.len()];
+    let w = WORKER_COUNTS[(seed as usize / PAGE_SIZES.len()) % WORKER_COUNTS.len()];
+    (ps, w)
+}
+
+/// The CI-default grid: all 32 seeds, with the 6 `page_size × workers`
+/// combos round-robined so every combo sees 5+ distinct scenarios.
+#[test]
+fn serve_fuzz_schedule_parity_quick_grid() {
+    for seed in 0..SEEDS {
+        let (ps, w) = combo(seed);
+        if let Err(msg) = run_case(seed, ps, w) {
+            panic!(
+                "serve fuzz failed: seed={seed} page_size={ps} workers={w}: {msg}\n\
+                 reproduce with serve::fuzz::run_case({seed}, {ps}, {w})"
+            );
+        }
+    }
+}
+
+/// Every seed against every combo — 192 served scenarios.  Slow by
+/// design; run explicitly with `cargo test -q serve_fuzz -- --ignored`.
+#[test]
+#[ignore = "full 32-seed x {1,4,16} pages x {1,4} workers grid; run with --ignored"]
+fn serve_fuzz_schedule_parity_full_grid() {
+    for seed in 0..SEEDS {
+        for &ps in &PAGE_SIZES {
+            for &w in &WORKER_COUNTS {
+                if let Err(msg) = run_case(seed, ps, w) {
+                    panic!(
+                        "serve fuzz failed: seed={seed} page_size={ps} workers={w}: {msg}\n\
+                         reproduce with serve::fuzz::run_case({seed}, {ps}, {w})"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,125 +1,358 @@
-//! Slotted KV pool: fixed-capacity per-slot K/V storage with O(1) recycle.
+//! Paged KV pool: fixed-size pages, a free-page allocator, and per-sequence
+//! page tables — the vLLM-style storage layer under the generation server.
 //!
-//! Each slot holds one sequence's per-layer key/value rows in storage
-//! preallocated for `cap` positions, so the decode hot loop never allocates
-//! and a finished sequence's slot is recycled with a free-list push —
-//! no zeroing, no reallocation (`len` guards stale rows).  The pool is
-//! owned by the scheduler thread ([`super::batcher::serve_generation`]);
-//! it is deliberately not `Sync` — all mutation happens between decode
-//! steps on that one thread.
+//! The previous pool reserved `prompt + max_new − 1` contiguous rows per
+//! slot at admission, so worst-case sizing — not actual usage — gated batch
+//! depth.  Here a sequence owns a **page table** (a list of page ids); pages
+//! hold `page_size` positions × all layers × K and V, are claimed from a
+//! LIFO free list one at a time as the sequence grows ("reserve the first
+//! page, fault in the rest"), and are refcounted so prompt-prefix pages can
+//! be shared across sequences ([`super::prefix::PrefixTrie`]).  Writing into
+//! a shared page copies it first (copy-on-write), so sharing can never
+//! corrupt a neighbor's history.
+//!
+//! The pool is owned by the scheduler thread
+//! ([`super::batcher::serve_generation`]); it is deliberately not `Sync` —
+//! every refcount and page-table mutation happens *between* decode steps on
+//! that one thread, which is what keeps the whole subsystem lock-free.
+//!
+//! Storage layout: page `p`, layer `l`, in-page position `s` lives at
+//! `k_pages[p][(l * page_size + s) * d_model ..][..d_model]` — contiguous
+//! per `(page, layer)`, so a history gather is one `copy_from_slice` per
+//! page and a history that fits one page is borrowed without copying
+//! ([`KvPool::hist_slices`]).
 
 use crate::model::config::ModelConfig;
 
-/// Fixed-capacity slotted K/V storage for concurrent sequences.
+/// Index of a page in the pool's backing storage.
+pub type PageId = usize;
+/// Handle of an admitted sequence (a slab index; recycled after release).
+pub type SeqId = usize;
+
+/// One sequence's pool-side state.
+#[derive(Debug, Default)]
+struct SeqState {
+    /// Page ids covering positions `[i * page_size, (i+1) * page_size)`.
+    table: Vec<PageId>,
+    /// Committed (valid) positions.
+    len: usize,
+    live: bool,
+}
+
+/// Paged K/V storage shared by all concurrent sequences.
 #[derive(Debug)]
 pub struct KvPool {
     layers: usize,
-    cap: usize,
+    page_size: usize,
     d: usize,
-    /// `[slot * layers + layer]` → row storage `[cap * d_model]`.
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    /// Valid rows per slot (identical across that slot's layers).
-    len: Vec<usize>,
-    /// LIFO free list — `acquire`/`release` are O(1).
-    free: Vec<usize>,
+    /// `[page]` → `[layers * page_size * d_model]` K rows.
+    k_pages: Vec<Vec<f32>>,
+    /// `[page]` → `[layers * page_size * d_model]` V rows.
+    v_pages: Vec<Vec<f32>>,
+    /// Reference count per page (sequences + trie entries).
+    refs: Vec<u32>,
+    /// LIFO free-page list — claim/release are O(1).
+    free: Vec<PageId>,
+    /// Sequence slab + its free list.
+    seqs: Vec<SeqState>,
+    seq_free: Vec<SeqId>,
 }
 
 impl KvPool {
-    /// Pool with `slots` sequences of at most `cap` positions each.
-    /// Allocates everything up front: `2 · slots · layers · cap · d_model`
-    /// f32s.
-    pub fn new(cfg: &ModelConfig, slots: usize, cap: usize) -> KvPool {
-        assert!(slots > 0, "KvPool needs at least one slot");
-        assert!(cap > 0, "KvPool needs capacity for at least one position");
+    /// Pool with `pages` fixed-size pages of `page_size` positions each.
+    /// Allocates everything up front: `2 · pages · layers · page_size ·
+    /// d_model` f32s; the hot loop never allocates page storage.
+    pub fn new(cfg: &ModelConfig, pages: usize, page_size: usize) -> KvPool {
+        assert!(pages > 0, "KvPool needs at least one page");
+        assert!(page_size > 0, "KvPool needs at least one position per page");
         let d = cfg.d_model;
         let layers = cfg.n_layers;
+        let page_elems = layers * page_size * d;
         KvPool {
             layers,
-            cap,
+            page_size,
             d,
-            k: (0..slots * layers).map(|_| vec![0.0f32; cap * d]).collect(),
-            v: (0..slots * layers).map(|_| vec![0.0f32; cap * d]).collect(),
-            len: vec![0; slots],
-            free: (0..slots).rev().collect(),
+            k_pages: (0..pages).map(|_| vec![0.0f32; page_elems]).collect(),
+            v_pages: (0..pages).map(|_| vec![0.0f32; page_elems]).collect(),
+            refs: vec![0; pages],
+            free: (0..pages).rev().collect(),
+            seqs: Vec::new(),
+            seq_free: Vec::new(),
         }
     }
 
-    /// Total slot count.
-    pub fn slots(&self) -> usize {
-        self.len.len()
+    /// Total page count.
+    pub fn pages(&self) -> usize {
+        self.refs.len()
     }
 
-    /// Maximum positions per slot.
-    pub fn cap(&self) -> usize {
-        self.cap
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
     }
 
-    /// Slots currently on the free list.
-    pub fn free_count(&self) -> usize {
+    /// Total positions the pool can hold (`pages · page_size`).
+    pub fn capacity(&self) -> usize {
+        self.pages() * self.page_size
+    }
+
+    /// Pages currently on the free list.
+    pub fn free_pages(&self) -> usize {
         self.free.len()
     }
 
-    /// Slots currently held by sequences.
-    pub fn in_use(&self) -> usize {
-        self.slots() - self.free.len()
+    /// Pages currently referenced by at least one sequence or trie entry.
+    pub fn pages_in_use(&self) -> usize {
+        self.pages() - self.free.len()
     }
 
-    /// Valid rows currently stored in `slot`.
-    pub fn len(&self, slot: usize) -> usize {
-        self.len[slot]
+    /// Live sequence count.
+    pub fn live_seqs(&self) -> usize {
+        self.seqs.iter().filter(|s| s.live).count()
     }
 
-    /// Claim a free slot (its length reset to 0), or `None` when the pool
-    /// is fully occupied.  O(1).
-    pub fn acquire(&mut self) -> Option<usize> {
-        let slot = self.free.pop()?;
-        self.len[slot] = 0;
-        Some(slot)
+    // ---- sequence lifecycle -------------------------------------------
+
+    /// Admit a new empty sequence.  Never fails and claims no page — pages
+    /// fault in on first write ([`KvPool::prepare`]).
+    pub fn new_seq(&mut self) -> SeqId {
+        self.fork_seq(&[])
     }
 
-    /// Return `slot` to the free list.  O(1); the storage is retained and
-    /// overwritten by the next occupant (`len` guards stale rows).
-    pub fn release(&mut self, slot: usize) {
+    /// Admit a sequence whose first `shared.len() · page_size` positions
+    /// alias already-populated pages (prompt-prefix sharing): each shared
+    /// page's refcount is bumped and the new sequence starts with
+    /// `len == shared.len() · page_size` committed positions.
+    pub fn fork_seq(&mut self, shared: &[PageId]) -> SeqId {
+        for &p in shared {
+            debug_assert!(self.refs[p] > 0, "fork over unreferenced page {p}");
+            self.refs[p] += 1;
+        }
+        let state = SeqState {
+            table: shared.to_vec(),
+            len: shared.len() * self.page_size,
+            live: true,
+        };
+        match self.seq_free.pop() {
+            Some(id) => {
+                self.seqs[id] = state;
+                id
+            }
+            None => {
+                self.seqs.push(state);
+                self.seqs.len() - 1
+            }
+        }
+    }
+
+    /// Retire a sequence: every page it references is unreferenced (pages
+    /// shared with other sequences or the prefix trie survive), the handle
+    /// is recycled.  O(table length).
+    pub fn release_seq(&mut self, seq: SeqId) {
+        debug_assert!(self.seqs[seq].live, "double release of sequence {seq}");
+        let table = std::mem::take(&mut self.seqs[seq].table);
+        for p in table {
+            self.unref_page(p);
+        }
+        self.seqs[seq].len = 0;
+        self.seqs[seq].live = false;
+        self.seq_free.push(seq);
+    }
+
+    /// Committed positions of `seq`.
+    pub fn len(&self, seq: SeqId) -> usize {
+        self.seqs[seq].len
+    }
+
+    /// The page covering table index `idx` of `seq` (for trie registration).
+    pub fn page_at(&self, seq: SeqId, idx: usize) -> PageId {
+        self.seqs[seq].table[idx]
+    }
+
+    /// Pages currently in `seq`'s table.
+    pub fn seq_pages(&self, seq: SeqId) -> usize {
+        self.seqs[seq].table.len()
+    }
+
+    /// Does any other holder (sequence or trie) share one of `seq`'s pages?
+    /// Preemption prefers victims where this is `false` — releasing them
+    /// returns every one of their pages to the free list.
+    pub fn seq_is_shared(&self, seq: SeqId) -> bool {
+        self.seqs[seq].table.iter().any(|&p| self.refs[p] > 1)
+    }
+
+    // ---- page references (prefix trie holds pages too) ----------------
+
+    /// Refcount of `page` (tests + preemption heuristics).
+    pub fn page_refs(&self, page: PageId) -> u32 {
+        self.refs[page]
+    }
+
+    /// Add a reference to an already-referenced page (the prefix trie
+    /// pinning a registered prompt page).
+    pub fn ref_page(&mut self, page: PageId) {
+        debug_assert!(self.refs[page] > 0, "ref of unreferenced page {page}");
+        self.refs[page] += 1;
+    }
+
+    /// Drop one reference to `page`; at zero the page returns to the free
+    /// list (storage retained, overwritten by the next claimant).  Returns
+    /// `true` when the page was actually freed.
+    pub fn unref_page(&mut self, page: PageId) -> bool {
+        debug_assert!(self.refs[page] > 0, "unref of free page {page}");
+        self.refs[page] -= 1;
+        if self.refs[page] == 0 {
+            self.free.push(page);
+            true
+        } else {
+            false
+        }
+    }
+
+    // ---- growth: fault-in + copy-on-write -----------------------------
+
+    /// Make position `pos` of `seq` writable: fault in a fresh page when
+    /// `pos` opens a new page, copy-on-write when its page is shared.
+    /// Returns `None` — with the page table untouched — when the free list
+    /// is empty and an allocation was needed (the scheduler then evicts
+    /// prefix-trie pages or preempts a sequence and retries).  Positions
+    /// must grow contiguously: `pos` at most one page past the table end.
+    pub fn prepare(&mut self, seq: SeqId, pos: usize) -> Option<()> {
+        let idx = pos / self.page_size;
+        let table_len = self.seqs[seq].table.len();
         debug_assert!(
-            !self.free.contains(&slot),
-            "double release of KV slot {slot}"
+            idx <= table_len,
+            "sequence {seq}: position {pos} skips pages (table holds {table_len})"
         );
-        self.len[slot] = 0;
-        self.free.push(slot);
+        if idx == table_len {
+            // Fault in a fresh page.  Check-before-mutate: exhaustion must
+            // leave every page table exactly as it was.
+            let page = self.free.pop()?;
+            self.refs[page] = 1;
+            self.seqs[seq].table.push(page);
+            return Some(());
+        }
+        let page = self.seqs[seq].table[idx];
+        if self.refs[page] > 1 {
+            // Copy-on-write: this sequence is about to diverge from the
+            // other holders of `page`.  Copies exactly once — afterwards the
+            // sequence owns the copy alone (refcount 1).
+            let fresh = self.free.pop()?;
+            let (src_k, dst_k) = two_pages(&mut self.k_pages, page, fresh);
+            dst_k.copy_from_slice(src_k);
+            let (src_v, dst_v) = two_pages(&mut self.v_pages, page, fresh);
+            dst_v.copy_from_slice(src_v);
+            self.refs[fresh] = 1;
+            self.refs[page] -= 1;
+            debug_assert!(self.refs[page] > 0);
+            self.seqs[seq].table[idx] = fresh;
+        }
+        Some(())
     }
 
-    /// Write the K/V rows for `(slot, layer)` at position `pos`.
-    /// Positions must be written contiguously per slot; `set_len` commits
-    /// the step's new length once every layer has been written.
-    pub fn push_row(&mut self, slot: usize, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
-        assert!(
-            pos < self.cap,
-            "KV slot {slot} overflow: position {pos} >= capacity {}",
-            self.cap
-        );
+    /// Write the K/V rows of `(seq, layer)` at position `pos`.  The page
+    /// must have been made writable by [`KvPool::prepare`].
+    pub fn push_row(&mut self, seq: SeqId, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert_eq!(k_row.len(), self.d);
         debug_assert_eq!(v_row.len(), self.d);
-        let idx = slot * self.layers + layer;
-        self.k[idx][pos * self.d..(pos + 1) * self.d].copy_from_slice(k_row);
-        self.v[idx][pos * self.d..(pos + 1) * self.d].copy_from_slice(v_row);
+        let idx = pos / self.page_size;
+        assert!(
+            idx < self.seqs[seq].table.len(),
+            "sequence {seq}: position {pos} written without prepare()"
+        );
+        let page = self.seqs[seq].table[idx];
+        debug_assert_eq!(
+            self.refs[page], 1,
+            "write into shared page {page} (prepare() skipped the CoW?)"
+        );
+        let off = (layer * self.page_size + pos % self.page_size) * self.d;
+        self.k_pages[page][off..off + self.d].copy_from_slice(k_row);
+        self.v_pages[page][off..off + self.d].copy_from_slice(v_row);
     }
 
-    /// Commit `slot`'s valid-row count after a decode step.
-    pub fn set_len(&mut self, slot: usize, len: usize) {
-        assert!(len <= self.cap, "KV slot {slot}: len {len} > capacity {}", self.cap);
-        self.len[slot] = len;
+    /// Commit `seq`'s valid-position count.  Growth requires the covering
+    /// pages to exist; truncation releases whole pages past the new end.
+    pub fn set_len(&mut self, seq: SeqId, len: usize) {
+        let need = len.div_ceil(self.page_size);
+        let have = self.seqs[seq].table.len();
+        assert!(
+            need <= have,
+            "sequence {seq}: set_len({len}) needs {need} pages, table holds {have}"
+        );
+        while self.seqs[seq].table.len() > need {
+            let page = self.seqs[seq].table.pop().expect("checked non-empty");
+            self.unref_page(page);
+        }
+        self.seqs[seq].len = len;
     }
 
-    /// Contiguous K rows `[0, t_now)` of `(slot, layer)` — the same view
-    /// `KvCache::k_hist` gives the sequential decoder.
-    pub fn k_hist(&self, slot: usize, layer: usize, t_now: usize) -> &[f32] {
-        &self.k[slot * self.layers + layer][..t_now * self.d]
+    // ---- history views ------------------------------------------------
+
+    /// Borrow the K/V rows for positions `[base, t_now)` of `(seq, layer)`
+    /// when they live in ONE page (`base` page-aligned) — the no-copy fast
+    /// path the decode step takes for short histories and narrow attention
+    /// windows.  `None` when the span crosses a page boundary.
+    pub fn hist_slices(&self, seq: SeqId, layer: usize, base: usize, t_now: usize) -> Option<(&[f32], &[f32])> {
+        debug_assert_eq!(base % self.page_size, 0, "base must be page-aligned");
+        debug_assert!(base < t_now && t_now <= self.seqs[seq].len);
+        if t_now - base > self.page_size {
+            return None;
+        }
+        let idx = base / self.page_size;
+        if t_now > (idx + 1) * self.page_size {
+            return None;
+        }
+        let page = self.seqs[seq].table[idx];
+        let off = layer * self.page_size * self.d;
+        let n = (t_now - base) * self.d;
+        Some((
+            &self.k_pages[page][off..off + n],
+            &self.v_pages[page][off..off + n],
+        ))
     }
 
-    /// Contiguous V rows `[0, t_now)` of `(slot, layer)`.
-    pub fn v_hist(&self, slot: usize, layer: usize, t_now: usize) -> &[f32] {
-        &self.v[slot * self.layers + layer][..t_now * self.d]
+    /// Copy the K/V rows for positions `[base, t_now)` of `(seq, layer)`
+    /// into `k_out`/`v_out` (cleared first; `base` page-aligned).  One
+    /// `copy_from_slice` per touched page — the layout keeps each page's
+    /// per-layer rows contiguous.
+    pub fn gather_hist(
+        &self,
+        seq: SeqId,
+        layer: usize,
+        base: usize,
+        t_now: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(base % self.page_size, 0, "base must be page-aligned");
+        debug_assert!(base < t_now && t_now <= self.seqs[seq].len);
+        k_out.clear();
+        v_out.clear();
+        k_out.reserve((t_now - base) * self.d);
+        v_out.reserve((t_now - base) * self.d);
+        let mut pos = base;
+        while pos < t_now {
+            let idx = pos / self.page_size;
+            let page = self.seqs[seq].table[idx];
+            let take = ((idx + 1) * self.page_size).min(t_now) - pos;
+            let off = (layer * self.page_size + pos % self.page_size) * self.d;
+            let n = take * self.d;
+            k_out.extend_from_slice(&self.k_pages[page][off..off + n]);
+            v_out.extend_from_slice(&self.v_pages[page][off..off + n]);
+            pos += take;
+        }
+    }
+}
+
+/// Disjoint mutable views of pages `src` and `dst` (for the CoW copy).
+fn two_pages(pages: &mut [Vec<f32>], src: usize, dst: usize) -> (&[f32], &mut [f32]) {
+    debug_assert_ne!(src, dst);
+    if src < dst {
+        let (a, b) = pages.split_at_mut(dst);
+        (&a[src], &mut b[0])
+    } else {
+        let (a, b) = pages.split_at_mut(src);
+        (&b[0], &mut a[dst])
     }
 }
 
@@ -133,56 +366,193 @@ mod tests {
         cfg
     }
 
-    #[test]
-    fn serve_pool_acquire_release_recycles() {
-        let cfg = cfg();
-        let mut pool = KvPool::new(&cfg, 3, 8);
-        assert_eq!(pool.free_count(), 3);
-        let a = pool.acquire().unwrap();
-        let b = pool.acquire().unwrap();
-        let c = pool.acquire().unwrap();
-        assert_eq!(pool.acquire(), None, "exhausted pool must refuse");
-        assert_eq!(pool.in_use(), 3);
-        // Release the middle one; the next acquire reuses it (LIFO).
-        pool.release(b);
-        assert_eq!(pool.free_count(), 1);
-        let b2 = pool.acquire().unwrap();
-        assert_eq!(b2, b);
-        assert_ne!(b2, a);
-        assert_ne!(b2, c);
+    fn row(d: usize, fill: f32) -> Vec<f32> {
+        (0..d).map(|i| fill + i as f32).collect()
+    }
+
+    /// Write position `pos` of `seq` across both layers (prepare + push).
+    fn write_pos(pool: &mut KvPool, seq: SeqId, pos: usize, fill: f32, d: usize) {
+        pool.prepare(seq, pos).expect("page available");
+        let k = row(d, fill);
+        let v = row(d, -fill);
+        for layer in 0..2 {
+            pool.push_row(seq, layer, pos, &k, &v);
+        }
+        pool.set_len(seq, pool.len(seq).max(pos + 1));
     }
 
     #[test]
-    fn serve_pool_roundtrip_and_len_reset() {
+    fn serve_pool_pages_fault_in_on_demand() {
         let cfg = cfg();
         let d = cfg.d_model;
-        let mut pool = KvPool::new(&cfg, 2, 4);
-        let s = pool.acquire().unwrap();
-        let k0: Vec<f32> = (0..d).map(|i| i as f32).collect();
-        let v0: Vec<f32> = (0..d).map(|i| -(i as f32)).collect();
-        for layer in 0..2 {
-            pool.push_row(s, layer, 0, &k0, &v0);
-        }
-        pool.set_len(s, 1);
-        assert_eq!(pool.len(s), 1);
-        assert_eq!(pool.k_hist(s, 1, 1), &k0[..]);
-        assert_eq!(pool.v_hist(s, 0, 1), &v0[..]);
-        // Recycle: the stale row must be invisible to the next occupant.
-        pool.release(s);
-        let s2 = pool.acquire().unwrap();
-        assert_eq!(s2, s);
-        assert_eq!(pool.len(s2), 0);
-        assert!(pool.k_hist(s2, 0, 0).is_empty());
+        let mut pool = KvPool::new(&cfg, 4, 2);
+        assert_eq!(pool.free_pages(), 4);
+        let s = pool.new_seq();
+        // Admission claims nothing; the first write faults in page 0.
+        assert_eq!(pool.free_pages(), 4);
+        write_pos(&mut pool, s, 0, 1.0, d);
+        assert_eq!(pool.free_pages(), 3);
+        write_pos(&mut pool, s, 1, 2.0, d);
+        assert_eq!(pool.free_pages(), 3, "position 1 fits the first page");
+        write_pos(&mut pool, s, 2, 3.0, d);
+        assert_eq!(pool.free_pages(), 2, "position 2 opens the second page");
+        assert_eq!(pool.len(s), 3);
+        let (k, _v) = pool.hist_slices(s, 0, 2, 3).expect("one-page span");
+        assert_eq!(k, &row(d, 3.0)[..]);
     }
 
     #[test]
-    #[should_panic(expected = "overflow")]
-    fn serve_pool_rejects_overflow() {
+    fn serve_pool_exhaustion_returns_none_without_corruption() {
         let cfg = cfg();
         let d = cfg.d_model;
         let mut pool = KvPool::new(&cfg, 1, 2);
-        let s = pool.acquire().unwrap();
-        let row = vec![0.0f32; d];
-        pool.push_row(s, 0, 2, &row, &row);
+        let s = pool.new_seq();
+        write_pos(&mut pool, s, 0, 1.0, d);
+        write_pos(&mut pool, s, 1, 2.0, d);
+        // Third position needs a second page: the pool is out.
+        assert!(pool.prepare(s, 2).is_none());
+        // The failed fault must leave the table untouched and the stored
+        // history readable.
+        assert_eq!(pool.seq_pages(s), 1);
+        assert_eq!(pool.len(s), 2);
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        pool.gather_hist(s, 1, 0, 2, &mut k, &mut v);
+        assert_eq!(&k[..d], &row(d, 1.0)[..]);
+        assert_eq!(&k[d..], &row(d, 2.0)[..]);
+        assert_eq!(&v[..d], &row(d, -1.0)[..]);
+        // Releasing recovers the page.
+        pool.release_seq(s);
+        assert_eq!(pool.free_pages(), 1);
+    }
+
+    #[test]
+    fn serve_pool_cow_copies_exactly_once() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut pool = KvPool::new(&cfg, 4, 2);
+        let a = pool.new_seq();
+        write_pos(&mut pool, a, 0, 1.0, d);
+        write_pos(&mut pool, a, 1, 2.0, d);
+        let shared_page = pool.page_at(a, 0);
+        // B forks over A's first page.
+        let b = pool.fork_seq(&[shared_page]);
+        assert_eq!(pool.page_refs(shared_page), 2);
+        assert_eq!(pool.len(b), 2);
+        assert!(pool.seq_is_shared(a));
+        let free_before = pool.free_pages();
+        // B rewrites position 1 → CoW: exactly one page claimed, A's copy
+        // untouched.
+        pool.prepare(b, 1).unwrap();
+        assert_eq!(pool.free_pages(), free_before - 1, "CoW claims one page");
+        assert_ne!(pool.page_at(b, 0), shared_page);
+        assert_eq!(pool.page_refs(shared_page), 1);
+        let k9 = row(d, 9.0);
+        for layer in 0..2 {
+            pool.push_row(b, layer, 1, &k9, &k9);
+        }
+        // Second write to the now-unique page claims nothing further.
+        pool.prepare(b, 0).unwrap();
+        assert_eq!(pool.free_pages(), free_before - 1, "CoW copies exactly once");
+        // A's history is unchanged; B sees its own write, plus the copied
+        // position 0 from before the fork.
+        let (ka, _) = pool.hist_slices(a, 0, 0, 2).unwrap();
+        assert_eq!(&ka[d..], &row(d, 2.0)[..]);
+        let (kb, _) = pool.hist_slices(b, 0, 0, 2).unwrap();
+        assert_eq!(&kb[..d], &row(d, 1.0)[..], "CoW preserved pre-fork rows");
+        assert_eq!(&kb[d..], &k9[..]);
+    }
+
+    #[test]
+    fn serve_pool_refcounts_round_trip_free_count() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut pool = KvPool::new(&cfg, 6, 2);
+        let total = pool.free_pages();
+        // Full admit/extend/share/retire cycle must return every page.
+        let a = pool.new_seq();
+        for pos in 0..5 {
+            write_pos(&mut pool, a, pos, pos as f32, d);
+        }
+        let p0 = pool.page_at(a, 0);
+        let b = pool.fork_seq(&[p0]);
+        pool.ref_page(p0); // a trie-style third reference
+        pool.release_seq(a);
+        assert!(pool.free_pages() < total, "shared + trie refs keep pages");
+        pool.release_seq(b);
+        assert_eq!(pool.page_refs(p0), 1, "trie ref still pins page 0");
+        assert!(pool.unref_page(p0));
+        assert_eq!(pool.free_pages(), total, "free count round-trips");
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn serve_pool_set_len_truncation_releases_tail_pages() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut pool = KvPool::new(&cfg, 4, 2);
+        let s = pool.new_seq();
+        for pos in 0..7 {
+            write_pos(&mut pool, s, pos, pos as f32, d);
+        }
+        assert_eq!(pool.seq_pages(s), 4);
+        assert_eq!(pool.free_pages(), 0);
+        // Truncate to 3 positions: pages 2 and 3 (positions 4..8) release,
+        // page 1 stays (position 2..4 partially valid).
+        pool.set_len(s, 3);
+        assert_eq!(pool.len(s), 3);
+        assert_eq!(pool.seq_pages(s), 2);
+        assert_eq!(pool.free_pages(), 2);
+        // The surviving rows are intact and regrowth works.
+        let (k, _) = pool.hist_slices(s, 0, 2, 3).unwrap();
+        assert_eq!(k, &row(d, 2.0)[..]);
+        write_pos(&mut pool, s, 3, 30.0, d);
+        assert_eq!(pool.seq_pages(s), 2, "position 3 reuses the partial page");
+    }
+
+    #[test]
+    fn serve_pool_seq_handles_recycle() {
+        let cfg = cfg();
+        let mut pool = KvPool::new(&cfg, 2, 4);
+        let a = pool.new_seq();
+        let b = pool.new_seq();
+        assert_ne!(a, b);
+        pool.release_seq(a);
+        let c = pool.new_seq();
+        assert_eq!(c, a, "slab handle recycles LIFO");
+        assert_eq!(pool.len(c), 0);
+        assert_eq!(pool.live_seqs(), 2);
+    }
+
+    #[test]
+    fn serve_pool_gather_crosses_pages_and_matches_slices() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut pool = KvPool::new(&cfg, 4, 2);
+        let s = pool.new_seq();
+        for pos in 0..6 {
+            write_pos(&mut pool, s, pos, 10.0 * pos as f32, d);
+        }
+        // Cross-page span has no borrow fast path.
+        assert!(pool.hist_slices(s, 0, 0, 3).is_none());
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        pool.gather_hist(s, 1, 2, 6, &mut k, &mut v);
+        assert_eq!(k.len(), 4 * d);
+        for (i, pos) in (2..6).enumerate() {
+            assert_eq!(&k[i * d..(i + 1) * d], &row(d, 10.0 * pos as f32)[..]);
+            assert_eq!(&v[i * d..(i + 1) * d], &row(d, -10.0 * pos as f32)[..]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "without prepare")]
+    fn serve_pool_rejects_unprepared_write() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut pool = KvPool::new(&cfg, 1, 2);
+        let s = pool.new_seq();
+        let r = row(d, 0.0);
+        pool.push_row(s, 0, 0, &r, &r);
     }
 }

@@ -6,22 +6,30 @@
 //! windows; generation cannot be batched that way because requests arrive,
 //! prefill, decode, and finish on their own schedules.  This module batches
 //! at the **step** level instead (Orca-style continuous batching): every
-//! active sequence contributes exactly one token row per decode step, and
-//! the scheduler admits queued requests into free KV slots *between* steps
-//! — prefilling arrivals token-by-token alongside in-flight decodes, never
-//! stalling them.
+//! active sequence contributes rows per decode step (one for decodes, a
+//! bounded chunk for prefills), and the scheduler admits queued requests
+//! *between* steps — prefilling arrivals alongside in-flight decodes,
+//! never stalling them.
 //!
-//! * [`kv_pool`]  — slotted KV storage: fixed-capacity per-slot K/V rows,
-//!   O(1) acquire/release through a free list, zero allocation per step.
-//! * [`step`]     — [`step::decode_step_batched`]: stacks the B active rows
+//! * [`kv_pool`]  — **paged** KV storage (vLLM-style): fixed-size pages
+//!   from one free list, per-sequence page tables, refcounted sharing with
+//!   copy-on-write, fault-in growth — no per-request worst-case
+//!   reservation, zero float allocation per step.
+//! * [`prefix`]   — radix trie over full `page_size`-token prompt chunks:
+//!   requests sharing a prompt prefix alias the same already-populated
+//!   pages and skip that prefill entirely (LRU-evicted under pressure).
+//! * [`step`]     — [`step::decode_step_batched`]: stacks the planned rows
 //!   and routes every projection through the tiled GEMM kernel
 //!   ([`crate::linalg::gemm`]) — one GEMM per weight instead of B matvecs —
-//!   while staying **bit-identical per request** to the sequential
-//!   [`crate::model::generate::decode_step`] at every batch size and
-//!   worker count.
+//!   attending over page-indexed history while staying **bit-identical per
+//!   request** to the sequential [`crate::model::generate::decode_step`]
+//!   at every batch size, page size, chunk split, and worker count.
 //! * [`batcher`]  — [`batcher::serve_generation`]: the scheduler loop that
-//!   owns the pool; producers fan requests in over an mpsc channel from any
-//!   number of threads.
+//!   owns the pool and trie; plans chunked prefills, resolves pool
+//!   exhaustion by trie eviction then preemption (youngest victim re-queues
+//!   and later resumes exactly), and streams tokens as they are sampled.
+//!   Producers fan requests in over an mpsc channel from any number of
+//!   threads.
 //! * [`stream`]   — per-request streaming delivery: each generated token is
 //!   sent over the request's own channel as it is produced, with a final
 //!   [`stream::StreamEvent::Done`] carrying latency stats.
@@ -30,13 +38,19 @@
 //! `(weights, overrides, prompt, SampleConfig)` — per-request seeded RNGs
 //! and the bit-identical batched step make the served tokens equal to a
 //! fresh single-request [`crate::model::generate::generate`] run no matter
-//! which neighbors shared its batches (pinned by the parity tests in
-//! [`batcher`] and [`step`]).
+//! which neighbors shared its batches, which pages its KV landed in,
+//! whether its prefix came from the trie, or how often it was preempted
+//! (pinned by the parity tests in [`batcher`] and [`step`], and by the
+//! randomized schedule fuzz harness in `fuzz`).
 
 pub mod batcher;
 pub mod kv_pool;
+pub mod prefix;
 pub mod step;
 pub mod stream;
+
+#[cfg(test)]
+mod fuzz;
 
 #[cfg(test)]
 pub(crate) mod test_util {
@@ -53,5 +67,6 @@ pub(crate) mod test_util {
 
 pub use batcher::{serve_generation, GenConfig, GenRequest};
 pub use kv_pool::KvPool;
+pub use prefix::PrefixTrie;
 pub use step::{decode_step_batched, StepRow};
 pub use stream::{collect_stream, stream_channel, DoneStats, FinishReason, StreamEvent, TokenStream};

@@ -1,0 +1,315 @@
+//! Prompt-prefix sharing: a radix trie over token-id chunks that maps common
+//! prompt prefixes onto already-populated KV pages.
+//!
+//! Sharing is sound because the KV rows at position `p` are a deterministic
+//! function of token ids `0..=p` — both paths (sequential `generate` and the
+//! batched serve step) compute them through the same per-row helpers in the
+//! same float-op order.  So when two prompts agree on their first
+//! `k · page_size` tokens, the second request can alias the first request's
+//! first `k` pages verbatim ([`super::kv_pool::KvPool::fork_seq`]) and skip
+//! prefilling those positions entirely.
+//!
+//! Granularity is one trie node per **full** page: a node stores the exact
+//! `page_size` token ids covering its page, so lookup is exact-match chunk
+//! by chunk (never a partial page — a partially filled page is still being
+//! written by its owner and must not be aliased).  Each registered node
+//! holds one pool reference on its page; sequences forked over it hold their
+//! own, so evicting a trie entry never invalidates a live request's history.
+//!
+//! The trie lives on the scheduler thread next to the pool — same
+//! single-thread, between-steps mutation discipline, no locks.
+
+use super::kv_pool::{KvPool, PageId};
+
+/// Sentinel: the root node (empty prefix, no page).
+pub const ROOT: usize = 0;
+const NO_PAGE: PageId = usize::MAX;
+
+#[derive(Debug)]
+struct Node {
+    /// The `page_size` token ids this node's page covers.
+    chunk: Vec<u8>,
+    page: PageId,
+    parent: usize,
+    children: Vec<usize>,
+    /// Monotone LRU stamp, bumped on every lookup hit and registration.
+    last_use: u64,
+    live: bool,
+}
+
+/// Radix trie over `page_size`-token chunks; values are pool page ids.
+#[derive(Debug)]
+pub struct PrefixTrie {
+    page_size: usize,
+    nodes: Vec<Node>,
+    /// Dead node slots for reuse.
+    free: Vec<usize>,
+    clock: u64,
+    /// Registered (live, non-root) entries.
+    entries: usize,
+    /// Lookup accounting for the serve metrics: positions served from the
+    /// trie vs. prompt positions that had to be prefilled.
+    pub hit_positions: u64,
+    pub miss_positions: u64,
+}
+
+impl PrefixTrie {
+    pub fn new(page_size: usize) -> PrefixTrie {
+        assert!(page_size > 0);
+        PrefixTrie {
+            page_size,
+            nodes: vec![Node {
+                chunk: Vec::new(),
+                page: NO_PAGE,
+                parent: ROOT,
+                children: Vec::new(),
+                last_use: 0,
+                live: true,
+            }],
+            free: Vec::new(),
+            clock: 0,
+            entries: 0,
+            hit_positions: 0,
+            miss_positions: 0,
+        }
+    }
+
+    /// Live registered entries (== pool pages the trie holds a ref on).
+    pub fn entries(&self) -> usize {
+        self.entries
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest registered prefix of `prompt`, as the chain of matched
+    /// `(node, page)` pairs (only full chunks: `len · page_size ≤
+    /// prompt.len()`).  Bumps LRU stamps along the match and records
+    /// hit/miss position counts.
+    pub fn lookup(&mut self, prompt: &[u8]) -> Vec<(usize, PageId)> {
+        let stamp = self.tick();
+        let mut at = ROOT;
+        let mut chain = Vec::new();
+        let mut off = 0;
+        while off + self.page_size <= prompt.len() {
+            let want = &prompt[off..off + self.page_size];
+            let next = self.nodes[at]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].chunk == want);
+            match next {
+                Some(c) => {
+                    self.nodes[c].last_use = stamp;
+                    chain.push((c, self.nodes[c].page));
+                    at = c;
+                    off += self.page_size;
+                }
+                None => break,
+            }
+        }
+        self.hit_positions += off as u64;
+        self.miss_positions += (prompt.len() - off) as u64;
+        chain
+    }
+
+    /// Register `chunk` (exactly `page_size` tokens) under `parent` as
+    /// mapping to `page`, taking one pool reference on it.  If an identical
+    /// child already exists (two same-prefix requests prefilled in the same
+    /// step), the existing node is returned and no reference is taken.
+    /// Returns the node id to use as the next chunk's parent.
+    pub fn register(&mut self, pool: &mut KvPool, parent: usize, chunk: &[u8], page: PageId) -> usize {
+        assert_eq!(chunk.len(), self.page_size, "only full pages are shareable");
+        debug_assert!(self.nodes[parent].live);
+        let stamp = self.tick();
+        if let Some(c) = self.nodes[parent]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].chunk == chunk)
+        {
+            self.nodes[c].last_use = stamp;
+            return c;
+        }
+        pool.ref_page(page);
+        let node = Node {
+            chunk: chunk.to_vec(),
+            page,
+            parent,
+            children: Vec::new(),
+            last_use: stamp,
+            live: true,
+        };
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.nodes[parent].children.push(id);
+        self.entries += 1;
+        id
+    }
+
+    /// Drop the least-recently-used **leaf** entry, returning its page
+    /// reference to the pool (the page itself is freed only if no sequence
+    /// still aliases it).  Leaves only: an inner node is the lookup path to
+    /// its descendants.  `pinned` nodes are skipped — the batcher pins the
+    /// registration tail of each active still mid-prompt, because evicting
+    /// a tail would let its slot be recycled and a later registration would
+    /// chain chunks under the wrong parent.  Returns `true` when an entry
+    /// was evicted — the caller loops `evict_lru` + retry while the pool
+    /// stays exhausted.
+    pub fn evict_lru(&mut self, pool: &mut KvPool, pinned: &[usize]) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(id, n)| {
+                *id != ROOT && n.live && n.children.is_empty() && !pinned.contains(id)
+            })
+            .min_by_key(|(_, n)| n.last_use)
+            .map(|(id, _)| id);
+        let Some(id) = victim else {
+            return false;
+        };
+        let parent = self.nodes[id].parent;
+        self.nodes[parent].children.retain(|&c| c != id);
+        let page = self.nodes[id].page;
+        self.nodes[id].live = false;
+        self.nodes[id].chunk = Vec::new();
+        self.free.push(id);
+        self.entries -= 1;
+        pool.unref_page(page);
+        true
+    }
+
+    /// Drop every entry (server shutdown), releasing all held page refs.
+    pub fn clear(&mut self, pool: &mut KvPool) {
+        while self.evict_lru(pool, &[]) {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn pool(pages: usize, page_size: usize) -> KvPool {
+        let mut cfg = ModelConfig::builtin("llama-t").unwrap();
+        cfg.n_layers = 2;
+        KvPool::new(&cfg, pages, page_size)
+    }
+
+    /// Admit a sequence and fill `n` positions so pages exist to register.
+    fn fill_seq(pool: &mut KvPool, n: usize) -> usize {
+        let d = {
+            let mut cfg = ModelConfig::builtin("llama-t").unwrap();
+            cfg.n_layers = 2;
+            cfg.d_model
+        };
+        let s = pool.new_seq();
+        let row = vec![0.5f32; d];
+        for pos in 0..n {
+            pool.prepare(s, pos).unwrap();
+            for layer in 0..2 {
+                pool.push_row(s, layer, pos, &row, &row);
+            }
+            pool.set_len(s, pos + 1);
+        }
+        s
+    }
+
+    #[test]
+    fn serve_trie_lookup_matches_longest_registered_prefix() {
+        let mut pool = pool(8, 4);
+        let mut trie = PrefixTrie::new(4);
+        let s = fill_seq(&mut pool, 8);
+        let prompt: Vec<u8> = (0..12).collect();
+        let n0 = trie.register(&mut pool, ROOT, &prompt[0..4], pool.page_at(s, 0));
+        trie.register(&mut pool, n0, &prompt[4..8], pool.page_at(s, 1));
+        assert_eq!(trie.entries(), 2);
+        // Full two-chunk match; the 12th..-token tail is a miss.
+        let chain = trie.lookup(&prompt);
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0].1, pool.page_at(s, 0));
+        assert_eq!(chain[1].1, pool.page_at(s, 1));
+        assert_eq!(trie.hit_positions, 8);
+        assert_eq!(trie.miss_positions, 4);
+        // Diverging second chunk matches only the first.
+        let mut other = prompt.clone();
+        other[5] ^= 0xFF;
+        assert_eq!(trie.lookup(&other).len(), 1);
+        // A prompt shorter than one page can never match.
+        assert!(trie.lookup(&prompt[..3]).is_empty());
+    }
+
+    #[test]
+    fn serve_trie_register_is_idempotent_per_chunk() {
+        let mut pool = pool(8, 4);
+        let mut trie = PrefixTrie::new(4);
+        let s = fill_seq(&mut pool, 4);
+        let page = pool.page_at(s, 0);
+        let chunk: Vec<u8> = vec![7; 4];
+        let a = trie.register(&mut pool, ROOT, &chunk, page);
+        assert_eq!(pool.page_refs(page), 2, "seq + trie");
+        let b = trie.register(&mut pool, ROOT, &chunk, page);
+        assert_eq!(a, b, "duplicate registration returns the existing node");
+        assert_eq!(pool.page_refs(page), 2, "no double reference");
+        assert_eq!(trie.entries(), 1);
+    }
+
+    #[test]
+    fn serve_trie_eviction_is_lru_leaves_first() {
+        let mut pool = pool(8, 2);
+        let mut trie = PrefixTrie::new(2);
+        let s = fill_seq(&mut pool, 6);
+        let pages: Vec<PageId> = (0..3).map(|i| pool.page_at(s, i)).collect();
+        // Chain a→b plus sibling c; then touch a+b via lookup so c is LRU.
+        let a = trie.register(&mut pool, ROOT, &[0, 1], pages[0]);
+        let b = trie.register(&mut pool, a, &[2, 3], pages[1]);
+        trie.register(&mut pool, ROOT, &[9, 9], pages[2]);
+        trie.lookup(&[0, 1, 2, 3]);
+        assert!(trie.evict_lru(&mut pool, &[]));
+        assert_eq!(trie.entries(), 2);
+        assert_eq!(pool.page_refs(pages[2]), 1, "sibling c evicted first");
+        // A pinned leaf is skipped: with b pinned, nothing is evictable
+        // (a is an inner node).
+        assert!(!trie.evict_lru(&mut pool, &[b]));
+        // Next unpinned eviction takes the leaf b, not the inner node a.
+        assert!(trie.evict_lru(&mut pool, &[]));
+        assert_eq!(pool.page_refs(pages[1]), 1);
+        assert_eq!(pool.page_refs(pages[0]), 2, "inner node a survives as leaf-to-be");
+        assert!(trie.evict_lru(&mut pool, &[]));
+        assert!(!trie.evict_lru(&mut pool, &[]), "empty trie has nothing to evict");
+        // The trie's refs are gone; the sequence still owns its pages.
+        pool.release_seq(s);
+        assert_eq!(pool.free_pages(), 8);
+    }
+
+    #[test]
+    fn serve_trie_eviction_keeps_shared_pages_alive_for_sequences() {
+        let mut pool = pool(4, 2);
+        let mut trie = PrefixTrie::new(2);
+        let s = fill_seq(&mut pool, 2);
+        let page = pool.page_at(s, 0);
+        trie.register(&mut pool, ROOT, &[0, 1], page);
+        // A second request forks over the shared page via lookup.
+        let chain = trie.lookup(&[0, 1, 5, 6]);
+        let forked = pool.fork_seq(&[chain[0].1]);
+        assert_eq!(pool.page_refs(page), 3);
+        // Evicting the trie entry must not free the page under the fork.
+        trie.clear(&mut pool);
+        assert_eq!(pool.page_refs(page), 2);
+        assert_eq!(pool.len(forked), 2);
+        pool.release_seq(forked);
+        pool.release_seq(s);
+        assert_eq!(pool.free_pages(), 4);
+    }
+}

@@ -1,30 +1,53 @@
-//! The batched decode step: B active sequences, one token row each, every
-//! projection as ONE GEMM over the stacked rows.
+//! The batched decode step: B token rows (across sequences), one GEMM per
+//! projection over the stacked rows, K/V history read through paged views.
 //!
 //! This is where the kernel layer finally earns decode throughput: the
 //! sequential [`decode_step`](crate::model::generate::decode_step) runs
 //! each of the ~7 projections per layer as a 1-row GEMM (a matvec), so a
-//! batch of B sequences costs `B × layers × 7` matvecs.  Stacking the B
-//! rows turns that into `layers × 7` GEMMs of height B — same flops, far
-//! better operand reuse through [`crate::linalg::gemm`]'s packed panels.
+//! batch of B rows costs `B × layers × 7` matvecs.  Stacking the B rows
+//! turns that into `layers × 7` GEMMs of height B — same flops, far better
+//! operand reuse through [`crate::linalg::gemm`]'s packed panels.
+//!
+//! Two row shapes beyond plain one-token decode:
+//!
+//! * **Chunked prefill** — several consecutive-position rows of the SAME
+//!   sequence in one step.  Sound because each layer pushes every row's K/V
+//!   before the per-row attention loop runs, so a later row of the chunk
+//!   attends over its earlier rows' just-written history exactly as the
+//!   sequential path would, and the GEMMs are row-independent.
+//! * **Replay rows** ([`StepRow::write_kv`]` == false`) — re-feed an
+//!   already-cached position to recompute its logits without writing KV.
+//!   Used when prefix sharing covers a whole prompt: the KV rows exist
+//!   (written by the request that populated the shared pages), only the
+//!   last prompt position's logits are missing.  Bit-sound because the KV
+//!   row at position `p` is a deterministic function of token ids `0..=p`
+//!   through this exact code path — the stored bits equal what this row
+//!   would have written.
 //!
 //! **Bit-identity contract.**  Per request, the batched step reproduces the
-//! sequential step bit-for-bit at every batch size and worker count:
+//! sequential step bit-for-bit at every batch size, chunking, page size,
+//! and worker count:
 //!
 //! * the GEMM's per-element accumulation order is ascending-k within K
 //!   blocks regardless of the row count, row position, or worker count, so
 //!   row r of `[B, d] @ W` equals the 1-row product of that row alone;
 //! * everything that is *not* a GEMM (norms, RoPE, attention over the
-//!   sequence's own KV slot, activation nonlinearities) runs per row
+//!   sequence's own paged history, activation nonlinearities) runs per row
 //!   through the same crate-private helpers the sequential path calls
 //!   (`rmsnorm_row`, `rope_row`, `attend_row`, …);
+//! * paged history is presented to `attend_row` as a contiguous span: a
+//!   one-page span is borrowed in place, a multi-page span is gathered
+//!   page-by-page into a reused scratch buffer.  Either way the slice holds
+//!   the same bits in the same order as the sequential cache, and the
+//!   window bounds are rebased (`lo − base`, `t_now − base`) so the
+//!   float-op order inside `attend_row` is untouched;
 //! * compressed overrides ([`LinearOverride`]) route through the same
 //!   factor GEMMs, which batch the same way.
 //!
 //! The parity tests at the bottom pin logits bit-equality against
-//! `decode_step`, including staggered positions (mid-stream joins).
+//! `decode_step`, including staggered joins, multi-page chunks, and replay.
 
-use super::kv_pool::KvPool;
+use super::kv_pool::{KvPool, SeqId};
 use crate::linalg::gemm;
 use crate::model::config::{Family, ModelConfig};
 use crate::model::forward::{matmul_f32, LinearOverride};
@@ -44,33 +67,40 @@ fn norm_rows(h: &mut [f32], d: usize, w: &[f32], bias: Option<&[f32]>) {
     }
 }
 
-/// One active sequence's contribution to a decode step.
+/// One token row of a decode step.
 #[derive(Clone, Copy, Debug)]
 pub struct StepRow {
-    /// KV-pool slot owned by this sequence (distinct per row).
-    pub slot: usize,
+    /// Pool sequence this row belongs to.  Rows of the same sequence must
+    /// be adjacent in the batch with contiguously ascending positions
+    /// (a prefill chunk).
+    pub seq: SeqId,
     /// Token fed this step (prompt token while prefilling, last sampled
     /// token while decoding).
     pub token: u8,
     /// Position of `token` in the sequence (0-based).
     pub pos: usize,
     /// Will the caller read this row's logits?  `false` while prefilling
-    /// (all but the last prompt token): the row still updates its KV slot,
-    /// but the lm_head GEMM — the dominant per-step cost at real vocab
-    /// sizes — skips it and its logits row is returned zeroed.
+    /// (all but the last prompt token): the row still writes its K/V, but
+    /// the lm_head GEMM — the dominant per-step cost at real vocab sizes —
+    /// skips it and its logits row is returned zeroed.
     pub needs_logits: bool,
+    /// Write this row's K/V into the pool (`pos == pool.len(seq)` plus the
+    /// chunk offset)?  `false` replays an already-cached position
+    /// (`pos + 1 == pool.len(seq)`) to recover its logits after a full
+    /// prefix-share — a replay row stands alone for its sequence.
+    pub write_kv: bool,
 }
 
-/// One decode step over `rows.len()` sequences: feed each row's token at
-/// its own position, append K/V to each row's slot, and return the stacked
-/// logits `[rows.len(), vocab]` (row order = `rows` order; rows with
+/// One decode step over `rows`: feed each row's token at its own position,
+/// write K/V for `write_kv` rows, and return the stacked logits
+/// `[rows.len(), vocab]` (row order = `rows` order; rows with
 /// `needs_logits == false` are zeroed — their lm_head product is skipped).
 ///
 /// `workers` is the GEMM thread share for the stacked products
-/// (0 = all cores); results are bit-identical for every value.  Rows must
-/// reference **distinct** slots, and each slot's positions must advance
-/// contiguously (`pos == pool.len(slot)`), which the batcher guarantees
-/// (both are debug-asserted).
+/// (0 = all cores); results are bit-identical for every value.  The caller
+/// (the batcher) must have made every written position's page writable via
+/// [`KvPool::prepare`] — allocation policy (fault-in, CoW, eviction,
+/// preemption) lives there, not in the hot step.
 ///
 /// LOCKSTEP WARNING: this is the batched twin of the sequential
 /// [`decode_step`](crate::model::generate::decode_step) — the transformer
@@ -92,24 +122,49 @@ pub fn decode_step_batched(
         return Ok(Vec::new());
     }
     #[cfg(debug_assertions)]
-    for (r, row) in rows.iter().enumerate() {
-        debug_assert_eq!(
-            row.pos,
-            pool.len(row.slot),
-            "step row {r}: pos must equal the slot's committed length \
-             (positions advance contiguously per slot)"
-        );
-        for prev in &rows[..r] {
-            debug_assert_ne!(
-                prev.slot, row.slot,
-                "step rows must reference distinct KV slots"
+    {
+        let mut seen: Vec<SeqId> = Vec::new();
+        let mut r = 0;
+        while r < rows.len() {
+            let seq = rows[r].seq;
+            debug_assert!(
+                !seen.contains(&seq),
+                "rows of one sequence must be adjacent in the batch"
             );
+            seen.push(seq);
+            if !rows[r].write_kv {
+                debug_assert_eq!(
+                    rows[r].pos + 1,
+                    pool.len(seq),
+                    "replay row must re-feed the last committed position"
+                );
+                r += 1;
+                debug_assert!(
+                    r >= rows.len() || rows[r].seq != seq,
+                    "a replay row stands alone for its sequence"
+                );
+                continue;
+            }
+            let mut pos = pool.len(seq);
+            while r < rows.len() && rows[r].seq == seq {
+                debug_assert!(
+                    rows[r].write_kv,
+                    "write and replay rows cannot mix within one sequence"
+                );
+                debug_assert_eq!(
+                    rows[r].pos, pos,
+                    "chunk positions advance contiguously from the committed length"
+                );
+                pos += 1;
+                r += 1;
+            }
         }
     }
     let d = cfg.d_model;
     let heads = cfg.n_heads;
     let hd = cfg.head_dim();
     let scale = 1.0 / (hd as f32).sqrt();
+    let page = pool.page_size();
     let _gemm_threads = gemm::scoped_workers(if workers == 0 {
         crate::util::threads::default_workers()
     } else {
@@ -137,6 +192,9 @@ pub fn decode_step_batched(
         }
         Ok(matmul_f32(h, b, in_dim, weights.get(name)?))
     };
+    // Scratch for multi-page history gathers, reused across rows and layers.
+    let mut k_buf: Vec<f32> = Vec::new();
+    let mut v_buf: Vec<f32> = Vec::new();
     for i in 0..cfg.n_layers {
         let mut h = x.clone();
         let nw = &weights.get(&format!("blocks.{i}.attn_norm.w"))?.data;
@@ -148,30 +206,41 @@ pub fn decode_step_batched(
         let mut q = lin(&format!("blocks.{i}.attn.wq"), &h, d)?;
         let mut k = lin(&format!("blocks.{i}.attn.wk"), &h, d)?;
         let v = lin(&format!("blocks.{i}.attn.wv"), &h, d)?;
+        // Push EVERY write row's K/V before any attention: a later chunk
+        // row must see its predecessors' history (replay rows skip the
+        // write — their position's bits are already in a shared page).
         for (r, row) in rows.iter().enumerate() {
             if cfg.family.uses_rope() {
                 rope_row(&mut q[r * d..(r + 1) * d], heads, hd, row.pos);
-                rope_row(&mut k[r * d..(r + 1) * d], heads, hd, row.pos);
             }
-            pool.push_row(row.slot, i, row.pos, &k[r * d..(r + 1) * d], &v[r * d..(r + 1) * d]);
+            if row.write_kv {
+                if cfg.family.uses_rope() {
+                    rope_row(&mut k[r * d..(r + 1) * d], heads, hd, row.pos);
+                }
+                pool.push_row(row.seq, i, row.pos, &k[r * d..(r + 1) * d], &v[r * d..(r + 1) * d]);
+            }
         }
-        // Attention stays per row: each sequence attends over its own slot
-        // (identical float-op order to the sequential path via attend_row).
+        // Attention stays per row: each sequence attends over its own paged
+        // history (identical float-op order to the sequential path via
+        // attend_row; `lo`/`t_now` are rebased onto the presented span).
         let mut att = vec![0.0f32; b * d];
         for (r, row) in rows.iter().enumerate() {
             let t_now = row.pos + 1;
             let lo = if cfg.window > 0 { t_now.saturating_sub(cfg.window) } else { 0 };
-            attend_row(
-                &q[r * d..(r + 1) * d],
-                pool.k_hist(row.slot, i, t_now),
-                pool.v_hist(row.slot, i, t_now),
-                heads,
-                hd,
-                scale,
-                lo,
-                t_now,
-                &mut att[r * d..(r + 1) * d],
-            );
+            let base = (lo / page) * page;
+            let q_row = &q[r * d..(r + 1) * d];
+            let att_row = &mut att[r * d..(r + 1) * d];
+            match pool.hist_slices(row.seq, i, base, t_now) {
+                Some((kh, vh)) => attend_row(
+                    q_row, kh, vh, heads, hd, scale, lo - base, t_now - base, att_row,
+                ),
+                None => {
+                    pool.gather_hist(row.seq, i, base, t_now, &mut k_buf, &mut v_buf);
+                    attend_row(
+                        q_row, &k_buf, &v_buf, heads, hd, scale, lo - base, t_now - base, att_row,
+                    );
+                }
+            }
         }
         let o = lin(&format!("blocks.{i}.attn.wo"), &att, d)?;
         for (xv, ov) in x.iter_mut().zip(&o) {
@@ -209,8 +278,17 @@ pub fn decode_step_batched(
         _ => None,
     };
     norm_rows(&mut x, d, nw, nb);
-    for row in rows {
-        pool.set_len(row.slot, row.pos + 1);
+    // Commit once per sequence with the chunk's FINAL length — an
+    // intermediate set_len would truncate (and free!) the later chunk
+    // rows' already-written pages.
+    for (idx, row) in rows.iter().enumerate() {
+        if !row.write_kv {
+            continue;
+        }
+        let last_of_seq = rows.get(idx + 1).map_or(true, |n| n.seq != row.seq);
+        if last_of_seq {
+            pool.set_len(row.seq, row.pos + 1);
+        }
     }
     // lm_head only over the rows whose logits the caller reads — prefill
     // rows' logits are discarded, and at a real vocab the lm_head GEMM
@@ -254,42 +332,54 @@ mod tests {
         }
     }
 
+    /// Fault in the pages every write row of `rows` needs (the batcher's
+    /// job in production).
+    fn prep(pool: &mut KvPool, rows: &[StepRow]) {
+        for row in rows {
+            if row.write_kv {
+                pool.prepare(row.seq, row.pos).expect("test pool sized to fit");
+            }
+        }
+    }
+
+    fn write_row(seq: usize, token: u8, pos: usize, needs_logits: bool) -> StepRow {
+        StepRow { seq, token, pos, needs_logits, write_kv: true }
+    }
+
     /// Lockstep batched decode vs B independent sequential decoders must be
-    /// bit-identical per row, for every family and worker count.
+    /// bit-identical per row, for every family, page size, and worker count.
     #[test]
     fn serve_batched_step_bit_identical_lockstep() {
         for name in ["llama-t", "opt-t", "mistral-t"] {
             let (cfg, w) = tiny(name);
-            for &workers in &[1usize, 4] {
-                let b = 3usize;
-                let mut pool = KvPool::new(&cfg, b, 10);
-                let slots: Vec<usize> = (0..b).map(|_| pool.acquire().unwrap()).collect();
-                let mut caches: Vec<KvCache> = (0..b).map(|_| KvCache::new(&cfg)).collect();
-                let seqs: Vec<Vec<u8>> = (0..b)
-                    .map(|s| (0..8).map(|t| ((s * 91 + t * 37) % 251) as u8).collect())
-                    .collect();
-                for pos in 0..8 {
-                    let rows: Vec<StepRow> = (0..b)
-                        .map(|s| StepRow {
-                            slot: slots[s],
-                            token: seqs[s][pos],
-                            pos,
-                            needs_logits: true,
-                        })
+            for &page_size in &[1usize, 4] {
+                for &workers in &[1usize, 4] {
+                    let b = 3usize;
+                    let mut pool = KvPool::new(&cfg, 8usize.div_ceil(page_size) * b, page_size);
+                    let seqs_id: Vec<usize> = (0..b).map(|_| pool.new_seq()).collect();
+                    let mut caches: Vec<KvCache> = (0..b).map(|_| KvCache::new(&cfg)).collect();
+                    let seqs: Vec<Vec<u8>> = (0..b)
+                        .map(|s| (0..8).map(|t| ((s * 91 + t * 37) % 251) as u8).collect())
                         .collect();
-                    let batched =
-                        decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, workers)
+                    for pos in 0..8 {
+                        let rows: Vec<StepRow> = (0..b)
+                            .map(|s| write_row(seqs_id[s], seqs[s][pos], pos, true))
+                            .collect();
+                        prep(&mut pool, &rows);
+                        let batched =
+                            decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, workers)
+                                .unwrap();
+                        for s in 0..b {
+                            let seq = decode_step(
+                                &cfg, &w, &NoOverride, &mut caches[s], seqs[s][pos], pos,
+                            )
                             .unwrap();
-                    for s in 0..b {
-                        let seq = decode_step(
-                            &cfg, &w, &NoOverride, &mut caches[s], seqs[s][pos], pos,
-                        )
-                        .unwrap();
-                        assert_bits_eq(
-                            &batched[s * cfg.vocab..(s + 1) * cfg.vocab],
-                            &seq,
-                            &format!("{name} w={workers} seq {s} pos {pos}"),
-                        );
+                            assert_bits_eq(
+                                &batched[s * cfg.vocab..(s + 1) * cfg.vocab],
+                                &seq,
+                                &format!("{name} ps={page_size} w={workers} seq {s} pos {pos}"),
+                            );
+                        }
                     }
                 }
             }
@@ -301,29 +391,30 @@ mod tests {
     #[test]
     fn serve_batched_step_bit_identical_staggered_join() {
         let (cfg, w) = tiny("llama-t");
-        let mut pool = KvPool::new(&cfg, 2, 12);
-        let sa = pool.acquire().unwrap();
+        let mut pool = KvPool::new(&cfg, 8, 4);
+        let sa = pool.new_seq();
         let seq_a: Vec<u8> = (0..9).map(|t| (t * 53 % 256) as u8).collect();
         let seq_b: Vec<u8> = (0..6).map(|t| (t * 29 + 7) as u8).collect();
         let mut cache_a = KvCache::new(&cfg);
         let mut cache_b = KvCache::new(&cfg);
         // A runs alone for 3 steps.
         for pos in 0..3 {
-            let rows =
-                [StepRow { slot: sa, token: seq_a[pos], pos, needs_logits: true }];
+            let rows = [write_row(sa, seq_a[pos], pos, true)];
+            prep(&mut pool, &rows);
             let batched =
                 decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 1).unwrap();
             let seq = decode_step(&cfg, &w, &NoOverride, &mut cache_a, seq_a[pos], pos).unwrap();
             assert_bits_eq(&batched, &seq, &format!("solo A pos {pos}"));
         }
         // B joins at step 3: batch rows now at staggered positions.
-        let sb = pool.acquire().unwrap();
+        let sb = pool.new_seq();
         for t in 0..6 {
             let pos_a = 3 + t;
             let rows = [
-                StepRow { slot: sa, token: seq_a[pos_a], pos: pos_a, needs_logits: true },
-                StepRow { slot: sb, token: seq_b[t], pos: t, needs_logits: true },
+                write_row(sa, seq_a[pos_a], pos_a, true),
+                write_row(sb, seq_b[t], t, true),
             ];
+            prep(&mut pool, &rows);
             let batched =
                 decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 4).unwrap();
             let ref_a =
@@ -337,16 +428,143 @@ mod tests {
         assert_eq!(pool.len(sb), 6);
     }
 
+    /// A whole prompt fed as ONE multi-row chunk (crossing page boundaries)
+    /// must produce the same last-position logits as position-by-position
+    /// sequential decode — for every family, including the sliding-window
+    /// one (mistral-t, window 4 < prompt length).
+    #[test]
+    fn serve_batched_step_chunked_prefill_bit_identical() {
+        for name in ["llama-t", "opt-t", "mistral-t"] {
+            let (cfg, w) = tiny(name);
+            let prompt: Vec<u8> = (0..7).map(|t| (t * 41 + 3) as u8).collect();
+            let mut reference = Vec::new();
+            let mut cache = KvCache::new(&cfg);
+            for (pos, &t) in prompt.iter().enumerate() {
+                reference = decode_step(&cfg, &w, &NoOverride, &mut cache, t, pos).unwrap();
+            }
+            for &page_size in &[1usize, 2, 16] {
+                let mut pool = KvPool::new(&cfg, prompt.len().div_ceil(page_size), page_size);
+                let s = pool.new_seq();
+                let rows: Vec<StepRow> = prompt
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, &t)| write_row(s, t, pos, pos + 1 == prompt.len()))
+                    .collect();
+                prep(&mut pool, &rows);
+                let logits =
+                    decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 2).unwrap();
+                let v = cfg.vocab;
+                assert_bits_eq(
+                    &logits[(prompt.len() - 1) * v..],
+                    &reference,
+                    &format!("{name} ps={page_size} one-chunk prefill"),
+                );
+                assert_eq!(pool.len(s), prompt.len());
+            }
+        }
+    }
+
+    /// Splitting the same prompt into different chunk sizes must not change
+    /// a single bit of the final logits.
+    #[test]
+    fn serve_batched_step_chunk_split_invariant() {
+        let (cfg, w) = tiny("llama-t");
+        let prompt: Vec<u8> = (0..9).map(|t| (t * 67 + 11) as u8).collect();
+        let run = |chunk: usize| -> Vec<f32> {
+            let mut pool = KvPool::new(&cfg, 5, 2);
+            let s = pool.new_seq();
+            let mut logits = Vec::new();
+            let mut pos = 0;
+            while pos < prompt.len() {
+                let end = (pos + chunk).min(prompt.len());
+                let rows: Vec<StepRow> = (pos..end)
+                    .map(|p| write_row(s, prompt[p], p, p + 1 == prompt.len()))
+                    .collect();
+                prep(&mut pool, &rows);
+                logits =
+                    decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 1).unwrap();
+                pos = end;
+            }
+            let v = cfg.vocab;
+            logits[logits.len() - v..].to_vec()
+        };
+        let whole = run(prompt.len());
+        for &chunk in &[1usize, 2, 4] {
+            assert_bits_eq(&run(chunk), &whole, &format!("chunk={chunk}"));
+        }
+    }
+
+    /// A replay row (write_kv = false) over fully-cached history recovers
+    /// the same logits as the write-path step that cached it, and commits
+    /// nothing.
+    #[test]
+    fn serve_batched_step_replay_row_bit_identical() {
+        let (cfg, w) = tiny("llama-t");
+        let prompt: Vec<u8> = (0..6).map(|t| (t * 19 + 5) as u8).collect();
+        let mut pool = KvPool::new(&cfg, 3, 2);
+        let s = pool.new_seq();
+        let rows: Vec<StepRow> = prompt
+            .iter()
+            .enumerate()
+            .map(|(pos, &t)| write_row(s, t, pos, pos + 1 == prompt.len()))
+            .collect();
+        prep(&mut pool, &rows);
+        let write_logits =
+            decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 1).unwrap();
+        let v = cfg.vocab;
+        let want = &write_logits[(prompt.len() - 1) * v..];
+        let free_before = pool.free_pages();
+        // Replay the last prompt position: no prepare, no KV write.
+        let replay = [StepRow {
+            seq: s,
+            token: prompt[prompt.len() - 1],
+            pos: prompt.len() - 1,
+            needs_logits: true,
+            write_kv: false,
+        }];
+        let got = decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &replay, 1).unwrap();
+        assert_bits_eq(&got, want, "replayed logits");
+        assert_eq!(pool.len(s), prompt.len(), "replay commits nothing");
+        assert_eq!(pool.free_pages(), free_before, "replay allocates nothing");
+    }
+
+    /// Replay over pages written by ANOTHER sequence (the prefix-sharing
+    /// fork) reproduces the original owner's logits bit-for-bit.
+    #[test]
+    fn serve_batched_step_replay_over_forked_pages() {
+        let (cfg, w) = tiny("llama-t");
+        let prompt: Vec<u8> = (0..4).map(|t| (t * 31 + 2) as u8).collect();
+        let mut pool = KvPool::new(&cfg, 4, 2);
+        let a = pool.new_seq();
+        let rows: Vec<StepRow> = prompt
+            .iter()
+            .enumerate()
+            .map(|(pos, &t)| write_row(a, t, pos, pos + 1 == prompt.len()))
+            .collect();
+        prep(&mut pool, &rows);
+        let a_logits = decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 1).unwrap();
+        let v = cfg.vocab;
+        // B aliases both of A's (full) pages — its whole prompt is cached.
+        let b = pool.fork_seq(&[pool.page_at(a, 0), pool.page_at(a, 1)]);
+        let replay = [StepRow {
+            seq: b,
+            token: prompt[3],
+            pos: 3,
+            needs_logits: true,
+            write_kv: false,
+        }];
+        let got = decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &replay, 1).unwrap();
+        assert_bits_eq(&got, &a_logits[3 * v..], "forked replay logits");
+    }
+
     #[test]
     fn serve_batched_step_skips_prefill_logits() {
         let (cfg, w) = tiny("llama-t");
         let mut pool = KvPool::new(&cfg, 2, 4);
-        let s0 = pool.acquire().unwrap();
-        let s1 = pool.acquire().unwrap();
-        let rows = [
-            StepRow { slot: s0, token: 9, pos: 0, needs_logits: true },
-            StepRow { slot: s1, token: 17, pos: 0, needs_logits: false },
-        ];
+        let s0 = pool.new_seq();
+        let s1 = pool.new_seq();
+        let rows = [write_row(s0, 9, 0, true), write_row(s1, 17, 0, false)];
+        prep(&mut pool, &rows);
         let both = decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 1).unwrap();
         let v = cfg.vocab;
         // The prefill row's logits come back zeroed, the other row stays

@@ -5,8 +5,8 @@
 //! produced it finishes, so clients see tokens with per-step latency
 //! instead of per-request latency.  The channel doubles as the
 //! cancellation signal: when the client drops its receiver, the next
-//! *token* send fails and the batcher retires the sequence and recycles
-//! its KV slot.  (mpsc reports disconnection only on send and prefill
+//! *token* send fails and the batcher retires the sequence and returns
+//! its KV pages to the pool.  (mpsc reports disconnection only on send and prefill
 //! steps send nothing, so a request cancelled mid-prompt is detected at
 //! its first generated token — prefill of a dead request still runs,
 //! bounded by the prompt length.)
@@ -21,8 +21,8 @@ pub enum FinishReason {
     /// The client dropped its stream receiver mid-generation.
     Cancelled,
     /// Refused at admission (empty prompt, `max_new == 0`, or the
-    /// `prompt + max_new - 1` KV rows the request needs exceeding the
-    /// slot capacity).
+    /// `⌈(prompt + max_new - 1) / page_size⌉` KV pages the request could
+    /// need exceeding the entire pool).
     Rejected,
 }
 
