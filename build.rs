@@ -1,0 +1,36 @@
+// Build probe: gate the AVX-512 microkernels on toolchain support.
+//
+// The `std::arch` AVX-512 intrinsics stabilized in Rust 1.89; older
+// toolchains must still build this crate (the runtime dispatcher then tops
+// out at AVX2).  We probe `rustc --version` and emit `nsvd_avx512` only
+// when the compiler is new enough — a pure version sniff, no network, no
+// extra dependencies.
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var_os("RUSTC")?;
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-08-01)" → 89.  Nightly/beta suffixes parse
+    // the same way; anything unparseable keeps the AVX-512 path off.
+    let semver = text.split_whitespace().nth(1)?;
+    let mut parts = semver.split(['.', '-']);
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    if major > 1 {
+        return Some(u32::MAX);
+    }
+    if major == 1 {
+        return Some(minor);
+    }
+    None
+}
+
+fn main() {
+    println!("cargo:rustc-check-cfg=cfg(nsvd_avx512)");
+    if rustc_minor().is_some_and(|m| m >= 89) {
+        println!("cargo:rustc-cfg=nsvd_avx512");
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}

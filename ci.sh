@@ -54,6 +54,17 @@
 #                                     worst-case slot reservation fits in
 #                                     the same memory (fault-in + prefix
 #                                     sharing + preemption)
+#   4g. int8 quantization smoke     — the quantization tests run by name
+#                                     (RNE round-trip bound, byte
+#                                     accounting, quantized-apply parity)
+#                                     plus perf_linalg's `int8` section in
+#                                     --quick mode: the tiled/SIMD i8×i8→i32
+#                                     kernel must be bit-identical to the
+#                                     naive i8 oracle at workers {1,4},
+#                                     dispatched AND forced-scalar.  The
+#                                     bench prints the detected CPU features
+#                                     (dispatch tier + raw flags) so every
+#                                     CI log records which microkernel ran
 #   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
@@ -106,6 +117,10 @@ cargo bench --bench perf_serve -- parity --quick
 
 step "paged-pool memory smoke (perf_serve paged --quick)"
 cargo bench --bench perf_serve -- paged --quick
+
+step "int8 quantization smoke (quant tests + perf_linalg int8 --quick)"
+cargo test -q quant
+cargo bench --bench perf_linalg -- int8 --quick
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -10,7 +10,10 @@
 //! pages from cache.  The run compares dense weights against an
 //! NSVD-shaped low-rank override at each client count, printing decode
 //! tokens/s, the p95 end-to-end latency, batch fill, and the prefix hit
-//! rate — the numbers a serving deployment is sized by.
+//! rate — the numbers a serving deployment is sized by.  A third variant
+//! runs the same low-rank factors quantized to per-group int8
+//! (`--factor-dtype int8` in `serve-gen`), decoding through the integer
+//! GEMM microkernel with its dequant-fused epilogue.
 //!
 //! Artifact-free on purpose (random weights, synthetic low-rank factors):
 //! the point is the serving system's scaling, not model quality.  Use
@@ -18,7 +21,7 @@
 //!
 //! Run: `cargo run --release --example serving_throughput`
 
-use nsvd::bench::{drive_concurrent, synthetic_nsvd};
+use nsvd::bench::{drive_concurrent, synthetic_nsvd, synthetic_nsvd_int8};
 use nsvd::coordinator::metrics::GenServerMetrics;
 use nsvd::model::config::ModelConfig;
 use nsvd::model::forward::{random_weights, LinearOverride, NoOverride};
@@ -76,6 +79,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = ModelConfig::builtin("llama-t")?;
     let weights = random_weights(&cfg, 1);
     let cm = synthetic_nsvd(&cfg, 0.30, 0.95, 2);
+    let cm_q = synthetic_nsvd_int8(&cfg, 0.30, 0.95, 2);
     let prompt: Vec<u8> = b"the history of the ".to_vec();
     let (per_client, max_new) = (4usize, 32usize);
 
@@ -84,14 +88,17 @@ fn main() -> anyhow::Result<()> {
          paged KV (smaller than the old worst-case reservation), shared prompt"
     );
     println!(
-        "\n{:>8} | {:>12} {:>9} {:>6} | {:>12} {:>9} {:>6} | {:>5} {:>5}",
-        "clients", "dense tok/s", "p95 ms", "fill", "nsvd tok/s", "p95 ms", "fill", "hit", "occ"
+        "\n{:>8} | {:>12} {:>9} {:>6} | {:>12} {:>9} {:>6} | {:>12} {:>9} {:>6} | {:>5} {:>5}",
+        "clients", "dense tok/s", "p95 ms", "fill", "nsvd tok/s", "p95 ms", "fill",
+        "int8 tok/s", "p95 ms", "fill", "hit", "occ"
     );
     for clients in [1usize, 2, 4, 8] {
         let dense = drive(&cfg, &weights, &NoOverride, clients, per_client, &prompt, max_new);
         let nsvd = drive(&cfg, &weights, &cm, clients, per_client, &prompt, max_new);
+        let int8 = drive(&cfg, &weights, &cm_q, clients, per_client, &prompt, max_new);
         println!(
-            "{:>8} | {:>12.1} {:>9.1} {:>6.2} | {:>12.1} {:>9.1} {:>6.2} | {:>5.2} {:>5.2}",
+            "{:>8} | {:>12.1} {:>9.1} {:>6.2} | {:>12.1} {:>9.1} {:>6.2} | \
+             {:>12.1} {:>9.1} {:>6.2} | {:>5.2} {:>5.2}",
             clients,
             dense.tokens_per_s(),
             dense.latency().p95 * 1e3,
@@ -99,6 +106,9 @@ fn main() -> anyhow::Result<()> {
             nsvd.tokens_per_s(),
             nsvd.latency().p95 * 1e3,
             nsvd.mean_batch_fill(),
+            int8.tokens_per_s(),
+            int8.latency().p95 * 1e3,
+            int8.mean_batch_fill(),
             nsvd.prefix_hit_rate(),
             nsvd.mean_page_occupancy(),
         );

@@ -6,8 +6,11 @@
 //! summarized into the top-level `BENCH_gemm.json`), plus the level-3
 //! factorization substrate: packed SYRK vs the TN Gram, blocked compact-WY
 //! QR vs the retired unblocked path, and tournament vs cyclic Jacobi.
-//! `ci.sh` runs the `gemm`, `syrk`, and `qr_parity` benches in `--quick`
-//! mode as bit/tolerance parity smokes.
+//! Also: the int8 quantized GEMM (bit-parity vs the naive i8 oracle, then
+//! GFLOP/s vs the f32 kernel at equal shapes).  `ci.sh` runs the `gemm`,
+//! `int8`, `syrk`, and `qr_parity` benches in `--quick` mode as
+//! bit/tolerance parity smokes; every run prints the detected CPU features
+//! so logs record which microkernel tier (scalar/AVX2/AVX-512/NEON) ran.
 
 use nsvd::bench::Suite;
 use nsvd::linalg::chol::cholesky_psd;
@@ -17,6 +20,7 @@ use nsvd::linalg::id::interpolative;
 use nsvd::linalg::jacobi::JacobiOrdering;
 use nsvd::linalg::matrix::Matrix;
 use nsvd::linalg::qr::{qr_pivoted, qr_pivoted_unblocked, qr_thin, qr_thin_unblocked};
+use nsvd::linalg::quant;
 use nsvd::linalg::rsvd::{decaying_matrix as decaying, svd_for_rank, SvdPolicy};
 use nsvd::linalg::svd::{svd_thin, svd_thin_ordered};
 use nsvd::util::rng::Rng;
@@ -25,6 +29,9 @@ use nsvd::util::timer::Timer;
 fn main() {
     let mut suite = Suite::from_args("perf_linalg");
     let mut rng = Rng::new(1);
+    // Record which microkernel tier this machine dispatches to — the int8
+    // and f32 SIMD numbers below are meaningless without it in the log.
+    println!("cpu: {}", gemm::cpu_features());
 
     // ---- Unified tiled+packed GEMM kernel vs the retired naive loop ----
     // Parity smoke runs first (ci.sh invokes `-- gemm --quick`, so a kernel
@@ -85,6 +92,69 @@ fn main() {
             std::hint::black_box(c);
         });
     }
+    // ---- Int8 quantized GEMM: parity smoke + GFLOP/s vs the f32 kernel ----
+    // Parity first (ci.sh runs `-- int8 --quick`): the tiled/SIMD int8
+    // kernel must be BIT-identical to the naive `gemm_i8_ref` oracle at
+    // workers {1, 4}, under both the dispatched ISA and a forced-scalar
+    // run, so a SIMD regression can never hide behind the dispatcher.
+    let int8_sizes: &[usize] = if suite.quick() { &[128] } else { &[128, 256, 512] };
+    for &n in int8_sizes {
+        let (m, k) = (n, n);
+        let group = quant::DEFAULT_GROUP;
+        let xf: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let wf: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let (aq, a_scales) = quant::quantize_row_groups(&xf, m, k, group);
+        let wq = quant::quantize_columns(&wf, k, n, group);
+        if suite.enabled(&format!("gemm_int8_parity_{n}")) {
+            let mut want = vec![0.0f32; m * n];
+            gemm::gemm_i8_ref(m, k, n, &aq, &a_scales, &wq.data, &wq.scales, group, &mut want);
+            for forced_scalar in [false, true] {
+                let _g = forced_scalar.then(|| gemm::scoped_isa(gemm::Isa::Scalar));
+                for workers in [1usize, 4] {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm::gemm_i8_nn(
+                        m, k, n, &aq, &a_scales, &wq.data, &wq.scales, group, &mut got, workers,
+                    );
+                    assert_eq!(
+                        got, want,
+                        "int8 parity @{n} w={workers} forced_scalar={forced_scalar}"
+                    );
+                }
+            }
+            println!(
+                "gemm_int8_parity_{n}: OK (bit-identical to ref, workers 1 and 4, \
+                 dispatched and forced-scalar)"
+            );
+        }
+        let flops = 2.0 * (n as f64).powi(3);
+        suite.bench_throughput(&format!("gemm_int8_{n}"), 5, flops, || {
+            let mut c = vec![0.0f32; m * n];
+            gemm::gemm_i8_nn(
+                m, k, n, &aq, &a_scales, &wq.data, &wq.scales, group, &mut c, 1,
+            );
+            std::hint::black_box(c);
+        });
+        if let (Some(f32_s), Some(i8_s)) = (
+            suite.mean_of(&format!("gemm_tiled_f32_{n}")),
+            suite.mean_of(&format!("gemm_int8_{n}")),
+        ) {
+            suite.record_metric(
+                &format!("gemm_int8_{n}"),
+                "speedup_vs_f32",
+                f32_s / i8_s.max(1e-12),
+            );
+        }
+        for workers in [2usize, 4] {
+            suite.bench_throughput(&format!("gemm_int8_{n}_w{workers}"), 5, flops, || {
+                let mut c = vec![0.0f32; m * n];
+                gemm::gemm_i8_nn(
+                    m, k, n, &aq, &a_scales, &wq.data, &wq.scales, group, &mut c, workers,
+                );
+                std::hint::black_box(c);
+            });
+        }
+    }
+
     // ---- Packed SYRK vs the TN Gram path (half the flops + threads) ----
     // Parity smoke first (ci.sh runs `-- syrk --quick`): the SYRK upper
     // triangle must be BIT-identical to gemm_tn(A, A) at workers {1, 4}.

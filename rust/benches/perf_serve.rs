@@ -1,6 +1,8 @@
 //! Perf: continuous-batching generation server — decode tokens/s vs batch
-//! size for dense vs NSVD-shaped low-rank overrides, the
-//! batched-vs-sequential parity smoke, and the paged-vs-contiguous
+//! size for dense vs NSVD-shaped low-rank overrides (f32 AND per-group
+//! int8 factors riding the integer GEMM), the batched-vs-sequential parity
+//! smoke (which pins the batched int8 decode against the sequential int8
+//! `generate` reference, bit-for-bit), and the paged-vs-contiguous
 //! memory-efficiency comparison.
 //!
 //! Artifact-free (random weights, synthetic factors): the subject is the
@@ -20,7 +22,9 @@
 //!   cargo bench --bench perf_serve -- parity --quick   # ci.sh smoke
 //!   cargo bench --bench perf_serve -- paged --quick    # ci.sh gate 4f
 
-use nsvd::bench::{drive_concurrent, drive_preloaded, synthetic_nsvd, tiny_model, Suite};
+use nsvd::bench::{
+    drive_concurrent, drive_preloaded, synthetic_nsvd, synthetic_nsvd_int8, tiny_model, Suite,
+};
 use nsvd::model::config::ModelConfig;
 use nsvd::model::forward::{random_weights, LinearOverride, NoOverride};
 use nsvd::model::generate::{generate, SampleConfig};
@@ -78,8 +82,12 @@ fn main() {
     if suite.enabled("serve_parity") {
         let (cfg, weights) = tiny_model("llama-t", 3);
         let cm = synthetic_nsvd(&cfg, 0.30, 0.95, 4);
+        // Same factors quantized to int8: the sequential `generate` run
+        // below IS the pinned single-request int8 reference every batched
+        // (b, workers) combination must reproduce bit-for-bit.
+        let cm_q = synthetic_nsvd_int8(&cfg, 0.30, 0.95, 4);
         suite.bench("serve_parity", 1, || {
-            for overrides in [&NoOverride as &dyn LinearOverride, &cm] {
+            for overrides in [&NoOverride as &dyn LinearOverride, &cm, &cm_q] {
                 for &b in &[1usize, 3, 8] {
                     for &workers in &[1usize, 4] {
                         let (outs, _) =
@@ -110,15 +118,18 @@ fn main() {
     let cfg = ModelConfig::builtin("llama-t").unwrap();
     let weights = random_weights(&cfg, 1);
     let cm = synthetic_nsvd(&cfg, 0.30, 0.95, 2);
+    let cm_q = synthetic_nsvd_int8(&cfg, 0.30, 0.95, 2);
     let max_new = if quick { 8 } else { 48 };
     // prompt_len 1: the single prompt token's step already samples, so
     // EVERY timed step generates one token per active row — tokens/s here
     // is pure decode throughput, not diluted by prefill steps.  (The
     // parity smoke above uses longer prompts to exercise prefill.)
     let prompt_len = 1;
-    for (variant, overrides) in
-        [("dense", &NoOverride as &dyn LinearOverride), ("nsvd", &cm)]
-    {
+    for (variant, overrides) in [
+        ("dense", &NoOverride as &dyn LinearOverride),
+        ("nsvd", &cm),
+        ("nsvd_int8", &cm_q),
+    ] {
         for b in [1usize, 2, 4, 8] {
             let name = format!("serve_decode_b{b}_{variant}");
             if !suite.enabled(&name) {

@@ -74,6 +74,19 @@ pub fn synthetic_nsvd(
     cm
 }
 
+/// [`synthetic_nsvd`] with the factors quantized to per-group int8
+/// ([`crate::linalg::quant::DEFAULT_GROUP`]): the model the int8 serving
+/// benches and the serve parity tests decode through, so the `--factor-dtype
+/// int8` path is exercised without artifacts.
+pub fn synthetic_nsvd_int8(
+    cfg: &crate::model::ModelConfig,
+    ratio: f64,
+    alpha: f64,
+    seed: u64,
+) -> crate::compress::CompressedModel {
+    synthetic_nsvd(cfg, ratio, alpha, seed).quantize(crate::linalg::quant::DEFAULT_GROUP)
+}
+
 /// A 2-layer cut of a builtin model family with `random_weights` — the
 /// fast fixture behind the serve parity tests (`serve::test_util`) and
 /// `perf_serve`'s parity smoke, kept in one place so the two suites can

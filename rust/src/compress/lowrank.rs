@@ -13,11 +13,60 @@
 //! this is exactly Eq. 6.  `pad_to` zero-extends the factors to the fixed
 //! executable ranks — the zero block contributes nothing to the product,
 //! which test `padding_is_semantically_invisible` pins.
+//!
+//! **Factor dtype.** Factors are produced in f32 and may be re-encoded to
+//! per-group symmetric int8 ([`CompressedLayer::quantize`]): codes + f32
+//! scales per `(k-group, column)` in a [`QuantMatrix`] each, ~0.26× the
+//! f32 bytes at realistic shapes (pinned below at ≤ 0.27×).  A quantized
+//! layer applies through the integer kernel ([`quant::matmul_quant`] →
+//! `gemm_i8_nn`), which is bit-identical at every worker count and
+//! per-row independent — so batched serve decode over int8 factors equals
+//! the single-request reference bit-for-bit, same as the f32 contract.
 
 use crate::linalg::matrix::Matrix;
+use crate::linalg::quant::{self, QuantMatrix};
 use crate::model::forward::LinearOverride;
 use crate::model::weights::Tensor;
 use std::collections::BTreeMap;
+
+/// Storage dtype for compressed factors — the `--factor-dtype` knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FactorDtype {
+    /// Plain f32 factors (the default; bit-exact apply).
+    #[default]
+    F32,
+    /// Per-group symmetric int8 codes + f32 scales (native path only).
+    Int8,
+}
+
+impl FactorDtype {
+    /// Parse a CLI value (`f32` | `int8`).
+    pub fn parse(s: &str) -> crate::Result<FactorDtype> {
+        match s {
+            "f32" => Ok(FactorDtype::F32),
+            "int8" => Ok(FactorDtype::Int8),
+            other => anyhow::bail!("unknown factor dtype '{other}' (expected f32 | int8)"),
+        }
+    }
+
+    /// Lowercase label for tables and bench rows.
+    pub fn label(self) -> &'static str {
+        match self {
+            FactorDtype::F32 => "f32",
+            FactorDtype::Int8 => "int8",
+        }
+    }
+}
+
+/// Int8 encodings of the four factors (present iff the layer was
+/// quantized; the f32 vectors are dropped to realize the byte saving).
+#[derive(Clone, Debug)]
+pub struct QuantFactors {
+    pub p1: QuantMatrix, // [n_in, k1]
+    pub q1: QuantMatrix, // [k1, n_out]
+    pub p2: QuantMatrix, // [n_in, k2]
+    pub q2: QuantMatrix, // [k2, n_out]
+}
 
 /// One compressed linear layer (f32 factors, runtime representation).
 #[derive(Clone, Debug)]
@@ -26,11 +75,13 @@ pub struct CompressedLayer {
     pub n_out: usize,
     pub k1: usize,
     pub k2: usize,
-    /// Row-major f32 factor data.
+    /// Row-major f32 factor data (empty when `quant` is present).
     pub p1: Vec<f32>, // [n_in, k1]
     pub q1: Vec<f32>, // [k1, n_out]
     pub p2: Vec<f32>, // [n_in, k2]
     pub q2: Vec<f32>, // [k2, n_out]
+    /// Int8 factor encodings; `Some` ⇔ the layer is quantized.
+    pub quant: Option<QuantFactors>,
 }
 
 impl CompressedLayer {
@@ -50,16 +101,61 @@ impl CompressedLayer {
             q1: q1.to_f32(),
             p2: p2.to_f32(),
             q2: q2.to_f32(),
+            quant: None,
         }
     }
 
-    /// Stored parameter count.
+    /// Stored parameter count (dtype-independent rank accounting; byte
+    /// footprints come from [`CompressedLayer::factor_bytes`]).
     pub fn params(&self) -> usize {
         (self.n_in + self.n_out) * (self.k1 + self.k2)
     }
 
-    /// Native apply: `x [rows, n_in] → y [rows, n_out]`.
+    /// Whether the factors are stored as int8 codes.
+    pub fn is_quantized(&self) -> bool {
+        self.quant.is_some()
+    }
+
+    /// Storage footprint of the factors in bytes: `4·params` for f32,
+    /// codes + scales for int8.
+    pub fn factor_bytes(&self) -> usize {
+        match &self.quant {
+            None => 4 * self.params(),
+            Some(q) => q.p1.bytes() + q.q1.bytes() + q.p2.bytes() + q.q2.bytes(),
+        }
+    }
+
+    /// Re-encode the factors as per-group symmetric int8 (group length
+    /// along the contraction axis; use [`quant::DEFAULT_GROUP`] unless
+    /// you have a reason).  The f32 vectors are dropped — that is the
+    /// memory saving — so this is a storage decision, not a view.
+    pub fn quantize(&self, group: usize) -> CompressedLayer {
+        assert!(!self.is_quantized(), "layer already quantized");
+        CompressedLayer {
+            n_in: self.n_in,
+            n_out: self.n_out,
+            k1: self.k1,
+            k2: self.k2,
+            p1: Vec::new(),
+            q1: Vec::new(),
+            p2: Vec::new(),
+            q2: Vec::new(),
+            quant: Some(QuantFactors {
+                p1: quant::quantize_columns(&self.p1, self.n_in, self.k1, group),
+                q1: quant::quantize_columns(&self.q1, self.k1, self.n_out, group),
+                p2: quant::quantize_columns(&self.p2, self.n_in, self.k2, group),
+                q2: quant::quantize_columns(&self.q2, self.k2, self.n_out, group),
+            }),
+        }
+    }
+
+    /// Native apply: `x [rows, n_in] → y [rows, n_out]`.  Quantized layers
+    /// route through the int8 kernel; both paths honour the per-thread
+    /// GEMM worker knob and are bit-identical across worker counts.
     pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        if let Some(q) = &self.quant {
+            return self.apply_quant(q, x, rows);
+        }
         use crate::model::forward::matmul_raw;
         let h1 = matmul_raw(x, rows, self.n_in, &self.p1, self.k1);
         let mut y = matmul_raw(&h1, rows, self.k1, &self.q1, self.n_out);
@@ -73,10 +169,55 @@ impl CompressedLayer {
         y
     }
 
+    /// Int8 apply: activations are quantized per `(row, k-group)` once per
+    /// stage input (x is shared by P1/P2, which use the same group), each
+    /// product runs i8×i8→i32 with the dequant-fused epilogue.  Per-row
+    /// independence of both the dynamic quantization and the integer GEMM
+    /// keeps batched == single-row bit-identical.
+    fn apply_quant(&self, q: &QuantFactors, x: &[f32], rows: usize) -> Vec<f32> {
+        use crate::linalg::gemm;
+        let workers = gemm::workers();
+        let (xq, xs) = quant::quantize_row_groups(x, rows, self.n_in, q.p1.group);
+        let mut h1 = vec![0.0f32; rows * self.k1];
+        gemm::gemm_i8_nn(
+            rows, self.n_in, self.k1, &xq, &xs, &q.p1.data, &q.p1.scales, q.p1.group, &mut h1,
+            workers,
+        );
+        let mut y = vec![0.0f32; rows * self.n_out];
+        quant::matmul_quant(&h1, rows, &q.q1, &mut y, workers);
+        if self.k2 > 0 {
+            debug_assert_eq!(q.p2.group, q.p1.group, "stage factors share one group");
+            let mut h2 = vec![0.0f32; rows * self.k2];
+            gemm::gemm_i8_nn(
+                rows, self.n_in, self.k2, &xq, &xs, &q.p2.data, &q.p2.scales, q.p2.group,
+                &mut h2, workers,
+            );
+            let mut y2 = vec![0.0f32; rows * self.n_out];
+            quant::matmul_quant(&h2, rows, &q.q2, &mut y2, workers);
+            for (a, b) in y.iter_mut().zip(&y2) {
+                *a += b;
+            }
+        }
+        y
+    }
+
     /// Reconstruct the dense weight `W̃ = P1 Q1 + P2 Q2` as a Tensor
     /// (for error metrics and the native-forward materialized path).
+    /// Quantized layers dequantize their factors first.
     pub fn reconstruct(&self) -> Tensor {
         use crate::model::forward::matmul_raw;
+        if let Some(q) = &self.quant {
+            let (p1, q1, p2, q2) =
+                (q.p1.dequantize(), q.q1.dequantize(), q.p2.dequantize(), q.q2.dequantize());
+            let mut w = matmul_raw(&p1, self.n_in, self.k1, &q1, self.n_out);
+            if self.k2 > 0 {
+                let w2 = matmul_raw(&p2, self.n_in, self.k2, &q2, self.n_out);
+                for (a, b) in w.iter_mut().zip(&w2) {
+                    *a += b;
+                }
+            }
+            return Tensor { dims: vec![self.n_in, self.n_out], data: w };
+        }
         let mut w = matmul_raw(&self.p1, self.n_in, self.k1, &self.q1, self.n_out);
         if self.k2 > 0 {
             let w2 = matmul_raw(&self.p2, self.n_in, self.k2, &self.q2, self.n_out);
@@ -88,7 +229,10 @@ impl CompressedLayer {
     }
 
     /// Zero-pad factors to `(k1_max, k2_max)` — the executable's fixed shape.
+    /// PJRT marshaling only; quantized layers never take this path (the
+    /// int8 dtype is gated to the native backend).
     pub fn pad_to(&self, k1_max: usize, k2_max: usize) -> CompressedLayer {
+        assert!(!self.is_quantized(), "pad_to: quantized layers are native-only");
         assert!(self.k1 <= k1_max && self.k2 <= k2_max,
             "ranks ({}, {}) exceed padded maxima ({k1_max}, {k2_max})", self.k1, self.k2);
         let pad_cols = |src: &[f32], rows: usize, from: usize, to: usize| {
@@ -112,6 +256,7 @@ impl CompressedLayer {
             q1: pad_rows(&self.q1, self.k1, k1_max, self.n_out),
             p2: pad_cols(&self.p2, self.n_in, self.k2, k2_max),
             q2: pad_rows(&self.q2, self.k2, k2_max, self.n_out),
+            quant: None,
         }
     }
 }
@@ -134,6 +279,28 @@ impl CompressedModel {
     /// Total stored parameters across factored layers.
     pub fn params(&self) -> usize {
         self.layers.values().map(|l| l.params()).sum()
+    }
+
+    /// Total factor storage in bytes (dtype-aware; scales included).
+    pub fn factor_bytes(&self) -> usize {
+        self.layers.values().map(|l| l.factor_bytes()).sum()
+    }
+
+    /// Quantize every layer's factors to per-group int8 (see
+    /// [`CompressedLayer::quantize`]).
+    pub fn quantize(&self, group: usize) -> CompressedModel {
+        CompressedModel {
+            layers: self
+                .layers
+                .iter()
+                .map(|(name, layer)| (name.clone(), layer.quantize(group)))
+                .collect(),
+        }
+    }
+
+    /// Whether every layer stores int8 factors (false for an empty model).
+    pub fn is_quantized(&self) -> bool {
+        !self.layers.is_empty() && self.layers.values().all(|l| l.is_quantized())
     }
 }
 
@@ -241,5 +408,109 @@ mod tests {
         let x = vec![1.0f32; 8];
         assert!(model.apply("blocks.0.attn.wq", &x, 1, 8).is_some());
         assert!(model.apply("blocks.0.attn.wk", &x, 1, 8).is_none());
+    }
+
+    #[test]
+    fn quantized_apply_close_to_f32_apply() {
+        // The int8 path approximates the f32 apply within the additive
+        // quantization budget (both factor and activation quantization,
+        // two stages) — loose bound, but catches any scale/layout slip.
+        check("int8 apply ≈ f32 apply", 10, |g| {
+            let mut rng = g.rng.fork(0);
+            let n_in = g.usize_in(8, 64);
+            let n_out = g.usize_in(8, 64);
+            let k1 = g.usize_in(2, 12);
+            let k2 = g.usize_in(0, 4);
+            let layer = random_layer(n_in, n_out, k1, k2, &mut rng);
+            let qlayer = layer.quantize(crate::linalg::quant::DEFAULT_GROUP);
+            let rows = g.usize_in(1, 6);
+            let x: Vec<f32> = (0..rows * n_in).map(|_| rng.normal() as f32).collect();
+            let y = layer.apply(&x, rows);
+            let yq = qlayer.apply(&x, rows);
+            // Each quantized operand carries ~amax/254 relative rms error
+            // (~2%); two chained stages plus activation quantization land
+            // well under 10% relative Frobenius error on random normals —
+            // while any scale/layout slip produces O(100%).
+            let num: f64 = y.iter().zip(&yq).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            let den: f64 = y.iter().map(|a| (*a as f64).powi(2)).sum();
+            let rel = num.sqrt() / den.sqrt().max(1e-12);
+            if rel > 0.10 {
+                return Err(format!(
+                    "int8 apply drifted: rel Frobenius err {rel:.4} ({n_in}x{n_out} k1={k1} k2={k2})"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantized_batched_apply_is_row_independent() {
+        // Batched apply row r == the same row applied alone, bit-for-bit
+        // (dynamic per-row activation quantization + integer GEMM) — the
+        // property serve decode's batching contract rides on.
+        let mut rng = Rng::new(6);
+        let layer = random_layer(160, 48, 10, 3, &mut rng).quantize(crate::linalg::quant::DEFAULT_GROUP);
+        let rows = 5;
+        let x: Vec<f32> = (0..rows * 160).map(|_| rng.normal() as f32).collect();
+        for workers in [1usize, 4] {
+            let _g = crate::linalg::gemm::scoped_workers(workers);
+            let batched = layer.apply(&x, rows);
+            for r in 0..rows {
+                let solo = layer.apply(&x[r * 160..(r + 1) * 160], 1);
+                assert_eq!(&batched[r * 48..(r + 1) * 48], &solo[..], "row {r} w={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_bytes_at_most_27_percent_of_f32() {
+        // The acceptance pin: int8 factor storage (codes + scales) ≤ 0.27×
+        // the f32 bytes at equal ranks, at realistic layer shapes (at tiny
+        // test shapes the per-column scale overhead dominates — rank and
+        // width must amortize it, which real models do).
+        let mut rng = Rng::new(7);
+        let mut model = CompressedModel::default();
+        model.insert("a", random_layer(256, 256, 85, 4, &mut rng));
+        model.insert("b", random_layer(384, 256, 100, 8, &mut rng));
+        let qmodel = model.quantize(crate::linalg::quant::DEFAULT_GROUP);
+        assert!(qmodel.is_quantized());
+        assert_eq!(qmodel.params(), model.params(), "rank accounting is dtype-free");
+        let f32_bytes = model.factor_bytes();
+        let int8_bytes = qmodel.factor_bytes();
+        assert_eq!(f32_bytes, 4 * model.params());
+        assert!(
+            (int8_bytes as f64) <= 0.27 * f32_bytes as f64,
+            "int8 {int8_bytes} vs f32 {f32_bytes} = {:.4}×",
+            int8_bytes as f64 / f32_bytes as f64
+        );
+    }
+
+    #[test]
+    fn quantized_reconstruct_close_to_f32_reconstruct() {
+        let mut rng = Rng::new(8);
+        let layer = random_layer(40, 30, 6, 2, &mut rng);
+        let w = layer.reconstruct();
+        let wq = layer.quantize(64).reconstruct();
+        assert_eq!(wq.dims, w.dims);
+        let num: f64 = w.data.iter().zip(&wq.data).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = w.data.iter().map(|a| (*a as f64).powi(2)).sum();
+        assert!(num.sqrt() <= 0.10 * den.sqrt(), "rel err {:.4}", num.sqrt() / den.sqrt());
+    }
+
+    #[test]
+    #[should_panic(expected = "native-only")]
+    fn pad_rejects_quantized_layers() {
+        let mut rng = Rng::new(9);
+        let layer = random_layer(16, 16, 3, 1, &mut rng).quantize(8);
+        let _ = layer.pad_to(4, 2);
+    }
+
+    #[test]
+    fn factor_dtype_parses_and_labels() {
+        assert_eq!(FactorDtype::parse("f32").unwrap(), FactorDtype::F32);
+        assert_eq!(FactorDtype::parse("int8").unwrap(), FactorDtype::Int8);
+        assert!(FactorDtype::parse("int4").is_err());
+        assert_eq!(FactorDtype::Int8.label(), "int8");
+        assert_eq!(FactorDtype::default(), FactorDtype::F32);
     }
 }

@@ -17,7 +17,9 @@
 //!                 routed through the [`crate::linalg::rsvd::SvdPolicy`]
 //!                 fast path.
 //! * [`lowrank`] — factored layer representation, padded marshaling for the
-//!                 fixed-shape PJRT executable, native apply + reconstruction.
+//!                 fixed-shape PJRT executable, native apply + reconstruction,
+//!                 and the [`lowrank::FactorDtype`] storage knob (f32 or
+//!                 per-group int8 riding the integer GEMM kernel).
 
 pub mod allocate;
 pub mod engine;
@@ -28,6 +30,6 @@ pub mod whiten;
 
 pub use allocate::{AllocConfig, AllocStrategy, LayerProfile};
 pub use engine::{CompressionEngine, EngineConfig, WhitenerCache};
-pub use lowrank::{CompressedLayer, CompressedModel};
+pub use lowrank::{CompressedLayer, CompressedModel, FactorDtype, QuantFactors};
 pub use methods::{compress_layer, CompressionSpec, Method};
 pub use ranks::RankPlan;

@@ -14,8 +14,9 @@ use crate::calib::collector::{collect_native, TapStats};
 use crate::calib::similarity::{similarity_stats, SimilarityReport};
 use crate::compress::allocate::{AllocConfig, AllocStrategy, LayerProfile, ALPHA_GRID};
 use crate::compress::engine::{CompressionEngine, EngineConfig, WhitenerCache};
-use crate::compress::lowrank::CompressedModel;
+use crate::compress::lowrank::{CompressedModel, FactorDtype};
 use crate::compress::methods::CompressionSpec;
+use crate::linalg::quant::DEFAULT_GROUP;
 use crate::compress::ranks;
 use crate::data::batch::Batcher;
 use crate::data::corpus::{Corpus, Registry, DOMAIN_NAMES};
@@ -68,6 +69,11 @@ pub struct PipelineConfig {
     /// Replace the single global α with a per-layer (k₁, k₂) split chosen
     /// by the auto-tune mini-sweep (`--alpha auto`; nested methods only).
     pub alpha_auto: bool,
+    /// Factor storage dtype (`--factor-dtype`).  `Int8` re-encodes the
+    /// compressed factors as per-group symmetric int8 riding the integer
+    /// GEMM kernel — native backend only (the PJRT executables marshal f32
+    /// factors), enforced at [`Pipeline::new`].
+    pub factor_dtype: FactorDtype,
 }
 
 impl PipelineConfig {
@@ -84,6 +90,7 @@ impl PipelineConfig {
             svd: SvdPolicy::exact(),
             allocate: AllocStrategy::Uniform,
             alpha_auto: false,
+            factor_dtype: FactorDtype::F32,
         }
     }
 }
@@ -97,6 +104,10 @@ pub struct CompressionReport {
     pub alpha: f64,
     pub dense_params: usize,
     pub compressed_params: usize,
+    /// Factor storage dtype label (`f32` | `int8`).
+    pub dtype: &'static str,
+    /// Factor storage bytes (dtype-aware; int8 includes scales).
+    pub factor_bytes: usize,
     pub results: Vec<PerplexityResult>,
 }
 
@@ -115,6 +126,12 @@ pub struct BudgetSweepPoint {
     pub strategy: &'static str,
     /// Parameters actually stored by the compressed model.
     pub compressed_params: usize,
+    /// Factor storage dtype label (`f32` | `int8`) — the sweep's dtype
+    /// axis: with `--factor-dtype int8` each ratio emits both rows, so
+    /// the int8 quality delta reads off the same curve.
+    pub dtype: &'static str,
+    /// Factor storage bytes (scales included for int8).
+    pub factor_bytes: usize,
     /// Token-weighted perplexity pooled over every eval dataset
     /// ([`pooled_ppl`]).
     pub ppl: f64,
@@ -141,6 +158,11 @@ pub struct Pipeline {
 
 impl Pipeline {
     pub fn new(config: PipelineConfig) -> Result<Pipeline> {
+        anyhow::ensure!(
+            !(config.use_pjrt && config.factor_dtype == FactorDtype::Int8),
+            "--factor-dtype int8 requires the native backend (add --native): \
+             the PJRT executables marshal f32 factors"
+        );
         let rt = if config.use_pjrt {
             Some(Runtime::open(&config.artifacts_dir).context("opening PJRT runtime")?)
         } else {
@@ -233,8 +255,19 @@ impl Pipeline {
     /// [`CompressionEngine`]: stage-1 whiteners are computed once per
     /// (method-class, tap) — wq/wk/wv share one, repeat jobs in a sweep pay
     /// zero whitening cost — and layer jobs fan out over
-    /// `config.workers` threads with the configured SVD policy.
+    /// `config.workers` threads with the configured SVD policy.  With
+    /// `--factor-dtype int8` the factors come back quantized.
     pub fn compress(&mut self, spec: &CompressionSpec) -> Result<CompressedModel> {
+        let cm = self.compress_f32(spec)?;
+        Ok(match self.config.factor_dtype {
+            FactorDtype::F32 => cm,
+            FactorDtype::Int8 => cm.quantize(DEFAULT_GROUP),
+        })
+    }
+
+    /// The decomposition itself, always in f32 — the sweep quantizes a copy
+    /// per point so both dtype rows come from ONE decomposition.
+    fn compress_f32(&mut self, spec: &CompressionSpec) -> Result<CompressedModel> {
         self.calibrate()?;
         let stats = self.calib.as_ref().unwrap();
         let engine = CompressionEngine::new(EngineConfig {
@@ -380,6 +413,8 @@ impl Pipeline {
             alpha: spec.effective_alpha(),
             dense_params: self.model_cfg.compressible_params(),
             compressed_params: cm.params(),
+            dtype: self.config.factor_dtype.label(),
+            factor_bytes: cm.factor_bytes(),
             results,
         })
     }
@@ -399,14 +434,30 @@ impl Pipeline {
         let mut out = Vec::with_capacity(ratios.len());
         for &ratio in ratios {
             let point_spec = CompressionSpec { ratio, ..*spec };
-            let cm = self.compress(&point_spec)?;
+            let cm = self.compress_f32(&point_spec)?;
             let results = self.evaluate_all(Some(&cm))?;
             out.push(BudgetSweepPoint {
                 ratio,
                 strategy: self.config.allocate.label(),
                 compressed_params: cm.params(),
+                dtype: FactorDtype::F32.label(),
+                factor_bytes: cm.factor_bytes(),
                 ppl: pooled_ppl(&results),
             });
+            if self.config.factor_dtype == FactorDtype::Int8 {
+                // The dtype axis: same decomposition, re-encoded — the ppl
+                // gap between the paired rows IS the int8 quality delta.
+                let cm_q = cm.quantize(DEFAULT_GROUP);
+                let results_q = self.evaluate_all(Some(&cm_q))?;
+                out.push(BudgetSweepPoint {
+                    ratio,
+                    strategy: self.config.allocate.label(),
+                    compressed_params: cm_q.params(),
+                    dtype: FactorDtype::Int8.label(),
+                    factor_bytes: cm_q.factor_bytes(),
+                    ppl: pooled_ppl(&results_q),
+                });
+            }
         }
         Ok(out)
     }
@@ -421,6 +472,8 @@ impl Pipeline {
             alpha: 1.0,
             dense_params: self.model_cfg.compressible_params(),
             compressed_params: self.model_cfg.compressible_params(),
+            dtype: FactorDtype::F32.label(),
+            factor_bytes: 4 * self.model_cfg.compressible_params(),
             results,
         })
     }

@@ -22,7 +22,21 @@
 //! * **Microkernel** keeps an `MR×NR = 8×4` accumulator block in registers;
 //!   the inner loop is a plain FMA over fixed-size arrays, which LLVM
 //!   auto-vectorizes (no intrinsics, so the same source serves f32 and f64
-//!   via the [`Scalar`] trait).
+//!   via the [`Scalar`] trait).  On top of that portable floor sits a
+//!   runtime-dispatched explicit-SIMD tier ([`Isa`]): AVX2 / AVX-512 /
+//!   NEON microkernels for f32 (separate mul+add, **never** fused-multiply
+//!   -add, so they stay bit-identical to the scalar kernel) and for the
+//!   int8 path below.  f64 always takes the auto-vectorized kernel.
+//! * **Int8 path** ([`gemm_i8_nn`]): the same blocking and panel packing
+//!   over i8 codes quantized per `(row|column, k-group)` by
+//!   [`super::quant`], with i32 accumulators and a dequant-fused f32
+//!   epilogue (`C += (s_row·s_col)·acc`).  K blocks follow group
+//!   boundaries, so each group's integer dot is exact (`group·127² < 2²⁴`
+//!   also makes the i32→f32 conversion exact) and order-independent —
+//!   bit-identical at every worker count, and per-row independent, by
+//!   construction.  Packing is pair-major (`[kc/2][MR|NR][2]`, zero-padded
+//!   odd k) so the SIMD kernels can ride exact widening i16 multiply-add
+//!   (`pmaddwd` / `smull`+`padd`).
 //! * **Parallelism** is over rows of C only: B is packed once per (jc, pc)
 //!   block — its contents never depend on the row range — then the rows are
 //!   split into contiguous MR-aligned chunks, one scoped thread each (the
@@ -166,6 +180,123 @@ impl Drop for WorkersGuard {
 }
 
 // ---------------------------------------------------------------------------
+// Runtime ISA dispatch.
+// ---------------------------------------------------------------------------
+
+/// Instruction set the explicit-SIMD microkernels target.  Detected once
+/// per process ([`detected_isa`]); overridable per thread ([`scoped_isa`])
+/// so the parity tests can force the portable kernel and diff against it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable auto-vectorized kernel — the floor every arch has.
+    Scalar,
+    /// x86-64 with AVX2 (f32: 8-lane mul+add; int8: `pmaddwd` pairs).
+    Avx2,
+    /// x86-64 with AVX-512F+BW (compiled only on toolchains ≥ 1.89 — see
+    /// `build.rs`; otherwise detection tops out at [`Isa::Avx2`]).
+    Avx512,
+    /// aarch64 NEON (baseline on every aarch64 target).
+    Neon,
+}
+
+impl Isa {
+    /// Short lowercase label for logs and bench output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// Best ISA the running CPU (and toolchain) supports, detected once.
+pub fn detected_isa() -> Isa {
+    static DETECTED: std::sync::OnceLock<Isa> = std::sync::OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            #[cfg(nsvd_avx512)]
+            if std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512bw")
+            {
+                return Isa::Avx512;
+            }
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+            Isa::Scalar
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            Isa::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            Isa::Scalar
+        }
+    })
+}
+
+thread_local! {
+    static GEMM_ISA: std::cell::Cell<Option<Isa>> = std::cell::Cell::new(None);
+}
+
+/// The ISA the *calling thread's* GEMMs will use: the scoped override if
+/// one is active, else [`detected_isa`].  Entry points read this once and
+/// pass it down by value, so worker threads spawned inside a GEMM inherit
+/// the caller's choice.
+pub fn active_isa() -> Isa {
+    GEMM_ISA.with(|c| c.get()).unwrap_or_else(detected_isa)
+}
+
+/// RAII guard restoring the previous per-thread ISA override on drop.
+pub struct IsaGuard {
+    prev: Option<Isa>,
+}
+
+/// Force this thread's GEMMs onto `isa` for the guard's lifetime — the
+/// SIMD-vs-scalar bit-parity tests pin the dispatch contract with it.
+/// Forcing an ISA the CPU lacks is undefined; tests only ever force
+/// [`Isa::Scalar`] or the detected value.
+pub fn scoped_isa(isa: Isa) -> IsaGuard {
+    IsaGuard { prev: GEMM_ISA.with(|c| c.replace(Some(isa))) }
+}
+
+impl Drop for IsaGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        GEMM_ISA.with(|c| c.set(prev));
+    }
+}
+
+/// One-line CPU feature summary (dispatch choice + raw detection flags)
+/// for CI logs, so every run records which kernel tier it exercised.
+pub fn cpu_features() -> String {
+    let mut s = format!("dispatch={}", detected_isa().label());
+    #[cfg(target_arch = "x86_64")]
+    {
+        for (name, on) in [
+            ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+            ("fma", std::arch::is_x86_feature_detected!("fma")),
+            ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+            ("avx512bw", std::arch::is_x86_feature_detected!("avx512bw")),
+        ] {
+            if on {
+                s.push(' ');
+                s.push_str(name);
+            }
+        }
+        #[cfg(not(nsvd_avx512))]
+        s.push_str(" (avx512 kernels not compiled: toolchain < 1.89)");
+    }
+    #[cfg(target_arch = "aarch64")]
+    s.push_str(" neon");
+    s
+}
+
+// ---------------------------------------------------------------------------
 // Public entry points.
 // ---------------------------------------------------------------------------
 
@@ -204,6 +335,10 @@ pub fn gemm<T: Scalar>(
     }
     let row_blocks = m.div_ceil(MR);
     let workers = workers.max(1).min(row_blocks);
+    // ISA is resolved ONCE on the calling thread (so a scoped override on
+    // the caller governs the worker threads spawned below too) and passed
+    // down by value into the microkernel dispatch.
+    let isa = active_isa();
     // Pack buffers sized to the actual problem (capped at one full tile):
     // small products — rSVD sketches, low-rank factors — shouldn't pay a
     // full-tile zeroed allocation per call.
@@ -217,7 +352,7 @@ pub fn gemm<T: Scalar>(
             for pc in (0..k).step_by(KC) {
                 let kc = KC.min(k - pc);
                 pack_b(layout, b, k, n, pc, kc, jc, nc, &mut bpack);
-                gemm_block(layout, 0, k, a, &bpack, &mut apack, c, pc, kc, nc, n, jc);
+                gemm_block(layout, 0, k, a, &bpack, &mut apack, c, pc, kc, nc, n, jc, isa);
             }
         }
         return;
@@ -242,7 +377,7 @@ pub fn gemm<T: Scalar>(
                         let mut apack =
                             vec![T::ZERO; MC.min(rows.div_ceil(MR) * MR) * kc];
                         gemm_block(
-                            layout, row0, k, a, bref, &mut apack, chunk, pc, kc, nc, n, jc,
+                            layout, row0, k, a, bref, &mut apack, chunk, pc, kc, nc, n, jc, isa,
                         );
                     });
                 }
@@ -284,9 +419,10 @@ pub fn syrk_tn<T: Scalar>(n: usize, k: usize, a: &[T], c: &mut [T], workers: usi
         .map(|jc| (jc, SYRK_NC.min(n - jc)))
         .collect();
     let workers = workers.max(1).min(tasks.len());
+    let isa = active_isa();
     if workers <= 1 {
         for &(jc, nc) in &tasks {
-            let stripe = syrk_stripe(n, k, a, jc, nc);
+            let stripe = syrk_stripe(n, k, a, jc, nc, isa);
             add_stripe_upper(n, jc, nc, &stripe, c);
         }
         return;
@@ -304,7 +440,7 @@ pub fn syrk_tn<T: Scalar>(n: usize, k: usize, a: &[T], c: &mut [T], workers: usi
                         break;
                     }
                     let (jc, nc) = tasks[t];
-                    local.push((t, syrk_stripe(n, k, a, jc, nc)));
+                    local.push((t, syrk_stripe(n, k, a, jc, nc, isa)));
                 }
                 done.lock().unwrap().extend(local);
             });
@@ -321,7 +457,7 @@ pub fn syrk_tn<T: Scalar>(n: usize, k: usize, a: &[T], c: &mut [T], workers: usi
 /// One SYRK column stripe: rows `0..jc+nc`, columns `jc..jc+nc` of `AᵀA`,
 /// accumulated into a fresh `(jc+nc)×nc` row-major buffer through the
 /// packed TN pipeline (A plays both operands; no transpose materialized).
-fn syrk_stripe<T: Scalar>(n: usize, k: usize, a: &[T], jc: usize, nc: usize) -> Vec<T> {
+fn syrk_stripe<T: Scalar>(n: usize, k: usize, a: &[T], jc: usize, nc: usize, isa: Isa) -> Vec<T> {
     let rows = jc + nc;
     let kc_cap = KC.min(k);
     let mut bpack = vec![T::ZERO; kc_cap * nc.div_ceil(NR) * NR];
@@ -330,7 +466,7 @@ fn syrk_stripe<T: Scalar>(n: usize, k: usize, a: &[T], jc: usize, nc: usize) -> 
     for pc in (0..k).step_by(KC) {
         let kc = KC.min(k - pc);
         pack_b(Layout::TN, a, k, n, pc, kc, jc, nc, &mut bpack);
-        gemm_block(Layout::TN, 0, k, a, &bpack, &mut apack, &mut stripe, pc, kc, nc, nc, 0);
+        gemm_block(Layout::TN, 0, k, a, &bpack, &mut apack, &mut stripe, pc, kc, nc, nc, 0, isa);
     }
     stripe
 }
@@ -424,6 +560,7 @@ fn gemm_block<T: Scalar>(
     nc: usize,
     ldc: usize,
     cj0: usize,
+    isa: Isa,
 ) {
     // a's leading dimension: k for row-major m×k (NN/NT); for TN the element
     // (i, p) of op(A) lives at a[p * m_full + i], and m_full is recovered
@@ -440,7 +577,7 @@ fn gemm_block<T: Scalar>(
                 let mr_eff = MR.min(mc - ir);
                 let amicro = &apack[(ir / MR) * (kc * MR)..][..kc * MR];
                 let mut acc = [[T::ZERO; NR]; MR];
-                microkernel(amicro, bmicro, &mut acc);
+                microkernel(amicro, bmicro, &mut acc, isa);
                 for (i, acc_row) in acc.iter().enumerate().take(mr_eff) {
                     let crow = &mut c[(ic + ir + i) * ldc + cj0 + jr..][..nr_eff];
                     for (cv, av) in crow.iter_mut().zip(acc_row.iter()) {
@@ -453,11 +590,39 @@ fn gemm_block<T: Scalar>(
 }
 
 /// MR×NR register block over one packed-A / packed-B micro-panel pair
-/// (`ap.len() == kc·MR`, `bp.len() == kc·NR`).  `chunks_exact` + fixed-size
-/// array views make every access provably in-bounds, so LLVM unrolls the
-/// `i`/`j` loops and vectorizes the FMA with no bounds checks.
+/// (`ap.len() == kc·MR`, `bp.len() == kc·NR`).  Dispatches f32 panels to
+/// the explicit-SIMD kernels when `isa` has one; everything else (and f64
+/// always) takes [`microkernel_scalar`].  The SIMD kernels perform the
+/// identical per-element operation sequence — ascending-k `mul` then `add`
+/// into a zero-initialized accumulator, never FMA — so their output is
+/// **bit-identical** to the scalar kernel (pinned by tests below).
 #[inline(always)]
-fn microkernel<T: Scalar>(ap: &[T], bp: &[T], acc: &mut [[T; NR]; MR]) {
+fn microkernel<T: Scalar>(ap: &[T], bp: &[T], acc: &mut [[T; NR]; MR], isa: Isa) {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if isa != Isa::Scalar && std::any::TypeId::of::<T>() == std::any::TypeId::of::<f32>() {
+        // T == f32 proven by the TypeId check: reinterpret the panels and
+        // the accumulator in place (same layout, same lifetime).
+        let apf = unsafe { std::slice::from_raw_parts(ap.as_ptr() as *const f32, ap.len()) };
+        let bpf = unsafe { std::slice::from_raw_parts(bp.as_ptr() as *const f32, bp.len()) };
+        let accf = unsafe { &mut *(acc as *mut [[T; NR]; MR] as *mut [[f32; NR]; MR]) };
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => return unsafe { microkernel_f32_avx2(apf, bpf, accf) },
+            #[cfg(all(target_arch = "x86_64", nsvd_avx512))]
+            Isa::Avx512 => return unsafe { microkernel_f32_avx512(apf, bpf, accf) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => return unsafe { microkernel_f32_neon(apf, bpf, accf) },
+            _ => {}
+        }
+    }
+    microkernel_scalar(ap, bp, acc)
+}
+
+/// The portable auto-vectorized kernel: `chunks_exact` + fixed-size array
+/// views make every access provably in-bounds, so LLVM unrolls the `i`/`j`
+/// loops and vectorizes the multiply-add with no bounds checks.
+#[inline(always)]
+fn microkernel_scalar<T: Scalar>(ap: &[T], bp: &[T], acc: &mut [[T; NR]; MR]) {
     for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
         let av: &[T; MR] = av.try_into().expect("exact MR chunk");
         let bv: &[T; NR] = bv.try_into().expect("exact NR chunk");
@@ -466,6 +631,102 @@ fn microkernel<T: Scalar>(ap: &[T], bp: &[T], acc: &mut [[T; NR]; MR]) {
             for (j, cell) in acc_row.iter_mut().enumerate() {
                 *cell += ai * bv[j];
             }
+        }
+    }
+}
+
+/// AVX2 f32 microkernel: one 8-lane vector holds the MR=8 rows of a k-step;
+/// each of the NR=4 columns keeps a running-sum register.  Separate
+/// `mul_ps`/`add_ps` (no FMA) reproduces the scalar kernel's two-rounding
+/// sequence exactly.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_f32_avx2(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let kc = bp.len() / NR;
+    debug_assert_eq!(ap.len(), kc * MR);
+    let mut cols = [_mm256_setzero_ps(); NR];
+    for p in 0..kc {
+        let av = _mm256_loadu_ps(ap.as_ptr().add(p * MR));
+        let b = bp.as_ptr().add(p * NR);
+        for (j, col) in cols.iter_mut().enumerate() {
+            *col = _mm256_add_ps(*col, _mm256_mul_ps(av, _mm256_set1_ps(*b.add(j))));
+        }
+    }
+    let mut t = [0.0f32; MR];
+    for (j, col) in cols.iter().enumerate() {
+        _mm256_storeu_ps(t.as_mut_ptr(), *col);
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            acc_row[j] += t[i];
+        }
+    }
+}
+
+/// AVX-512 f32 microkernel: each zmm holds the 8 rows twice (lane-duped via
+/// `shuffle_f32x4`), paired with a two-column blend of broadcast B values —
+/// 2 zmm accumulators cover the full 8×4 tile.  AVX512F-only intrinsics;
+/// still strictly mul-then-add.
+#[cfg(all(target_arch = "x86_64", nsvd_avx512))]
+#[target_feature(enable = "avx512f,avx2")]
+unsafe fn microkernel_f32_avx512(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let kc = bp.len() / NR;
+    debug_assert_eq!(ap.len(), kc * MR);
+    let mut c01 = _mm512_setzero_ps();
+    let mut c23 = _mm512_setzero_ps();
+    for p in 0..kc {
+        let a8 = _mm512_castps256_ps512(_mm256_loadu_ps(ap.as_ptr().add(p * MR)));
+        // Lanes {0,1,0,1}: the 8 rows duplicated into both zmm halves.
+        let aa = _mm512_shuffle_f32x4::<0x44>(a8, a8);
+        let b = bp.as_ptr().add(p * NR);
+        let b01 = _mm512_mask_blend_ps(0xFF00, _mm512_set1_ps(*b), _mm512_set1_ps(*b.add(1)));
+        let b23 =
+            _mm512_mask_blend_ps(0xFF00, _mm512_set1_ps(*b.add(2)), _mm512_set1_ps(*b.add(3)));
+        c01 = _mm512_add_ps(c01, _mm512_mul_ps(aa, b01));
+        c23 = _mm512_add_ps(c23, _mm512_mul_ps(aa, b23));
+    }
+    let mut t = [0.0f32; 16];
+    _mm512_storeu_ps(t.as_mut_ptr(), c01);
+    for (i, acc_row) in acc.iter_mut().enumerate() {
+        acc_row[0] += t[i];
+        acc_row[1] += t[MR + i];
+    }
+    _mm512_storeu_ps(t.as_mut_ptr(), c23);
+    for (i, acc_row) in acc.iter_mut().enumerate() {
+        acc_row[2] += t[i];
+        acc_row[3] += t[MR + i];
+    }
+}
+
+/// NEON f32 microkernel: the 8 rows split across two q-registers per
+/// column; `vmulq`+`vaddq` (never `vfmaq`) for scalar bit-parity.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_f32_neon(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::aarch64::*;
+    let kc = bp.len() / NR;
+    debug_assert_eq!(ap.len(), kc * MR);
+    let mut lo = [vdupq_n_f32(0.0); NR];
+    let mut hi = [vdupq_n_f32(0.0); NR];
+    for p in 0..kc {
+        let a_lo = vld1q_f32(ap.as_ptr().add(p * MR));
+        let a_hi = vld1q_f32(ap.as_ptr().add(p * MR + 4));
+        let b = bp.as_ptr().add(p * NR);
+        for j in 0..NR {
+            let bj = vdupq_n_f32(*b.add(j));
+            lo[j] = vaddq_f32(lo[j], vmulq_f32(a_lo, bj));
+            hi[j] = vaddq_f32(hi[j], vmulq_f32(a_hi, bj));
+        }
+    }
+    let mut t = [0.0f32; 4];
+    for j in 0..NR {
+        vst1q_f32(t.as_mut_ptr(), lo[j]);
+        for i in 0..4 {
+            acc[i][j] += t[i];
+        }
+        vst1q_f32(t.as_mut_ptr(), hi[j]);
+        for i in 0..4 {
+            acc[4 + i][j] += t[i];
         }
     }
 }
@@ -538,6 +799,386 @@ fn pack_b<T: Scalar>(
                     T::ZERO
                 };
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 quantized path: i8×i8 → i32 with a dequant-fused f32 epilogue.
+// ---------------------------------------------------------------------------
+
+/// Quantized product `C += (Aq ∘ Sa) · (Bq ∘ Sb)` where `Aq` is `m×k` i8
+/// (activations, scales `Sa` per `(row, k-group)`, row-major `m×n_groups`)
+/// and `Bq` is `k×n` i8 (a factor, scales `Sb` per `(k-group, column)`,
+/// row-major `n_groups×n`), both produced by [`super::quant`].  `C` is
+/// `m×n` f32.
+///
+/// Same MC/NC blocking and panel packing as [`gemm`], but K blocks follow
+/// the `group` boundaries so every block's i32 dot carries exactly one
+/// `(Sa, Sb)` pair; the epilogue applies `C += (sa·sb)·(acc as f32)` with
+/// groups ascending.  With `group ≤ 128` the group dot fits 2²⁴, so the
+/// accumulation AND the i32→f32 conversion are exact, making the result
+/// **bit-identical at every worker count** and per-row independent (a
+/// batched decode row equals the same row served alone) — pinned against
+/// the naive [`gemm_i8_ref`] below, bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_nn(
+    m: usize,
+    k: usize,
+    n: usize,
+    aq: &[i8],
+    a_scales: &[f32],
+    bq: &[i8],
+    b_scales: &[f32],
+    group: usize,
+    c: &mut [f32],
+    workers: usize,
+) {
+    let group = group.clamp(1, super::quant::GROUP_MAX).min(k.max(1));
+    let n_groups = k.div_ceil(group);
+    assert_eq!(aq.len(), m * k, "gemm_i8: A size mismatch (m={m} k={k})");
+    assert_eq!(bq.len(), k * n, "gemm_i8: B size mismatch (k={k} n={n})");
+    assert_eq!(c.len(), m * n, "gemm_i8: C size mismatch (m={m} n={n})");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    assert_eq!(a_scales.len(), m * n_groups, "gemm_i8: A scales mismatch");
+    assert_eq!(b_scales.len(), n_groups * n, "gemm_i8: B scales mismatch");
+    let isa = active_isa();
+    let row_blocks = m.div_ceil(MR);
+    let workers = workers.max(1).min(row_blocks);
+    let kc2_cap = group.div_ceil(2);
+    let nc_cap = NC.min(n.div_ceil(NR) * NR);
+    let mut bpack = vec![0i8; kc2_cap * 2 * nc_cap];
+    if workers <= 1 {
+        let mut apack = vec![0i8; MC.min(m.div_ceil(MR) * MR) * kc2_cap * 2];
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for g in 0..n_groups {
+                let pc = g * group;
+                let kc = group.min(k - pc);
+                pack_b_i8(bq, n, pc, kc, jc, nc, &mut bpack);
+                gemm_i8_block(
+                    0, k, n_groups, g, aq, a_scales, b_scales, &bpack, &mut apack, c, pc, kc,
+                    nc, n, jc, isa,
+                );
+            }
+        }
+        return;
+    }
+    // Parallel path mirrors the f32 kernel: B packed once per (jc, group)
+    // block, disjoint MR-aligned row chunks of C fanned out over scoped
+    // threads.  Integer accumulation is exact, so determinism needs no
+    // ordering argument at all here — only the epilogue's ascending-g adds,
+    // which each element sees exactly once per group regardless of workers.
+    let rows_per = row_blocks.div_ceil(workers) * MR;
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for g in 0..n_groups {
+            let pc = g * group;
+            let kc = group.min(k - pc);
+            pack_b_i8(bq, n, pc, kc, jc, nc, &mut bpack);
+            let bref: &[i8] = &bpack;
+            std::thread::scope(|scope| {
+                for (ci, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+                    let row0 = ci * rows_per;
+                    scope.spawn(move || {
+                        let rows = chunk.len() / n;
+                        let mut apack =
+                            vec![0i8; MC.min(rows.div_ceil(MR) * MR) * kc.div_ceil(2) * 2];
+                        gemm_i8_block(
+                            row0, k, n_groups, g, aq, a_scales, b_scales, bref, &mut apack,
+                            chunk, pc, kc, nc, n, jc, isa,
+                        );
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Naive i8 reference: per `(i, j, group)` an i32 dot followed by the same
+/// dequant add the tiled epilogue performs — the bit-exact parity oracle
+/// for [`gemm_i8_nn`] (integer dots are order-independent and the f32
+/// epilogue adds groups in the same ascending order).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_ref(
+    m: usize,
+    k: usize,
+    n: usize,
+    aq: &[i8],
+    a_scales: &[f32],
+    bq: &[i8],
+    b_scales: &[f32],
+    group: usize,
+    c: &mut [f32],
+) {
+    let group = group.clamp(1, super::quant::GROUP_MAX).min(k.max(1));
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let n_groups = k.div_ceil(group);
+    for i in 0..m {
+        for j in 0..n {
+            for g in 0..n_groups {
+                let p0 = g * group;
+                let p1 = (p0 + group).min(k);
+                let mut acc: i32 = 0;
+                for p in p0..p1 {
+                    acc += aq[i * k + p] as i32 * bq[p * n + j] as i32;
+                }
+                c[i * n + j] +=
+                    (a_scales[i * n_groups + g] * b_scales[g * n + j]) * acc as f32;
+            }
+        }
+    }
+}
+
+/// One packed-B int8 block over a row range of C (geometry as
+/// [`gemm_block`], specialized to NN and a single k-group per call).
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_block(
+    row0: usize,
+    k: usize,
+    n_groups: usize,
+    g: usize,
+    aq: &[i8],
+    a_scales: &[f32],
+    b_scales: &[f32],
+    bpack: &[i8],
+    apack: &mut [i8],
+    c: &mut [f32],
+    pc: usize,
+    kc: usize,
+    nc: usize,
+    ldc: usize,
+    cj0: usize,
+    isa: Isa,
+) {
+    let kc2 = kc.div_ceil(2);
+    let rows = c.len() / ldc;
+    for ic in (0..rows).step_by(MC) {
+        let mc = MC.min(rows - ic);
+        pack_a_i8(aq, k, row0 + ic, mc, pc, kc, apack);
+        for jr in (0..nc).step_by(NR) {
+            let nr_eff = NR.min(nc - jr);
+            let bmicro = &bpack[(jr / NR) * (kc2 * NR * 2)..][..kc2 * NR * 2];
+            for ir in (0..mc).step_by(MR) {
+                let mr_eff = MR.min(mc - ir);
+                let amicro = &apack[(ir / MR) * (kc2 * MR * 2)..][..kc2 * MR * 2];
+                let mut acc = [[0i32; NR]; MR];
+                microkernel_i8(amicro, bmicro, &mut acc, isa);
+                for (i, acc_row) in acc.iter().enumerate().take(mr_eff) {
+                    let sa = a_scales[(row0 + ic + ir + i) * n_groups + g];
+                    let crow = &mut c[(ic + ir + i) * ldc + cj0 + jr..][..nr_eff];
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        let sb = b_scales[g * ldc + cj0 + jr + j];
+                        *cv += (sa * sb) * acc_row[j] as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack `Aq[ic..ic+mc, pc..pc+kc]` into MR-tall **pair-major** micro-panels
+/// (`[kc/2][MR][2]` per panel, odd k zero-padded): each row contributes
+/// adjacent k-pairs so the SIMD kernels can widen i8→i16 and ride exact
+/// `pmaddwd`-style pair dots.
+fn pack_a_i8(a: &[i8], k: usize, ic: usize, mc: usize, pc: usize, kc: usize, apack: &mut [i8]) {
+    let kc2 = kc.div_ceil(2);
+    for ip in 0..mc.div_ceil(MR) {
+        let panel = &mut apack[ip * (kc2 * MR * 2)..(ip + 1) * (kc2 * MR * 2)];
+        let rows_here = MR.min(mc - ip * MR);
+        for p2 in 0..kc2 {
+            let dst = &mut panel[p2 * MR * 2..(p2 + 1) * MR * 2];
+            for i in 0..MR {
+                for h in 0..2 {
+                    let p = 2 * p2 + h;
+                    dst[i * 2 + h] = if i < rows_here && p < kc {
+                        a[(ic + ip * MR + i) * k + pc + p]
+                    } else {
+                        0
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// Pack `Bq[pc..pc+kc, jc..jc+nc]` into NR-wide pair-major micro-panels
+/// (`[kc/2][NR][2]`, odd k zero-padded), mirroring [`pack_a_i8`].
+fn pack_b_i8(b: &[i8], n: usize, pc: usize, kc: usize, jc: usize, nc: usize, bpack: &mut [i8]) {
+    let kc2 = kc.div_ceil(2);
+    for jp in 0..nc.div_ceil(NR) {
+        let panel = &mut bpack[jp * (kc2 * NR * 2)..(jp + 1) * (kc2 * NR * 2)];
+        let cols_here = NR.min(nc - jp * NR);
+        for p2 in 0..kc2 {
+            let dst = &mut panel[p2 * NR * 2..(p2 + 1) * NR * 2];
+            for j in 0..NR {
+                for h in 0..2 {
+                    let p = 2 * p2 + h;
+                    dst[j * 2 + h] = if j < cols_here && p < kc {
+                        b[(pc + p) * n + jc + jp * NR + j]
+                    } else {
+                        0
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// The i16 word holding column `j`'s k-pair `(b0, b1)` of a pair-major B
+/// step: little-endian `(b1 << 16) | b0` with each byte sign-extended to
+/// i16 — what `pmaddwd`/`smull` consume after broadcasting.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn bpair_word(b: &[i8], j: usize) -> i32 {
+    let b0 = b[2 * j] as i16 as u16 as u32;
+    let b1 = b[2 * j + 1] as i16 as u16 as u32;
+    (b0 | (b1 << 16)) as i32
+}
+
+/// i8 microkernel dispatch over one pair-major panel pair
+/// (`ap.len() == kc2·MR·2`, `bp.len() == kc2·NR·2`).  All tiers compute
+/// the identical exact integer sums, so the choice is invisible to output.
+#[inline(always)]
+fn microkernel_i8(ap: &[i8], bp: &[i8], acc: &mut [[i32; NR]; MR], isa: Isa) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => return unsafe { microkernel_i8_avx2(ap, bp, acc) },
+        #[cfg(all(target_arch = "x86_64", nsvd_avx512))]
+        Isa::Avx512 => return unsafe { microkernel_i8_avx512(ap, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => return unsafe { microkernel_i8_neon(ap, bp, acc) },
+        _ => {}
+    }
+    microkernel_i8_scalar(ap, bp, acc)
+}
+
+/// Portable i8 kernel: widen to i32 and multiply-accumulate the pair
+/// layout directly (LLVM auto-vectorizes the fixed-extent loops).
+#[inline(always)]
+fn microkernel_i8_scalar(ap: &[i8], bp: &[i8], acc: &mut [[i32; NR]; MR]) {
+    for (av, bv) in ap.chunks_exact(MR * 2).zip(bp.chunks_exact(NR * 2)) {
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            let a0 = av[i * 2] as i32;
+            let a1 = av[i * 2 + 1] as i32;
+            for (j, cell) in acc_row.iter_mut().enumerate() {
+                *cell += a0 * bv[j * 2] as i32 + a1 * bv[j * 2 + 1] as i32;
+            }
+        }
+    }
+}
+
+/// AVX2 i8 kernel: one 128-bit load holds the 8 rows × 2 k-steps of a pair
+/// step; sign-extend to 16×i16, `pmaddwd` against the broadcast column
+/// pair-word → 8 exact per-row pair dots per instruction.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_i8_avx2(ap: &[i8], bp: &[i8], acc: &mut [[i32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let kc2 = bp.len() / (NR * 2);
+    debug_assert_eq!(ap.len(), kc2 * MR * 2);
+    let mut cols = [_mm256_setzero_si256(); NR];
+    for p2 in 0..kc2 {
+        let a16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+            ap.as_ptr().add(p2 * MR * 2) as *const __m128i
+        ));
+        let b = &bp[p2 * NR * 2..(p2 + 1) * NR * 2];
+        for (j, col) in cols.iter_mut().enumerate() {
+            let bv = _mm256_set1_epi32(bpair_word(b, j));
+            *col = _mm256_add_epi32(*col, _mm256_madd_epi16(a16, bv));
+        }
+    }
+    let mut t = [0i32; MR];
+    for (j, col) in cols.iter().enumerate() {
+        _mm256_storeu_si256(t.as_mut_ptr() as *mut __m256i, *col);
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            acc_row[j] += t[i];
+        }
+    }
+}
+
+/// AVX-512 i8 kernel: two pair steps (32 bytes of packed A) widen at once;
+/// the two column pair-words blend into one zmm so `madd_epi16` covers
+/// both steps; an AVX2 step handles an odd trailing pair.
+#[cfg(all(target_arch = "x86_64", nsvd_avx512))]
+#[target_feature(enable = "avx512f,avx512bw,avx2")]
+unsafe fn microkernel_i8_avx512(ap: &[i8], bp: &[i8], acc: &mut [[i32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    let kc2 = bp.len() / (NR * 2);
+    debug_assert_eq!(ap.len(), kc2 * MR * 2);
+    let mut cols = [_mm512_setzero_si512(); NR];
+    for q in 0..kc2 / 2 {
+        let a16 = _mm512_cvtepi8_epi16(_mm256_loadu_si256(
+            ap.as_ptr().add(q * 2 * MR * 2) as *const __m256i
+        ));
+        let b = &bp[q * 2 * NR * 2..(q * 2 + 2) * NR * 2];
+        for (j, col) in cols.iter_mut().enumerate() {
+            let w0 = _mm512_set1_epi32(bpair_word(b, j));
+            let w1 = _mm512_set1_epi32(bpair_word(&b[NR * 2..], j));
+            let bv = _mm512_mask_blend_epi32(0xFF00, w0, w1);
+            *col = _mm512_add_epi32(*col, _mm512_madd_epi16(a16, bv));
+        }
+    }
+    let mut t = [0i32; MR];
+    for (j, col) in cols.iter().enumerate() {
+        let mut s = _mm256_add_epi32(
+            _mm512_castsi512_si256(*col),
+            _mm512_extracti64x4_epi64::<1>(*col),
+        );
+        if kc2 % 2 == 1 {
+            let p2 = kc2 - 1;
+            let a16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                ap.as_ptr().add(p2 * MR * 2) as *const __m128i
+            ));
+            let bv = _mm256_set1_epi32(bpair_word(&bp[p2 * NR * 2..], j));
+            s = _mm256_add_epi32(s, _mm256_madd_epi16(a16, bv));
+        }
+        _mm256_storeu_si256(t.as_mut_ptr() as *mut __m256i, s);
+        for (i, acc_row) in acc.iter_mut().enumerate() {
+            acc_row[j] += t[i];
+        }
+    }
+}
+
+/// NEON i8 kernel: `vmovl_s8` widening, widening `vmull_s16` pair products
+/// folded with `vpaddq_s32` → 4 exact per-row pair dots per fold, two
+/// q-registers covering the 8 rows.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_i8_neon(ap: &[i8], bp: &[i8], acc: &mut [[i32; NR]; MR]) {
+    use std::arch::aarch64::*;
+    let kc2 = bp.len() / (NR * 2);
+    debug_assert_eq!(ap.len(), kc2 * MR * 2);
+    let mut lo = [vdupq_n_s32(0); NR];
+    let mut hi = [vdupq_n_s32(0); NR];
+    for p2 in 0..kc2 {
+        let a8 = vld1q_s8(ap.as_ptr().add(p2 * MR * 2));
+        let a_lo = vmovl_s8(vget_low_s8(a8)); // rows 0..4 as 4 (i16,i16) pairs
+        let a_hi = vmovl_s8(vget_high_s8(a8)); // rows 4..8
+        let b = &bp[p2 * NR * 2..(p2 + 1) * NR * 2];
+        for j in 0..NR {
+            let bv = vreinterpretq_s16_s32(vdupq_n_s32(bpair_word(b, j)));
+            let p0 = vmull_s16(vget_low_s16(a_lo), vget_low_s16(bv));
+            let p1 = vmull_s16(vget_high_s16(a_lo), vget_high_s16(bv));
+            lo[j] = vaddq_s32(lo[j], vpaddq_s32(p0, p1));
+            let p2v = vmull_s16(vget_low_s16(a_hi), vget_low_s16(bv));
+            let p3 = vmull_s16(vget_high_s16(a_hi), vget_high_s16(bv));
+            hi[j] = vaddq_s32(hi[j], vpaddq_s32(p2v, p3));
+        }
+    }
+    let mut t = [0i32; 4];
+    for j in 0..NR {
+        vst1q_s32(t.as_mut_ptr(), lo[j]);
+        for i in 0..4 {
+            acc[i][j] += t[i];
+        }
+        vst1q_s32(t.as_mut_ptr(), hi[j]);
+        for i in 0..4 {
+            acc[4 + i][j] += t[i];
         }
     }
 }
@@ -799,5 +1440,163 @@ mod tests {
         // 0 clamps to 1 (a GEMM always has at least the calling thread).
         let _g = scoped_workers(0);
         assert_eq!(workers(), 1);
+    }
+
+    #[test]
+    fn scoped_isa_sets_and_restores() {
+        let base = active_isa();
+        {
+            let _g = scoped_isa(Isa::Scalar);
+            assert_eq!(active_isa(), Isa::Scalar);
+        }
+        assert_eq!(active_isa(), base);
+        assert_eq!(active_isa(), detected_isa());
+        // The CI feature line always mentions the dispatch choice.
+        assert!(cpu_features().contains(detected_isa().label()));
+    }
+
+    #[test]
+    fn simd_f32_matches_scalar_bitwise() {
+        // Whatever ISA dispatch picked, the f32 output must be BIT-identical
+        // to the forced-scalar kernel on all three layouts at workers {1,4}
+        // — the contract that lets every f32 caller (forward, serve, eval)
+        // keep its pinned outputs across machines.  On a machine without
+        // SIMD this degenerates to scalar-vs-scalar, which is fine: the
+        // contract is "dispatch never changes bits", not "SIMD ran".
+        check("simd f32 == scalar f32 (bitwise)", 40, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = *g.choose(&[1usize, 3, 8, 17, 65, 70]);
+            let k = *g.choose(&[1usize, 2, 5, 33, 100, 300]);
+            let n = *g.choose(&[1usize, 2, 4, 11, 66]);
+            let layout = *g.choose(&[Layout::NN, Layout::TN, Layout::NT]);
+            let a: Vec<f32> = randn_vec(m * k, &mut rng);
+            let b: Vec<f32> = randn_vec(k * n, &mut rng);
+            let mut want = vec![0.0f32; m * n];
+            {
+                let _g = scoped_isa(Isa::Scalar);
+                gemm(layout, m, k, n, &a, &b, &mut want, 1);
+            }
+            for workers in [1usize, 4] {
+                let mut got = vec![0.0f32; m * n];
+                gemm(layout, m, k, n, &a, &b, &mut got, workers);
+                if got != want {
+                    return Err(format!(
+                        "{layout:?} {m}x{k}x{n} w={workers} isa={}: bits differ",
+                        detected_isa().label()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_f32_syrk_matches_scalar_bitwise() {
+        let mut rng = Rng::new(21);
+        for &(n, k) in &[(17usize, 33usize), (65, 300), (130, 64)] {
+            let a: Vec<f32> = randn_vec(k * n, &mut rng);
+            let mut want = vec![0.0f32; n * n];
+            {
+                let _g = scoped_isa(Isa::Scalar);
+                syrk_tn(n, k, &a, &mut want, 1);
+            }
+            for workers in [1usize, 4] {
+                let mut got = vec![0.0f32; n * n];
+                syrk_tn(n, k, &a, &mut got, workers);
+                assert_eq!(got, want, "syrk n={n} k={k} w={workers}");
+            }
+        }
+    }
+
+    fn rand_i8(len: usize, rng: &mut Rng) -> Vec<i8> {
+        // Full code range ±127 — exercises the widest pair products the
+        // kernel can see (127·127 per term).
+        (0..len).map(|_| (rng.normal() * 60.0).clamp(-127.0, 127.0) as i8).collect()
+    }
+
+    fn rand_scales(len: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..len).map(|_| (rng.normal().abs() * 0.05 + 1e-4) as f32).collect()
+    }
+
+    #[test]
+    fn int8_tiled_matches_ref_exactly() {
+        // The tiled int8 kernel (whatever ISA dispatched, plus forced
+        // scalar) must be BIT-identical to the naive i32 reference at
+        // workers {1,4}: integer group dots are exact, the i32→f32 convert
+        // is exact for group ≤ 128, and the epilogue adds groups in the
+        // same ascending order.
+        check("int8 tiled == ref (bitwise)", 40, |g| {
+            let mut rng = g.rng.fork(0);
+            let m = *g.choose(&[1usize, 3, 8, 17, 65, 70]);
+            let k = *g.choose(&[1usize, 2, 5, 33, 100, 129, 300]);
+            let n = *g.choose(&[1usize, 2, 4, 11, 66]);
+            let group = *g.choose(&[1usize, 2, 64, 128]);
+            let n_groups = k.div_ceil(group.min(k));
+            let aq = rand_i8(m * k, &mut rng);
+            let bq = rand_i8(k * n, &mut rng);
+            let sa = rand_scales(m * n_groups, &mut rng);
+            let sb = rand_scales(n_groups * n, &mut rng);
+            let mut want = vec![0.0f32; m * n];
+            gemm_i8_ref(m, k, n, &aq, &sa, &bq, &sb, group, &mut want);
+            for (workers, isa) in [(1usize, None), (4, None), (1, Some(Isa::Scalar))] {
+                let _g = isa.map(scoped_isa);
+                let mut got = vec![0.0f32; m * n];
+                gemm_i8_nn(m, k, n, &aq, &sa, &bq, &sb, group, &mut got, workers);
+                if got != want {
+                    return Err(format!(
+                        "{m}x{k}x{n} group={group} w={workers} isa={isa:?}: bits differ"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_rows_are_independent() {
+        // Row r of a batched product equals the same row computed alone —
+        // the property that makes batched int8 decode bit-identical to the
+        // single-request reference in serve.
+        let mut rng = Rng::new(33);
+        let (m, k, n, group) = (7usize, 200usize, 13usize, 128usize);
+        let n_groups = k.div_ceil(group);
+        let aq = rand_i8(m * k, &mut rng);
+        let bq = rand_i8(k * n, &mut rng);
+        let sa = rand_scales(m * n_groups, &mut rng);
+        let sb = rand_scales(n_groups * n, &mut rng);
+        let mut full = vec![0.0f32; m * n];
+        gemm_i8_nn(m, k, n, &aq, &sa, &bq, &sb, group, &mut full, 4);
+        for r in 0..m {
+            let mut solo = vec![0.0f32; n];
+            gemm_i8_nn(
+                1,
+                k,
+                n,
+                &aq[r * k..(r + 1) * k],
+                &sa[r * n_groups..(r + 1) * n_groups],
+                &bq,
+                &sb,
+                group,
+                &mut solo,
+                1,
+            );
+            assert_eq!(&full[r * n..(r + 1) * n], &solo[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn int8_accumulates_and_handles_degenerate_shapes() {
+        // C += semantics.
+        let mut c = vec![10.0f32; 1];
+        gemm_i8_nn(1, 2, 1, &[2, 3], &[0.5], &[4, 5], &[2.0], 2, &mut c, 1);
+        // 10 + (0.5·2.0)·(2·4 + 3·5) = 10 + 23 = 33.
+        assert_eq!(c, vec![33.0]);
+        // k = 0 / m = 0 / n = 0: no-ops.
+        let mut c0 = vec![1.0f32; 4];
+        gemm_i8_nn(2, 0, 2, &[], &[], &[], &[], 64, &mut c0, 2);
+        assert_eq!(c0, vec![1.0; 4]);
+        let mut empty: Vec<f32> = Vec::new();
+        gemm_i8_nn(0, 3, 2, &[], &[], &[0; 6], &[1.0; 2], 64, &mut empty, 2);
+        gemm_i8_nn(2, 3, 0, &[0; 6], &[1.0; 2], &[], &[], 64, &mut empty, 2);
     }
 }

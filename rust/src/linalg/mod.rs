@@ -26,6 +26,9 @@
 //!   the [`rsvd::SvdPolicy`] that arbitrates between it and exact Jacobi.
 //! * [`id`] — low-rank column interpolative decomposition.
 //! * [`solve`] — triangular solves, inverses, pseudo-inverse.
+//! * [`quant`] — symmetric per-group int8 quantization of low-rank factors
+//!   and activations, feeding the kernel's i8×i8→i32 microkernel path
+//!   ([`gemm::gemm_i8_nn`]) with a dequant-fused f32 epilogue.
 //!
 //! Numerical conventions: decompositions run in f64 (the whitening transform
 //! inverts triangular/eigen factors, where f32 demonstrably breaks the
@@ -38,6 +41,7 @@ pub mod id;
 pub mod jacobi;
 pub mod matrix;
 pub mod qr;
+pub mod quant;
 pub mod rsvd;
 pub mod solve;
 pub mod svd;
@@ -49,5 +53,6 @@ pub use id::interpolative;
 pub use jacobi::JacobiOrdering;
 pub use matrix::Matrix;
 pub use qr::{lq, qr_thin};
+pub use quant::QuantMatrix;
 pub use rsvd::{svd_for_rank, SvdPolicy};
 pub use svd::{svd_thin, svd_thin_ordered, Svd};

@@ -1,0 +1,318 @@
+//! Symmetric per-group int8 quantization of low-rank factors (and, at GEMM
+//! entry, of activations) — the storage side of the quantized kernel path.
+//!
+//! NSVD's factors are the serving-critical payload: every decode step in
+//! `serve/step.rs` multiplies activations against `P₁/Q₁/P₂/Q₂`.  Storing
+//! them as int8 with one f32 scale per `(column, k-group)` cuts factor
+//! bytes ~4× on top of the rank reduction and widens the effective SIMD
+//! lanes of the integer microkernel in [`super::gemm`].
+//!
+//! Scheme (symmetric, absmax, ASVD-Q-style — see METHODS.md):
+//!
+//! * A factor `W` (`k×n`, row-major, applied as `X·W`) is split along `k`
+//!   into groups of [`DEFAULT_GROUP`]; each `(group g, column j)` gets
+//!   `scale = absmax / 127` and `q = rne(w / scale)` clamped to ±127, so
+//!   the representable range is exactly the observed range and zero maps
+//!   to zero (no zero-points — the dequant epilogue stays one multiply).
+//! * Activations are quantized the same way per `(row, k-group)` at GEMM
+//!   entry ([`quantize_row_groups`]) — dynamic, per-row independent, so a
+//!   batched decode row quantizes identically to the same row alone (the
+//!   serve batching bit-parity contract survives quantization).
+//! * Rounding is **round-to-nearest-even** ([`rne`]) — the IEEE default,
+//!   so the pinned round-trip bound below is tight and platform-stable.
+//!
+//! Why group ≤ [`GROUP_MAX`] matters for the kernel contract: with
+//! `|q| ≤ 127`, a per-group i8·i8 dot is at most `group · 127² ≤ 2 097 152
+//! < 2²⁴`, so the i32 group accumulator is exact **and** its `i32 → f32`
+//! conversion in the dequant epilogue is exact.  Integer accumulation is
+//! order-independent, which is what makes the int8 GEMM bit-identical at
+//! every worker count (and batched == single-row) by construction.
+
+use super::gemm;
+
+/// Default quantization group length along `k`.  128 keeps the per-group
+/// i32 dot exactly representable in f32 (`128·127² < 2²⁴`) while holding
+/// scale overhead to `4/128` of the int8 payload per column — the knob
+/// that keeps total int8 bytes ≤ 0.27× the f32 factor bytes at realistic
+/// layer shapes (pinned in `compress::lowrank`).
+pub const DEFAULT_GROUP: usize = 128;
+
+/// Largest group the int8 kernel accepts: `1024 · 127² < 2³¹` keeps the
+/// i32 accumulator safe, though only groups ≤ 128 also keep the f32
+/// epilogue conversion exact (larger groups stay correct to f32 rounding).
+pub const GROUP_MAX: usize = 1024;
+
+/// Round half-to-even (banker's rounding), the IEEE-754 default mode.
+/// Hand-rolled on `trunc` so it carries no MSRV requirement.
+#[inline]
+pub fn rne(x: f32) -> f32 {
+    let t = x.trunc();
+    let d = x - t;
+    if d.abs() == 0.5 {
+        // Tie: pick the even neighbour of the two candidates t and t ± 1.
+        if (t as i64) % 2 == 0 {
+            t
+        } else {
+            t + d.signum()
+        }
+    } else {
+        // No tie: plain nearest.
+        (x + 0.5 * x.signum()).trunc()
+    }
+}
+
+/// An int8-quantized `rows×cols` matrix (row-major codes) with one f32
+/// scale per `(k-group, column)`: `w[p, j] ≈ data[p, j] · scales[p/group, j]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantMatrix {
+    /// Quantized dimension length (`k`, the contraction axis).
+    pub rows: usize,
+    /// Output dimension length.
+    pub cols: usize,
+    /// Group length along `rows`; the last group may be short.
+    pub group: usize,
+    /// Row-major int8 codes, `rows · cols` entries in `[-127, 127]`.
+    pub data: Vec<i8>,
+    /// Row-major `n_groups × cols` dequantization scales.
+    pub scales: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Number of k-groups (`ceil(rows / group)`).
+    pub fn n_groups(&self) -> usize {
+        self.rows.div_ceil(self.group)
+    }
+
+    /// Storage footprint in bytes: 1 byte per code + 4 per scale.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len()
+    }
+
+    /// Reconstruct the f32 matrix (`rows × cols`, row-major).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for p in 0..self.rows {
+            let g = p / self.group;
+            for j in 0..self.cols {
+                out[p * self.cols + j] =
+                    self.data[p * self.cols + j] as f32 * self.scales[g * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Worst-case absolute round-trip error for `(group g, column j)`:
+    /// half a quantization step.  Symmetric absmax scaling never clamps
+    /// (the largest-magnitude entry maps to exactly ±127), so nearest
+    /// rounding is the only error source: `|w − q·s| ≤ s/2`.
+    pub fn error_bound(&self, g: usize, j: usize) -> f32 {
+        0.5 * self.scales[g * self.cols + j]
+    }
+}
+
+/// Quantize a `rows×cols` row-major f32 matrix per `(column, k-group)`.
+///
+/// `group` is clamped to `[1, GROUP_MAX]`; all-zero groups get scale 1.0
+/// (codes are all zero, so any nonzero scale round-trips exactly).
+pub fn quantize_columns(w: &[f32], rows: usize, cols: usize, group: usize) -> QuantMatrix {
+    assert_eq!(w.len(), rows * cols, "quantize_columns: shape mismatch");
+    let group = group.clamp(1, GROUP_MAX);
+    let n_groups = rows.div_ceil(group);
+    let mut data = vec![0i8; rows * cols];
+    let mut scales = vec![1.0f32; n_groups * cols];
+    for g in 0..n_groups {
+        let p0 = g * group;
+        let p1 = (p0 + group).min(rows);
+        for j in 0..cols {
+            let mut amax = 0.0f32;
+            for p in p0..p1 {
+                amax = amax.max(w[p * cols + j].abs());
+            }
+            if amax > 0.0 {
+                let scale = amax / 127.0;
+                scales[g * cols + j] = scale;
+                let inv = 1.0 / scale;
+                for p in p0..p1 {
+                    let q = rne(w[p * cols + j] * inv).clamp(-127.0, 127.0);
+                    data[p * cols + j] = q as i8;
+                }
+            }
+        }
+    }
+    QuantMatrix { rows, cols, group, data, scales }
+}
+
+/// Quantize activations `x` (`rows×k`, row-major) per `(row, k-group)` —
+/// the dynamic half of the int8 GEMM.  Returns `(codes, scales)` with
+/// `codes` row-major `rows×k` and `scales` row-major `rows×n_groups`, the
+/// exact layouts [`gemm::gemm_i8_nn`] consumes for its A operand.
+pub fn quantize_row_groups(x: &[f32], rows: usize, k: usize, group: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len(), rows * k, "quantize_row_groups: shape mismatch");
+    let group = group.clamp(1, GROUP_MAX);
+    let n_groups = k.div_ceil(group);
+    let mut codes = vec![0i8; rows * k];
+    let mut scales = vec![1.0f32; rows * n_groups];
+    for i in 0..rows {
+        let row = &x[i * k..(i + 1) * k];
+        let crow = &mut codes[i * k..(i + 1) * k];
+        for g in 0..n_groups {
+            let p0 = g * group;
+            let p1 = (p0 + group).min(k);
+            let amax = row[p0..p1].iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if amax > 0.0 {
+                let scale = amax / 127.0;
+                scales[i * n_groups + g] = scale;
+                let inv = 1.0 / scale;
+                for p in p0..p1 {
+                    crow[p] = rne(row[p] * inv).clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+    }
+    (codes, scales)
+}
+
+/// Quantized product `C += X · W` with f32 activations `x` (`m×k`) and a
+/// pre-quantized weight factor `w` (`k×n`): quantizes `x` per row-group on
+/// the fly, runs the packed i8×i8→i32 kernel, and dequantizes in the fused
+/// f32 epilogue.  This is the apply path `compress::lowrank` rides for
+/// every forward/decode GEMM when `--factor-dtype int8` is active.
+pub fn matmul_quant(x: &[f32], m: usize, w: &QuantMatrix, c: &mut [f32], workers: usize) {
+    assert_eq!(x.len(), m * w.rows, "matmul_quant: X shape mismatch");
+    let (xq, xs) = quantize_row_groups(x, m, w.rows, w.group);
+    gemm::gemm_i8_nn(
+        m, w.rows, w.cols, &xq, &xs, &w.data, &w.scales, w.group, c, workers,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rne_rounds_half_to_even() {
+        for (x, want) in [
+            (0.5f32, 0.0f32),
+            (1.5, 2.0),
+            (2.5, 2.0),
+            (-0.5, 0.0),
+            (-1.5, -2.0),
+            (-2.5, -2.0),
+            (0.49, 0.0),
+            (0.51, 1.0),
+            (-3.2, -3.0),
+            (126.5, 126.0),
+            (127.5, 128.0),
+            (0.0, 0.0),
+        ] {
+            assert_eq!(rne(x), want, "rne({x})");
+        }
+    }
+
+    #[test]
+    fn quant_roundtrip_within_per_group_bound() {
+        // |w − dequant(quant(w))| ≤ scale/2 per element — the pinned error
+        // bound (absmax symmetric scaling never clamps, so rounding is the
+        // only error source).
+        check("quant round-trip ≤ bound", 40, |g| {
+            let mut rng = g.rng.fork(0);
+            let rows = g.usize_in(1, 200);
+            let cols = g.usize_in(1, 12);
+            let group = *g.choose(&[1usize, 3, 64, 128, 200]);
+            let amp = *g.choose(&[1e-3f64, 1.0, 40.0]);
+            let w: Vec<f32> = (0..rows * cols).map(|_| (rng.normal() * amp) as f32).collect();
+            let q = quantize_columns(&w, rows, cols, group);
+            let back = q.dequantize();
+            for p in 0..rows {
+                for j in 0..cols {
+                    let err = (w[p * cols + j] - back[p * cols + j]).abs();
+                    let bound = q.error_bound(p / q.group, j) * (1.0 + 1e-6);
+                    if err > bound {
+                        return Err(format!(
+                            "({p},{j}) rows={rows} group={group}: err {err:e} > bound {bound:e}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_extremes_map_to_pm_127() {
+        // The largest-magnitude entry of every group quantizes to exactly
+        // ±127 (defines the scale), and an all-zero group stays zero with
+        // scale 1.
+        let w = vec![0.0f32, -2.0, 1.0, 0.0, 0.0, 0.0];
+        let q = quantize_columns(&w, 6, 1, 3);
+        assert_eq!(q.n_groups(), 2);
+        // Group 0: amax 2 → scale 2/127; −2 → −127, 1 → rne(63.5) = 64.
+        assert_eq!(q.scales[0], 2.0 / 127.0);
+        assert_eq!(&q.data[..3], &[0, -127, 64]);
+        // Group 1 is all-zero: codes stay 0 under the sentinel scale 1.
+        assert_eq!(q.scales[1], 1.0);
+        assert_eq!(&q.data[3..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn quant_bytes_accounting() {
+        let w = vec![1.0f32; 256 * 8];
+        let q = quantize_columns(&w, 256, 8, 128);
+        // 2048 codes + 2 groups × 8 cols scales.
+        assert_eq!(q.bytes(), 256 * 8 + 4 * 2 * 8);
+    }
+
+    #[test]
+    fn row_group_quant_matches_column_quant_transposed_semantics() {
+        // quantize_row_groups on X must equal quantize_columns on Xᵀ,
+        // group-for-group — one scheme, two layouts.
+        let mut rng = Rng::new(3);
+        let (rows, k, group) = (5usize, 70usize, 32usize);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+        let (codes, scales) = quantize_row_groups(&x, rows, k, group);
+        let mut xt = vec![0.0f32; k * rows];
+        for i in 0..rows {
+            for p in 0..k {
+                xt[p * rows + i] = x[i * k + p];
+            }
+        }
+        let qt = quantize_columns(&xt, k, rows, group);
+        let n_groups = k.div_ceil(group);
+        for i in 0..rows {
+            for p in 0..k {
+                assert_eq!(codes[i * k + p], qt.data[p * rows + i]);
+            }
+            for g in 0..n_groups {
+                assert_eq!(scales[i * n_groups + g], qt.scales[g * rows + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_quant_close_to_f32_product() {
+        // End-to-end: X·W through the int8 kernel lands within the additive
+        // error budget of quantizing both operands.
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (7usize, 150usize, 11usize);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let q = quantize_columns(&w, k, n, DEFAULT_GROUP);
+        let mut got = vec![0.0f32; m * n];
+        matmul_quant(&x, m, &q, &mut got, 2);
+        let mut want = vec![0.0f32; m * n];
+        gemm::gemm_nn(m, k, n, &x, &w, &mut want, 1);
+        // Per-term error ≈ (sx/2)|w| + (sw/2)|x| with s ≈ amax/127; a loose
+        // but safe budget is k · (amax_x · amax_w) · (2/127 + 1/127²).
+        let ax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let aw = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let budget = k as f32 * ax * aw * (2.0 / 127.0 + 1.0 / (127.0 * 127.0));
+        for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w_).abs() <= budget,
+                "elem {i}: {g} vs {w_} (budget {budget})"
+            );
+        }
+    }
+}

@@ -60,6 +60,7 @@ fn build_cli() -> Cli {
                 .flag("alpha", "k1 share for nested methods, or 'auto' (per-layer tune)", Some("0.95"))
                 .flag("allocate", "rank allocation: uniform (paper protocol) | spectrum (global water-filling)", Some("uniform"))
                 .flag("sweep-ratios", "comma-separated ratios: print the budget-vs-perplexity curve instead of one run", None)
+                .flag("factor-dtype", "factor storage dtype: f32 | int8 (per-group quantized, native only)", Some("f32"))
                 .flag("windows", "eval windows per dataset", Some("64"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
@@ -109,6 +110,7 @@ fn build_cli() -> Cli {
             .flag("model", "model name", Some("llama-t"))
             .flag("method", "compression method", Some("nsvd-i"))
             .flag("ratio", "compression ratio", Some("0.3"))
+            .flag("factor-dtype", "factor storage dtype: f32 | int8 (per-group quantized, native only)", Some("f32"))
             .flag("requests", "total generation requests", Some("32"))
             .flag("clients", "concurrent closed-loop client threads", Some("4"))
             .flag("max-batch", "max sequences decoded per step", Some("8"))
@@ -137,6 +139,7 @@ fn build_cli() -> Cli {
                 .flag("alpha", "k1 share, or 'auto' (per-layer tune)", Some("0.95"))
                 .flag("allocate", "rank allocation: uniform | spectrum", Some("uniform"))
                 .flag("sweep-ratios", "comma-separated ratios: print the budget-vs-perplexity curve instead of one run", None)
+                .flag("factor-dtype", "factor storage dtype: f32 | int8 (per-group quantized, native only)", Some("f32"))
                 .flag("windows", "eval windows per dataset", Some("32"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
@@ -152,6 +155,9 @@ fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> 
     cfg.artifacts_dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     cfg.eval_windows = args.get_usize("windows").unwrap_or(64);
     cfg.use_pjrt = !args.switch("native");
+    if let Some(s) = args.get("factor-dtype") {
+        cfg.factor_dtype = nsvd::compress::FactorDtype::parse(s)?;
+    }
     if args.get("workers").is_some() {
         cfg.workers = args.get_workers("workers").ok_or_else(|| {
             anyhow::anyhow!("--workers expects a positive integer or 'auto'")
@@ -245,9 +251,19 @@ fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
             pipeline.config.allocate.label(),
             if pipeline.config.alpha_auto { "auto".to_string() } else { spec.alpha.to_string() },
         );
-        println!("{:>8} {:>12} {:>12}", "ratio", "params", "pooled ppl");
+        println!(
+            "{:>8} {:>6} {:>12} {:>14} {:>12}",
+            "ratio", "dtype", "params", "factor bytes", "pooled ppl"
+        );
         for p in &points {
-            println!("{:>7.0}% {:>12} {:>12.2}", p.ratio * 100.0, p.compressed_params, p.ppl);
+            println!(
+                "{:>7.0}% {:>6} {:>12} {:>14} {:>12.2}",
+                p.ratio * 100.0,
+                p.dtype,
+                p.compressed_params,
+                p.factor_bytes,
+                p.ppl
+            );
         }
         println!("({} points in {:.1}s)", points.len(), t.elapsed_s());
         return Ok(());
@@ -255,14 +271,17 @@ fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
     let t = Timer::start();
     let report = pipeline.run(&spec)?;
     println!(
-        "model={} method={} ratio={:.0}% α={} params {} → {} ({:.1}% removed) in {:.1}s",
+        "model={} method={} ratio={:.0}% α={} dtype={} params {} → {} ({:.1}% removed, \
+         factor bytes {}) in {:.1}s",
         report.model,
         report.method,
         report.ratio * 100.0,
         report.alpha,
+        report.dtype,
         report.dense_params,
         report.compressed_params,
         (1.0 - report.compressed_params as f64 / report.dense_params as f64) * 100.0,
+        report.factor_bytes,
         t.elapsed_s()
     );
     for r in &report.results {
@@ -477,9 +496,10 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
         alpha: 0.95,
     };
     println!(
-        "compressing {model} with {} at {:.0}%...",
+        "compressing {model} with {} at {:.0}% ({} factors)...",
         spec.method.label(),
-        spec.ratio * 100.0
+        spec.ratio * 100.0,
+        pipeline.config.factor_dtype.label()
     );
     let cm = pipeline.compress(&spec)?;
 

@@ -212,6 +212,56 @@ fn serve_fuzz_schedule_parity_quick_grid() {
     }
 }
 
+/// Int8-quantized factors through the full batched serving stack: every
+/// `(max_batch, page_size, workers)` combination must reproduce the
+/// sequential int8 [`generate`] run bit-for-bit — the serving-layer pin of
+/// the integer kernel's determinism contract (group ≤ 128 keeps every
+/// group dot exact in i32 and f32, so batching/paging/threading cannot
+/// perturb a single logit).  The dense fuzz grid above never touches the
+/// quantized path, so its f32 streams are byte-identical to the pre-int8
+/// behavior by construction.
+#[test]
+fn serve_int8_batched_decode_matches_sequential_generate() {
+    use crate::bench::{drive_preloaded, synthetic_nsvd_int8};
+    let (cfg, w) = super::test_util::tiny("llama-t", 47);
+    let cm = synthetic_nsvd_int8(&cfg, 0.30, 0.95, 9);
+    assert!(cm.is_quantized(), "fixture must exercise the int8 path");
+    let (n_req, prompt_len, max_new) = (6usize, 5usize, 6usize);
+    let prompt =
+        |i: usize| -> Vec<u8> { (0..prompt_len).map(|t| ((t * 31 + i * 7) % 256) as u8).collect() };
+    let sample = |i: usize| SampleConfig { temperature: 0.8, top_k: 16, seed: i as u64 };
+    let expect: Vec<Vec<u8>> = (0..n_req)
+        .map(|i| {
+            generate(&cfg, &w, &cm, &prompt(i), max_new, sample(i))
+                .expect("sequential int8 generate")
+        })
+        .collect();
+    for &b in &[1usize, 3, 8] {
+        for &page_size in &PAGE_SIZES {
+            for &workers in &WORKER_COUNTS {
+                let gen = GenConfig {
+                    max_batch: b,
+                    pages: n_req * (prompt_len + max_new - 1).div_ceil(page_size),
+                    page_size,
+                    prefill_chunk: 2,
+                    prefix_share: true,
+                    workers,
+                };
+                let reqs = (0..n_req).map(|i| (prompt(i), max_new, sample(i))).collect();
+                let (outs, metrics) = drive_preloaded(&cfg, &w, &cm, &gen, reqs);
+                assert_eq!(metrics.completed, n_req, "b={b} ps={page_size} w={workers}");
+                for (i, out) in outs.iter().enumerate() {
+                    assert_eq!(
+                        *out, expect[i],
+                        "int8 serve parity: b={b} page_size={page_size} \
+                         workers={workers} request {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Every seed against every combo — 192 served scenarios.  Slow by
 /// design; run explicitly with `cargo test -q serve_fuzz -- --ignored`.
 #[test]
