@@ -65,6 +65,16 @@
 #                                     bench prints the detected CPU features
 #                                     (dispatch tier + raw flags) so every
 #                                     CI log records which microkernel ran
+#   4h. robustness smoke            — the QoS scheduler tests run by name
+#                                     (deadline kills, bounded-queue
+#                                     rejection/shedding, no-priority-
+#                                     inversion pin, per-tenant accounting,
+#                                     watchdog fault isolation) plus the
+#                                     chaos fuzz grid (32 seeds × fault
+#                                     rates {0, 0.05, 0.2}: surviving
+#                                     streams bit-exact, every casualty
+#                                     exactly one correct terminal event,
+#                                     scheduler never panics)
 #   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
@@ -121,6 +131,13 @@ cargo bench --bench perf_serve -- paged --quick
 step "int8 quantization smoke (quant tests + perf_linalg int8 --quick)"
 cargo test -q quant
 cargo bench --bench perf_linalg -- int8 --quick
+
+step "robustness smoke (QoS scheduler tests + chaos fuzz grid)"
+cargo test -q deadline
+cargo test -q shed
+cargo test -q tenant
+cargo test -q chaos
+cargo test -q watchdog
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -2,8 +2,10 @@
 //! size for dense vs NSVD-shaped low-rank overrides (f32 AND per-group
 //! int8 factors riding the integer GEMM), the batched-vs-sequential parity
 //! smoke (which pins the batched int8 decode against the sequential int8
-//! `generate` reference, bit-for-bit), and the paged-vs-contiguous
-//! memory-efficiency comparison.
+//! `generate` reference, bit-for-bit), the paged-vs-contiguous
+//! memory-efficiency comparison, and the overload sweep (goodput vs
+//! Poisson open-loop offered load at 1x/2x/4x calibrated capacity with a
+//! bounded queue and per-request deadlines).
 //!
 //! Artifact-free (random weights, synthetic factors): the subject is the
 //! serving system — the paged KV pool, the prefix trie, the step
@@ -23,7 +25,8 @@
 //!   cargo bench --bench perf_serve -- paged --quick    # ci.sh gate 4f
 
 use nsvd::bench::{
-    drive_concurrent, drive_preloaded, synthetic_nsvd, synthetic_nsvd_int8, tiny_model, Suite,
+    drive_concurrent, drive_open_loop, drive_preloaded, goodput_tokens_per_s, synthetic_nsvd,
+    synthetic_nsvd_int8, tiny_model, OpenLoopTenant, Suite,
 };
 use nsvd::model::config::ModelConfig;
 use nsvd::model::forward::{random_weights, LinearOverride, NoOverride};
@@ -68,6 +71,7 @@ fn run_batch(
         prefill_chunk: 0,
         prefix_share: true,
         workers,
+        ..GenConfig::default()
     };
     let (outs, metrics) = drive_preloaded(cfg, weights, overrides, &gen_cfg, reqs);
     (outs, metrics.generated)
@@ -185,6 +189,7 @@ fn main() {
                 prefill_chunk: 8,
                 prefix_share: true,
                 workers: 0,
+                ..GenConfig::default()
             };
             let (m, stats) =
                 drive_concurrent(&cfg, &weights, &cm, &gen_cfg, n_req, total, &make).unwrap();
@@ -201,6 +206,7 @@ fn main() {
                 prefill_chunk: 0,
                 prefix_share: false,
                 workers: 0,
+                ..GenConfig::default()
             };
             let (m, _) =
                 drive_concurrent(&cfg, &weights, &cm, &gen_cfg, n_req, total, &make).unwrap();
@@ -230,6 +236,75 @@ fn main() {
                 "slots_per_gb",
                 old_equiv_slots as f64 / pool_gb,
             );
+        }
+    }
+
+    // ---- overload sweep: goodput vs offered load at 1x/2x/4x capacity ----
+    // Calibrate the server's sustainable request rate closed-loop
+    // (unbounded queue, no deadlines), then offer Poisson open-loop load
+    // at multiples of it with a bounded queue and per-request deadlines.
+    // Raw throughput saturates at capacity no matter the offered load;
+    // the point of the QoS layer is that *goodput* (tokens of requests
+    // that completed in deadline) degrades gracefully while the shed /
+    // deadline counters absorb the excess instead of latency exploding.
+    if suite.enabled("serve_overload") {
+        let (n_req, prompt_len, max_new) =
+            if quick { (8usize, 4usize, 6usize) } else { (24, 8, 16) };
+        let page_size = 4;
+        let base = GenConfig {
+            max_batch: (n_req / 2).max(1),
+            pages: n_req * (prompt_len + max_new - 1).div_ceil(page_size),
+            page_size,
+            prefill_chunk: 8,
+            prefix_share: true,
+            workers: 0,
+            ..GenConfig::default()
+        };
+        let make = |i: usize| (bench_prompt(i, prompt_len), max_new, bench_sample(i));
+        let (cal, _) = drive_concurrent(
+            &cfg,
+            &weights,
+            &cm,
+            &base,
+            (n_req / 2).max(1),
+            n_req,
+            &make,
+        )
+        .unwrap();
+        let cap_rps = (cal.tokens_per_s() / max_new as f64).max(0.5);
+        // Deadline: generous at capacity (4x the calibrated mean latency),
+        // so 1x load mostly completes while 4x load must shed or expire.
+        let deadline_s = (cal.latency().mean * 4.0).max(0.05);
+        suite.record_metric("serve_overload", "capacity_rps", cap_rps);
+        // The sweep itself runs against a bounded queue so overload turns
+        // into explicit rejection/shedding instead of unbounded buildup.
+        let sweep_cfg = GenConfig { queue_cap: (n_req / 2).max(2), ..base };
+        for mult in [1usize, 2, 4] {
+            let name = format!("serve_overload_{mult}x");
+            let tenants = [OpenLoopTenant {
+                tenant: 0,
+                rate: cap_rps * mult as f64,
+                requests: n_req,
+                priority: 0,
+                deadline: Some(deadline_s),
+                prompt_len: ((prompt_len / 2).max(1), prompt_len + 1),
+                max_new: ((max_new / 2).max(1), max_new + 1),
+            }];
+            let mut run = None;
+            suite.bench(&name, 1, || {
+                let (m, stats) =
+                    drive_open_loop(&cfg, &weights, &cm, &sweep_cfg, 17, &tenants).unwrap();
+                run = Some((m, stats));
+            });
+            if let Some((m, stats)) = run {
+                suite.record_metric(&name, "offered_rps", cap_rps * mult as f64);
+                suite.record_metric(&name, "goodput_tok_s", goodput_tokens_per_s(&stats, m.wall_s));
+                suite.record_metric(&name, "raw_tok_s", m.tokens_per_s());
+                suite.record_metric(&name, "shed", m.shed as f64);
+                suite.record_metric(&name, "deadline_exceeded", m.deadline_exceeded as f64);
+                suite.record_metric(&name, "rejected", m.rejected as f64);
+                suite.record_metric(&name, "peak_queue", m.peak_queue as f64);
+            }
         }
     }
 

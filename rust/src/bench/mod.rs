@@ -123,15 +123,8 @@ pub fn drive_preloaded(
     let mut streams = Vec::new();
     for (i, (prompt, max_new, sample)) in reqs.into_iter().enumerate() {
         let (stream, events) = stream_channel();
-        tx.send(GenRequest {
-            id: i as u64,
-            prompt,
-            max_new,
-            sample,
-            stream,
-            enqueued: std::time::Instant::now(),
-        })
-        .expect("request channel open");
+        tx.send(GenRequest::new(i as u64, prompt, max_new, sample, stream))
+            .expect("request channel open");
         streams.push(events);
     }
     drop(tx);
@@ -174,14 +167,7 @@ pub fn drive_concurrent(
                 while i < total {
                     let (prompt, max_new, sample) = make(i);
                     let (stream, events) = stream_channel();
-                    let req = GenRequest {
-                        id: i as u64,
-                        prompt,
-                        max_new,
-                        sample,
-                        stream,
-                        enqueued: std::time::Instant::now(),
-                    };
+                    let req = GenRequest::new(i as u64, prompt, max_new, sample, stream);
                     if req_tx.send(req).is_err() {
                         return;
                     }
@@ -198,6 +184,125 @@ pub fn drive_concurrent(
         let metrics = serve_generation(cfg, weights, overrides, gen, req_rx)?;
         Ok((metrics, done_rx.iter().collect()))
     })
+}
+
+/// One tenant's traffic pattern for [`drive_open_loop`].
+#[derive(Clone, Debug)]
+pub struct OpenLoopTenant {
+    /// Tenant id stamped on every request (buckets the server metrics).
+    pub tenant: u32,
+    /// Mean Poisson arrival rate, requests per second; `0.0` offers the
+    /// whole load up front as one burst.
+    pub rate: f64,
+    /// Total requests this tenant submits.
+    pub requests: usize,
+    /// Scheduling priority stamped on every request (higher wins).
+    pub priority: u8,
+    /// Relative deadline in the server's configured clock units, if any.
+    pub deadline: Option<f64>,
+    /// Prompt length range `[lo, hi)` in bytes.
+    pub prompt_len: (usize, usize),
+    /// Output budget range `[lo, hi)` in tokens.
+    pub max_new: (usize, usize),
+}
+
+/// Drive the generation server with **open-loop** (Poisson) clients: one
+/// thread per tenant draws exponential interarrival gaps from its `rate`
+/// and keeps sending regardless of how the server is keeping up.  Unlike
+/// the closed-loop [`drive_concurrent`], offered load does not fall when
+/// the server saturates — which is exactly the regime the bounded-queue
+/// overload policy is measured against.  Prompt bytes, lengths, and
+/// per-request sampling seeds all derive from `seed`, so `(seed,
+/// tenants)` names one reproducible workload.  Returns the server metrics
+/// plus every [`crate::serve::DoneStats`] the clients collected.
+pub fn drive_open_loop(
+    cfg: &crate::model::ModelConfig,
+    weights: &crate::model::Weights,
+    overrides: &dyn crate::model::forward::LinearOverride,
+    gen: &crate::serve::GenConfig,
+    seed: u64,
+    tenants: &[OpenLoopTenant],
+) -> crate::Result<(
+    crate::coordinator::metrics::GenServerMetrics,
+    Vec<crate::serve::DoneStats>,
+)> {
+    use crate::serve::{collect_stream, serve_generation, stream_channel, GenRequest};
+    use crate::util::rng::Rng;
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    std::thread::scope(|scope| {
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        for (t_idx, spec) in tenants.iter().enumerate() {
+            let req_tx = req_tx.clone();
+            let done_tx = done_tx.clone();
+            scope.spawn(move || {
+                let mut rng =
+                    Rng::new(seed ^ (t_idx as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                let mut streams = Vec::new();
+                for k in 0..spec.requests {
+                    if spec.rate > 0.0 {
+                        // Exponential interarrival gap of a Poisson process
+                        // (capped so a pathological draw cannot hang a run).
+                        let gap = -(1.0 - rng.f64()).ln() / spec.rate;
+                        std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(2.0)));
+                    }
+                    let (plo, phi) = spec.prompt_len;
+                    let plen = rng.range(plo.max(1), phi.max(plo.max(1) + 1));
+                    let prompt: Vec<u8> = (0..plen).map(|_| rng.below(251) as u8).collect();
+                    let (nlo, nhi) = spec.max_new;
+                    let max_new = rng.range(nlo.max(1), nhi.max(nlo.max(1) + 1));
+                    let sample = crate::model::generate::SampleConfig {
+                        seed: seed ^ (((t_idx as u64) << 32) | k as u64),
+                        ..Default::default()
+                    };
+                    let (stream, events) = stream_channel();
+                    let mut req = GenRequest::new(
+                        ((t_idx as u64) << 32) | k as u64,
+                        prompt,
+                        max_new,
+                        sample,
+                        stream,
+                    );
+                    req.tenant = spec.tenant;
+                    req.priority = spec.priority;
+                    req.deadline = spec.deadline;
+                    if req_tx.send(req).is_err() {
+                        break;
+                    }
+                    streams.push(events);
+                }
+                // Open loop: the whole load is offered before any stream is
+                // drained (token channels are unbounded, so the server never
+                // blocks on an undrained client).
+                drop(req_tx);
+                for events in &streams {
+                    let (_tokens, stats) = collect_stream(events);
+                    if let Some(stats) = stats {
+                        let _ = done_tx.send(stats);
+                    }
+                }
+            });
+        }
+        drop(done_tx);
+        drop(req_tx);
+        let metrics = serve_generation(cfg, weights, overrides, gen, req_rx)?;
+        Ok((metrics, done_rx.iter().collect()))
+    })
+}
+
+/// Goodput: tokens generated by requests that ran to **completion**, per
+/// second of server wall time.  Work spent on shed, deadline-killed,
+/// faulted, or cancelled requests counts toward raw throughput but not
+/// goodput — the gap between the two is what the overload sweep plots.
+pub fn goodput_tokens_per_s(stats: &[crate::serve::DoneStats], wall_s: f64) -> f64 {
+    if wall_s <= 0.0 {
+        return 0.0;
+    }
+    let toks: usize = stats
+        .iter()
+        .filter(|s| s.finish == crate::serve::FinishReason::Completed)
+        .map(|s| s.generated)
+        .sum();
+    toks as f64 / wall_s
 }
 
 /// One benchmark measurement.

@@ -7,7 +7,9 @@
 //! serving tails are what capacity planning cares about, and a mean hides
 //! the convoy effects dynamic batching can introduce.
 
+use crate::serve::stream::FinishReason;
 use crate::util::timer::Stats;
+use std::collections::BTreeMap;
 
 /// Accumulates serving-side observations.
 #[derive(Clone, Debug, Default)]
@@ -96,12 +98,28 @@ pub struct GenServerMetrics {
     /// KV-pool page occupancy per executed step, `pages_in_use / pages`
     /// in `[0, 1]` (bounded ring).
     pub page_occupancy: Vec<f64>,
-    /// Requests retired (completed + cancelled mid-stream).
+    /// Requests retired after admission (completed + cancelled + shed /
+    /// deadline-killed / faulted mid-stream).
     pub completed: usize,
     /// Requests retired because the client dropped its stream receiver.
     pub cancelled: usize,
-    /// Requests refused at admission (bad prompt / infeasible page need).
+    /// Requests refused at admission (bad prompt, infeasible page need,
+    /// or arriving at a full bounded queue as the least-urgent work).
     pub rejected: usize,
+    /// Requests dropped by the overload policy to make room for more
+    /// urgent work ([`FinishReason::Shed`]).
+    pub shed: usize,
+    /// Requests killed because their deadline expired
+    /// ([`FinishReason::DeadlineExceeded`]).
+    pub deadline_exceeded: usize,
+    /// Requests retired by the watchdog after a panic or injected fault
+    /// in their step rows ([`FinishReason::Faulted`]).
+    pub faulted: usize,
+    /// Most requests ever waiting in the bounded admission queue.
+    pub peak_queue: usize,
+    /// Per-tenant terminal and token accounting, keyed by
+    /// [`crate::serve::GenRequest::tenant`].
+    pub tenants: BTreeMap<u32, TenantMetrics>,
     /// Sequences evicted back to the queue on pool exhaustion (each later
     /// resumes; double-counted if preempted twice).
     pub preemptions: usize,
@@ -121,6 +139,29 @@ pub struct GenServerMetrics {
     pub steps: usize,
     /// Wall-clock of the serving window (seconds).
     pub wall_s: f64,
+}
+
+/// One tenant's slice of the serving window: how many of its requests hit
+/// each terminal and how many tokens it generated.  All counters are
+/// exact (no sampling).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantMetrics {
+    /// Requests that reached any terminal (admitted or not).
+    pub requests: usize,
+    /// Requests that generated their full `max_new`.
+    pub completed: usize,
+    /// Requests whose client hung up mid-stream.
+    pub cancelled: usize,
+    /// Requests refused at admission.
+    pub rejected: usize,
+    /// Requests dropped by the overload policy.
+    pub shed: usize,
+    /// Requests killed at deadline expiry.
+    pub deadline_exceeded: usize,
+    /// Requests retired by the watchdog.
+    pub faulted: usize,
+    /// Tokens generated for this tenant.
+    pub generated: u64,
 }
 
 impl GenServerMetrics {
@@ -149,6 +190,41 @@ impl GenServerMetrics {
         Self::push_capped(&mut self.latency_s, self.completed, latency_s);
         Self::push_capped(&mut self.ttft_s, self.completed, ttft_s);
         self.completed += 1;
+    }
+
+    /// Record one request's terminal event: bumps the global per-reason
+    /// counter and the tenant's bucket.  Called exactly once per request
+    /// (the scheduler funnels every exit path through one `Done` sender),
+    /// so `tenants[t].requests` equals the requests tenant `t` submitted.
+    pub fn record_terminal(&mut self, tenant: u32, finish: FinishReason, generated: usize) {
+        match finish {
+            FinishReason::Completed => {}
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::Rejected => self.rejected += 1,
+            FinishReason::Shed => self.shed += 1,
+            FinishReason::DeadlineExceeded => self.deadline_exceeded += 1,
+            FinishReason::Faulted => self.faulted += 1,
+        }
+        let t = self.tenants.entry(tenant).or_default();
+        t.requests += 1;
+        t.generated += generated as u64;
+        match finish {
+            FinishReason::Completed => t.completed += 1,
+            FinishReason::Cancelled => t.cancelled += 1,
+            FinishReason::Rejected => t.rejected += 1,
+            FinishReason::Shed => t.shed += 1,
+            FinishReason::DeadlineExceeded => t.deadline_exceeded += 1,
+            FinishReason::Faulted => t.faulted += 1,
+        }
+    }
+
+    /// One tenant's generated tokens per second of serving wall-clock
+    /// (0 for unknown tenants or before `wall_s` is stamped).
+    pub fn tenant_tokens_per_s(&self, tenant: u32) -> f64 {
+        match self.tenants.get(&tenant) {
+            Some(t) if self.wall_s > 0.0 => t.generated as f64 / self.wall_s,
+            _ => 0.0,
+        }
     }
 
     /// Generated tokens per second of serving wall-clock — THE number
@@ -212,7 +288,8 @@ impl GenServerMetrics {
         let lat = self.latency();
         let ttft = self.ttft();
         format!(
-            "requests={} rejected={} cancelled={} preempted={} tokens={} \
+            "requests={} rejected={} cancelled={} preempted={} shed={} \
+             deadline={} faulted={} tokens={} \
              steps={} tok/s={:.1} mean_fill={:.2} peak_active={} \
              occupancy={:.2} prefix_hit={:.2} latency p50={:.1}ms \
              p95={:.1}ms p99={:.1}ms ttft p50={:.1}ms p95={:.1}ms",
@@ -220,6 +297,9 @@ impl GenServerMetrics {
             self.rejected,
             self.cancelled,
             self.preemptions,
+            self.shed,
+            self.deadline_exceeded,
+            self.faulted,
             self.generated,
             self.steps,
             self.tokens_per_s(),
@@ -322,6 +402,48 @@ mod tests {
             m.record_step(0.001, fill, 0.1);
         }
         assert_eq!(m.peak_active, 5);
+    }
+
+    #[test]
+    fn serve_gen_record_terminal_buckets_by_tenant_and_reason() {
+        let mut m = GenServerMetrics::default();
+        m.record_terminal(1, FinishReason::Completed, 10);
+        m.record_terminal(1, FinishReason::Shed, 2);
+        m.record_terminal(2, FinishReason::Rejected, 0);
+        m.record_terminal(2, FinishReason::DeadlineExceeded, 3);
+        m.record_terminal(2, FinishReason::Faulted, 1);
+        m.record_terminal(1, FinishReason::Cancelled, 4);
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.deadline_exceeded, 1);
+        assert_eq!(m.faulted, 1);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.completed, 0, "record_terminal never bumps completed — record_finish does");
+        let t1 = &m.tenants[&1];
+        assert_eq!(
+            (t1.requests, t1.completed, t1.shed, t1.cancelled, t1.generated),
+            (3, 1, 1, 1, 16)
+        );
+        let t2 = &m.tenants[&2];
+        assert_eq!(
+            (t2.requests, t2.rejected, t2.deadline_exceeded, t2.faulted, t2.generated),
+            (3, 1, 1, 1, 4)
+        );
+        m.wall_s = 2.0;
+        assert_eq!(m.tenant_tokens_per_s(1), 8.0);
+        assert_eq!(m.tenant_tokens_per_s(2), 2.0);
+        assert_eq!(m.tenant_tokens_per_s(9), 0.0);
+        let s = m.summary();
+        assert!(s.contains("shed=1"));
+        assert!(s.contains("deadline=1"));
+        assert!(s.contains("faulted=1"));
+    }
+
+    #[test]
+    fn serve_gen_tenant_rates_are_zero_without_wall_clock() {
+        let mut m = GenServerMetrics::default();
+        m.record_terminal(4, FinishReason::Completed, 100);
+        assert_eq!(m.tenant_tokens_per_s(4), 0.0, "no wall_s stamped yet");
     }
 
     #[test]

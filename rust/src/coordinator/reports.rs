@@ -152,6 +152,38 @@ pub fn render_latency_block(title: &str, rows: &[(String, Stats)]) -> Table {
     table
 }
 
+/// Render the generation server's per-tenant accounting as a table: one
+/// row per tenant id, terminal-outcome counts plus generated tokens and
+/// the tenant's share of server throughput.  Used by `serve-gen` when the
+/// workload stamps tenant ids (all-default workloads collapse to one
+/// tenant-0 row).
+pub fn render_tenant_block(
+    title: &str,
+    metrics: &crate::coordinator::metrics::GenServerMetrics,
+) -> Table {
+    let headers =
+        ["Tenant", "requests", "completed", "cancelled", "rejected", "shed", "deadline", "faulted", "tokens", "tok/s"]
+            .iter()
+            .map(|h| h.to_string())
+            .collect();
+    let mut table = Table::new(title, headers);
+    for (&tenant, t) in &metrics.tenants {
+        table.push_row(vec![
+            tenant.to_string(),
+            t.requests.to_string(),
+            t.completed.to_string(),
+            t.cancelled.to_string(),
+            t.rejected.to_string(),
+            t.shed.to_string(),
+            t.deadline_exceeded.to_string(),
+            t.faulted.to_string(),
+            t.generated.to_string(),
+            format!("{:.1}", metrics.tenant_tokens_per_s(tenant)),
+        ]);
+    }
+    table
+}
+
 /// Write a table to `target/reports/<slug>.md` and `.json`.
 pub fn save_table(table: &Table, slug: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::Path::new("target/reports");
@@ -217,6 +249,21 @@ mod tests {
         // 95th percentile of 1..=100 ms is 95 ms.
         assert!(md.contains("95.00"), "md:\n{md}");
         assert!(md.contains("99.00"));
+    }
+
+    #[test]
+    fn tenant_block_rows_per_tenant() {
+        use crate::coordinator::metrics::GenServerMetrics;
+        use crate::serve::stream::FinishReason;
+        let mut m = GenServerMetrics::default();
+        m.record_terminal(1, FinishReason::Completed, 5);
+        m.record_terminal(1, FinishReason::Shed, 2);
+        m.record_terminal(3, FinishReason::DeadlineExceeded, 0);
+        let t = render_tenant_block("Per-tenant serving", &m);
+        let md = t.to_markdown();
+        assert_eq!(t.rows.len(), 2, "md:\n{md}");
+        assert!(md.contains("| 1 | 2 | 1 | 0 | 0 | 1 | 0 | 0 | 7 | 0.0 |"), "md:\n{md}");
+        assert!(md.contains("| 3 | 1 | 0 | 0 | 0 | 0 | 1 | 0 | 0 | 0.0 |"), "md:\n{md}");
     }
 
     #[test]

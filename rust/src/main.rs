@@ -6,15 +6,15 @@
 use anyhow::Result;
 use nsvd::compress::methods::{CompressionSpec, Method};
 use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
-use nsvd::bench::drive_concurrent;
+use nsvd::bench::{drive_concurrent, drive_open_loop, goodput_tokens_per_s, OpenLoopTenant};
 use nsvd::coordinator::reports::{
-    render_latency_block, render_method_block, save_table, MethodRow, Table,
+    render_latency_block, render_method_block, render_tenant_block, save_table, MethodRow, Table,
 };
 use nsvd::coordinator::scheduler::{run_jobs, sweeps, Job};
 use nsvd::coordinator::server;
 use nsvd::data::corpus::{paper_label, Registry, DOMAIN_NAMES};
 use nsvd::model::generate::SampleConfig;
-use nsvd::serve::GenConfig;
+use nsvd::serve::{ChaosConfig, GenConfig};
 use nsvd::util::cli::{Cli, Command};
 use nsvd::util::timer::Timer;
 use std::path::PathBuf;
@@ -123,6 +123,14 @@ fn build_cli() -> Cli {
             .flag("temperature", "sampling temperature (0 = greedy)", Some("0.8"))
             .flag("top-k", "top-k sampling cutoff (0 = full distribution)", Some("20"))
             .flag("seed", "base sampling seed (request i uses seed + i)", Some("0"))
+            .flag("rate", "open-loop Poisson arrival rate per tenant stream (req/s; 0 = closed-loop clients)", Some("0"))
+            .flag("tenants", "open-loop tenant streams; requests split evenly across them (needs --rate > 0)", Some("1"))
+            .flag("tenant", "base tenant id stamped on open-loop requests (stream t gets tenant + t)", Some("0"))
+            .flag("priority", "scheduling priority stamped on open-loop requests (higher runs first and preempts lower)", Some("0"))
+            .flag("deadline-ms", "relative deadline per open-loop request in ms (0 = none; expired requests are killed with DeadlineExceeded)", Some("0"))
+            .flag("queue-cap", "bounded admission queue in requests (0 = unbounded; a full queue rejects or sheds the least-urgent work)", Some("0"))
+            .flag("chaos-seed", "fault-injection seed (only with --fault-rate > 0)", Some("0"))
+            .flag("fault-rate", "injected step-fault and allocation-failure probability in [0,1] (0 disables chaos)", Some("0"))
             .flag("workers", "thread budget for BOTH the compression phase and the batched decode step's GEMMs (auto = all cores)", Some("auto"))
             .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
             .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
@@ -522,6 +530,16 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
         "off" => false,
         other => anyhow::bail!("--prefix-share must be on|off, got {other}"),
     };
+    let fault_rate = args.get_f64("fault-rate").unwrap_or(0.0).clamp(0.0, 1.0);
+    let chaos = if fault_rate > 0.0 {
+        Some(ChaosConfig {
+            seed: args.get_u64("chaos-seed").unwrap_or(0),
+            step_fault_rate: fault_rate,
+            alloc_fail_rate: fault_rate,
+        })
+    } else {
+        None
+    };
     let gen_cfg = GenConfig {
         max_batch,
         pages,
@@ -529,12 +547,69 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
         prefill_chunk: args.get_usize("prefill-chunk").unwrap_or(16),
         prefix_share,
         workers: args.get_workers("workers").unwrap_or(0),
+        queue_cap: args.get_usize("queue-cap").unwrap_or(0),
+        chaos,
+        ..GenConfig::default()
     };
     let sample = SampleConfig {
         temperature: args.get_f64("temperature").unwrap_or(0.8) as f32,
         top_k: args.get_usize("top-k").unwrap_or(20),
         seed: args.get_u64("seed").unwrap_or(0),
     };
+
+    let rate = args.get_f64("rate").unwrap_or(0.0).max(0.0);
+    if rate > 0.0 {
+        // Open-loop load generation: Poisson arrivals keep offering work
+        // no matter how far behind the server falls — the regime where
+        // the bounded queue, deadlines, and shedding earn their keep.
+        let tenants_n = args.get_usize("tenants").unwrap_or(1).max(1);
+        let tenant0 = args.get_usize("tenant").unwrap_or(0) as u32;
+        let priority = args.get_usize("priority").unwrap_or(0).min(u8::MAX as usize) as u8;
+        let deadline_ms = args.get_f64("deadline-ms").unwrap_or(0.0);
+        let specs: Vec<OpenLoopTenant> = (0..tenants_n)
+            .map(|t| OpenLoopTenant {
+                tenant: tenant0 + t as u32,
+                rate,
+                requests: n / tenants_n + usize::from(t < n % tenants_n),
+                priority,
+                deadline: if deadline_ms > 0.0 { Some(deadline_ms / 1e3) } else { None },
+                prompt_len: ((prompt_len / 2).max(1), 2 * prompt_len),
+                max_new: ((max_new / 2).max(1), 2 * max_new),
+            })
+            .collect();
+        println!(
+            "open-loop: {n} requests over {tenants_n} tenant stream(s) at {rate} req/s each \
+             (max_batch={}, pages={}x{}, queue_cap={}, deadline_ms={deadline_ms}, \
+             fault_rate={fault_rate})...",
+            gen_cfg.max_batch, gen_cfg.pages, gen_cfg.page_size, gen_cfg.queue_cap
+        );
+        let (metrics, client_stats) = drive_open_loop(
+            &pipeline.model_cfg,
+            &pipeline.weights,
+            &cm,
+            &gen_cfg,
+            sample.seed,
+            &specs,
+        )?;
+        println!("{}", metrics.summary());
+        println!(
+            "goodput {:.1} tok/s (completed requests only) vs raw {:.1} tok/s",
+            goodput_tokens_per_s(&client_stats, metrics.wall_s),
+            metrics.tokens_per_s()
+        );
+        println!("{}", render_tenant_block("Per-tenant serving", &metrics).to_markdown());
+        let table = render_latency_block(
+            "Generation latency percentiles",
+            &[
+                ("end-to-end".to_string(), metrics.latency()),
+                ("time-to-first-token".to_string(), metrics.ttft()),
+                ("per decode step".to_string(), metrics.step()),
+            ],
+        );
+        println!("{}", table.to_markdown());
+        return Ok(());
+    }
+
     let registry = Registry::new(&PathBuf::from(args.get_or("artifacts", "artifacts")));
     let corpus = registry.load("alpaca", "test")?;
     let prompts: Vec<Vec<u8>> = corpus

@@ -1,26 +1,74 @@
-//! The step-level scheduler: continuous batching over the paged KV pool.
+//! The step-level scheduler: deadline- and priority-aware continuous
+//! batching over the paged KV pool.
 //!
 //! One scheduler thread owns the [`KvPool`] and [`PrefixTrie`] and the
 //! decode loop; producers fan [`GenRequest`]s in over an mpsc channel from
-//! any number of threads.  Between decode steps the scheduler:
+//! any number of threads.  Each request moves through a small state
+//! machine:
 //!
-//! 1. **resumes** previously preempted sequences (oldest first),
-//! 2. **admits** queued requests — admission checks *feasibility* (the
-//!    request's worst-case page need fits the whole pool), not worst-case
-//!    reservation: a sequence claims its first page on first write and
-//!    faults in the rest as it grows,
-//! 3. **plans** one batched step, oldest sequence first: prompt prefills
-//!    are split into `prefill_chunk`-row pieces interleaved with neighbors'
-//!    decode rows (one long arrival can't stall in-flight streams), prompts
-//!    covered by the prefix trie skip straight past the shared pages, and a
-//!    prompt *fully* covered replays its last position for logits without
-//!    writing KV,
-//! 4. on pool exhaustion mid-plan, **evicts** reusable prefix-trie pages
-//!    (LRU), then **preempts** the youngest not-yet-planned sequence that
-//!    is younger than the starved one — its pages are released and it
-//!    re-queues with its fed-token history intact, resuming later by
-//!    re-prefilling `prompt ++ already-sampled tokens` deterministically
-//!    (tokens already streamed are never re-sampled or re-sent).
+//! ```text
+//!   arrive ──► queued ──► active ──► Completed / Cancelled / Faulted
+//!      │          │  ▲       │
+//!      │          │  └───────┤ preempt (pool pressure; resumes exactly)
+//!      ▼          ▼          ▼
+//!   Rejected    Shed / DeadlineExceeded  (overload / expiry, any state)
+//! ```
+//!
+//! Between decode steps the scheduler:
+//!
+//! 1. **drains** arrivals into a bounded admission queue.  Infeasible
+//!    requests (empty prompt, `max_new == 0`, worst-case page need over
+//!    the whole pool) are rejected outright.  When the queue is at
+//!    `queue_cap`, the overload policy compares the arrival against the
+//!    globally *worst* work the server holds (queued, preempted, or
+//!    active, by the QoS order below): if the arrival is worst it is
+//!    `Rejected` (pure backpressure — always the case when QoS fields are
+//!    defaults), otherwise the worst request is `Shed` to make room.
+//!    Shedding only ever drops the least-urgent work, which is what makes
+//!    the no-priority-inversion property hold by construction,
+//! 2. **kills** expired deadlines — queued, preempted, or active — with a
+//!    `DeadlineExceeded` terminal (tokens already streamed remain a
+//!    bit-exact prefix of the sequential output),
+//! 3. **resumes** preempted sequences, most urgent first,
+//! 4. **admits** queued requests in QoS order.  Admission checks
+//!    *feasibility*, not worst-case reservation: a sequence claims its
+//!    first page on first write and faults in the rest as it grows,
+//! 5. **plans** one batched step, most urgent sequence first: prompt
+//!    prefills are split into `prefill_chunk`-row pieces interleaved with
+//!    neighbors' decode rows, prompts covered by the prefix trie skip the
+//!    shared pages, and a fully covered prompt replays its last position
+//!    for logits without writing KV,
+//! 6. on pool exhaustion mid-plan, **evicts** reusable prefix-trie pages
+//!    (LRU), then **preempts** the least-urgent not-yet-planned sequence
+//!    that ranks strictly below the starved one — its pages are released
+//!    and it re-queues with its fed-token history intact, resuming later
+//!    by re-prefilling `prompt ++ already-sampled tokens` exactly,
+//! 7. runs the batched step under a **watchdog**: a panic or injected
+//!    fault inside the step retires only the requests whose rows failed
+//!    (terminal `Faulted`), never the server.  The failed attempt is
+//!    re-executed one sequence at a time — sound because the step commits
+//!    pool lengths only at its very end, `prepare` is idempotent, and
+//!    `push_row` overwrites deterministically, so surviving neighbors
+//!    reproduce bit-identical rows (see [`super::step`]).
+//!
+//! **QoS order.**  Requests are ranked by
+//! `(priority DESC, deadline ASC — none sorts last, arrival ASC)`.  With
+//! the default QoS fields (priority 0, no deadline) this collapses to the
+//! arrival-FIFO order of the pre-QoS scheduler, so default-config
+//! schedules — and therefore outputs and metrics — are unchanged (pinned
+//! by the regression tests below).
+//!
+//! **Clocks.**  Deadlines are relative; [`ClockMode::Wall`] measures them
+//! in seconds of server wall-clock, [`ClockMode::Steps`] in executed
+//! decode steps — a deterministic virtual clock that makes deadline and
+//! inversion tests exactly reproducible.
+//!
+//! **Chaos.**  With [`ChaosConfig`] set, seeded deterministic faults are
+//! injected into the loop: per-`(step, request)` step faults take the
+//! watchdog path, and allocation faults make a sequence's first page
+//! `prepare` of a step report exhaustion (driving the real
+//! eviction/preemption ladder; the retry hits the true pool, so surviving
+//! outputs keep their bits — only the schedule is perturbed).
 //!
 //! Output stays bit-identical to a fresh single-request run
 //! ([`crate::model::generate::generate`]) through all of it: the batched
@@ -31,10 +79,12 @@
 //! token regardless of scheduling).
 //!
 //! Progress guarantee: admission rejects any request whose worst-case page
-//! need exceeds the pool, and the oldest active sequence plans first with
-//! the whole trie evictable and every younger sequence preemptable — so the
-//! oldest always advances, and induction retires everything.
+//! need exceeds the pool, and the most urgent active sequence plans first
+//! with the whole trie evictable and every lower-ranked sequence
+//! preemptable — so the front of the QoS order always advances, and
+//! induction retires everything.
 
+use super::chaos::ChaosConfig;
 use super::kv_pool::{KvPool, SeqId};
 use super::prefix::{PrefixTrie, ROOT};
 use super::step::{decode_step_batched, StepRow};
@@ -48,7 +98,10 @@ use crate::util::rng::Rng;
 use crate::util::threads::ThreadBudget;
 use crate::util::timer::Timer;
 use anyhow::Result;
+use std::cmp::Reverse;
 use std::collections::VecDeque;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::time::Instant;
 
@@ -68,6 +121,41 @@ pub struct GenRequest {
     pub stream: TokenStream,
     /// When the client enqueued the request (for latency metrics).
     pub enqueued: Instant,
+    /// Tenant id for per-tenant accounting (default 0 = untagged).
+    pub tenant: u32,
+    /// Scheduling priority — higher runs first (default 0).
+    pub priority: u8,
+    /// Relative deadline in the server's [`ClockMode`] units (seconds or
+    /// steps), measured from enqueue; `None` (the default) never expires.
+    pub deadline: Option<f64>,
+}
+
+impl GenRequest {
+    /// A request with default QoS fields (tenant 0, priority 0, no
+    /// deadline) — exactly the pre-QoS FIFO behavior.
+    pub fn new(id: u64, prompt: Vec<u8>, max_new: usize, sample: SampleConfig, stream: TokenStream) -> Self {
+        GenRequest {
+            id,
+            prompt,
+            max_new,
+            sample,
+            stream,
+            enqueued: Instant::now(),
+            tenant: 0,
+            priority: 0,
+            deadline: None,
+        }
+    }
+}
+
+/// Which clock drives deadline expiry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Wall-clock seconds (production; what `--deadline-ms` means).
+    Wall,
+    /// One tick per executed decode step — a deterministic virtual clock
+    /// for reproducible deadline tests.
+    Steps,
 }
 
 /// Generation-server knobs.
@@ -94,6 +182,16 @@ pub struct GenConfig {
     /// Thread budget for the batched step's GEMMs (0 = all cores);
     /// bit-identical results at every value.
     pub workers: usize,
+    /// Bound on the admission queue (0 = unbounded).  At the cap, the
+    /// overload policy rejects the arrival or sheds the globally
+    /// least-urgent request — explicit backpressure instead of unbounded
+    /// memory growth.
+    pub queue_cap: usize,
+    /// Clock for deadline expiry (wall seconds vs. deterministic steps).
+    pub clock: ClockMode,
+    /// Deterministic fault injection; `None` (and all-zero rates) is
+    /// production behavior.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Default for GenConfig {
@@ -105,7 +203,36 @@ impl Default for GenConfig {
             prefill_chunk: 16,
             prefix_share: true,
             workers: 0,
+            queue_cap: 0,
+            clock: ClockMode::Wall,
+            chaos: None,
         }
+    }
+}
+
+/// Total QoS order: higher priority first, then earliest deadline (EDF —
+/// `None` sorts last), then arrival.  Smaller key = more urgent.  With
+/// default QoS fields this is exactly arrival order.
+type QosKey = (Reverse<u8>, u64, u64);
+
+fn qos_key(priority: u8, deadline_at: Option<f64>, arrival: u64) -> QosKey {
+    // `deadline_at` is clamped non-negative at stamping, so the f64 bit
+    // pattern is monotone in the deadline.
+    let d = deadline_at.map_or(u64::MAX, |t| t.max(0.0).to_bits());
+    (Reverse(priority), d, arrival)
+}
+
+/// A request waiting in the bounded admission queue.
+struct Queued {
+    req: GenRequest,
+    arrival: u64,
+    /// Absolute expiry instant on the server clock (stamped at drain).
+    deadline_at: Option<f64>,
+}
+
+impl Queued {
+    fn key(&self) -> QosKey {
+        qos_key(self.req.priority, self.deadline_at, self.arrival)
     }
 }
 
@@ -123,13 +250,21 @@ struct Active {
     produced: usize,
     /// Enqueue → first generated token, set once (survives preemption).
     ttft_s: Option<f64>,
-    /// Admission order — planning priority and preemption seniority.
+    /// Admission order — the FIFO tiebreak inside the QoS order.
     arrival: u64,
+    /// Absolute expiry instant on the server clock.
+    deadline_at: Option<f64>,
     /// Trie node of the last matched/registered prompt chunk ([`ROOT`]
     /// when none) — the parent for the next chunk this request registers.
     trie_tail: usize,
     /// Prompt chunks already matched or registered into the trie.
     trie_chunks: usize,
+}
+
+impl Active {
+    fn key(&self) -> QosKey {
+        qos_key(self.req.priority, self.deadline_at, self.arrival)
+    }
 }
 
 /// What happens to an active sequence at the end of a step.
@@ -138,6 +273,64 @@ enum Fate {
     Continue,
     Finish(FinishReason),
     Preempt,
+}
+
+/// Where the overload policy found its shed victim.
+enum Slot {
+    Queued(usize),
+    Preempted(usize),
+    Active(usize),
+}
+
+/// Preemption-victim order (largest wins): least urgent first — lowest
+/// priority, then latest deadline (`None` most preemptable) — preferring
+/// fully-private sequences among equals (they free every page), then the
+/// youngest.  With default QoS fields this is exactly the pre-QoS
+/// `(!shared, arrival)` victim order.
+fn victim_key(a: &Active, pool: &KvPool) -> (Reverse<u8>, u64, bool, u64) {
+    (
+        Reverse(a.req.priority),
+        a.deadline_at.map_or(u64::MAX, |t| t.max(0.0).to_bits()),
+        !pool.seq_is_shared(a.seq),
+        a.arrival,
+    )
+}
+
+/// The server clock: wall seconds, or executed steps as a deterministic
+/// virtual time.
+fn clock_now(mode: ClockMode, wall: &Timer, steps: usize) -> f64 {
+    match mode {
+        ClockMode::Wall => wall.elapsed_s(),
+        ClockMode::Steps => steps as f64,
+    }
+}
+
+/// Emit the request's single terminal event and account it.  Every exit
+/// path funnels through here, which is what pins the exactly-one-`Done`
+/// contract.  `served` marks requests that were actually admitted (their
+/// retirement counts in `completed` and feeds the latency rings);
+/// queue-level exits pass `false`.
+fn send_done(
+    metrics: &mut GenServerMetrics,
+    req: &GenRequest,
+    finish: FinishReason,
+    generated: usize,
+    ttft_s: Option<f64>,
+    served: bool,
+) {
+    let latency = req.enqueued.elapsed().as_secs_f64();
+    let ttft = ttft_s.unwrap_or(latency);
+    if served {
+        metrics.record_finish(latency, ttft);
+    }
+    metrics.record_terminal(req.tenant, finish, generated);
+    let _ = req.stream.send(StreamEvent::Done(DoneStats {
+        id: req.id,
+        generated,
+        finish,
+        latency_s: latency,
+        ttft_s: ttft,
+    }));
 }
 
 /// Give `a` a pool sequence: fork over the trie's longest registered
@@ -178,7 +371,9 @@ fn pinned_tails(active: &[Active], evicted: &[usize], page_size: usize) -> Vec<u
 /// admitted sequence has finished.  Blocks the calling thread (which
 /// becomes the scheduler/owner of the pool and trie — all page refcounts
 /// mutate here, between steps, which is why none of it needs locks);
-/// returns accumulated metrics.
+/// returns accumulated metrics.  The scheduler never panics on client or
+/// model misbehavior: dropped receivers degrade to cancellation and step
+/// failures are isolated by the watchdog.
 pub fn serve_generation(
     cfg: &ModelConfig,
     weights: &Weights,
@@ -191,33 +386,23 @@ pub fn serve_generation(
     let pages = gen.pages.max(1);
     let chunk_cap = if gen.prefill_chunk == 0 { usize::MAX } else { gen.prefill_chunk };
     let step_workers = ThreadBudget::new(gen.workers).total();
+    let chaos = gen.chaos.filter(|c| c.is_active());
     let mut pool = KvPool::new(cfg, pages, page_size);
     let mut trie = PrefixTrie::new(page_size);
     let mut active: Vec<Active> = Vec::new();
     let mut preempted: VecDeque<Active> = VecDeque::new();
+    let mut queue: VecDeque<Queued> = VecDeque::new();
     let mut metrics = GenServerMetrics::default();
     let mut open = true;
     let mut arrivals: u64 = 0;
     let wall = Timer::start();
     loop {
-        // ---- resume preempted sequences first (they keep seniority) ----
-        while active.len() < max_batch && !preempted.is_empty() {
-            while pool.free_pages() == 0 {
-                let pins = pinned_tails(&active, &[], page_size);
-                if !trie.evict_lru(&mut pool, &pins) {
-                    break;
-                }
-            }
-            if pool.free_pages() == 0 {
-                break;
-            }
-            let mut a = preempted.pop_front().expect("checked non-empty");
-            attach_seq(&mut a, &mut pool, &mut trie, gen.prefix_share);
-            active.push(a);
-        }
-        // ---- admission: feasibility-checked, first page faults in later ----
-        while open && active.len() < max_batch && (pool.free_pages() > 0 || trie.entries() > 0) {
-            let next = if active.is_empty() && preempted.is_empty() {
+        // ---- drain arrivals into the bounded admission queue ----
+        loop {
+            let idle = active.is_empty() && preempted.is_empty() && queue.is_empty();
+            let next = if !open {
+                None
+            } else if idle {
                 // Nothing in flight: block for work (or shutdown).
                 match requests.recv() {
                     Ok(r) => Some(r),
@@ -239,53 +424,173 @@ pub fn serve_generation(
             let Some(req) = next else { break };
             // A request feeds prompt + max_new - 1 positions (the final
             // sampled token is never fed back).  It is infeasible only if
-            // that worst case cannot fit the ENTIRE pool — there is no
-            // per-slot cap anymore.
+            // that worst case cannot fit the ENTIRE pool.
             let infeasible = req.prompt.is_empty() || req.max_new == 0 || {
                 (req.prompt.len() + req.max_new - 1).div_ceil(page_size) > pool.pages()
             };
             if infeasible {
-                let latency = req.enqueued.elapsed().as_secs_f64();
-                let _ = req.stream.send(StreamEvent::Done(DoneStats {
-                    id: req.id,
-                    generated: 0,
-                    finish: FinishReason::Rejected,
-                    latency_s: latency,
-                    ttft_s: latency,
-                }));
-                metrics.rejected += 1;
+                send_done(&mut metrics, &req, FinishReason::Rejected, 0, None, false);
                 continue;
             }
-            let rng = Rng::new(req.sample.seed);
-            let fed = req.prompt.clone();
+            // Stamp the relative deadline into an absolute expiry on the
+            // server clock.  Wall mode anchors at the client's enqueue
+            // instant (queue wait counts against the deadline); the steps
+            // clock can only anchor at drain.
+            let now_s = clock_now(gen.clock, &wall, metrics.steps);
+            let deadline_at = req.deadline.map(|d| {
+                let anchor = match gen.clock {
+                    ClockMode::Wall => (now_s - req.enqueued.elapsed().as_secs_f64()).max(0.0),
+                    ClockMode::Steps => now_s,
+                };
+                anchor + d.max(0.0)
+            });
+            // ---- overload policy at the queue bound ----
+            if gen.queue_cap > 0 && queue.len() >= gen.queue_cap {
+                let new_key = qos_key(req.priority, deadline_at, arrivals);
+                // Find the globally WORST work the server holds (largest
+                // QoS key across queued, preempted, and active) — work is
+                // only dropped when everything kept is more urgent, which
+                // is what rules out priority inversion.
+                let mut worst: Option<(QosKey, Slot)> = None;
+                let mut consider = |key: QosKey, slot: Slot| {
+                    if worst.as_ref().map_or(true, |(wk, _)| key > *wk) {
+                        worst = Some((key, slot));
+                    }
+                };
+                for (k, q) in queue.iter().enumerate() {
+                    consider(q.key(), Slot::Queued(k));
+                }
+                for (k, a) in preempted.iter().enumerate() {
+                    consider(a.key(), Slot::Preempted(k));
+                }
+                for (k, a) in active.iter().enumerate() {
+                    consider(a.key(), Slot::Active(k));
+                }
+                match worst {
+                    Some((wk, slot)) if wk > new_key => match slot {
+                        Slot::Queued(k) => {
+                            if let Some(q) = queue.remove(k) {
+                                send_done(&mut metrics, &q.req, FinishReason::Shed, 0, None, false);
+                            }
+                        }
+                        Slot::Preempted(k) => {
+                            // Its sequence was already released at preemption.
+                            if let Some(a) = preempted.remove(k) {
+                                send_done(&mut metrics, &a.req, FinishReason::Shed, a.produced, a.ttft_s, true);
+                            }
+                        }
+                        Slot::Active(k) => {
+                            let a = active.swap_remove(k);
+                            pool.release_seq(a.seq);
+                            send_done(&mut metrics, &a.req, FinishReason::Shed, a.produced, a.ttft_s, true);
+                        }
+                    },
+                    _ => {
+                        // The arrival itself is the least urgent work in
+                        // sight: pure backpressure.
+                        send_done(&mut metrics, &req, FinishReason::Rejected, 0, None, false);
+                        continue;
+                    }
+                }
+            }
+            queue.push_back(Queued { req, arrival: arrivals, deadline_at });
+            arrivals += 1;
+            metrics.peak_queue = metrics.peak_queue.max(queue.len());
+        }
+        // ---- kill expired deadlines in every state ----
+        let now_s = clock_now(gen.clock, &wall, metrics.steps);
+        let expired = |deadline_at: Option<f64>| deadline_at.is_some_and(|t| now_s >= t);
+        let mut k = 0;
+        while k < queue.len() {
+            if expired(queue[k].deadline_at) {
+                if let Some(q) = queue.remove(k) {
+                    send_done(&mut metrics, &q.req, FinishReason::DeadlineExceeded, 0, None, false);
+                }
+            } else {
+                k += 1;
+            }
+        }
+        let mut k = 0;
+        while k < preempted.len() {
+            if expired(preempted[k].deadline_at) {
+                if let Some(a) = preempted.remove(k) {
+                    send_done(&mut metrics, &a.req, FinishReason::DeadlineExceeded, a.produced, a.ttft_s, true);
+                }
+            } else {
+                k += 1;
+            }
+        }
+        let mut k = 0;
+        while k < active.len() {
+            if expired(active[k].deadline_at) {
+                let a = active.swap_remove(k);
+                pool.release_seq(a.seq);
+                send_done(&mut metrics, &a.req, FinishReason::DeadlineExceeded, a.produced, a.ttft_s, true);
+            } else {
+                k += 1;
+            }
+        }
+        // ---- resume preempted sequences first (they keep seniority) ----
+        preempted.make_contiguous().sort_by_key(Active::key);
+        while active.len() < max_batch && !preempted.is_empty() {
+            while pool.free_pages() == 0 {
+                let pins = pinned_tails(&active, &[], page_size);
+                if !trie.evict_lru(&mut pool, &pins) {
+                    break;
+                }
+            }
+            if pool.free_pages() == 0 {
+                break;
+            }
+            let Some(mut a) = preempted.pop_front() else { break };
+            attach_seq(&mut a, &mut pool, &mut trie, gen.prefix_share);
+            active.push(a);
+        }
+        // ---- admit queued requests, most urgent first ----
+        while active.len() < max_batch
+            && (pool.free_pages() > 0 || trie.entries() > 0)
+            && !queue.is_empty()
+        {
+            let best = (0..queue.len()).min_by_key(|&k| queue[k].key());
+            let Some(q) = best.and_then(|k| queue.remove(k)) else { break };
+            let rng = Rng::new(q.req.sample.seed);
+            let fed = q.req.prompt.clone();
             let mut a = Active {
-                req,
+                req: q.req,
                 seq: 0,
                 rng,
                 fed,
                 produced: 0,
                 ttft_s: None,
-                arrival: arrivals,
+                arrival: q.arrival,
+                deadline_at: q.deadline_at,
                 trie_tail: ROOT,
                 trie_chunks: 0,
             };
-            arrivals += 1;
             attach_seq(&mut a, &mut pool, &mut trie, gen.prefix_share);
             active.push(a);
         }
         if active.is_empty() {
-            if preempted.is_empty() {
+            if preempted.is_empty() && queue.is_empty() {
                 if !open {
                     break;
                 }
                 continue; // back to the blocking recv
             }
-            continue; // retry resuming (eviction above frees pages)
+            continue; // retry resuming/admitting (eviction frees pages)
         }
-        // ---- plan one step: oldest first, chunked prefill, fault-in ----
+        // ---- plan one step: QoS order, chunked prefill, fault-in ----
+        let step_no = metrics.steps as u64;
         let mut order: Vec<usize> = (0..active.len()).collect();
-        order.sort_by_key(|&i| active[i].arrival);
+        order.sort_by_key(|&i| active[i].key());
+        let mut rank: Vec<usize> = vec![0; active.len()];
+        for (r, &i) in order.iter().enumerate() {
+            rank[i] = r;
+        }
         let mut rows: Vec<StepRow> = Vec::new();
+        // Per-active contiguous row ranges — the watchdog's isolation
+        // units.
+        let mut groups: Vec<(usize, Range<usize>)> = Vec::new();
         let mut logits_row: Vec<Option<usize>> = vec![None; active.len()];
         let mut planned: Vec<bool> = vec![false; active.len()];
         let mut evicted: Vec<usize> = Vec::new();
@@ -296,6 +601,7 @@ pub fn serve_generation(
             let seq = active[i].seq;
             let committed = pool.len(seq);
             let flen = active[i].fed.len();
+            let row_start = rows.len();
             if committed == flen {
                 // The whole fed history is already cached (full prefix
                 // cover): replay the last position for its logits only.
@@ -308,11 +614,37 @@ pub fn serve_generation(
                 });
                 logits_row[i] = Some(rows.len() - 1);
                 planned[i] = true;
+                groups.push((i, row_start..rows.len()));
                 continue;
             }
             let mut end = committed + (flen - committed).min(chunk_cap);
             let mut pos = committed;
+            // Chaos: at most one simulated allocation failure per
+            // sequence per step.
+            let mut alloc_faults = match &chaos {
+                Some(c) if c.alloc_fault(step_no, active[i].req.id) => 1u32,
+                _ => 0,
+            };
             while pos < end {
+                if alloc_faults > 0 {
+                    alloc_faults -= 1;
+                    // Simulated exhaustion: drive ONE rung of the real
+                    // recovery ladder (trie eviction, else preemption),
+                    // then retry against the true pool — the fault
+                    // perturbs only the schedule, never the output bits.
+                    let pins = pinned_tails(&active, &evicted, page_size);
+                    if !trie.evict_lru(&mut pool, &pins) {
+                        let victim = (0..active.len())
+                            .filter(|&j| !planned[j] && !evicted.contains(&j) && rank[j] > rank[i])
+                            .max_by_key(|&j| victim_key(&active[j], &pool));
+                        if let Some(v) = victim {
+                            pool.release_seq(active[v].seq);
+                            evicted.push(v);
+                            metrics.preemptions += 1;
+                        }
+                    }
+                    continue;
+                }
                 if pool.prepare(seq, pos).is_some() {
                     pos += 1;
                     continue;
@@ -322,16 +654,13 @@ pub fn serve_generation(
                 if trie.evict_lru(&mut pool, &pins) {
                     continue;
                 }
-                // ...then preempt the youngest unplanned sequence younger
-                // than this one (never a senior — that would livelock),
-                // preferring fully-private victims (they free every page).
+                // ...then preempt the least-urgent unplanned sequence
+                // ranked strictly below this one (never above — that
+                // would livelock), preferring fully-private victims among
+                // equal keys (they free every page).
                 let victim = (0..active.len())
-                    .filter(|&j| {
-                        !planned[j]
-                            && !evicted.contains(&j)
-                            && active[j].arrival > active[i].arrival
-                    })
-                    .max_by_key(|&j| (!pool.seq_is_shared(active[j].seq), active[j].arrival));
+                    .filter(|&j| !planned[j] && !evicted.contains(&j) && rank[j] > rank[i])
+                    .max_by_key(|&j| victim_key(&active[j], &pool));
                 match victim {
                     Some(v) => {
                         pool.release_seq(active[v].seq);
@@ -359,23 +688,87 @@ pub fn serve_generation(
                 if end == flen {
                     logits_row[i] = Some(rows.len() - 1);
                 }
+                groups.push((i, row_start..rows.len()));
             }
         }
-        // ---- one batched decode step over the planned rows ----
+        // ---- one batched decode step, guarded by the watchdog ----
+        let vocab = cfg.vocab;
+        let injected: Vec<bool> = {
+            let mut v = vec![false; active.len()];
+            if let Some(c) = &chaos {
+                for &(i, _) in &groups {
+                    v[i] = c.step_fault(step_no, active[i].req.id);
+                }
+            }
+            v
+        };
+        let inject_any = injected.iter().any(|&b| b);
+        let mut fault_flags: Vec<bool> = vec![false; active.len()];
         let step_t = Timer::start();
-        let logits = decode_step_batched(cfg, weights, overrides, &mut pool, &rows, step_workers)?;
+        // &mut KvPool is not UnwindSafe by default; the wrap is sound
+        // because a failed attempt leaves the pool in a re-executable
+        // state — committed lengths are untouched (the step calls
+        // `set_len` only at its very end), `prepare` is idempotent, and
+        // `push_row` deterministically overwrites.
+        let batched = if inject_any {
+            // An injected fault aborts the batched attempt up front
+            // (nothing executed), exactly like an early step error.
+            Err(anyhow::anyhow!("chaos: injected step fault (step {step_no})"))
+        } else {
+            match catch_unwind(AssertUnwindSafe(|| {
+                decode_step_batched(cfg, weights, overrides, &mut pool, &rows, step_workers)
+            })) {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("panic in batched decode step {step_no}")),
+            }
+        };
+        let logits = match batched {
+            Ok(l) => l,
+            Err(_) => {
+                // Watchdog: the batched attempt died.  Re-execute one
+                // sequence at a time — bit-identical to the batched run by
+                // the step's per-row contract — and retire only the rows
+                // that still fail.  Rows of logit-less groups land in the
+                // zeroed buffer and are never read.
+                let mut merged = vec![0.0f32; rows.len() * vocab];
+                for (i, range) in &groups {
+                    if injected[*i] {
+                        fault_flags[*i] = true;
+                        continue;
+                    }
+                    let sub = &rows[range.clone()];
+                    let one = catch_unwind(AssertUnwindSafe(|| {
+                        decode_step_batched(cfg, weights, overrides, &mut pool, sub, step_workers)
+                    }));
+                    match one {
+                        Ok(Ok(l)) => {
+                            merged[range.start * vocab..range.end * vocab].copy_from_slice(&l);
+                        }
+                        _ => fault_flags[*i] = true,
+                    }
+                }
+                merged
+            }
+        };
         metrics.record_step(
             step_t.elapsed_s(),
             (active.len() - evicted.len()) as f64,
             pool.pages_in_use() as f64 / pool.pages() as f64,
         );
         // ---- sample / stream for every sequence whose logits we read ----
-        let vocab = cfg.vocab;
         let mut fate: Vec<Fate> = (0..active.len()).map(|_| Fate::Continue).collect();
         for &v in &evicted {
             fate[v] = Fate::Preempt;
         }
+        for (i, &failed) in fault_flags.iter().enumerate() {
+            if failed {
+                fate[i] = Fate::Finish(FinishReason::Faulted);
+            }
+        }
         for i in 0..active.len() {
+            if !matches!(fate[i], Fate::Continue) {
+                continue;
+            }
             let Some(ri) = logits_row[i] else { continue };
             let a = &mut active[i];
             let next = sample_token(&logits[ri * vocab..(ri + 1) * vocab], a.req.sample, &mut a.rng);
@@ -421,24 +814,11 @@ pub fn serve_generation(
                 Fate::Preempt => preempted.push_back(a), // seq already released
                 Fate::Finish(finish) => {
                     pool.release_seq(a.seq);
-                    let latency = a.req.enqueued.elapsed().as_secs_f64();
-                    let ttft = a.ttft_s.unwrap_or(latency);
-                    metrics.record_finish(latency, ttft);
-                    if finish == FinishReason::Cancelled {
-                        metrics.cancelled += 1;
-                    }
-                    let _ = a.req.stream.send(StreamEvent::Done(DoneStats {
-                        id: a.req.id,
-                        generated: a.produced,
-                        finish,
-                        latency_s: latency,
-                        ttft_s: ttft,
-                    }));
+                    send_done(&mut metrics, &a.req, finish, a.produced, a.ttft_s, true);
                 }
             }
         }
         active = still;
-        preempted.make_contiguous().sort_by_key(|a| a.arrival);
     }
     trie.clear(&mut pool);
     metrics.prefix_hit_tokens = trie.hit_positions;
@@ -452,7 +832,7 @@ mod tests {
     use super::*;
     use crate::model::forward::NoOverride;
     use crate::model::generate::generate;
-    use crate::serve::stream::collect_stream;
+    use crate::serve::stream::{collect_stream, stream_channel};
     use crate::util::prop::check;
     use std::sync::mpsc::channel;
 
@@ -480,6 +860,25 @@ mod tests {
             .collect()
     }
 
+    /// Preload explicit [`GenRequest`]s (QoS fields and all), serve on
+    /// this thread, and hand back each request's drained stream.
+    fn run_qos(
+        cfg: &ModelConfig,
+        w: &Weights,
+        gen: &GenConfig,
+        reqs: Vec<GenRequest>,
+        events: Vec<std::sync::mpsc::Receiver<StreamEvent>>,
+    ) -> (Vec<(Vec<u8>, Option<DoneStats>)>, GenServerMetrics) {
+        let (tx, rx) = channel();
+        for r in reqs {
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let metrics = serve_generation(cfg, w, &NoOverride, gen, rx).unwrap();
+        let outs = events.iter().map(collect_stream).collect();
+        (outs, metrics)
+    }
+
     #[test]
     fn serve_matches_sequential_generate_all_families() {
         for name in ["llama-t", "opt-t", "mistral-t"] {
@@ -501,6 +900,7 @@ mod tests {
                 prefill_chunk: 2,
                 prefix_share: true,
                 workers: 1,
+                ..GenConfig::default()
             };
             let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
             assert_eq!(got, expect, "{name}: served tokens must equal sequential generate");
@@ -532,6 +932,7 @@ mod tests {
                     prefill_chunk: 3,
                     prefix_share: true,
                     workers,
+                    ..GenConfig::default()
                 };
                 let (got, metrics) = run_server(&cfg, &w, &gen, reqs.clone());
                 assert_eq!(
@@ -575,6 +976,7 @@ mod tests {
                 prefill_chunk: *g.choose(&[0usize, 1, 3]),
                 prefix_share: g.bool(),
                 workers,
+                ..GenConfig::default()
             };
             let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
             if got != expect {
@@ -602,28 +1004,25 @@ mod tests {
             prefill_chunk: 0,
             prefix_share: false,
             workers: 1,
+            ..GenConfig::default()
         };
         let (tx, rx) = channel();
-        let (s1, r1) = super::super::stream::stream_channel();
-        let (s2, r2) = super::super::stream::stream_channel();
-        let (s3, r3) = super::super::stream::stream_channel();
-        let (s4, r4) = super::super::stream::stream_channel();
+        let (s1, r1) = stream_channel();
+        let (s2, r2) = stream_channel();
+        let (s3, r3) = stream_channel();
+        let (s4, r4) = stream_channel();
         let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 1 };
         // Empty prompt; needs ⌈(6+4-1)/4⌉ = 3 pages > 2; max_new == 0.
         let bad = [
-            GenRequest { id: 0, prompt: vec![], max_new: 2, sample: sc, stream: s1, enqueued: Instant::now() },
-            GenRequest { id: 1, prompt: vec![1; 6], max_new: 4, sample: sc, stream: s2, enqueued: Instant::now() },
-            GenRequest { id: 2, prompt: vec![1; 2], max_new: 0, sample: sc, stream: s3, enqueued: Instant::now() },
+            GenRequest::new(0, vec![], 2, sc, s1),
+            GenRequest::new(1, vec![1; 6], 4, sc, s2),
+            GenRequest::new(2, vec![1; 2], 0, sc, s3),
         ];
         for r in bad {
             tx.send(r).unwrap();
         }
         // Exact fit: ⌈(5+4-1)/4⌉ = 2 == pool pages must be ADMITTED.
-        tx.send(GenRequest {
-            id: 3, prompt: vec![1; 5], max_new: 4, sample: sc, stream: s4,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(GenRequest::new(3, vec![1; 5], 4, sc, s4)).unwrap();
         drop(tx);
         let metrics = serve_generation(&cfg, &w, &NoOverride, &gen, rx).unwrap();
         assert_eq!(metrics.rejected, 3);
@@ -655,6 +1054,7 @@ mod tests {
             prefill_chunk: 4,
             prefix_share: true,
             workers: 1,
+            ..GenConfig::default()
         };
         let sc = SampleConfig { temperature: 0.7, top_k: 16, seed: 9 };
         let prompt: Vec<u8> = (0..6).map(|t| (t * 39 + 1) as u8).collect();
@@ -691,6 +1091,7 @@ mod tests {
             prefill_chunk: 0,
             prefix_share: true,
             workers: 1,
+            ..GenConfig::default()
         };
         let (got, metrics) = run_server(&cfg, &w, &base, reqs.clone());
         assert_eq!(got, expect, "shared-prefix output must equal sequential");
@@ -726,6 +1127,7 @@ mod tests {
             prefill_chunk: 0,
             prefix_share: true,
             workers: 1,
+            ..GenConfig::default()
         };
         let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
         assert_eq!(got, expect);
@@ -749,6 +1151,7 @@ mod tests {
             prefill_chunk: 0,
             prefix_share: false,
             workers: 1,
+            ..GenConfig::default()
         };
         let reqs = vec![
             (vec![11, 12, 13], 3, SampleConfig { temperature: 0.9, top_k: 6, seed: 41 }),
@@ -773,22 +1176,15 @@ mod tests {
             prefill_chunk: 0,
             prefix_share: true,
             workers: 1,
+            ..GenConfig::default()
         };
         let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 5 };
         let (tx, rx) = channel();
-        let (s1, r1) = super::super::stream::stream_channel();
+        let (s1, r1) = stream_channel();
         drop(r1); // client 1 gone before serving starts
-        tx.send(GenRequest {
-            id: 0, prompt: vec![3, 4], max_new: 20, sample: sc, stream: s1,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
-        let (s2, r2) = super::super::stream::stream_channel();
-        tx.send(GenRequest {
-            id: 1, prompt: vec![9, 8, 7], max_new: 5, sample: sc, stream: s2,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(GenRequest::new(0, vec![3, 4], 20, sc, s1)).unwrap();
+        let (s2, r2) = stream_channel();
+        tx.send(GenRequest::new(1, vec![9, 8, 7], 5, sc, s2)).unwrap();
         drop(tx);
         let metrics = serve_generation(&cfg, &w, &NoOverride, &gen, rx).unwrap();
         assert_eq!(metrics.cancelled, 1);
@@ -797,5 +1193,513 @@ mod tests {
         let expect = generate(&cfg, &w, &NoOverride, &[9, 8, 7], 5, sc).unwrap();
         assert_eq!(tokens, expect);
         assert_eq!(done.unwrap().finish, FinishReason::Completed);
+    }
+
+    // ---- QoS / overload / chaos tests ----
+
+    /// Satellite regression pin: with default QoS fields the new scheduler
+    /// is the old FIFO scheduler — same outputs, no shed/deadline/fault
+    /// terminals, all accounting under tenant 0.
+    #[test]
+    fn serve_default_qos_is_fifo_regression() {
+        let (cfg, w) = tiny("mistral-t");
+        let reqs: Vec<(Vec<u8>, usize, SampleConfig)> = (0..6)
+            .map(|i| {
+                (
+                    (0..(1 + i % 3)).map(|t| ((t * 91 + i * 17) % 250) as u8).collect(),
+                    2 + i % 4,
+                    SampleConfig { temperature: 1.0, top_k: 10, seed: 900 + i as u64 },
+                )
+            })
+            .collect();
+        let expect = reference(&cfg, &w, &reqs);
+        let gen = GenConfig {
+            max_batch: 2,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 2,
+            prefix_share: true,
+            workers: 1,
+            ..GenConfig::default()
+        };
+        let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
+        assert_eq!(got, expect, "default QoS must reproduce the FIFO scheduler's output");
+        assert_eq!(metrics.completed, 6);
+        assert_eq!(metrics.shed, 0);
+        assert_eq!(metrics.deadline_exceeded, 0);
+        assert_eq!(metrics.faulted, 0);
+        assert_eq!(metrics.tenants.len(), 1, "all default requests account to tenant 0");
+        let t0 = &metrics.tenants[&0];
+        assert_eq!(t0.requests, 6);
+        assert_eq!(t0.completed, 6);
+        assert_eq!(t0.generated as usize, metrics.generated);
+    }
+
+    /// Deadlines on the deterministic steps clock: a request that cannot
+    /// finish in time is killed mid-stream with a `DeadlineExceeded`
+    /// terminal, and the tokens it did stream are a bit-exact prefix of
+    /// sequential generate.
+    #[test]
+    fn serve_deadline_exceeded_kills_expired_request() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 1,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            clock: ClockMode::Steps,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.7, top_k: 12, seed: 61 };
+        let (s1, r1) = stream_channel();
+        let mut r = GenRequest::new(0, vec![5, 6], 10, sc, s1);
+        r.deadline = Some(3.0); // three decode steps, far short of 10 tokens
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, vec![r], vec![r1]);
+        let (tokens, done) = &outs[0];
+        let done = done.as_ref().unwrap();
+        assert_eq!(done.finish, FinishReason::DeadlineExceeded);
+        assert_eq!(metrics.deadline_exceeded, 1);
+        assert_eq!(metrics.completed, 1, "an admitted deadline kill still retires");
+        // Steps clock: admitted at step 0, killed when the clock reaches 3
+        // → exactly 3 tokens (prompt prefill + first token share step 0).
+        assert_eq!(tokens.len(), 3);
+        let expect = generate(&cfg, &w, &NoOverride, &[5, 6], 10, sc).unwrap();
+        assert_eq!(tokens[..], expect[..3], "streamed prefix must stay bit-exact");
+    }
+
+    /// A deadline that is already hopeless at arrival kills the request in
+    /// the queue — exactly one `DeadlineExceeded`, zero tokens — while a
+    /// neighbor without a deadline completes with full parity.
+    #[test]
+    fn serve_deadline_expired_in_queue_never_runs() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 1,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            clock: ClockMode::Steps,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 62 };
+        let (s1, r1) = stream_channel();
+        let mut dead = GenRequest::new(0, vec![9, 9], 4, sc, s1);
+        dead.deadline = Some(0.0);
+        let (s2, r2) = stream_channel();
+        let live = GenRequest::new(1, vec![1, 2, 3], 4, sc, s2);
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, vec![dead, live], vec![r1, r2]);
+        assert_eq!(outs[0].0.len(), 0);
+        assert_eq!(outs[0].1.as_ref().unwrap().finish, FinishReason::DeadlineExceeded);
+        let expect = generate(&cfg, &w, &NoOverride, &[1, 2, 3], 4, sc).unwrap();
+        assert_eq!(outs[1].0, expect);
+        assert_eq!(outs[1].1.as_ref().unwrap().finish, FinishReason::Completed);
+        assert_eq!(metrics.deadline_exceeded, 1);
+        assert_eq!(metrics.completed, 1, "queue-level kills never count as served");
+    }
+
+    /// Bounded admission queue, equal QoS: overflow arrivals are rejected
+    /// (pure backpressure — FIFO keeps the oldest), each with exactly one
+    /// `Rejected` terminal, and the queued request completes untouched.
+    #[test]
+    fn serve_bounded_queue_rejects_overflow() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 1,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            queue_cap: 1,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 71 };
+        let mut reqs = Vec::new();
+        let mut events = Vec::new();
+        for i in 0..4 {
+            let (s, r) = stream_channel();
+            reqs.push(GenRequest::new(i, vec![10 + i as u8, 20], 3, sc, s));
+            events.push(r);
+        }
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, reqs, events);
+        // All four arrive in one burst before any admission: the first
+        // fills the queue, the rest are its overflow.
+        let expect = generate(&cfg, &w, &NoOverride, &[10, 20], 3, sc).unwrap();
+        assert_eq!(outs[0].0, expect);
+        assert_eq!(outs[0].1.as_ref().unwrap().finish, FinishReason::Completed);
+        for o in &outs[1..] {
+            assert!(o.0.is_empty());
+            assert_eq!(o.1.as_ref().unwrap().finish, FinishReason::Rejected);
+        }
+        assert_eq!(metrics.rejected, 3);
+        assert_eq!(metrics.shed, 0, "equal QoS never sheds — arrivals are the worst");
+        assert_eq!(metrics.peak_queue, 1);
+    }
+
+    /// At the queue bound a higher-priority arrival displaces the queued
+    /// low-priority request, which gets exactly one `Shed` terminal.
+    #[test]
+    fn serve_overload_sheds_lowest_priority() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 1,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            queue_cap: 1,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 72 };
+        let (s1, r1) = stream_channel();
+        let low = GenRequest::new(0, vec![3, 4], 3, sc, s1);
+        let (s2, r2) = stream_channel();
+        let mut high = GenRequest::new(1, vec![5, 6], 3, sc, s2);
+        high.priority = 5;
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, vec![low, high], vec![r1, r2]);
+        assert!(outs[0].0.is_empty());
+        assert_eq!(outs[0].1.as_ref().unwrap().finish, FinishReason::Shed);
+        let expect = generate(&cfg, &w, &NoOverride, &[5, 6], 3, sc).unwrap();
+        assert_eq!(outs[1].0, expect);
+        assert_eq!(outs[1].1.as_ref().unwrap().finish, FinishReason::Completed);
+        assert_eq!(metrics.shed, 1);
+        assert_eq!(metrics.rejected, 0);
+    }
+
+    /// The acceptance pin: deterministic seeded overload where the shed
+    /// set and the completed set are exact, and no completed request had a
+    /// strictly later deadline than any shed request — shedding always
+    /// drops the least-urgent work, so priority inversion cannot occur.
+    #[test]
+    fn serve_no_deadline_priority_inversion() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 1,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            queue_cap: 2,
+            clock: ClockMode::Steps,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 73 };
+        // Descending deadlines: every arrival is more urgent than all the
+        // queued work, so each displacement sheds the latest deadline.
+        let deadlines = [90.0, 80.0, 70.0, 60.0, 50.0, 40.0];
+        let mut reqs = Vec::new();
+        let mut events = Vec::new();
+        for (i, &d) in deadlines.iter().enumerate() {
+            let (s, r) = stream_channel();
+            let mut q = GenRequest::new(i as u64, vec![30 + i as u8, 31], 2, sc, s);
+            q.deadline = Some(d);
+            reqs.push(q);
+            events.push(r);
+        }
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, reqs, events);
+        let mut shed_deadlines = Vec::new();
+        let mut completed_deadlines = Vec::new();
+        for (i, (_, done)) in outs.iter().enumerate() {
+            match done.as_ref().unwrap().finish {
+                FinishReason::Shed => shed_deadlines.push(deadlines[i]),
+                FinishReason::Completed => completed_deadlines.push(deadlines[i]),
+                other => panic!("request {i}: unexpected terminal {other:?}"),
+            }
+        }
+        // Exact deterministic outcome: the four latest deadlines shed, the
+        // two earliest complete.
+        assert_eq!(shed_deadlines, vec![90.0, 80.0, 70.0, 60.0]);
+        assert_eq!(completed_deadlines, vec![50.0, 40.0]);
+        assert_eq!(metrics.shed, 4);
+        assert_eq!(metrics.deadline_exceeded, 0, "survivors finished inside their deadlines");
+        // The property itself: nothing kept was less urgent than anything
+        // dropped.
+        for &c in &completed_deadlines {
+            for &s in &shed_deadlines {
+                assert!(c <= s, "completed deadline {c} after shedding earlier deadline {s}");
+            }
+        }
+    }
+
+    /// Priority orders admission: a high-priority late arrival runs before
+    /// an earlier low-priority request, meeting a steps-clock deadline
+    /// that FIFO order would have busted (the low-priority request alone
+    /// needs more steps than the whole deadline).
+    #[test]
+    fn serve_priority_overtakes_fifo_for_deadline() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 1,
+            pages: 32,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            clock: ClockMode::Steps,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.8, top_k: 8, seed: 81 };
+        let (s1, r1) = stream_channel();
+        let slow = GenRequest::new(0, vec![40, 41], 12, sc, s1); // 12 steps alone
+        let (s2, r2) = stream_channel();
+        let mut urgent = GenRequest::new(1, vec![50, 51, 52], 3, sc, s2);
+        urgent.priority = 3;
+        urgent.deadline = Some(8.0); // < the 12 steps FIFO would wait
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, vec![slow, urgent], vec![r1, r2]);
+        let expect_urgent = generate(&cfg, &w, &NoOverride, &[50, 51, 52], 3, sc).unwrap();
+        assert_eq!(outs[1].0, expect_urgent);
+        assert_eq!(
+            outs[1].1.as_ref().unwrap().finish,
+            FinishReason::Completed,
+            "priority admission must beat the deadline FIFO would miss"
+        );
+        let expect_slow = generate(&cfg, &w, &NoOverride, &[40, 41], 12, sc).unwrap();
+        assert_eq!(outs[0].0, expect_slow, "the overtaken request still completes exactly");
+        assert_eq!(metrics.deadline_exceeded, 0);
+        assert_eq!(metrics.completed, 2);
+    }
+
+    /// Under pool pressure a high-priority arrival preempts the
+    /// EARLIER-arrived low-priority sequence (the QoS generalization of
+    /// youngest-first), and the victim still resumes bit-identically.
+    #[test]
+    fn serve_priority_preemption_resumes_bit_identically() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 2,
+            pages: 3,
+            page_size: 2,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            ..GenConfig::default()
+        };
+        let sc1 = SampleConfig { temperature: 0.9, top_k: 6, seed: 91 };
+        let sc2 = SampleConfig { temperature: 0.9, top_k: 6, seed: 92 };
+        let (s1, r1) = stream_channel();
+        let low = GenRequest::new(0, vec![11, 12, 13], 3, sc1, s1);
+        let (s2, r2) = stream_channel();
+        let mut high = GenRequest::new(1, vec![21, 22, 23], 3, sc2, s2);
+        high.priority = 7;
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, vec![low, high], vec![r1, r2]);
+        let expect_low = generate(&cfg, &w, &NoOverride, &[11, 12, 13], 3, sc1).unwrap();
+        let expect_high = generate(&cfg, &w, &NoOverride, &[21, 22, 23], 3, sc2).unwrap();
+        assert_eq!(outs[0].0, expect_low, "preempted low-priority output must resume exactly");
+        assert_eq!(outs[1].0, expect_high);
+        assert_eq!(metrics.completed, 2);
+        assert!(metrics.preemptions >= 1, "this pool must have preempted the low-priority seq");
+    }
+
+    /// Injected step fault isolates exactly one request: the faulted one
+    /// retires with `Faulted` and zero tokens, its batch neighbor
+    /// completes with full sequential parity, the server never panics.
+    #[test]
+    fn serve_injected_fault_isolates_single_request() {
+        let (cfg, w) = tiny("llama-t");
+        let c = ChaosConfig { seed: 7, step_fault_rate: 0.2, alloc_fail_rate: 0.0 };
+        // The chaos decision is a pure function of (step, id): pick one id
+        // that faults at step 0 and one that never faults over any
+        // plausible lifetime.
+        let faulty = (0u64..10_000).find(|&id| c.step_fault(0, id)).expect("some id faults at step 0");
+        let clean = (0u64..10_000)
+            .find(|&id| id != faulty && (0..16).all(|s| !c.step_fault(s, id)))
+            .expect("some id never faults");
+        let gen = GenConfig {
+            max_batch: 2,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            chaos: Some(c),
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.7, top_k: 10, seed: 55 };
+        let (s1, r1) = stream_channel();
+        let (s2, r2) = stream_channel();
+        let reqs = vec![
+            GenRequest::new(clean, vec![60, 61], 3, sc, s1),
+            GenRequest::new(faulty, vec![70, 71], 3, sc, s2),
+        ];
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, reqs, vec![r1, r2]);
+        let expect = generate(&cfg, &w, &NoOverride, &[60, 61], 3, sc).unwrap();
+        assert_eq!(outs[0].0, expect, "the surviving neighbor must stay bit-identical");
+        assert_eq!(outs[0].1.as_ref().unwrap().finish, FinishReason::Completed);
+        assert!(outs[1].0.is_empty(), "faulted at its first step: no tokens");
+        assert_eq!(outs[1].1.as_ref().unwrap().finish, FinishReason::Faulted);
+        assert_eq!(metrics.faulted, 1);
+        assert_eq!(metrics.completed, 2, "both admitted requests retired");
+    }
+
+    /// A genuinely panicking model: every step attempt panics, the
+    /// watchdog catches each one, every request retires with `Faulted`
+    /// and exactly one `Done`, and `serve_generation` returns `Ok`.
+    #[test]
+    fn serve_watchdog_survives_panicking_model() {
+        struct PanicOverride;
+        impl LinearOverride for PanicOverride {
+            fn apply(&self, _: &str, _: &[f32], _: usize, _: usize) -> Option<Vec<f32>> {
+                panic!("injected model panic");
+            }
+        }
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 2,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 57 };
+        let (tx, rx) = channel();
+        let (s1, r1) = stream_channel();
+        let (s2, r2) = stream_channel();
+        tx.send(GenRequest::new(0, vec![1, 2], 3, sc, s1)).unwrap();
+        tx.send(GenRequest::new(1, vec![3, 4], 3, sc, s2)).unwrap();
+        drop(tx);
+        // Silence the default panic hook for the duration: the panics are
+        // intentional and caught by the watchdog.
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let result = serve_generation(&cfg, &w, &PanicOverride, &gen, rx);
+        std::panic::set_hook(hook);
+        let metrics = result.expect("the scheduler must survive model panics");
+        assert_eq!(metrics.faulted, 2);
+        assert_eq!(metrics.completed, 2);
+        assert_eq!(metrics.generated, 0);
+        for rx in [r1, r2] {
+            let (tokens, done) = collect_stream(&rx);
+            assert!(tokens.is_empty());
+            assert_eq!(done.unwrap().finish, FinishReason::Faulted);
+        }
+    }
+
+    /// The hard watchdog case: the batched attempt panics PARTWAY through
+    /// the step — after some K/V rows were already pushed — and the
+    /// per-sequence re-run recovers every request bit-identically with
+    /// zero casualties.  The override panics on the 5th projection of any
+    /// wide (≥ 3 row) batch, i.e. after layer 0's K/V pushes; per-group
+    /// re-runs are narrower and sail through.
+    #[test]
+    fn serve_watchdog_recovers_partial_step_bit_identically() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct PanicMidWideBatch {
+            wide_calls: AtomicUsize,
+        }
+        impl LinearOverride for PanicMidWideBatch {
+            fn apply(&self, _: &str, _: &[f32], rows: usize, _: usize) -> Option<Vec<f32>> {
+                if rows >= 3 && self.wide_calls.fetch_add(1, Ordering::SeqCst) == 4 {
+                    panic!("injected mid-step panic");
+                }
+                None // dense forward otherwise
+            }
+        }
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 2,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.8, top_k: 9, seed: 58 };
+        // Two 2-token prompts: the first step batches 4 prefill rows
+        // (panics mid-step); each group re-run is 2 rows (survives); every
+        // later step is 2 decode rows (survives).
+        let reqs = vec![
+            (vec![12, 13], 3, sc),
+            (vec![14, 15], 4, sc),
+        ];
+        let expect = reference(&cfg, &w, &reqs);
+        let over = PanicMidWideBatch { wide_calls: AtomicUsize::new(0) };
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let (got, metrics) = crate::bench::drive_preloaded(&cfg, &w, &over, &gen, reqs);
+        std::panic::set_hook(hook);
+        assert!(over.wide_calls.load(Ordering::SeqCst) >= 5, "the wide attempt must have run");
+        assert_eq!(got, expect, "recovered requests must stay bit-identical");
+        assert_eq!(metrics.faulted, 0, "the watchdog recovered everyone");
+        assert_eq!(metrics.completed, 2);
+    }
+
+    /// Allocation-failure injection at rate 1.0: every sequence's first
+    /// page claim of every step is refused, forcing the recovery ladder
+    /// constantly — yet all outputs stay bit-identical and all requests
+    /// complete (alloc faults are transient by construction).
+    #[test]
+    fn serve_alloc_fault_injection_preserves_parity() {
+        let (cfg, w) = tiny("opt-t");
+        let reqs: Vec<(Vec<u8>, usize, SampleConfig)> = (0..3)
+            .map(|i| {
+                (
+                    (0..(2 + i)).map(|t| ((t * 53 + i * 29) % 240) as u8).collect(),
+                    3 + i,
+                    SampleConfig { temperature: 0.9, top_k: 14, seed: 500 + i as u64 },
+                )
+            })
+            .collect();
+        let expect = reference(&cfg, &w, &reqs);
+        let gen = GenConfig {
+            max_batch: 3,
+            pages: 16,
+            page_size: 2,
+            prefill_chunk: 2,
+            prefix_share: true,
+            workers: 1,
+            chaos: Some(ChaosConfig { seed: 13, step_fault_rate: 0.0, alloc_fail_rate: 1.0 }),
+            ..GenConfig::default()
+        };
+        let (got, metrics) = run_server(&cfg, &w, &gen, reqs);
+        assert_eq!(got, expect, "alloc faults may perturb the schedule, never the bits");
+        assert_eq!(metrics.completed, 3);
+        assert_eq!(metrics.faulted, 0);
+    }
+
+    /// Per-tenant accounting: terminals and generated tokens are bucketed
+    /// by the request's tenant id.
+    #[test]
+    fn serve_tenant_accounting_buckets_terminals() {
+        let (cfg, w) = tiny("llama-t");
+        let gen = GenConfig {
+            max_batch: 2,
+            pages: 16,
+            page_size: 4,
+            prefill_chunk: 0,
+            prefix_share: false,
+            workers: 1,
+            ..GenConfig::default()
+        };
+        let sc = SampleConfig { temperature: 0.0, top_k: 0, seed: 64 };
+        let mut reqs = Vec::new();
+        let mut events = Vec::new();
+        for (i, (tenant, max_new)) in [(1u32, 2usize), (1, 3), (2, 4)].iter().enumerate() {
+            let (s, r) = stream_channel();
+            let mut q = GenRequest::new(i as u64, vec![i as u8 + 1, 2], *max_new, sc, s);
+            q.tenant = *tenant;
+            reqs.push(q);
+            events.push(r);
+        }
+        let (outs, metrics) = run_qos(&cfg, &w, &gen, reqs, events);
+        for o in &outs {
+            assert_eq!(o.1.as_ref().unwrap().finish, FinishReason::Completed);
+        }
+        assert_eq!(metrics.tenants.len(), 2);
+        let t1 = &metrics.tenants[&1];
+        let t2 = &metrics.tenants[&2];
+        assert_eq!((t1.requests, t1.completed, t1.generated), (2, 2, 5));
+        assert_eq!((t2.requests, t2.completed, t2.generated), (1, 1, 4));
+        assert!(metrics.wall_s > 0.0);
+        assert!(metrics.tenant_tokens_per_s(1) > 0.0);
+        assert_eq!(metrics.tenant_tokens_per_s(3), 0.0);
     }
 }

@@ -1,0 +1,140 @@
+//! Seeded, deterministic fault injection for the generation server.
+//!
+//! Chaos decisions are **stateless**: each verdict is a pure hash of
+//! `(seed, fault kind, step number, request id)`, so the scheduler can ask
+//! the same question twice — once for the batched step attempt and again
+//! inside the watchdog's per-request isolation re-run — and get the same
+//! answer.  That stability is what lets the chaos grid assert exact
+//! outcomes: a request either faults at a given step or it does not,
+//! independent of which neighbors shared its batch or how the fallback
+//! partitioned the rows.
+//!
+//! Three fault families are modeled:
+//!
+//! * **Step faults** (`step_fault_rate`) — the request's rows "die" during
+//!   the batched step: the batcher surfaces this as a step error, the
+//!   watchdog isolates it, and the request retires with
+//!   [`crate::serve::stream::FinishReason::Faulted`].  Genuine panics take
+//!   the identical path (see the watchdog in `batcher`).
+//! * **Allocation faults** (`alloc_fail_rate`) — the first KV-page
+//!   `prepare()` a sequence issues in a step reports pool exhaustion even
+//!   if pages are free, driving the real recovery ladder (trie eviction →
+//!   preemption → short chunk).  The retry hits the true pool, so these
+//!   faults are transient and **never** change a surviving request's
+//!   output bits — only its schedule.
+//! * **Stalled / slow client streams** — modeled harness-side in the chaos
+//!   grid (`serve/fuzz.rs`): client threads sleep or hang up mid-stream,
+//!   exercising the cancellation path; no server hook is needed because
+//!   cancellation is already detected at the token send.
+
+/// Deterministic fault-injection configuration, carried in
+/// [`crate::serve::GenConfig::chaos`].  `Default` (all rates zero)
+/// injects nothing.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChaosConfig {
+    /// Seed for every injection decision; two servers with equal seeds and
+    /// rates inject identical faults at identical `(step, request)` points.
+    pub seed: u64,
+    /// Probability that a request's step rows fail in a given step.
+    pub step_fault_rate: f64,
+    /// Probability that a sequence's first page allocation in a given step
+    /// is refused (transient — the retry uses the real pool).
+    pub alloc_fail_rate: f64,
+}
+
+/// Domain-separation salts so the two fault families draw independent
+/// verdicts from the same seed.
+const SALT_STEP: u64 = 0x5345_5256_4552_0001;
+const SALT_ALLOC: u64 = 0x5345_5256_4552_0002;
+
+/// One round of splitmix64 — mixes a 64-bit state into a well-distributed
+/// output (same finalizer the crate's [`crate::util::rng::Rng`] uses).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Hash `(seed, salt, step, id)` to a uniform f64 in `[0, 1)`.
+fn uniform(seed: u64, salt: u64, step: u64, id: u64) -> f64 {
+    let mut h = splitmix64(seed ^ salt);
+    h = splitmix64(h ^ step.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    h = splitmix64(h ^ id);
+    // Top 53 bits → [0, 1) with full double precision.
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+impl ChaosConfig {
+    /// `true` when any fault family can fire; the batcher skips all chaos
+    /// bookkeeping otherwise.
+    pub fn is_active(&self) -> bool {
+        self.step_fault_rate > 0.0 || self.alloc_fail_rate > 0.0
+    }
+
+    /// Should request `id`'s rows fail during step `step`?  Pure — the
+    /// batched attempt and the watchdog re-run see the same verdict.
+    pub fn step_fault(&self, step: u64, id: u64) -> bool {
+        self.step_fault_rate > 0.0 && uniform(self.seed, SALT_STEP, step, id) < self.step_fault_rate
+    }
+
+    /// Should request `id`'s first page allocation in step `step` be
+    /// refused?  At most one refusal per `(step, request)` — the batcher
+    /// gives the fault a budget of one so recovery is exercised without
+    /// livelock.
+    pub fn alloc_fault(&self, step: u64, id: u64) -> bool {
+        self.alloc_fail_rate > 0.0 && uniform(self.seed, SALT_ALLOC, step, id) < self.alloc_fail_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_decisions_are_deterministic_and_stateless() {
+        let c = ChaosConfig { seed: 42, step_fault_rate: 0.3, alloc_fail_rate: 0.3 };
+        for step in 0..64 {
+            for id in 0..16 {
+                assert_eq!(c.step_fault(step, id), c.step_fault(step, id));
+                assert_eq!(c.alloc_fault(step, id), c.alloc_fault(step, id));
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_rates_bound_empirical_frequency() {
+        for &rate in &[0.0, 0.05, 0.2, 1.0] {
+            let c = ChaosConfig { seed: 7, step_fault_rate: rate, alloc_fail_rate: rate };
+            let n = 20_000u64;
+            let hits = (0..n).filter(|&i| c.step_fault(i / 100, i % 100)).count() as f64;
+            let freq = hits / n as f64;
+            assert!(
+                (freq - rate).abs() < 0.02,
+                "rate {rate}: empirical {freq}"
+            );
+            if rate == 0.0 {
+                assert!(!c.is_active() || c.alloc_fail_rate > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_families_draw_independent_verdicts() {
+        let c = ChaosConfig { seed: 9, step_fault_rate: 0.5, alloc_fail_rate: 0.5 };
+        // Same (step, id) grid; the two salts must not produce identical
+        // verdict sequences.
+        let agree = (0..1000u64)
+            .filter(|&i| c.step_fault(i, 0) == c.alloc_fault(i, 0))
+            .count();
+        assert!(agree > 300 && agree < 700, "agreement {agree}/1000");
+    }
+
+    #[test]
+    fn chaos_default_is_inert() {
+        let c = ChaosConfig::default();
+        assert!(!c.is_active());
+        assert!(!c.step_fault(0, 0));
+        assert!(!c.alloc_fault(0, 0));
+    }
+}

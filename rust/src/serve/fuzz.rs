@@ -17,18 +17,29 @@
 //! The default test covers the fixed 32-seed grid with the
 //! `page_size × workers` combos round-robined across seeds; the `#[ignore]`d
 //! full grid runs every seed against every combo (32 × {1,4,16} × {1,4}).
+//!
+//! The **chaos grid** ([`run_chaos_case`]) layers seeded fault injection
+//! on top of the same scenario generator: injected step faults, simulated
+//! allocation failures, slow / stalled / hung-up clients, mixed priorities
+//! and dead-on-arrival deadlines.  Its contract is the robustness side of
+//! the same coin: every surviving request streams a bit-exact (prefix of
+//! the) sequential output, every casualty ends with exactly one Done
+//! carrying the correct terminal [`FinishReason`], and `serve_generation`
+//! itself always returns `Ok`.
 
 use super::batcher::{serve_generation, GenConfig, GenRequest};
+use super::chaos::ChaosConfig;
 use super::stream::{stream_channel, FinishReason, StreamEvent};
 use crate::model::forward::NoOverride;
 use crate::model::generate::{generate, SampleConfig};
 use crate::util::rng::Rng;
 use std::sync::mpsc::channel;
-use std::time::Instant;
+use std::time::Duration;
 
 const FAMILIES: [&str; 3] = ["llama-t", "opt-t", "mistral-t"];
 const PAGE_SIZES: [usize; 3] = [1, 4, 16];
 const WORKER_COUNTS: [usize; 2] = [1, 4];
+const FAULT_RATES: [f64; 3] = [0.0, 0.05, 0.2];
 const SEEDS: u64 = 32;
 
 struct FuzzReq {
@@ -93,6 +104,7 @@ fn run_case(seed: u64, page_size: usize, workers: usize) -> Result<(), String> {
         prefill_chunk: [0usize, 1, 2, 5][rng.below(4)],
         prefix_share: rng.below(2) == 0,
         workers,
+        ..GenConfig::default()
     };
     let expect: Vec<Vec<u8>> = reqs
         .iter()
@@ -108,15 +120,8 @@ fn run_case(seed: u64, page_size: usize, workers: usize) -> Result<(), String> {
         let mut handles = Vec::new();
         for (i, r) in reqs.iter().enumerate() {
             let (stream, events) = stream_channel();
-            tx.send(GenRequest {
-                id: i as u64,
-                prompt: r.prompt.clone(),
-                max_new: r.max_new,
-                sample: r.sample,
-                stream,
-                enqueued: Instant::now(),
-            })
-            .expect("request channel open");
+            tx.send(GenRequest::new(i as u64, r.prompt.clone(), r.max_new, r.sample, stream))
+                .expect("request channel open");
             let (consume, max_new) = (r.consume, r.max_new);
             handles.push(scope.spawn(move || {
                 let mut got = Vec::new();
@@ -197,6 +202,271 @@ fn combo(seed: u64) -> (usize, usize) {
     (ps, w)
 }
 
+struct ChaosReq {
+    prompt: Vec<u8>,
+    max_new: usize,
+    sample: SampleConfig,
+    /// Tokens the client reads before hanging up (`>= max_new` reads the
+    /// whole stream and then drains the closed channel, so stray
+    /// post-Done events are caught).
+    consume: usize,
+    /// Client-side stall between reads — slow and stalled consumers must
+    /// never perturb the schedule or the bytes (token channels are
+    /// unbounded, so the server never blocks on them).
+    delay: Duration,
+    /// Stamped `deadline = Some(0.0)`: must be killed in the queue with
+    /// `DeadlineExceeded` before producing a single token.
+    dead_on_arrival: bool,
+    priority: u8,
+    tenant: u32,
+}
+
+/// One seeded chaos scenario: the parity mix of [`run_case`] plus injected
+/// step faults and allocation failures at `fault_rate`, mixed priorities,
+/// slow / stalled / hung-up clients, and the occasional dead-on-arrival
+/// deadline.  Checks, per request: survivors are bit-exact (prefixes of)
+/// the sequential [`generate`] output, casualties get exactly one Done
+/// with the right [`FinishReason`], and nothing arrives after Done.
+/// Globally: the scheduler returns `Ok`, sheds/rejects nothing (the queue
+/// is unbounded and the mix feasible), kills exactly the dead-on-arrival
+/// requests, and buckets every terminal into its tenant.
+fn run_chaos_case(
+    seed: u64,
+    page_size: usize,
+    workers: usize,
+    fault_rate: f64,
+) -> Result<(), String> {
+    let mut rng = Rng::new(seed ^ 0xC4A0_55ED);
+    let family = FAMILIES[rng.below(FAMILIES.len())];
+    let (cfg, w) = super::test_util::tiny(family, 47);
+    let n_bases = 1 + rng.below(2);
+    let bases: Vec<Vec<u8>> = (0..n_bases)
+        .map(|_| {
+            let len = rng.below(2 * page_size + 4);
+            (0..len).map(|_| rng.below(256) as u8).collect()
+        })
+        .collect();
+    let n_req = 3 + rng.below(5);
+    let reqs: Vec<ChaosReq> = (0..n_req)
+        .map(|i| {
+            let mut prompt: Vec<u8> = if rng.below(2) == 0 {
+                bases[rng.below(n_bases)].clone()
+            } else {
+                Vec::new()
+            };
+            let tail = 1 + rng.below(page_size + 3);
+            prompt.extend((0..tail).map(|_| rng.below(256) as u8));
+            let max_new = 1 + rng.below(6);
+            let dead_on_arrival = rng.below(8) == 0;
+            let consume = if dead_on_arrival {
+                max_new // full reader: the DeadlineExceeded Done must arrive
+            } else {
+                rng.below(max_new + 2).min(max_new)
+            };
+            let delay = Duration::from_millis([0, 0, 1, 4][rng.below(4)]);
+            let sample = SampleConfig {
+                temperature: 0.5 + 0.1 * rng.below(8) as f32,
+                top_k: 4 + rng.below(20),
+                seed: rng.next_u64(),
+            };
+            ChaosReq {
+                prompt,
+                max_new,
+                sample,
+                consume,
+                delay,
+                dead_on_arrival,
+                priority: rng.below(2) as u8,
+                tenant: (i % 2) as u32,
+            }
+        })
+        .collect();
+    let worst = reqs
+        .iter()
+        .map(|r| (r.prompt.len() + r.max_new - 1).div_ceil(page_size))
+        .max()
+        .expect("non-empty mix");
+    let gen = GenConfig {
+        max_batch: 1 + rng.below(4),
+        pages: worst + rng.below(2 * worst + 2),
+        page_size,
+        prefill_chunk: [0usize, 1, 2, 5][rng.below(4)],
+        prefix_share: rng.below(2) == 0,
+        workers,
+        chaos: Some(ChaosConfig {
+            seed: seed ^ 0xFA17_0001,
+            step_fault_rate: fault_rate,
+            alloc_fail_rate: fault_rate,
+        }),
+        ..GenConfig::default()
+    };
+    let expect: Vec<Vec<u8>> = reqs
+        .iter()
+        .map(|r| {
+            generate(&cfg, &w, &NoOverride, &r.prompt, r.max_new, r.sample)
+                .expect("sequential generate")
+        })
+        .collect();
+    let (tx, rx) = channel();
+    let (metrics, results) = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            let (stream, events) = stream_channel();
+            let mut req = GenRequest::new(i as u64, r.prompt.clone(), r.max_new, r.sample, stream);
+            req.tenant = r.tenant;
+            req.priority = r.priority;
+            req.deadline = if r.dead_on_arrival { Some(0.0) } else { None };
+            tx.send(req).expect("request channel open");
+            let (consume, max_new, delay) = (r.consume, r.max_new, r.delay);
+            handles.push(scope.spawn(move || {
+                let mut got = Vec::new();
+                let mut finish = None;
+                let mut dones = 0usize;
+                let mut after_done = 0usize;
+                if consume < max_new {
+                    // Slow reader that hangs up mid-stream (dropping
+                    // `events` on return is the cancellation) — unless a
+                    // terminal event beats it to the punch.
+                    while got.len() < consume {
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        match events.recv() {
+                            Ok(StreamEvent::Token { byte, .. }) => got.push(byte),
+                            Ok(StreamEvent::Done(d)) => {
+                                finish = Some(d.finish);
+                                dones += 1;
+                                break;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                } else {
+                    // Full reader: drain until the server closes the
+                    // channel, counting Done events and anything after.
+                    for event in events.iter() {
+                        if !delay.is_zero() {
+                            std::thread::sleep(delay);
+                        }
+                        match event {
+                            StreamEvent::Token { byte, .. } => {
+                                if dones > 0 {
+                                    after_done += 1;
+                                } else {
+                                    got.push(byte);
+                                }
+                            }
+                            StreamEvent::Done(d) => {
+                                if dones == 0 {
+                                    finish = Some(d.finish);
+                                } else {
+                                    after_done += 1;
+                                }
+                                dones += 1;
+                            }
+                        }
+                    }
+                }
+                (got, finish, dones, after_done)
+            }));
+        }
+        drop(tx);
+        let metrics = serve_generation(&cfg, &w, &NoOverride, &gen, rx).expect("serve_generation");
+        let results: Vec<(Vec<u8>, Option<FinishReason>, usize, usize)> =
+            handles.into_iter().map(|h| h.join().expect("client thread")).collect();
+        (metrics, results)
+    });
+    let mut dead_on_arrival_n = 0usize;
+    for (i, (got, finish, dones, after_done)) in results.iter().enumerate() {
+        let want = &expect[i];
+        let r = &reqs[i];
+        if *after_done != 0 {
+            return Err(format!("{family}: request {i} saw {after_done} events after Done"));
+        }
+        if r.consume >= r.max_new && *dones != 1 {
+            return Err(format!(
+                "{family}: request {i} saw {dones} Done events, want exactly 1 (gen={gen:?})"
+            ));
+        }
+        if r.dead_on_arrival {
+            dead_on_arrival_n += 1;
+            if *finish != Some(FinishReason::DeadlineExceeded) || !got.is_empty() {
+                return Err(format!(
+                    "{family}: dead-on-arrival request {i} finished {finish:?} \
+                     with {} tokens, want DeadlineExceeded with 0",
+                    got.len()
+                ));
+            }
+            continue;
+        }
+        match finish {
+            Some(FinishReason::Completed) => {
+                if got != want {
+                    return Err(format!(
+                        "{family}: request {i} diverged: got {got:?}, want {want:?} (gen={gen:?})"
+                    ));
+                }
+            }
+            Some(FinishReason::Faulted) => {
+                if fault_rate == 0.0 {
+                    return Err(format!("{family}: request {i} faulted at fault_rate 0"));
+                }
+                if got.len() > want.len() || got[..] != want[..got.len()] {
+                    return Err(format!(
+                        "{family}: faulted request {i} stream {got:?} is not a \
+                         prefix of {want:?} (gen={gen:?})"
+                    ));
+                }
+            }
+            None => {
+                // Hung-up client: it must have read exactly its consumed
+                // prefix of the sequential output — never a wrong token.
+                if got.len() != r.consume || got[..] != want[..got.len()] {
+                    return Err(format!(
+                        "{family}: cancelled request {i} stream {got:?} is not the \
+                         {}-token prefix of {want:?} (gen={gen:?})",
+                        r.consume
+                    ));
+                }
+            }
+            other => {
+                return Err(format!(
+                    "{family}: request {i} got incoherent terminal {other:?} (gen={gen:?})"
+                ));
+            }
+        }
+    }
+    if metrics.rejected != 0 || metrics.shed != 0 {
+        return Err(format!(
+            "{family}: feasible unbounded-queue mix saw rejected={} shed={}",
+            metrics.rejected, metrics.shed
+        ));
+    }
+    if metrics.deadline_exceeded != dead_on_arrival_n {
+        return Err(format!(
+            "{family}: deadline_exceeded={} but {dead_on_arrival_n} requests were dead on arrival",
+            metrics.deadline_exceeded
+        ));
+    }
+    if metrics.completed != n_req - dead_on_arrival_n {
+        return Err(format!(
+            "{family}: {} of {} admitted requests retired (gen={gen:?})",
+            metrics.completed,
+            n_req - dead_on_arrival_n
+        ));
+    }
+    if fault_rate == 0.0 && metrics.faulted != 0 {
+        return Err(format!("{family}: faulted={} at fault_rate 0", metrics.faulted));
+    }
+    let bucketed: usize = metrics.tenants.values().map(|t| t.requests).sum();
+    if bucketed != n_req {
+        return Err(format!(
+            "{family}: tenant buckets hold {bucketed} terminals, want {n_req}"
+        ));
+    }
+    Ok(())
+}
+
 /// The CI-default grid: all 32 seeds, with the 6 `page_size × workers`
 /// combos round-robined so every combo sees 5+ distinct scenarios.
 #[test]
@@ -246,6 +516,7 @@ fn serve_int8_batched_decode_matches_sequential_generate() {
                     prefill_chunk: 2,
                     prefix_share: true,
                     workers,
+                    ..GenConfig::default()
                 };
                 let reqs = (0..n_req).map(|i| (prompt(i), max_new, sample(i))).collect();
                 let (outs, metrics) = drive_preloaded(&cfg, &w, &cm, &gen, reqs);
@@ -256,6 +527,48 @@ fn serve_int8_batched_decode_matches_sequential_generate() {
                         "int8 serve parity: b={b} page_size={page_size} \
                          workers={workers} request {i}"
                     );
+                }
+            }
+        }
+    }
+}
+
+/// The chaos CI grid: all 32 seeds with the `page_size × workers` combos
+/// round-robined and the fault rate cycling through {0, 0.05, 0.2} —
+/// surviving requests stay bit-exact, every casualty gets exactly one
+/// correct terminal event, and the scheduler never panics.
+#[test]
+fn serve_chaos_grid_quick() {
+    for seed in 0..SEEDS {
+        let (ps, w) = combo(seed);
+        let rate = FAULT_RATES[(seed as usize) % FAULT_RATES.len()];
+        if let Err(msg) = run_chaos_case(seed, ps, w, rate) {
+            panic!(
+                "serve chaos fuzz failed: seed={seed} page_size={ps} workers={w} \
+                 fault_rate={rate}: {msg}\n\
+                 reproduce with serve::fuzz::run_chaos_case({seed}, {ps}, {w}, {rate})"
+            );
+        }
+    }
+}
+
+/// Every chaos seed against every combo and fault rate — 576 served
+/// scenarios.  Slow by design; run explicitly with
+/// `cargo test -q serve_chaos -- --ignored`.
+#[test]
+#[ignore = "full 32-seed x {1,4,16} pages x {1,4} workers x {0,0.05,0.2} rates grid"]
+fn serve_chaos_grid_full() {
+    for seed in 0..SEEDS {
+        for &ps in &PAGE_SIZES {
+            for &w in &WORKER_COUNTS {
+                for &rate in &FAULT_RATES {
+                    if let Err(msg) = run_chaos_case(seed, ps, w, rate) {
+                        panic!(
+                            "serve chaos fuzz failed: seed={seed} page_size={ps} \
+                             workers={w} fault_rate={rate}: {msg}\n\
+                             reproduce with serve::fuzz::run_chaos_case({seed}, {ps}, {w}, {rate})"
+                        );
+                    }
                 }
             }
         }

@@ -279,8 +279,11 @@ impl KvPool {
             need <= have,
             "sequence {seq}: set_len({len}) needs {need} pages, table holds {have}"
         );
+        // `pop()` cannot observe an empty table here (the loop guard holds
+        // `len > need >= 0`), but the scheduler thread must never panic on
+        // a pool operation — degrade to stopping the truncation instead.
         while self.seqs[seq].table.len() > need {
-            let page = self.seqs[seq].table.pop().expect("checked non-empty");
+            let Some(page) = self.seqs[seq].table.pop() else { break };
             self.unref_page(page);
         }
         self.seqs[seq].len = len;

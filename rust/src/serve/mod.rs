@@ -25,14 +25,22 @@
 //!   request** to the sequential [`crate::model::generate::decode_step`]
 //!   at every batch size, page size, chunk split, and worker count.
 //! * [`batcher`]  — [`batcher::serve_generation`]: the scheduler loop that
-//!   owns the pool and trie; plans chunked prefills, resolves pool
-//!   exhaustion by trie eviction then preemption (youngest victim re-queues
-//!   and later resumes exactly), and streams tokens as they are sampled.
-//!   Producers fan requests in over an mpsc channel from any number of
-//!   threads.
+//!   owns the pool and trie; ranks work by QoS (priority, then deadline,
+//!   then arrival — pure FIFO with default fields), plans chunked
+//!   prefills, resolves pool exhaustion by trie eviction then preemption
+//!   (least-urgent victim re-queues and later resumes exactly), enforces
+//!   deadlines and the bounded-queue overload policy, isolates per-request
+//!   step failures behind a watchdog, and streams tokens as they are
+//!   sampled.  Producers fan requests in over an mpsc channel from any
+//!   number of threads.
 //! * [`stream`]   — per-request streaming delivery: each generated token is
 //!   sent over the request's own channel as it is produced, with a final
-//!   [`stream::StreamEvent::Done`] carrying latency stats.
+//!   [`stream::StreamEvent::Done`] carrying latency stats and the
+//!   terminal [`stream::FinishReason`].
+//! * [`chaos`]    — seeded, stateless fault injection (step faults,
+//!   simulated allocation failures) wired into the scheduler loop; the
+//!   chaos fuzz grid in `fuzz` pins that surviving requests stay
+//!   bit-exact and every casualty gets exactly one correct terminal.
 //!
 //! Determinism contract: a request's output depends only on
 //! `(weights, overrides, prompt, SampleConfig)` — per-request seeded RNGs
@@ -44,6 +52,7 @@
 //! randomized schedule fuzz harness in `fuzz`).
 
 pub mod batcher;
+pub mod chaos;
 pub mod kv_pool;
 pub mod prefix;
 pub mod step;
@@ -65,7 +74,8 @@ pub(crate) mod test_util {
     }
 }
 
-pub use batcher::{serve_generation, GenConfig, GenRequest};
+pub use batcher::{serve_generation, ClockMode, GenConfig, GenRequest};
+pub use chaos::ChaosConfig;
 pub use kv_pool::KvPool;
 pub use prefix::PrefixTrie;
 pub use step::{decode_step_batched, StepRow};

@@ -46,6 +46,24 @@
 //!
 //! The parity tests at the bottom pin logits bit-equality against
 //! `decode_step`, including staggered joins, multi-page chunks, and replay.
+//!
+//! **Re-execution contract (the batcher's watchdog relies on this).**  A
+//! step attempt that dies partway — a panic in the model math or an
+//! injected chaos fault — leaves the pool in a state where re-running any
+//! subset of the same rows is bit-identical to a clean first run:
+//!
+//! * committed lengths are untouched until the very END of the step
+//!   (`set_len` runs once per sequence after every layer finished), so a
+//!   failed attempt never advances what the planner sees;
+//! * `KvPool::prepare` is idempotent for already-tabled positions, and
+//! * `push_row` deterministically overwrites its slice, so K/V bytes a
+//!   dead attempt half-wrote are simply rewritten with the same bits.
+//!
+//! The watchdog in [`super::batcher`] uses this to re-execute each
+//! sequence's rows alone after a failed batched attempt; sequences only
+//! ever *read* pages they share (written positions are CoW'd private by
+//! `prepare`), so per-sequence re-runs see the same history bytes the
+//! batched run would have.  Pinned by `step_reexecution_is_idempotent`.
 
 use super::kv_pool::{KvPool, SeqId};
 use crate::linalg::gemm;
@@ -384,6 +402,75 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The watchdog's recovery path: after a dead batched attempt (pages
+    /// prepared, nothing committed), re-executing the same planned rows
+    /// one sequence at a time is bit-identical to the clean batched call —
+    /// and the pool state both leave behind is indistinguishable.
+    #[test]
+    fn step_reexecution_is_idempotent() {
+        let (cfg, w) = tiny("llama-t");
+        let hist: [Vec<u8>; 2] = [
+            (0..4).map(|t| (t * 61 + 3) as u8).collect(),
+            (0..4).map(|t| (t * 17 + 9) as u8).collect(),
+        ];
+        // Two pools with identical committed histories.
+        let mut pools = Vec::new();
+        let mut ids = Vec::new();
+        for _ in 0..2 {
+            let mut pool = KvPool::new(&cfg, 16, 2);
+            let sid: Vec<usize> = (0..2).map(|_| pool.new_seq()).collect();
+            for pos in 0..4 {
+                let rows: Vec<StepRow> = (0..2)
+                    .map(|s| write_row(sid[s], hist[s][pos], pos, false))
+                    .collect();
+                prep(&mut pool, &rows);
+                decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &rows, 1).unwrap();
+            }
+            pools.push(pool);
+            ids.push(sid);
+        }
+        // The step under test: seq 0 feeds a 2-row chunk, seq 1 one decode
+        // row.
+        let plan = |sid: &[usize]| {
+            vec![
+                write_row(sid[0], 101, 4, false),
+                write_row(sid[0], 102, 5, true),
+                write_row(sid[1], 103, 4, true),
+            ]
+        };
+        // Pool 0: the clean batched attempt.
+        let rows = plan(&ids[0]);
+        prep(&mut pools[0], &rows);
+        let clean = decode_step_batched(&cfg, &w, &NoOverride, &mut pools[0], &rows, 1).unwrap();
+        // Pool 1: the dead attempt prepared its pages (twice — prepare is
+        // idempotent), committed nothing; the watchdog then re-runs one
+        // sequence at a time.
+        let rows = plan(&ids[1]);
+        prep(&mut pools[1], &rows);
+        prep(&mut pools[1], &rows);
+        let g0 = decode_step_batched(&cfg, &w, &NoOverride, &mut pools[1], &rows[0..2], 1).unwrap();
+        let g1 = decode_step_batched(&cfg, &w, &NoOverride, &mut pools[1], &rows[2..3], 1).unwrap();
+        let vocab = cfg.vocab;
+        assert_bits_eq(&g0[vocab..2 * vocab], &clean[vocab..2 * vocab], "seq 0 recovered logits");
+        assert_bits_eq(&g1, &clean[2 * vocab..], "seq 1 recovered logits");
+        // Both pools committed the same lengths...
+        for (pool, sid) in pools.iter().zip(&ids) {
+            assert_eq!(pool.len(sid[0]), 6);
+            assert_eq!(pool.len(sid[1]), 5);
+        }
+        // ...and the NEXT step over each pool produces identical bits.
+        let mut after = Vec::new();
+        for (pool, sid) in pools.iter_mut().zip(&ids) {
+            let rows = vec![
+                write_row(sid[0], 111, 6, true),
+                write_row(sid[1], 112, 5, true),
+            ];
+            prep(pool, &rows);
+            after.push(decode_step_batched(&cfg, &w, &NoOverride, pool, &rows, 1).unwrap());
+        }
+        assert_bits_eq(&after[0], &after[1], "post-recovery step");
     }
 
     /// A sequence joining mid-stream (staggered positions within one batch)

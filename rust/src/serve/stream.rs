@@ -20,10 +20,24 @@ pub enum FinishReason {
     Completed,
     /// The client dropped its stream receiver mid-generation.
     Cancelled,
-    /// Refused at admission (empty prompt, `max_new == 0`, or the
+    /// Refused at admission (empty prompt, `max_new == 0`, the
     /// `⌈(prompt + max_new - 1) / page_size⌉` KV pages the request could
-    /// need exceeding the entire pool).
+    /// need exceeding the entire pool, or arriving at a full bounded queue
+    /// while being the least-urgent work the server knows about).
     Rejected,
+    /// Dropped by the overload policy: the bounded admission queue was
+    /// full and a *more urgent* arrival displaced this request (which may
+    /// already have been queued, preempted, or even running — any tokens
+    /// streamed before the shed are still a bit-exact prefix of the
+    /// sequential `generate` output).
+    Shed,
+    /// Killed by the scheduler because its deadline expired before it
+    /// completed (whether still queued, preempted, or actively decoding).
+    DeadlineExceeded,
+    /// Retired by the watchdog: a panic or injected fault occurred inside
+    /// this request's step rows.  Only this request dies — neighbors in
+    /// the same batch re-execute bit-identically and the server survives.
+    Faulted,
 }
 
 /// Final per-request summary, sent after the last token.
