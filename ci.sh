@@ -75,6 +75,16 @@
 #                                     streams bit-exact, every casualty
 #                                     exactly one correct terminal event,
 #                                     scheduler never panics)
+#   4i. compressed-KV-cache smoke   — the kv_compress tests run by name
+#                                     (latent round-trip bound, kv-ratio 1.0
+#                                     bit-identity pin, pool byte accounting,
+#                                     batched-vs-sequential latent parity
+#                                     incl. int8 factors, and the kv-ratio
+#                                     serve fuzz grids) plus perf_serve's
+#                                     `kv` section in --quick mode (serve
+#                                     parity at kv-ratio 0.5 and the
+#                                     >= 1.8x slots-at-equal-memory
+#                                     admission assertion)
 #   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
@@ -138,6 +148,10 @@ cargo test -q shed
 cargo test -q tenant
 cargo test -q chaos
 cargo test -q watchdog
+
+step "compressed-KV-cache smoke (kv_compress tests + perf_serve kv --quick)"
+cargo test -q kv_compress
+cargo bench --bench perf_serve -- kv --quick
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -14,25 +14,31 @@
 //!
 //! The stable summary is written to the top-level `BENCH_serve.json`
 //! (same convention as `BENCH_gemm.json` / `BENCH_allocate.json`): decode
-//! tokens/s per batch size, the batched-over-b1 speedup, and the
-//! equal-memory contiguous-vs-paged rows (sustained concurrency,
-//! slots-per-GB, tok/s).  Acceptance: `speedup_vs_b1 > 1` for b > 1 on
-//! multi-core hardware, and the half-memory paged pool sustaining strictly
-//! more concurrent sequences than the old worst-case reservation fits.
+//! tokens/s per batch size, the batched-over-b1 speedup, the equal-memory
+//! contiguous-vs-paged rows (sustained concurrency, slots-per-GB, tok/s),
+//! and the compressed-KV-cache rows (kv-ratio 0.5 parity smoke, the
+//! >= 1.8x slots-at-equal-memory admission ratio, tok/s at equal memory).
+//! Acceptance: `speedup_vs_b1 > 1` for b > 1 on multi-core hardware, the
+//! half-memory paged pool sustaining strictly more concurrent sequences
+//! than the old worst-case reservation fits, and
+//! `admit_ratio_at_equal_mem >= 1.8` at kv-ratio 0.5.
 //!
 //!   cargo bench --bench perf_serve              # full run, refreshes JSON
 //!   cargo bench --bench perf_serve -- parity --quick   # ci.sh smoke
 //!   cargo bench --bench perf_serve -- paged --quick    # ci.sh gate 4f
+//!   cargo bench --bench perf_serve -- kv --quick       # ci.sh gate 4i
 
 use nsvd::bench::{
-    drive_concurrent, drive_open_loop, drive_preloaded, goodput_tokens_per_s, synthetic_nsvd,
-    synthetic_nsvd_int8, tiny_model, OpenLoopTenant, Suite,
+    drive_concurrent, drive_concurrent_kv, drive_open_loop, drive_preloaded, drive_preloaded_kv,
+    goodput_tokens_per_s, synthetic_nsvd, synthetic_nsvd_int8, tiny_model, OpenLoopTenant, Suite,
 };
+use nsvd::compress::compress_kv_plain;
+use nsvd::linalg::rsvd::SvdPolicy;
 use nsvd::model::config::ModelConfig;
 use nsvd::model::forward::{random_weights, LinearOverride, NoOverride};
-use nsvd::model::generate::{generate, SampleConfig};
+use nsvd::model::generate::{generate, generate_kv, SampleConfig};
 use nsvd::model::weights::Weights;
-use nsvd::serve::GenConfig;
+use nsvd::serve::{GenConfig, KvPool};
 
 /// Deterministic synthetic prompt for request `i` — the SINGLE source for
 /// both the served requests and the parity expectations below.
@@ -236,6 +242,120 @@ fn main() {
                 "slots_per_gb",
                 old_equiv_slots as f64 / pool_gb,
             );
+        }
+    }
+
+    // ---- compressed KV cache (--kv-ratio): parity smoke + the
+    // equal-memory admission win (ci.sh gate 4i runs the `kv` filter) ----
+    if suite.enabled("serve_kv_smoke") {
+        let (pcfg, pweights) = tiny_model("llama-t", 3);
+        let kvc = compress_kv_plain(&pcfg, &pweights, 0.5, &SvdPolicy::exact()).unwrap();
+        suite.bench("serve_kv_smoke", 1, || {
+            // Served bits at kv-ratio 0.5 must equal the sequential
+            // generate_kv run under the same factors, per request.
+            let reqs = (0..6)
+                .map(|i| (bench_prompt(i, 5), 6usize, bench_sample(i)))
+                .collect();
+            let gen_cfg = GenConfig {
+                max_batch: 4,
+                pages: 6 * (5 + 6 - 1usize).div_ceil(4),
+                page_size: 4,
+                prefill_chunk: 3,
+                prefix_share: true,
+                workers: 0,
+                ..GenConfig::default()
+            };
+            let (outs, _) =
+                drive_preloaded_kv(&pcfg, &pweights, &NoOverride, Some(&kvc), &gen_cfg, reqs);
+            for (i, out) in outs.iter().enumerate() {
+                let expect = generate_kv(
+                    &pcfg,
+                    &pweights,
+                    &NoOverride,
+                    Some(&kvc),
+                    &bench_prompt(i, 5),
+                    6,
+                    bench_sample(i),
+                )
+                .unwrap();
+                assert_eq!(*out, expect, "kv parity failure: request {i}");
+            }
+        });
+        suite.record_metric("serve_kv_smoke", "parity_ok", 1.0);
+    }
+
+    // Half-width latents (kv-ratio 0.5) halve the bytes every committed
+    // token position occupies across all layers, so an equal byte budget
+    // admits ~2x the sequences.  The slot ratio is deterministic from the
+    // pool geometry (asserted >= 1.8x); the served runs measure what the
+    // extra pages buy in sustained concurrency and tok/s at equal memory.
+    if suite.enabled("serve_kv_equal_mem") {
+        let (n_req, prompt_len, max_new) =
+            if quick { (8usize, 16usize, 8usize) } else { (16, 16, 32) };
+        let total = 2 * n_req;
+        let page_size = 4;
+        let rows_worst = prompt_len + max_new - 1;
+        let dense_pages = ((n_req * rows_worst.div_ceil(page_size)) / 2).max(1);
+        let kvc = compress_kv_plain(&cfg, &weights, 0.5, &SvdPolicy::exact()).unwrap();
+        // Bytes per committed token position, all layers, from the pool
+        // geometry itself.
+        let dense_slot =
+            KvPool::with_kvc(&cfg, 1, page_size, None).page_bytes() as f64 / page_size as f64;
+        let kv_slot = KvPool::with_kvc(&cfg, 1, page_size, Some(&kvc)).page_bytes() as f64
+            / page_size as f64;
+        let admit_ratio = dense_slot / kv_slot;
+        assert!(
+            admit_ratio >= 1.8,
+            "kv-ratio 0.5 must fit >= 1.8x token slots at equal memory (got {admit_ratio:.2})"
+        );
+        suite.record_metric("serve_kv_equal_mem", "admit_ratio_at_equal_mem", admit_ratio);
+        suite.record_metric("serve_kv_equal_mem", "dense_slots_per_gb", 1e9 / dense_slot);
+        suite.record_metric("serve_kv_equal_mem", "kv_slots_per_gb", 1e9 / kv_slot);
+        // Same byte budget on both sides: the latent pool gets the pages
+        // the narrower rows free up.
+        let kv_pages = ((dense_pages as f64 * admit_ratio) as usize).max(dense_pages);
+        let shared_prompt = bench_prompt(0, prompt_len);
+        let make = |i: usize| (shared_prompt.clone(), max_new, bench_sample(i));
+        let mut dense_m = None;
+        suite.bench("serve_kv_equal_mem_dense", 1, || {
+            let gen_cfg = GenConfig {
+                max_batch: n_req,
+                pages: dense_pages,
+                page_size,
+                prefill_chunk: 8,
+                prefix_share: true,
+                workers: 0,
+                ..GenConfig::default()
+            };
+            let (m, _) =
+                drive_concurrent(&cfg, &weights, &cm, &gen_cfg, n_req, total, &make).unwrap();
+            assert_eq!(m.completed, total, "all requests must complete under pressure");
+            dense_m = Some(m);
+        });
+        let mut kv_m = None;
+        suite.bench("serve_kv_equal_mem_r05", 1, || {
+            let gen_cfg = GenConfig {
+                max_batch: n_req,
+                pages: kv_pages,
+                page_size,
+                prefill_chunk: 8,
+                prefix_share: true,
+                workers: 0,
+                ..GenConfig::default()
+            };
+            let (m, _) =
+                drive_concurrent_kv(&cfg, &weights, &cm, Some(&kvc), &gen_cfg, n_req, total, &make)
+                    .unwrap();
+            assert_eq!(m.completed, total, "all requests must complete under pressure");
+            kv_m = Some(m);
+        });
+        if let (Some(d), Some(k)) = (dense_m, kv_m) {
+            suite.record_metric("serve_kv_equal_mem_dense", "tokens_per_s", d.tokens_per_s());
+            suite.record_metric("serve_kv_equal_mem_dense", "mean_concurrent", d.mean_batch_fill());
+            suite.record_metric("serve_kv_equal_mem_dense", "slots_per_gb", d.kv_slots_per_gb());
+            suite.record_metric("serve_kv_equal_mem_r05", "tokens_per_s", k.tokens_per_s());
+            suite.record_metric("serve_kv_equal_mem_r05", "mean_concurrent", k.mean_batch_fill());
+            suite.record_metric("serve_kv_equal_mem_r05", "slots_per_gb", k.kv_slots_per_gb());
         }
     }
 

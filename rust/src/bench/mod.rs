@@ -118,7 +118,23 @@ pub fn drive_preloaded(
     gen: &crate::serve::GenConfig,
     reqs: Vec<(Vec<u8>, usize, crate::model::generate::SampleConfig)>,
 ) -> (Vec<Vec<u8>>, crate::coordinator::metrics::GenServerMetrics) {
-    use crate::serve::{collect_stream, serve_generation, stream_channel, GenRequest};
+    drive_preloaded_kv(cfg, weights, overrides, None, gen, reqs)
+}
+
+/// [`drive_preloaded`] against a KV-compressed server
+/// ([`crate::serve::serve_generation_kv`]): the pool stores rank-wide
+/// latents built by `kvc` and every request's streamed bits must equal a
+/// single-request [`crate::model::generate::generate_kv`] run under the
+/// same factors.  `kvc` `None` is exactly [`drive_preloaded`].
+pub fn drive_preloaded_kv(
+    cfg: &crate::model::ModelConfig,
+    weights: &crate::model::Weights,
+    overrides: &dyn crate::model::forward::LinearOverride,
+    kvc: Option<&crate::model::KvCompression>,
+    gen: &crate::serve::GenConfig,
+    reqs: Vec<(Vec<u8>, usize, crate::model::generate::SampleConfig)>,
+) -> (Vec<Vec<u8>>, crate::coordinator::metrics::GenServerMetrics) {
+    use crate::serve::{collect_stream, serve_generation_kv, stream_channel, GenRequest};
     let (tx, rx) = std::sync::mpsc::channel();
     let mut streams = Vec::new();
     for (i, (prompt, max_new, sample)) in reqs.into_iter().enumerate() {
@@ -128,8 +144,8 @@ pub fn drive_preloaded(
         streams.push(events);
     }
     drop(tx);
-    let metrics =
-        serve_generation(cfg, weights, overrides, gen, rx).expect("serve_generation");
+    let metrics = serve_generation_kv(cfg, weights, overrides, kvc, gen, rx)
+        .expect("serve_generation_kv");
     let outs = streams.iter().map(|rx| collect_stream(rx).0).collect();
     (outs, metrics)
 }
@@ -154,7 +170,27 @@ pub fn drive_concurrent(
     crate::coordinator::metrics::GenServerMetrics,
     Vec<crate::serve::DoneStats>,
 )> {
-    use crate::serve::{collect_stream, serve_generation, stream_channel, GenRequest};
+    drive_concurrent_kv(cfg, weights, overrides, None, gen, clients, total, make)
+}
+
+/// [`drive_concurrent`] against a KV-compressed server: the pool stores
+/// rank-wide latents built by `kvc` (`None` = the uncompressed pool).
+/// The harness behind `serve-gen --kv-ratio`.
+#[allow(clippy::too_many_arguments)]
+pub fn drive_concurrent_kv(
+    cfg: &crate::model::ModelConfig,
+    weights: &crate::model::Weights,
+    overrides: &dyn crate::model::forward::LinearOverride,
+    kvc: Option<&crate::model::KvCompression>,
+    gen: &crate::serve::GenConfig,
+    clients: usize,
+    total: usize,
+    make: &(dyn Fn(usize) -> (Vec<u8>, usize, crate::model::generate::SampleConfig) + Sync),
+) -> crate::Result<(
+    crate::coordinator::metrics::GenServerMetrics,
+    Vec<crate::serve::DoneStats>,
+)> {
+    use crate::serve::{collect_stream, serve_generation_kv, stream_channel, GenRequest};
     let clients = clients.max(1).min(total.max(1));
     let (req_tx, req_rx) = std::sync::mpsc::channel();
     std::thread::scope(|scope| {
@@ -181,7 +217,7 @@ pub fn drive_concurrent(
         }
         drop(done_tx);
         drop(req_tx);
-        let metrics = serve_generation(cfg, weights, overrides, gen, req_rx)?;
+        let metrics = serve_generation_kv(cfg, weights, overrides, kvc, gen, req_rx)?;
         Ok((metrics, done_rx.iter().collect()))
     })
 }
@@ -226,7 +262,24 @@ pub fn drive_open_loop(
     crate::coordinator::metrics::GenServerMetrics,
     Vec<crate::serve::DoneStats>,
 )> {
-    use crate::serve::{collect_stream, serve_generation, stream_channel, GenRequest};
+    drive_open_loop_kv(cfg, weights, overrides, None, gen, seed, tenants)
+}
+
+/// [`drive_open_loop`] against a KV-compressed server (`kvc` `None` is
+/// exactly [`drive_open_loop`]).
+pub fn drive_open_loop_kv(
+    cfg: &crate::model::ModelConfig,
+    weights: &crate::model::Weights,
+    overrides: &dyn crate::model::forward::LinearOverride,
+    kvc: Option<&crate::model::KvCompression>,
+    gen: &crate::serve::GenConfig,
+    seed: u64,
+    tenants: &[OpenLoopTenant],
+) -> crate::Result<(
+    crate::coordinator::metrics::GenServerMetrics,
+    Vec<crate::serve::DoneStats>,
+)> {
+    use crate::serve::{collect_stream, serve_generation_kv, stream_channel, GenRequest};
     use crate::util::rng::Rng;
     let (req_tx, req_rx) = std::sync::mpsc::channel();
     std::thread::scope(|scope| {
@@ -284,7 +337,7 @@ pub fn drive_open_loop(
         }
         drop(done_tx);
         drop(req_tx);
-        let metrics = serve_generation(cfg, weights, overrides, gen, req_rx)?;
+        let metrics = serve_generation_kv(cfg, weights, overrides, kvc, gen, req_rx)?;
         Ok((metrics, done_rx.iter().collect()))
     })
 }

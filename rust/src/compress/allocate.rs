@@ -258,6 +258,36 @@ pub fn total_tail_sq(profiles: &[LayerProfile], ks: &[usize]) -> f64 {
     profiles.iter().zip(ks).map(|(p, &k)| p.tail_sq(k)).sum()
 }
 
+/// Uniform KV latent rank at `ratio`: `round(ratio · max_rank)` clamped to
+/// `[1, max_rank]` — the per-projection cache width `--kv-ratio` names
+/// (`r/d` of the full row).
+pub fn kv_uniform_rank(ratio: f64, max_rank: usize) -> usize {
+    ((ratio * max_rank as f64).round() as usize).clamp(1, max_rank.max(1))
+}
+
+/// Spectrum-aware KV latent ranks: water-fill the **latent budget**
+/// (`Σ_e cost_e · round(ratio · max_rank_e)` — what uniform `--kv-ratio`
+/// would spend across the profiled K/V projections) by whitened marginal
+/// gain, so layers whose K/V spectra decay slowly keep wider latents and
+/// fast-decaying layers give ranks up.  Same never-worse-than-uniform
+/// fallback as [`spectrum_ranks`]: when the greedy prefix strands budget,
+/// the uniform ranks are returned, making the guarantee unconditional.
+///
+/// Entries align with `profiles` (the caller interleaves wk/wv per layer);
+/// every entry keeps rank ≥ 1 and ≤ its `max_rank`.
+pub fn kv_latent_ranks(profiles: &[LayerProfile], ratio: f64) -> Vec<usize> {
+    let uniform: Vec<usize> =
+        profiles.iter().map(|p| kv_uniform_rank(ratio, p.max_rank())).collect();
+    let budget: usize =
+        profiles.iter().zip(&uniform).map(|(p, &r)| p.cost() * r).sum();
+    let greedy = allocate_spectrum(profiles, budget, None);
+    if total_tail_sq(profiles, &greedy) <= total_tail_sq(profiles, &uniform) {
+        greedy
+    } else {
+        uniform
+    }
+}
+
 /// Spectrum-driven per-layer total ranks at compression ratio `ratio`,
 /// spending exactly the budget the uniform plan would
 /// ([`uniform_budget`]) — never more, so uniform and spectrum runs compare
@@ -514,6 +544,48 @@ mod tests {
         // Without caps the same (infinite) budget saturates max_rank.
         let free = allocate_spectrum(&profiles, usize::MAX, None);
         assert_eq!(free, vec![32, 32]);
+    }
+
+    #[test]
+    fn kv_compress_latent_ranks_meet_budget_and_never_lose_to_uniform() {
+        check("kv latent ranks: spend ≤ budget, tail ≤ uniform", 40, |g| {
+            let profiles = random_profiles(g);
+            let ratio = g.f64_in(0.1, 0.9);
+            let uniform: Vec<usize> = profiles
+                .iter()
+                .map(|p| kv_uniform_rank(ratio, p.max_rank()))
+                .collect();
+            let budget: usize =
+                profiles.iter().zip(&uniform).map(|(p, &r)| p.cost() * r).sum();
+            let ks = kv_latent_ranks(&profiles, ratio);
+            if spend(&profiles, &ks) > budget {
+                return Err(format!(
+                    "kv ranks overspent: {} > {budget}",
+                    spend(&profiles, &ks)
+                ));
+            }
+            let ts = total_tail_sq(&profiles, &ks);
+            let tu = total_tail_sq(&profiles, &uniform);
+            if ts > tu + 1e-12 * (1.0 + tu) {
+                return Err(format!("kv spectrum tail {ts} > uniform tail {tu}"));
+            }
+            for (i, (&k, p)) in ks.iter().zip(&profiles).enumerate() {
+                if k < 1 || k > p.max_rank() {
+                    return Err(format!("entry {i}: rank {k} outside [1, {}]", p.max_rank()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kv_compress_uniform_rank_clamps() {
+        assert_eq!(kv_uniform_rank(0.5, 128), 64);
+        assert_eq!(kv_uniform_rank(0.25, 128), 32);
+        assert_eq!(kv_uniform_rank(1.0, 128), 128);
+        assert_eq!(kv_uniform_rank(0.0, 128), 1);
+        assert_eq!(kv_uniform_rank(0.004, 128), 1, "rounds to 1, not 0");
+        assert_eq!(kv_uniform_rank(2.0, 16), 16, "never exceeds max_rank");
     }
 
     #[test]

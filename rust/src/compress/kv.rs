@@ -1,0 +1,430 @@
+//! KV-cache factorization: build [`KvCompression`] from a model's `wk`/`wv`
+//! weights with the repo's whitened truncation, per the ASVD KV-cache
+//! recipe (arXiv:2312.05821) mapped onto the NSVD whitener.
+//!
+//! For each layer the K and V projection weights are factored at a latent
+//! rank `r ≈ kv_ratio · d`:
+//!
+//! 1. **input-side scaling** — the same stage-1 whitener the weight
+//!    compression path uses ([`Whitener`], built from the `attn_in`
+//!    calibration Gram): decompose `A·S` with `A = Wᵀ`, un-whiten the right
+//!    factor.  This is ASVD's "input scaling" generalized from a diagonal
+//!    to the full Cholesky/eigen whitener (see METHODS.md);
+//! 2. **query-side scaling** (`wk` only) — ASVD scales the K projection's
+//!    *output* dims by the magnitude of the query channels they dot
+//!    against, so directions the queries actually probe survive
+//!    truncation.  Here the proxy is the column norms of `wq`: rows of `A`
+//!    are scaled by `s_j = ‖wq[:, j]‖₂` (normalized to mean 1, clamped)
+//!    before the whitened SVD, and the corresponding `up` columns are
+//!    unscaled by `1/s_j` after — an exact change of basis, so only the
+//!    truncation (not the reconstruction) is affected;
+//! 3. **balanced split** — `proj = Z₁ᵀ` and `up = W₁ᵀ` exactly as
+//!    `methods::compress_layer_with_policy` builds its stage-1 factors, so
+//!    the latent path inherits the pipeline's numerics.
+//!
+//! Rank allocation is uniform (`round(ratio·d)` per projection) or
+//! spectrum-aware ([`crate::compress::allocate::kv_latent_ranks`]:
+//! water-fill the same latent budget by whitened marginal gain).
+//!
+//! The plain variant ([`compress_kv_plain`]) uses the identity whitener and
+//! no query scaling — no calibration pass needed — which is what the serve
+//! fuzz battery and `serve-gen --kv-ratio` build from raw weights.
+
+use super::allocate::{kv_latent_ranks, kv_uniform_rank, LayerProfile};
+use super::whiten::Whitener;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::rsvd::{svd_for_rank, SvdPolicy};
+use crate::model::config::ModelConfig;
+use crate::model::kvc::{KvCompression, KvLayer, KvProj};
+use crate::model::weights::{Tensor, Weights};
+use anyhow::{bail, Result};
+
+/// How to build the KV factorization.
+#[derive(Clone, Debug)]
+pub struct KvBuildSpec {
+    /// Latent width as a fraction of the full K/V row (`r/d`); `>= 1.0`
+    /// yields the identity compression.
+    pub ratio: f64,
+    /// Spectrum-aware per-projection rank allocation under the shared
+    /// latent budget (vs uniform `round(ratio·d)` everywhere).
+    pub spectrum: bool,
+    /// ASVD query-side scaling of `wk` rows by the `wq` column-norm proxy.
+    pub query_scale: bool,
+}
+
+impl KvBuildSpec {
+    pub fn new(ratio: f64) -> KvBuildSpec {
+        KvBuildSpec { ratio, spectrum: false, query_scale: false }
+    }
+}
+
+fn wk_name(layer: usize) -> String {
+    format!("blocks.{layer}.attn.wk")
+}
+
+fn wv_name(layer: usize) -> String {
+    format!("blocks.{layer}.attn.wv")
+}
+
+/// Query-magnitude proxy for ASVD's query-side scaling: the ℓ₂ norm of
+/// each `wq` output column, normalized to mean 1 and clamped away from
+/// zero (a never-probed output dim must not blow up the inverse scale).
+fn query_scales(wq: &Tensor) -> Vec<f64> {
+    let (n_in, n_out) = (wq.dims[0], wq.dims[1]);
+    let mut s = vec![0.0f64; n_out];
+    for i in 0..n_in {
+        for (j, sj) in s.iter_mut().enumerate() {
+            let v = wq.data[i * n_out + j] as f64;
+            *sj += v * v;
+        }
+    }
+    for v in s.iter_mut() {
+        *v = v.sqrt();
+    }
+    let mean = s.iter().sum::<f64>() / s.len().max(1) as f64;
+    let mean = if mean > 0.0 { mean } else { 1.0 };
+    let floor = 1e-6 * s.iter().cloned().fold(0.0, f64::max).max(1e-12);
+    for v in s.iter_mut() {
+        *v = (*v / mean).max(floor / mean);
+    }
+    s
+}
+
+/// Factor one projection weight (`[n_in, n_out]`, python convention) at
+/// `rank`: whitened truncated SVD with optional ASVD row scaling, balanced
+/// `√Σ` split, factors returned as `(proj [n_in, rank], up [rank, n_out])`
+/// so `w ≈ proj · up`.
+fn factor_weight(
+    weight: &Tensor,
+    w1: &Whitener,
+    row_scale: Option<&[f64]>,
+    rank: usize,
+    svd: &SvdPolicy,
+) -> (Vec<f32>, Vec<f32>) {
+    let (n_in, n_out) = (weight.dims[0], weight.dims[1]);
+    // Paper convention: A = Wᵀ is m×n with m = n_out, n = n_in.
+    let mut a = Matrix::from_f32(n_in, n_out, &weight.data).transpose();
+    if let Some(s) = row_scale {
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                a[(i, j)] *= s[i];
+            }
+        }
+    }
+    let aw = w1.whiten(&a);
+    let svd1 = svd_for_rank(&aw, rank, svd);
+    let sqrt_s: Vec<f64> = svd1.s.iter().map(|x| x.max(0.0).sqrt()).collect();
+    // W₁ = U√Σ [m, r]; undo the row scaling here so reconstruction is exact
+    // in the scaled basis' inverse.
+    let mut w_fac = svd1.u.scale_cols(&sqrt_s);
+    if let Some(s) = row_scale {
+        for i in 0..w_fac.rows {
+            for j in 0..w_fac.cols {
+                w_fac[(i, j)] /= s[i];
+            }
+        }
+    }
+    // Z₁ = √Σ Vᵀ S⁻¹ [r, n].
+    let z_fac = w1.unwhiten_rows(&svd1.v.scale_cols(&sqrt_s).transpose());
+    // Row convention: proj = Z₁ᵀ [n_in, r], up = W₁ᵀ [r, n_out].
+    (z_fac.transpose().to_f32(), w_fac.transpose().to_f32())
+}
+
+/// Build the KV compression with per-layer whiteners supplied by the
+/// caller (`whitener(layer)` returns the `attn_in` tap whitener, or `None`
+/// for identity).  This is the full-control entry the pipeline uses;
+/// [`compress_kv_plain`] is the calibration-free variant.
+pub fn compress_kv_with(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    whitener: &dyn Fn(usize) -> Option<std::sync::Arc<Whitener>>,
+    spec: &KvBuildSpec,
+    svd: &SvdPolicy,
+) -> Result<KvCompression> {
+    if !(spec.ratio > 0.0) {
+        bail!("--kv-ratio must be > 0 (got {})", spec.ratio);
+    }
+    if spec.ratio >= 1.0 {
+        return Ok(KvCompression::identity(cfg.n_layers));
+    }
+    let identity = Whitener::identity();
+    // Gather the 2L projection entries (wk, wv per layer) with their
+    // whiteners, in a fixed interleaved order for the rank allocator.
+    let mut entries: Vec<(usize, bool, &Tensor)> = Vec::new(); // (layer, is_k, weight)
+    for i in 0..cfg.n_layers {
+        entries.push((i, true, weights.get(&wk_name(i))?));
+        entries.push((i, false, weights.get(&wv_name(i))?));
+    }
+    let whiteners: Vec<Option<std::sync::Arc<Whitener>>> =
+        (0..cfg.n_layers).map(|i| whitener(i)).collect();
+    let w_of = |layer: usize| -> &Whitener {
+        whiteners[layer].as_deref().unwrap_or(&identity)
+    };
+    // Per-entry latent ranks: uniform, or water-filled over the whitened
+    // K/V spectra under the same total latent budget.
+    let ranks: Vec<usize> = if spec.spectrum {
+        let profiles: Vec<LayerProfile> = entries
+            .iter()
+            .map(|&(layer, is_k, w)| LayerProfile {
+                name: if is_k { wk_name(layer) } else { wv_name(layer) },
+                m: w.dims[1],
+                n: w.dims[0],
+                spectrum: super::allocate::whitened_spectrum(w, w_of(layer)),
+            })
+            .collect();
+        kv_latent_ranks(&profiles, spec.ratio)
+    } else {
+        entries
+            .iter()
+            .map(|&(_, _, w)| kv_uniform_rank(spec.ratio, w.dims[0].min(w.dims[1])))
+            .collect()
+    };
+    let mut kvc = KvCompression {
+        layers: (0..cfg.n_layers).map(|_| KvLayer::default()).collect(),
+    };
+    for (&(layer, is_k, w), &rank) in entries.iter().zip(&ranks) {
+        let (n_in, n_out) = (w.dims[0], w.dims[1]);
+        if rank >= n_in.min(n_out) {
+            continue; // full rank: identity is cheaper and exact
+        }
+        let scales = if is_k && spec.query_scale {
+            Some(query_scales(weights.get(&format!("blocks.{layer}.attn.wq"))?))
+        } else {
+            None
+        };
+        let (proj, up) = factor_weight(w, w_of(layer), scales.as_deref(), rank, svd);
+        let p = KvProj::new(n_in, rank, n_out, proj, up);
+        if is_k {
+            kvc.layers[layer].k = Some(p);
+        } else {
+            kvc.layers[layer].v = Some(p);
+        }
+    }
+    Ok(kvc)
+}
+
+/// Calibration-free KV factorization: plain truncated SVD of `wk`/`wv` at
+/// uniform rank `round(ratio·d)` per layer — deterministic from the
+/// weights alone.  The serve fuzz battery and `serve-gen --kv-ratio` build
+/// their factors here; the pipeline's calibrated path goes through
+/// [`compress_kv_with`].
+pub fn compress_kv_plain(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    ratio: f64,
+    svd: &SvdPolicy,
+) -> Result<KvCompression> {
+    compress_kv_with(cfg, weights, &|_| None, &KvBuildSpec::new(ratio), svd)
+}
+
+/// View the KV factors as a [`CompressedModel`] with `wk`/`wv`-only
+/// entries (`P₁ = proj`, `Q₁ = up`, `k₂ = 0`): replacing those two weights
+/// in a full forward is numerically *exactly* what routing the cache
+/// through the latents does, so the existing perplexity evaluator measures
+/// KV-compression quality unchanged — the pooled-ppl-vs-kv-ratio rows of
+/// `--sweep-ratios` evaluate this view.  Always uses the f32 factors (the
+/// quality estimate, not the serving dtype).
+pub fn kv_override_model(kvc: &KvCompression) -> super::lowrank::CompressedModel {
+    use super::lowrank::{CompressedLayer, CompressedModel};
+    let mut cm = CompressedModel::default();
+    for (i, layer) in kvc.layers.iter().enumerate() {
+        for (proj, name) in [(&layer.k, wk_name(i)), (&layer.v, wv_name(i))] {
+            if let Some(p) = proj {
+                let p1 = Matrix::from_f32(p.n_in, p.rank, &p.proj);
+                let q1 = Matrix::from_f32(p.rank, p.d_out, &p.up);
+                let p2 = Matrix::zeros(p.n_in, 0);
+                let q2 = Matrix::zeros(0, p.d_out);
+                cm.insert(&name, CompressedLayer::from_matrices(&p1, &q1, &p2, &q2));
+            }
+        }
+    }
+    cm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::whiten::CalibStats;
+    use crate::linalg::svd::svd_thin;
+    use crate::model::forward::matmul_raw;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn tensor_from(a: &Matrix) -> Tensor {
+        Tensor { dims: vec![a.rows, a.cols], data: a.to_f32() }
+    }
+
+    /// Anisotropic calibration stats (outlier dims — the LLM regime).
+    fn aniso_stats(n: usize, samples: usize, rng: &mut Rng) -> (CalibStats, Matrix) {
+        let mut x = Matrix::randn(samples, n, 1.0, rng);
+        for i in 0..samples {
+            for j in 0..n {
+                if j % 5 == 0 {
+                    x[(i, j)] *= 6.0;
+                }
+            }
+        }
+        let mut stats = CalibStats::new(n);
+        stats.gram = x.gram();
+        stats.rows = samples;
+        (stats, x)
+    }
+
+    /// Satellite: the latent round-trip error on activations is bounded by
+    /// the truncation tail — `‖x(W − proj·up)‖_F ≤ ‖x‖_F · tail(r)` with
+    /// the plain (identity-whitened) factorization, where `tail(r)` is the
+    /// Eckart–Young optimum `√(Σ_{i≥r} σᵢ²)`.  Ties the `attend_row`
+    /// numerics to the METHODS.md error decomposition.
+    #[test]
+    fn kv_compress_roundtrip_error_bounded_by_whitened_tail() {
+        check("‖x·E‖ ≤ ‖x‖·tail", 10, |g| {
+            let mut rng = g.rng.fork(0);
+            let d = g.usize_in(8, 24);
+            let rank = g.usize_in(1, d - 1);
+            let w_m = Matrix::randn(d, d, 1.0, &mut rng);
+            let w = tensor_from(&w_m);
+            let (proj, up) =
+                factor_weight(&w, &Whitener::identity(), None, rank, &SvdPolicy::exact());
+            let rows = g.usize_in(1, 6);
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+            // Latent path: x → proj → up.
+            let lat = matmul_raw(&x, rows, d, &proj, rank);
+            let rec = matmul_raw(&lat, rows, rank, &up, d);
+            // Dense path: x @ W.
+            let dense = matmul_raw(&x, rows, d, &w.data, d);
+            let err_sq: f64 = dense
+                .iter()
+                .zip(&rec)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            let x_norm_sq: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            // Tail of σ(A) with A = Wᵀ (same singular values as W).
+            let tail = svd_thin(&w_m).tail_norm(rank);
+            let bound = x_norm_sq.sqrt() * tail * 1.001 + 1e-3;
+            if err_sq.sqrt() > bound {
+                return Err(format!(
+                    "d={d} r={rank}: err {} > bound {bound}",
+                    err_sq.sqrt()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// The whitened factorization beats the plain one on activation-
+    /// weighted loss when activations are anisotropic — the reason the
+    /// cache factors ride the calibration whitener at all.
+    #[test]
+    fn kv_compress_whitened_beats_plain_on_activation_loss() {
+        check("whitened ≤ plain on ‖X·E‖", 5, |g| {
+            let mut rng = g.rng.fork(0);
+            let d = 16;
+            let rank = g.usize_in(2, 6);
+            let (stats, x) = aniso_stats(d, 80, &mut rng);
+            let w_m = Matrix::randn(d, d, 1.0, &mut rng);
+            let w = tensor_from(&w_m);
+            let chol = Whitener::cholesky(&stats);
+            let loss = |proj: &[f32], up: &[f32]| -> f64 {
+                let xf = x.to_f32();
+                let rows = x.rows;
+                let lat = matmul_raw(&xf, rows, d, proj, rank);
+                let rec = matmul_raw(&lat, rows, rank, up, d);
+                let dense = matmul_raw(&xf, rows, d, &w.data, d);
+                dense.iter().zip(&rec).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+            };
+            let (pp, pu) = factor_weight(&w, &Whitener::identity(), None, rank, &SvdPolicy::exact());
+            let (wp, wu) = factor_weight(&w, &chol, None, rank, &SvdPolicy::exact());
+            let plain = loss(&pp, &pu);
+            let whitened = loss(&wp, &wu);
+            if whitened > plain * 1.001 {
+                return Err(format!("whitened {whitened} > plain {plain}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Query-side scaling is an exact change of basis: at full rank the
+    /// scaled factorization still reconstructs the weight.
+    #[test]
+    fn kv_compress_query_scaling_is_exact_at_full_rank() {
+        let mut rng = Rng::new(11);
+        let d = 12;
+        let w_m = Matrix::randn(d, d, 1.0, &mut rng);
+        let w = tensor_from(&w_m);
+        let wq = tensor_from(&Matrix::randn(d, d, 1.0, &mut rng));
+        let s = query_scales(&wq);
+        assert_eq!(s.len(), d);
+        assert!(s.iter().all(|&v| v > 0.0));
+        let (proj, up) = factor_weight(&w, &Whitener::identity(), Some(&s), d, &SvdPolicy::exact());
+        // proj @ up must equal W to f32/SVD rounding.
+        let rec = matmul_raw(&proj, d, d, &up, d);
+        let max_diff = w
+            .data
+            .iter()
+            .zip(&rec)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "full-rank scaled reconstruction off by {max_diff}");
+    }
+
+    #[test]
+    fn kv_compress_ratio_one_is_identity_and_half_halves_widths() {
+        let (cfg, w) = crate::bench::tiny_model("llama-t", 5);
+        let id = compress_kv_plain(&cfg, &w, 1.0, &SvdPolicy::exact()).unwrap();
+        assert!(id.is_identity());
+        let half = compress_kv_plain(&cfg, &w, 0.5, &SvdPolicy::exact()).unwrap();
+        assert!(!half.is_identity());
+        let d = cfg.d_model;
+        for i in 0..cfg.n_layers {
+            assert_eq!(half.width_k(i, d), d / 2, "layer {i} k width");
+            assert_eq!(half.width_v(i, d), d / 2, "layer {i} v width");
+        }
+        assert!(compress_kv_plain(&cfg, &w, 0.0, &SvdPolicy::exact()).is_err());
+    }
+
+    /// The CompressedModel view stores exactly the KV factors, so the
+    /// sweep's quality rows evaluate the same numbers the cache serves.
+    #[test]
+    fn kv_compress_override_model_matches_latent_path() {
+        let (cfg, w) = crate::bench::tiny_model("llama-t", 7);
+        let kvc = compress_kv_plain(&cfg, &w, 0.25, &SvdPolicy::exact()).unwrap();
+        let cm = kv_override_model(&kvc);
+        let mut rng = Rng::new(9);
+        let d = cfg.d_model;
+        let x: Vec<f32> = (0..3 * d).map(|_| rng.normal() as f32).collect();
+        use crate::model::forward::LinearOverride;
+        for i in 0..cfg.n_layers {
+            let p = kvc.layers[i].k.as_ref().unwrap();
+            let lat = p.project(&x, 3);
+            let rec = p.reconstruct(&lat, 3);
+            let via_cm = cm.apply(&wk_name(i), &x, 3, d).expect("wk is overridden");
+            let max_diff = rec
+                .iter()
+                .zip(&via_cm)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // Same factors, same GEMM kernel; the only difference is the
+            // CompressedLayer's (empty) stage-2 accumulation.
+            assert!(max_diff < 1e-5, "layer {i}: override diverged by {max_diff}");
+        }
+        assert!(cm.apply("blocks.0.attn.wq", &x, 3, d).is_none(), "only wk/wv");
+    }
+
+    /// Spectrum-aware ranks stay on the latent budget and respect caps.
+    #[test]
+    fn kv_compress_spectrum_build_meets_budget() {
+        let (cfg, w) = crate::bench::tiny_model("llama-t", 13);
+        let spec = KvBuildSpec { ratio: 0.25, spectrum: true, query_scale: true };
+        let kvc = compress_kv_with(&cfg, &w, &|_| None, &spec, &SvdPolicy::exact()).unwrap();
+        let d = cfg.d_model;
+        let uniform_latents: usize = 2 * cfg.n_layers * kv_uniform_rank(0.25, d);
+        let got_latents: usize = (0..cfg.n_layers)
+            .map(|i| kvc.width_k(i, d) + kvc.width_v(i, d))
+            .sum();
+        assert!(
+            got_latents <= uniform_latents,
+            "spectrum allocation overspent: {got_latents} > {uniform_latents}"
+        );
+        assert!(kvc.factor_bytes() > 0);
+    }
+}

@@ -16,6 +16,9 @@
 //!                 fanned out over scoped worker threads, truncated SVDs
 //!                 routed through the [`crate::linalg::rsvd::SvdPolicy`]
 //!                 fast path.
+//! * [`kv`]      — KV-cache factorization: whitened, ASVD-style
+//!                 query-scaled low-rank factors of `wk`/`wv` whose latents
+//!                 the paged serving cache stores per token (`--kv-ratio`).
 //! * [`lowrank`] — factored layer representation, padded marshaling for the
 //!                 fixed-shape PJRT executable, native apply + reconstruction,
 //!                 and the [`lowrank::FactorDtype`] storage knob (f32 or
@@ -23,12 +26,14 @@
 
 pub mod allocate;
 pub mod engine;
+pub mod kv;
 pub mod lowrank;
 pub mod methods;
 pub mod ranks;
 pub mod whiten;
 
 pub use allocate::{AllocConfig, AllocStrategy, LayerProfile};
+pub use kv::{compress_kv_plain, compress_kv_with, kv_override_model, KvBuildSpec};
 pub use engine::{CompressionEngine, EngineConfig, WhitenerCache};
 pub use lowrank::{CompressedLayer, CompressedModel, FactorDtype, QuantFactors};
 pub use methods::{compress_layer, CompressionSpec, Method};

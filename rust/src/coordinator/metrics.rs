@@ -133,6 +133,15 @@ pub struct GenServerMetrics {
     /// Prompt rows fed through chunked prefill (excludes replayed and
     /// prefix-shared positions).
     pub prefill_rows: usize,
+    /// Bytes one committed token position occupies across every layer's
+    /// K+V pages (`KvPool::page_bytes / page_size`) — shrinks ~(r/d)×
+    /// under `--kv-ratio` compression.  Stamped once at server start;
+    /// 0 means "not stamped" (hand-built metrics).
+    pub kv_slot_bytes: f64,
+    /// Bytes held by the KV-compression projection factors themselves
+    /// (0 when the cache is uncompressed) — the fixed cost the smaller
+    /// latent pages amortize.
+    pub kv_factor_bytes: usize,
     /// Total tokens generated (across all requests).
     pub generated: usize,
     /// Batched decode steps executed.
@@ -269,6 +278,17 @@ impl GenServerMetrics {
             0.0
         } else {
             self.page_occupancy.iter().sum::<f64>() / self.page_occupancy.len() as f64
+        }
+    }
+
+    /// KV slots (committed token positions, all layers) one GB of page
+    /// memory holds — the capacity axis `--kv-ratio` compression raises.
+    /// 0 until `kv_slot_bytes` is stamped by the server.
+    pub fn kv_slots_per_gb(&self) -> f64 {
+        if self.kv_slot_bytes > 0.0 {
+            1e9 / self.kv_slot_bytes
+        } else {
+            0.0
         }
     }
 
@@ -444,6 +464,20 @@ mod tests {
         let mut m = GenServerMetrics::default();
         m.record_terminal(4, FinishReason::Completed, 100);
         assert_eq!(m.tenant_tokens_per_s(4), 0.0, "no wall_s stamped yet");
+    }
+
+    #[test]
+    fn kv_compress_slots_per_gb_from_slot_bytes() {
+        let mut m = GenServerMetrics::default();
+        assert_eq!(m.kv_slots_per_gb(), 0.0, "unstamped metrics report 0");
+        // 4 layers × (d + d) f32 at d = 64 → 2048 B per committed slot.
+        m.kv_slot_bytes = 2048.0;
+        assert_eq!(m.kv_slots_per_gb(), 1e9 / 2048.0);
+        // Quarter-rank latents shrink the slot 4×, so a GB admits 4× the
+        // slots — the ratio perf_serve's equal-memory row asserts on.
+        let mut c = m.clone();
+        c.kv_slot_bytes = 512.0;
+        assert_eq!(c.kv_slots_per_gb() / m.kv_slots_per_gb(), 4.0);
     }
 
     #[test]

@@ -14,10 +14,13 @@ use crate::calib::collector::{collect_native, TapStats};
 use crate::calib::similarity::{similarity_stats, SimilarityReport};
 use crate::compress::allocate::{AllocConfig, AllocStrategy, LayerProfile, ALPHA_GRID};
 use crate::compress::engine::{CompressionEngine, EngineConfig, WhitenerCache};
+use crate::compress::kv::{compress_kv_with, kv_override_model, KvBuildSpec};
 use crate::compress::lowrank::{CompressedModel, FactorDtype};
 use crate::compress::methods::CompressionSpec;
+use crate::compress::whiten::Whitener;
 use crate::linalg::quant::DEFAULT_GROUP;
 use crate::compress::ranks;
+use crate::model::kvc::KvCompression;
 use crate::data::batch::Batcher;
 use crate::data::corpus::{Corpus, Registry, DOMAIN_NAMES};
 use crate::eval::perplexity::{
@@ -31,6 +34,7 @@ use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
@@ -74,6 +78,14 @@ pub struct PipelineConfig {
     /// GEMM kernel — native backend only (the PJRT executables marshal f32
     /// factors), enforced at [`Pipeline::new`].
     pub factor_dtype: FactorDtype,
+    /// KV-cache latent ratio (`--kv-ratio`): fraction of the K/V row width
+    /// stored per token in the serving pool's pages (`1.0` = the
+    /// uncompressed cache, the default).  Factors come from
+    /// [`Pipeline::build_kv_compression`] — the calibrated whitened
+    /// truncation with ASVD query-side scaling on `wk` — and the quality
+    /// axis reads off the `kv-cache` rows [`Pipeline::run_budget_sweep`]
+    /// emits when this is `< 1.0`.
+    pub kv_ratio: f64,
 }
 
 impl PipelineConfig {
@@ -91,6 +103,7 @@ impl PipelineConfig {
             allocate: AllocStrategy::Uniform,
             alpha_auto: false,
             factor_dtype: FactorDtype::F32,
+            kv_ratio: 1.0,
         }
     }
 }
@@ -122,7 +135,10 @@ impl CompressionReport {
 pub struct BudgetSweepPoint {
     /// Requested compression ratio (sets the global parameter budget).
     pub ratio: f64,
-    /// Allocation strategy label (`uniform` | `spectrum`).
+    /// Allocation strategy label (`uniform` | `spectrum`), or `kv-cache`
+    /// for the KV-latent quality rows (`--kv-ratio < 1`): same ratio axis,
+    /// but the row scores the wk/wv-only latent view ([`kv_override_model`])
+    /// — pooled ppl vs kv-ratio on the same curve as the weight sweep.
     pub strategy: &'static str,
     /// Parameters actually stored by the compressed model.
     pub compressed_params: usize,
@@ -419,6 +435,71 @@ impl Pipeline {
         })
     }
 
+    /// Build the serving KV compression at `config.kv_ratio`: the same
+    /// stage-1 whitener `spec.method` uses for weights (from each layer's
+    /// `attn_in` calibration Gram, shared with wq/wk/wv weight jobs via the
+    /// whitener cache) plus ASVD query-side scaling on `wk`, spectrum-aware
+    /// rank allocation when `--allocate spectrum`.  Returns `None` at
+    /// ratio ≥ 1.0 — serving then keeps the uncompressed pool path.
+    pub fn build_kv_compression(
+        &mut self,
+        spec: &CompressionSpec,
+    ) -> Result<Option<KvCompression>> {
+        if self.config.kv_ratio >= 1.0 {
+            return Ok(None);
+        }
+        let ratio = self.config.kv_ratio;
+        self.build_kv_at(spec, ratio).map(Some)
+    }
+
+    /// The KV factorization at an explicit latent ratio — shared by
+    /// [`Pipeline::build_kv_compression`] (serving) and the sweep's
+    /// `kv-cache` quality rows, so both score/serve identical factors.
+    fn build_kv_at(&mut self, spec: &CompressionSpec, ratio: f64) -> Result<KvCompression> {
+        self.calibrate()?;
+        let stats = self.calib.as_ref().unwrap();
+        let kind = spec.method.whitener_kind();
+        // Warm the shared cache: one whitener per attn_in tap, reused by
+        // (and from) the weight-compression jobs of the same method class.
+        for i in 0..self.model_cfg.n_layers {
+            let tap = ModelConfig::tap_for_linear(&format!("blocks.{i}.attn.wk"));
+            let key = (kind.to_string(), tap.clone());
+            if !self.whitener_cache.contains_key(&key) {
+                let tap_stats = stats.taps.get(&tap).ok_or_else(|| {
+                    anyhow::anyhow!("no calibration stats for KV factors (tap {tap})")
+                })?;
+                self.whitener_cache
+                    .insert(key, Arc::new(spec.method.stage1_whitener(tap_stats)));
+            }
+        }
+        let cache = &self.whitener_cache;
+        let whitener = |layer: usize| -> Option<Arc<Whitener>> {
+            let tap = ModelConfig::tap_for_linear(&format!("blocks.{layer}.attn.wk"));
+            cache.get(&(kind.to_string(), tap)).cloned()
+        };
+        let kv_spec = KvBuildSpec {
+            ratio,
+            spectrum: self.config.allocate == AllocStrategy::Spectrum,
+            query_scale: true,
+        };
+        compress_kv_with(&self.model_cfg, &self.weights, &whitener, &kv_spec, &self.config.svd)
+    }
+
+    /// Score the KV latent view ([`kv_override_model`]) on every eval set —
+    /// numerically exactly what the paged pool serves at this ratio.
+    /// Native backend only: the wk/wv-only view (zero-width stage 2, latent
+    /// ranks above the executables' rank caps) does not fit the fixed-shape
+    /// PJRT factor buffers.  Serving itself (`serve-gen --kv-ratio`) is
+    /// always native and has no such restriction.
+    pub fn evaluate_kv_view(&self, kvc: &KvCompression) -> Result<Vec<PerplexityResult>> {
+        anyhow::ensure!(
+            self.rt.is_none(),
+            "--kv-ratio quality evaluation requires the native backend (add --native): \
+             the wk/wv-only latent view does not fit the fixed-shape PJRT executables"
+        );
+        self.evaluate_all(Some(&kv_override_model(kvc)))
+    }
+
     /// Sweep the global parameter budget (one compression ratio per point)
     /// under the configured allocation strategy and return the
     /// budget-vs-perplexity curve — the axis on which `--allocate spectrum`
@@ -456,6 +537,23 @@ impl Pipeline {
                     dtype: FactorDtype::Int8.label(),
                     factor_bytes: cm_q.factor_bytes(),
                     ppl: pooled_ppl(&results_q),
+                });
+            }
+            if self.config.kv_ratio < 1.0 {
+                // The KV axis (`--kv-ratio < 1` opts in): the same sweep
+                // ratio applied to the cache latent width.  The wk/wv-only
+                // low-rank view scores exactly what the paged pool serves
+                // ([`kv_override_model`]), so this row IS pooled ppl vs
+                // kv-ratio on the shared curve.
+                let kvc = self.build_kv_at(spec, ratio)?;
+                let results_kv = self.evaluate_kv_view(&kvc)?;
+                out.push(BudgetSweepPoint {
+                    ratio,
+                    strategy: "kv-cache",
+                    compressed_params: kvc.params(),
+                    dtype: FactorDtype::F32.label(),
+                    factor_bytes: kvc.factor_bytes(),
+                    ppl: pooled_ppl(&results_kv),
                 });
             }
         }

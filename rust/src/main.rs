@@ -6,7 +6,7 @@
 use anyhow::Result;
 use nsvd::compress::methods::{CompressionSpec, Method};
 use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
-use nsvd::bench::{drive_concurrent, drive_open_loop, goodput_tokens_per_s, OpenLoopTenant};
+use nsvd::bench::{drive_concurrent_kv, drive_open_loop_kv, goodput_tokens_per_s, OpenLoopTenant};
 use nsvd::coordinator::reports::{
     render_latency_block, render_method_block, render_tenant_block, save_table, MethodRow, Table,
 };
@@ -61,6 +61,7 @@ fn build_cli() -> Cli {
                 .flag("allocate", "rank allocation: uniform (paper protocol) | spectrum (global water-filling)", Some("uniform"))
                 .flag("sweep-ratios", "comma-separated ratios: print the budget-vs-perplexity curve instead of one run", None)
                 .flag("factor-dtype", "factor storage dtype: f32 | int8 (per-group quantized, native only)", Some("f32"))
+                .flag("kv-ratio", "KV-cache latent width as a fraction of the K/V row (<1 compresses the cache; native only)", Some("1.0"))
                 .flag("windows", "eval windows per dataset", Some("64"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
@@ -111,6 +112,7 @@ fn build_cli() -> Cli {
             .flag("method", "compression method", Some("nsvd-i"))
             .flag("ratio", "compression ratio", Some("0.3"))
             .flag("factor-dtype", "factor storage dtype: f32 | int8 (per-group quantized, native only)", Some("f32"))
+            .flag("kv-ratio", "KV-cache latent width as a fraction of the K/V row (<1 stores rank-wide latents in the paged pool; native only)", Some("1.0"))
             .flag("requests", "total generation requests", Some("32"))
             .flag("clients", "concurrent closed-loop client threads", Some("4"))
             .flag("max-batch", "max sequences decoded per step", Some("8"))
@@ -148,6 +150,7 @@ fn build_cli() -> Cli {
                 .flag("allocate", "rank allocation: uniform | spectrum", Some("uniform"))
                 .flag("sweep-ratios", "comma-separated ratios: print the budget-vs-perplexity curve instead of one run", None)
                 .flag("factor-dtype", "factor storage dtype: f32 | int8 (per-group quantized, native only)", Some("f32"))
+                .flag("kv-ratio", "KV-cache latent width as a fraction of the K/V row (<1 compresses the cache; native only)", Some("1.0"))
                 .flag("windows", "eval windows per dataset", Some("32"))
                 .flag("workers", "decomposition threads (auto = all cores)", Some("auto"))
                 .flag("eval-workers", "native-eval batch-scoring threads (auto = all cores)", Some("1"))
@@ -165,6 +168,13 @@ fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> 
     cfg.use_pjrt = !args.switch("native");
     if let Some(s) = args.get("factor-dtype") {
         cfg.factor_dtype = nsvd::compress::FactorDtype::parse(s)?;
+    }
+    if args.get("kv-ratio").is_some() {
+        let r = args
+            .get_f64("kv-ratio")
+            .ok_or_else(|| anyhow::anyhow!("--kv-ratio expects a number in (0, 1]"))?;
+        anyhow::ensure!(r > 0.0 && r <= 1.0, "--kv-ratio expects a number in (0, 1], got {r}");
+        cfg.kv_ratio = r;
     }
     if args.get("workers").is_some() {
         cfg.workers = args.get_workers("workers").ok_or_else(|| {
@@ -260,13 +270,14 @@ fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
             if pipeline.config.alpha_auto { "auto".to_string() } else { spec.alpha.to_string() },
         );
         println!(
-            "{:>8} {:>6} {:>12} {:>14} {:>12}",
-            "ratio", "dtype", "params", "factor bytes", "pooled ppl"
+            "{:>8} {:>10} {:>6} {:>12} {:>14} {:>12}",
+            "ratio", "strategy", "dtype", "params", "factor bytes", "pooled ppl"
         );
         for p in &points {
             println!(
-                "{:>7.0}% {:>6} {:>12} {:>14} {:>12.2}",
+                "{:>7.0}% {:>10} {:>6} {:>12} {:>14} {:>12.2}",
                 p.ratio * 100.0,
+                p.strategy,
                 p.dtype,
                 p.compressed_params,
                 p.factor_bytes,
@@ -294,6 +305,20 @@ fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
     );
     for r in &report.results {
         println!("  {:<16} ppl {:>10.2}", paper_label(&r.dataset), r.ppl());
+    }
+    if pipeline.config.kv_ratio < 1.0 {
+        // The cache quality row: score the wk/wv-only latent view — exactly
+        // what the paged pool serves at this --kv-ratio.
+        let kvc = pipeline
+            .build_kv_compression(&spec)?
+            .expect("kv_ratio < 1 builds factors");
+        let results = pipeline.evaluate_kv_view(&kvc)?;
+        println!(
+            "kv-cache @ {:.0}% latent width: pooled ppl {:.2} (factor bytes {})",
+            pipeline.config.kv_ratio * 100.0,
+            nsvd::eval::perplexity::pooled_ppl(&results),
+            kvc.factor_bytes()
+        );
     }
     Ok(())
 }
@@ -510,6 +535,22 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
         pipeline.config.factor_dtype.label()
     );
     let cm = pipeline.compress(&spec)?;
+    // KV-cache factors (--kv-ratio < 1): calibrated whitened truncation,
+    // quantized alongside the weight factors under --factor-dtype int8.
+    let kvc = match pipeline.build_kv_compression(&spec)? {
+        Some(mut k) => {
+            if pipeline.config.factor_dtype == nsvd::compress::FactorDtype::Int8 {
+                k.quantize(nsvd::linalg::quant::DEFAULT_GROUP);
+            }
+            println!(
+                "kv-cache: {:.0}% latent width ({} factor bytes)",
+                pipeline.config.kv_ratio * 100.0,
+                k.factor_bytes()
+            );
+            Some(k)
+        }
+        None => None,
+    };
 
     let n = args.get_usize("requests").unwrap_or(32).max(1);
     let clients = args.get_usize("clients").unwrap_or(4).max(1).min(n);
@@ -583,15 +624,19 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
              fault_rate={fault_rate})...",
             gen_cfg.max_batch, gen_cfg.pages, gen_cfg.page_size, gen_cfg.queue_cap
         );
-        let (metrics, client_stats) = drive_open_loop(
+        let (metrics, client_stats) = drive_open_loop_kv(
             &pipeline.model_cfg,
             &pipeline.weights,
             &cm,
+            kvc.as_ref(),
             &gen_cfg,
             sample.seed,
             &specs,
         )?;
         println!("{}", metrics.summary());
+        if kvc.is_some() {
+            println!("kv pool: {:.0} token slots per GB", metrics.kv_slots_per_gb());
+        }
         println!(
             "goodput {:.1} tok/s (completed requests only) vs raw {:.1} tok/s",
             goodput_tokens_per_s(&client_stats, metrics.wall_s),
@@ -630,10 +675,11 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
     // Producers fan in over mpsc from `clients` closed-loop threads; the
     // main thread becomes the scheduler and owns the KV pool (shared
     // harness: nsvd::bench::drive_concurrent).
-    let (metrics, client_stats) = drive_concurrent(
+    let (metrics, client_stats) = drive_concurrent_kv(
         &pipeline.model_cfg,
         &pipeline.weights,
         &cm,
+        kvc.as_ref(),
         &gen_cfg,
         clients,
         n,
@@ -646,6 +692,9 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
         },
     )?;
     println!("{}", metrics.summary());
+    if kvc.is_some() {
+        println!("kv pool: {:.0} token slots per GB", metrics.kv_slots_per_gb());
+    }
     println!("clients saw {} completed streams", client_stats.len());
     let table = render_latency_block(
         "Generation latency percentiles",

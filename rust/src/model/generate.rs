@@ -8,17 +8,23 @@
 
 use super::config::{Family, ModelConfig};
 use super::forward::{matmul_f32, LinearOverride};
+use super::kvc::KvCompression;
 use super::weights::Weights;
 use crate::util::rng::Rng;
 use anyhow::Result;
 
-/// Per-layer key/value cache.
+/// Per-layer key/value cache.  Row widths are per layer: `d_model` for an
+/// uncompressed layer, the latent rank for a layer under KV-cache
+/// compression ([`KvCache::with_kvc`] — see [`crate::model::kvc`]).
 pub struct KvCache {
-    /// [layer][t * d_model] rows, appended per step.
+    /// [layer][t * width] rows, appended per step.
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
     pub len: usize,
-    d: usize,
+    /// Per-layer stored K row width.
+    wk: Vec<usize>,
+    /// Per-layer stored V row width.
+    wv: Vec<usize>,
 }
 
 impl KvCache {
@@ -35,31 +41,42 @@ impl KvCache {
     /// backing `Vec`s grow), it just pays the reallocation the hint was
     /// meant to avoid.
     pub fn with_capacity(cfg: &ModelConfig, max_len: usize) -> KvCache {
+        KvCache::with_kvc(cfg, max_len, None)
+    }
+
+    /// Cache whose per-layer row widths follow `kvc`: compressed layers
+    /// store rank-wide latents (pre-RoPE), identity layers full `d_model`
+    /// rows.  `None` is exactly [`KvCache::with_capacity`].
+    pub fn with_kvc(cfg: &ModelConfig, max_len: usize, kvc: Option<&KvCompression>) -> KvCache {
+        let d = cfg.d_model;
+        let wk: Vec<usize> =
+            (0..cfg.n_layers).map(|l| kvc.map_or(d, |c| c.width_k(l, d))).collect();
+        let wv: Vec<usize> =
+            (0..cfg.n_layers).map(|l| kvc.map_or(d, |c| c.width_v(l, d))).collect();
         KvCache {
-            k: (0..cfg.n_layers)
-                .map(|_| Vec::with_capacity(max_len * cfg.d_model))
-                .collect(),
-            v: (0..cfg.n_layers)
-                .map(|_| Vec::with_capacity(max_len * cfg.d_model))
-                .collect(),
+            k: wk.iter().map(|w| Vec::with_capacity(max_len * w)).collect(),
+            v: wv.iter().map(|w| Vec::with_capacity(max_len * w)).collect(),
             len: 0,
-            d: cfg.d_model,
+            wk,
+            wv,
         }
     }
 
     fn push(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.wk[layer]);
+        debug_assert_eq!(v_row.len(), self.wv[layer]);
         self.k[layer].extend_from_slice(k_row);
         self.v[layer].extend_from_slice(v_row);
     }
 
-    /// Contiguous K rows `[0, t_now)` of `layer` ([t_now * d_model]).
+    /// Contiguous K rows `[0, t_now)` of `layer` ([t_now * width]).
     fn k_hist(&self, layer: usize, t_now: usize) -> &[f32] {
-        &self.k[layer][..t_now * self.d]
+        &self.k[layer][..t_now * self.wk[layer]]
     }
 
-    /// Contiguous V rows `[0, t_now)` of `layer` ([t_now * d_model]).
+    /// Contiguous V rows `[0, t_now)` of `layer` ([t_now * width]).
     fn v_hist(&self, layer: usize, t_now: usize) -> &[f32] {
-        &self.v[layer][..t_now * self.d]
+        &self.v[layer][..t_now * self.wv[layer]]
     }
 }
 
@@ -155,6 +172,7 @@ pub(crate) fn attend_row(
 }
 
 /// One incremental decode step: feed token at position `pos`, return logits.
+/// Delegates to [`decode_step_kv`] with no KV-cache compression.
 ///
 /// LOCKSTEP WARNING: the generation server's batched twin
 /// ([`crate::serve::step::decode_step_batched`]) mirrors this function
@@ -164,6 +182,30 @@ pub fn decode_step(
     cfg: &ModelConfig,
     weights: &Weights,
     overrides: &dyn LinearOverride,
+    cache: &mut KvCache,
+    token: u8,
+    pos: usize,
+) -> Result<Vec<f32>> {
+    decode_step_kv(cfg, weights, overrides, None, cache, token, pos)
+}
+
+/// [`decode_step`] with optional KV-cache compression: a compressed
+/// layer's K/V projection is REPLACED by the fused down-projection
+/// ([`crate::model::kvc::KvProj::project`] — the latent is what the cache
+/// stores, pre-RoPE), and at attention time the whole latent history is
+/// up-projected and (for RoPE families, K only) rotated per absolute
+/// position.  `cache` must have been built with the same compression
+/// ([`KvCache::with_kvc`]).  This is the single-request **parity oracle**
+/// for the batched server path
+/// ([`crate::serve::step::decode_step_batched_kv`]): both reconstruct
+/// latents through the same row-independent GEMMs, so they agree
+/// bit-for-bit per request.  With `kvc` `None` (or all-identity) this is
+/// bit-identical to the uncompressed decode — it IS the same code path.
+pub fn decode_step_kv(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    kvc: Option<&KvCompression>,
     cache: &mut KvCache,
     token: u8,
     pos: usize,
@@ -186,6 +228,8 @@ pub fn decode_step(
         Ok(matmul_f32(h, 1, h.len(), weights.get(name)?))
     };
     for i in 0..cfg.n_layers {
+        let kp = kvc.and_then(|c| c.layers.get(i)).and_then(|l| l.k.as_ref());
+        let vp = kvc.and_then(|c| c.layers.get(i)).and_then(|l| l.v.as_ref());
         let mut h = x.clone();
         match cfg.family {
             Family::Opt => layernorm_row(
@@ -196,28 +240,59 @@ pub fn decode_step(
             _ => rmsnorm_row(&mut h, &weights.get(&format!("blocks.{i}.attn_norm.w"))?.data),
         }
         let mut q = lin(&format!("blocks.{i}.attn.wq"), &h)?;
-        let mut k = lin(&format!("blocks.{i}.attn.wk"), &h)?;
-        let v = lin(&format!("blocks.{i}.attn.wv"), &h)?;
         if cfg.family.uses_rope() {
             rope_row(&mut q, heads, hd, pos);
-            rope_row(&mut k, heads, hd, pos);
         }
+        // Fused down-projection: the latent GEMM *replaces* the dense K/V
+        // projection (and any weight-compression override of it) — the
+        // cache stores the latent, pre-RoPE (RoPE is a per-position map in
+        // d-space and cannot live in latent space).
+        let k = match kp {
+            Some(p) => p.project(&h, 1),
+            None => {
+                let mut k = lin(&format!("blocks.{i}.attn.wk"), &h)?;
+                if cfg.family.uses_rope() {
+                    rope_row(&mut k, heads, hd, pos);
+                }
+                k
+            }
+        };
+        let v = match vp {
+            Some(p) => p.project(&h, 1),
+            None => lin(&format!("blocks.{i}.attn.wv"), &h)?,
+        };
         cache.push(i, &k, &v);
         // Attention over the cache (sliding window if configured).
+        // Compressed layers up-project the latent history first; K rows
+        // are then RoPE'd at their absolute positions.
         let t_now = pos + 1;
         let lo = if cfg.window > 0 { t_now.saturating_sub(cfg.window) } else { 0 };
         let mut att = vec![0.0f32; d];
-        attend_row(
-            &q,
-            cache.k_hist(i, t_now),
-            cache.v_hist(i, t_now),
-            heads,
-            hd,
-            scale,
-            lo,
-            t_now,
-            &mut att,
-        );
+        let k_store: Vec<f32>;
+        let v_store: Vec<f32>;
+        let k_hist: &[f32] = match kp {
+            Some(p) => {
+                debug_assert_eq!(p.d_out, d, "K up-projection must restore d_model");
+                let mut full = p.reconstruct(cache.k_hist(i, t_now), t_now);
+                if cfg.family.uses_rope() {
+                    for (j, krow) in full.chunks_mut(d).enumerate() {
+                        rope_row(krow, heads, hd, j);
+                    }
+                }
+                k_store = full;
+                &k_store
+            }
+            None => cache.k_hist(i, t_now),
+        };
+        let v_hist: &[f32] = match vp {
+            Some(p) => {
+                debug_assert_eq!(p.d_out, d, "V up-projection must restore d_model");
+                v_store = p.reconstruct(cache.v_hist(i, t_now), t_now);
+                &v_store
+            }
+            None => cache.v_hist(i, t_now),
+        };
+        attend_row(&q, k_hist, v_hist, heads, hd, scale, lo, t_now, &mut att);
         let o = lin(&format!("blocks.{i}.attn.wo"), &att)?;
         for (xv, ov) in x.iter_mut().zip(&o) {
             *xv += ov;
@@ -278,10 +353,26 @@ impl Default for SampleConfig {
 }
 
 /// Generate `n_new` tokens after `prompt` (greedy when temperature == 0).
+/// Delegates to [`generate_kv`] with no KV-cache compression.
 pub fn generate(
     cfg: &ModelConfig,
     weights: &Weights,
     overrides: &dyn LinearOverride,
+    prompt: &[u8],
+    n_new: usize,
+    sample: SampleConfig,
+) -> Result<Vec<u8>> {
+    generate_kv(cfg, weights, overrides, None, prompt, n_new, sample)
+}
+
+/// [`generate`] through a compressed KV cache (see [`decode_step_kv`]) —
+/// the single-request reference the serve fuzz battery compares the
+/// batched, paged, compressed server output against, bit for bit.
+pub fn generate_kv(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    kvc: Option<&KvCompression>,
     prompt: &[u8],
     n_new: usize,
     sample: SampleConfig,
@@ -292,11 +383,11 @@ pub fn generate(
     // last loop iteration skips the decode — same tokens, one fewer full
     // transformer step per request.  The generation server's batched path
     // makes the same skip.
-    let mut cache = KvCache::with_capacity(cfg, prompt.len() + n_new.saturating_sub(1));
+    let mut cache = KvCache::with_kvc(cfg, prompt.len() + n_new.saturating_sub(1), kvc);
     let mut rng = Rng::new(sample.seed);
     let mut logits = Vec::new();
     for (pos, &t) in prompt.iter().enumerate() {
-        logits = decode_step(cfg, weights, overrides, &mut cache, t, pos)?;
+        logits = decode_step_kv(cfg, weights, overrides, kvc, &mut cache, t, pos)?;
     }
     let mut out = Vec::with_capacity(n_new);
     let mut pos = prompt.len();
@@ -304,7 +395,7 @@ pub fn generate(
         let next = sample_token(&logits, sample, &mut rng);
         out.push(next);
         if i + 1 < n_new {
-            logits = decode_step(cfg, weights, overrides, &mut cache, next, pos)?;
+            logits = decode_step_kv(cfg, weights, overrides, kvc, &mut cache, next, pos)?;
             pos += 1;
         }
     }
@@ -416,6 +507,29 @@ mod tests {
         assert_eq!(c.len, 0);
         let c = KvCache::new(&cfg);
         assert!(c.k.iter().all(|v| v.capacity() >= cfg.max_seq * cfg.d_model));
+    }
+
+    /// The `--kv-ratio 1.0` pin at the oracle level: the identity
+    /// compression takes literally the uncompressed code path, so logits
+    /// and sampled tokens are bit-identical to plain `generate`.
+    #[test]
+    fn kv_compress_identity_generation_is_bit_identical() {
+        let (cfg, w) = tiny();
+        let id = KvCompression::identity(cfg.n_layers);
+        let sc = SampleConfig { temperature: 0.8, top_k: 16, seed: 5 };
+        let plain = generate(&cfg, &w, &NoOverride, b"parity", 10, sc).unwrap();
+        let via_kv = generate_kv(&cfg, &w, &NoOverride, Some(&id), b"parity", 10, sc).unwrap();
+        assert_eq!(plain, via_kv);
+        // And step-level logits agree bit-for-bit.
+        let mut c0 = KvCache::new(&cfg);
+        let mut c1 = KvCache::with_kvc(&cfg, cfg.max_seq, Some(&id));
+        for (pos, &t) in b"parity".iter().enumerate() {
+            let a = decode_step(&cfg, &w, &NoOverride, &mut c0, t, pos).unwrap();
+            let b = decode_step_kv(&cfg, &w, &NoOverride, Some(&id), &mut c1, t, pos).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "pos {pos}");
+            }
+        }
     }
 
     #[test]

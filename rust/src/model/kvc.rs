@@ -1,0 +1,294 @@
+//! Runtime K/V-cache compression: per-layer low-rank projections that let
+//! the serving cache store **rank-r latents** per position instead of full
+//! `d`-wide K/V rows.
+//!
+//! A [`KvProj`] is a rank-r factorization of one K or V projection weight
+//! `w ≈ proj · up` (`proj` is `[n_in, r]`, `up` is `[r, d_out]`).  The
+//! down-projection is *fused*: instead of computing the full `d_out`-wide
+//! row and shrinking it, the decode step multiplies the normed hidden state
+//! by `proj` directly — one GEMM of width `r` replaces the width-`d_out`
+//! K/V GEMM, and the latent it produces is what the paged pool stores.  At
+//! attention time the gathered latent span is up-projected through `up`
+//! (one extra small GEMM per step, batched over the span) and — for RoPE
+//! families — rotated per absolute position, because RoPE is a nonlinear
+//! per-position map in `d`-space and therefore cannot live in latent space.
+//!
+//! **Determinism contract.**  Both GEMM paths here (`f32`
+//! [`crate::model::forward::matmul_raw`] and int8
+//! [`crate::linalg::quant::matmul_quant`]) are row-independent: row `i` of
+//! a batched product is bit-identical to the same row computed alone, at
+//! every worker count.  So a latent stored once is reconstructed
+//! bit-identically no matter which span gathers it — the batched server
+//! ([`crate::serve::step::decode_step_batched_kv`]) up-projects per-page
+//! spans while the single-request oracle
+//! ([`crate::model::generate::generate_kv`]) up-projects the whole history,
+//! and both see the same bits per row.  This is what extends the serve
+//! bit-parity contract through cache compression.
+//!
+//! `None` entries mean *identity*: that layer's K or V keeps the full-width
+//! uncompressed path, bit-identical to the pre-compression cache by
+//! construction.  A `--kv-ratio` of 1.0 produces all-`None` layers
+//! ([`KvCompression::identity`]).
+//!
+//! The factorization itself (whitened, ASVD-style query-scaled) lives in
+//! `compress::kv`; this module is runtime-only so `model/` keeps its
+//! no-`compress/`-dependency layering.
+
+use crate::linalg::quant::{matmul_quant, quantize_columns, QuantMatrix};
+use crate::model::forward::matmul_raw;
+
+/// Rank-r factorization of one K or V projection: `w ≈ proj · up`.
+#[derive(Clone, Debug)]
+pub struct KvProj {
+    /// Input width of the fused down-projection (the model `d_model`).
+    pub n_in: usize,
+    /// Latent rank `r` — the per-position cache width for this projection.
+    pub rank: usize,
+    /// Reconstructed width (the original projection's output dim).
+    pub d_out: usize,
+    /// Fused down-projection factor, row-major `[n_in, rank]` — replaces
+    /// the dense K/V weight in the decode step.
+    pub proj: Vec<f32>,
+    /// Up-projection factor, row-major `[rank, d_out]` — applied to
+    /// gathered latent spans at attention time.
+    pub up: Vec<f32>,
+    /// Optional per-group int8 factors (`--factor-dtype int8`
+    /// composition).  Latents in the pool stay f32; only the two factor
+    /// GEMMs route through the integer kernel.
+    pub quant: Option<KvProjQuant>,
+}
+
+/// Int8-quantized factor pair of a [`KvProj`].
+#[derive(Clone, Debug)]
+pub struct KvProjQuant {
+    pub proj: QuantMatrix,
+    pub up: QuantMatrix,
+}
+
+impl KvProj {
+    /// Build from row-major factors (`proj` `[n_in, rank]`, `up`
+    /// `[rank, d_out]`).
+    pub fn new(n_in: usize, rank: usize, d_out: usize, proj: Vec<f32>, up: Vec<f32>) -> KvProj {
+        assert_eq!(proj.len(), n_in * rank, "KvProj: proj shape mismatch");
+        assert_eq!(up.len(), rank * d_out, "KvProj: up shape mismatch");
+        KvProj { n_in, rank, d_out, proj, up, quant: None }
+    }
+
+    /// Fused down-projection: `x [rows, n_in] → latents [rows, rank]`.
+    /// Row-independent and bit-identical at every worker count (f32 and
+    /// int8 paths both).
+    pub fn project(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), rows * self.n_in);
+        match &self.quant {
+            Some(q) => {
+                let mut out = vec![0.0f32; rows * self.rank];
+                matmul_quant(x, rows, &q.proj, &mut out, crate::linalg::gemm::workers());
+                out
+            }
+            None => matmul_raw(x, rows, self.n_in, &self.proj, self.rank),
+        }
+    }
+
+    /// Up-projection of a gathered latent span:
+    /// `latents [rows, rank] → rows of width d_out`.
+    pub fn reconstruct(&self, latents: &[f32], rows: usize) -> Vec<f32> {
+        debug_assert_eq!(latents.len(), rows * self.rank);
+        match &self.quant {
+            Some(q) => {
+                let mut out = vec![0.0f32; rows * self.d_out];
+                matmul_quant(latents, rows, &q.up, &mut out, crate::linalg::gemm::workers());
+                out
+            }
+            None => matmul_raw(latents, rows, self.rank, &self.up, self.d_out),
+        }
+    }
+
+    /// Quantize both factors to per-group int8 (idempotent).
+    pub fn quantize(&mut self, group: usize) {
+        if self.quant.is_none() {
+            self.quant = Some(KvProjQuant {
+                proj: quantize_columns(&self.proj, self.n_in, self.rank, group),
+                up: quantize_columns(&self.up, self.rank, self.d_out, group),
+            });
+        }
+    }
+
+    /// Stored factor parameter count `(n_in + d_out) · rank`.
+    pub fn params(&self) -> usize {
+        (self.n_in + self.d_out) * self.rank
+    }
+
+    /// Factor storage bytes under the active dtype (int8 codes + f32
+    /// scales when quantized, 4 bytes per f32 element otherwise).
+    pub fn factor_bytes(&self) -> usize {
+        match &self.quant {
+            Some(q) => q.proj.bytes() + q.up.bytes(),
+            None => 4 * (self.proj.len() + self.up.len()),
+        }
+    }
+}
+
+/// One layer's optional K and V compressions (`None` = identity,
+/// full-width uncompressed cache for that projection).
+#[derive(Clone, Debug, Default)]
+pub struct KvLayer {
+    pub k: Option<KvProj>,
+    pub v: Option<KvProj>,
+}
+
+/// Per-layer K/V cache compression for a whole model.
+#[derive(Clone, Debug, Default)]
+pub struct KvCompression {
+    /// One entry per transformer layer, in layer order.
+    pub layers: Vec<KvLayer>,
+}
+
+impl KvCompression {
+    /// The identity compression: every layer keeps the full-width cache.
+    /// This is what `--kv-ratio 1.0` resolves to, and it is bit-identical
+    /// to the uncompressed pool by construction.
+    pub fn identity(n_layers: usize) -> KvCompression {
+        KvCompression { layers: (0..n_layers).map(|_| KvLayer::default()).collect() }
+    }
+
+    /// True when no layer carries a projection (the `--kv-ratio 1.0`
+    /// degenerate case).
+    pub fn is_identity(&self) -> bool {
+        self.layers.iter().all(|l| l.k.is_none() && l.v.is_none())
+    }
+
+    /// Cached K width of `layer`: the latent rank, or `d` when identity.
+    pub fn width_k(&self, layer: usize, d: usize) -> usize {
+        self.layers.get(layer).and_then(|l| l.k.as_ref()).map_or(d, |p| p.rank)
+    }
+
+    /// Cached V width of `layer`: the latent rank, or `d` when identity.
+    pub fn width_v(&self, layer: usize, d: usize) -> usize {
+        self.layers.get(layer).and_then(|l| l.v.as_ref()).map_or(d, |p| p.rank)
+    }
+
+    /// Total stored factor parameters across all layers.
+    pub fn params(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.k.as_ref().map_or(0, KvProj::params) + l.v.as_ref().map_or(0, KvProj::params)
+            })
+            .sum()
+    }
+
+    /// Total factor storage bytes across all layers (dtype-aware).
+    pub fn factor_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.k.as_ref().map_or(0, KvProj::factor_bytes)
+                    + l.v.as_ref().map_or(0, KvProj::factor_bytes)
+            })
+            .sum()
+    }
+
+    /// Quantize every projection's factors to per-group int8.
+    pub fn quantize(&mut self, group: usize) {
+        for l in self.layers.iter_mut() {
+            if let Some(p) = l.k.as_mut() {
+                p.quantize(group);
+            }
+            if let Some(p) = l.v.as_mut() {
+                p.quantize(group);
+            }
+        }
+    }
+
+    /// True when any projection carries int8 factors.
+    pub fn is_quantized(&self) -> bool {
+        self.layers.iter().any(|l| {
+            l.k.as_ref().is_some_and(|p| p.quant.is_some())
+                || l.v.as_ref().is_some_and(|p| p.quant.is_some())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_proj(n_in: usize, rank: usize, d_out: usize, seed: u64) -> KvProj {
+        let mut rng = Rng::new(seed);
+        let proj: Vec<f32> =
+            (0..n_in * rank).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let up: Vec<f32> =
+            (0..rank * d_out).map(|_| (rng.normal() * 0.3) as f32).collect();
+        KvProj::new(n_in, rank, d_out, proj, up)
+    }
+
+    /// Row-independence is the foundation of the cache-parity contract:
+    /// row i of a batched project/reconstruct must be bit-identical to the
+    /// same row pushed through alone.
+    #[test]
+    fn kv_compress_projection_rows_are_batch_invariant() {
+        let p = random_proj(16, 5, 16, 3);
+        let mut rng = Rng::new(4);
+        let rows = 7;
+        let x: Vec<f32> = (0..rows * 16).map(|_| rng.normal() as f32).collect();
+        let batched = p.project(&x, rows);
+        for r in 0..rows {
+            let single = p.project(&x[r * 16..(r + 1) * 16], 1);
+            assert_eq!(&batched[r * 5..(r + 1) * 5], &single[..], "project row {r}");
+        }
+        let rec_b = p.reconstruct(&batched, rows);
+        for r in 0..rows {
+            let single = p.reconstruct(&batched[r * 5..(r + 1) * 5], 1);
+            assert_eq!(&rec_b[r * 16..(r + 1) * 16], &single[..], "reconstruct row {r}");
+        }
+    }
+
+    /// Int8 factors keep the same row-independence (per-row activation
+    /// quantization + order-independent integer accumulation).
+    #[test]
+    fn kv_compress_int8_projection_rows_are_batch_invariant() {
+        let mut p = random_proj(16, 6, 16, 5);
+        p.quantize(4);
+        assert!(p.quant.is_some());
+        let mut rng = Rng::new(6);
+        let rows = 5;
+        let x: Vec<f32> = (0..rows * 16).map(|_| rng.normal() as f32).collect();
+        let batched = p.project(&x, rows);
+        for r in 0..rows {
+            let single = p.project(&x[r * 16..(r + 1) * 16], 1);
+            assert_eq!(&batched[r * 6..(r + 1) * 6], &single[..], "int8 project row {r}");
+        }
+    }
+
+    #[test]
+    fn kv_compress_identity_and_widths() {
+        let mut kvc = KvCompression::identity(3);
+        assert!(kvc.is_identity());
+        assert_eq!(kvc.width_k(0, 32), 32);
+        assert_eq!(kvc.width_v(2, 32), 32);
+        assert_eq!(kvc.params(), 0);
+        assert_eq!(kvc.factor_bytes(), 0);
+        kvc.layers[1].k = Some(random_proj(32, 8, 32, 7));
+        assert!(!kvc.is_identity());
+        assert_eq!(kvc.width_k(1, 32), 8);
+        assert_eq!(kvc.width_v(1, 32), 32);
+        assert_eq!(kvc.params(), (32 + 32) * 8);
+        assert_eq!(kvc.factor_bytes(), 4 * (32 * 8 + 8 * 32));
+    }
+
+    #[test]
+    fn kv_compress_quantize_shrinks_factor_bytes() {
+        let mut kvc = KvCompression::identity(2);
+        kvc.layers[0].k = Some(random_proj(64, 16, 64, 9));
+        kvc.layers[1].v = Some(random_proj(64, 16, 64, 10));
+        let f32_bytes = kvc.factor_bytes();
+        kvc.quantize(crate::linalg::quant::DEFAULT_GROUP);
+        assert!(kvc.is_quantized());
+        let q_bytes = kvc.factor_bytes();
+        assert!(
+            q_bytes * 2 < f32_bytes,
+            "int8 factors must at least halve storage: {q_bytes} vs {f32_bytes}"
+        );
+    }
+}

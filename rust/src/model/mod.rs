@@ -8,7 +8,9 @@
 pub mod config;
 pub mod forward;
 pub mod generate;
+pub mod kvc;
 pub mod weights;
 
 pub use config::{Family, ModelConfig};
+pub use kvc::KvCompression;
 pub use weights::Weights;

@@ -87,12 +87,13 @@
 use super::chaos::ChaosConfig;
 use super::kv_pool::{KvPool, SeqId};
 use super::prefix::{PrefixTrie, ROOT};
-use super::step::{decode_step_batched, StepRow};
+use super::step::{decode_step_batched_kv, StepRow};
 use super::stream::{DoneStats, FinishReason, StreamEvent, TokenStream};
 use crate::coordinator::metrics::GenServerMetrics;
 use crate::model::config::ModelConfig;
 use crate::model::forward::LinearOverride;
 use crate::model::generate::{sample_token, SampleConfig};
+use crate::model::kvc::KvCompression;
 use crate::model::weights::Weights;
 use crate::util::rng::Rng;
 use crate::util::threads::ThreadBudget;
@@ -381,18 +382,41 @@ pub fn serve_generation(
     gen: &GenConfig,
     requests: Receiver<GenRequest>,
 ) -> Result<GenServerMetrics> {
+    serve_generation_kv(cfg, weights, overrides, None, gen, requests)
+}
+
+/// [`serve_generation`] with optional KV-cache compression: the pool's
+/// pages store rank-wide latents ([`KvPool::with_kvc`]) so the same page
+/// budget admits ~(d/r)× the token positions, and every decode step routes
+/// through [`decode_step_batched_kv`].  Output bits stay identical to a
+/// single-request [`crate::model::generate::generate_kv`] run under the
+/// SAME compression — the whole scheduling machinery (chunked prefill,
+/// prefix sharing, preemption, watchdog re-execution, chaos) composes
+/// unchanged because the compressed step keeps the per-row bit-identity
+/// contract.  `kvc` `None` (or identity) is literally the uncompressed
+/// server.
+pub fn serve_generation_kv(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    kvc: Option<&KvCompression>,
+    gen: &GenConfig,
+    requests: Receiver<GenRequest>,
+) -> Result<GenServerMetrics> {
     let max_batch = gen.max_batch.max(1);
     let page_size = gen.page_size.max(1);
     let pages = gen.pages.max(1);
     let chunk_cap = if gen.prefill_chunk == 0 { usize::MAX } else { gen.prefill_chunk };
     let step_workers = ThreadBudget::new(gen.workers).total();
     let chaos = gen.chaos.filter(|c| c.is_active());
-    let mut pool = KvPool::new(cfg, pages, page_size);
+    let mut pool = KvPool::with_kvc(cfg, pages, page_size, kvc);
     let mut trie = PrefixTrie::new(page_size);
     let mut active: Vec<Active> = Vec::new();
     let mut preempted: VecDeque<Active> = VecDeque::new();
     let mut queue: VecDeque<Queued> = VecDeque::new();
     let mut metrics = GenServerMetrics::default();
+    metrics.kv_slot_bytes = pool.page_bytes() as f64 / page_size as f64;
+    metrics.kv_factor_bytes = kvc.map_or(0, |c| c.factor_bytes());
     let mut open = true;
     let mut arrivals: u64 = 0;
     let wall = Timer::start();
@@ -716,7 +740,7 @@ pub fn serve_generation(
             Err(anyhow::anyhow!("chaos: injected step fault (step {step_no})"))
         } else {
             match catch_unwind(AssertUnwindSafe(|| {
-                decode_step_batched(cfg, weights, overrides, &mut pool, &rows, step_workers)
+                decode_step_batched_kv(cfg, weights, overrides, kvc, &mut pool, &rows, step_workers)
             })) {
                 Ok(r) => r,
                 Err(_) => Err(anyhow::anyhow!("panic in batched decode step {step_no}")),
@@ -738,7 +762,7 @@ pub fn serve_generation(
                     }
                     let sub = &rows[range.clone()];
                     let one = catch_unwind(AssertUnwindSafe(|| {
-                        decode_step_batched(cfg, weights, overrides, &mut pool, sub, step_workers)
+                        decode_step_batched_kv(cfg, weights, overrides, kvc, &mut pool, sub, step_workers)
                     }));
                     match one {
                         Ok(Ok(l)) => {

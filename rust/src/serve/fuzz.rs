@@ -26,12 +26,24 @@
 //! the) sequential output, every casualty ends with exactly one Done
 //! carrying the correct terminal [`FinishReason`], and `serve_generation`
 //! itself always returns `Ok`.
+//!
+//! The **kv-ratio grids** run the same scenario generator against a
+//! KV-compressed server ([`serve_generation_kv`]): ratio 1.0 must be
+//! bit-identical to the plain server (identity short-circuit), lower
+//! ratios bit-equal to the compressed single-request [`generate_kv`]
+//! oracle — through every page size, worker count, preemption schedule,
+//! and chaos fault, plus an int8-factor composition pin.
 
-use super::batcher::{serve_generation, GenConfig, GenRequest};
+use super::batcher::{serve_generation_kv, GenConfig, GenRequest};
 use super::chaos::ChaosConfig;
 use super::stream::{stream_channel, FinishReason, StreamEvent};
+use crate::compress::kv::compress_kv_plain;
+use crate::linalg::rsvd::SvdPolicy;
+use crate::model::config::ModelConfig;
 use crate::model::forward::NoOverride;
-use crate::model::generate::{generate, SampleConfig};
+use crate::model::generate::{generate, generate_kv, SampleConfig};
+use crate::model::kvc::KvCompression;
+use crate::model::weights::Weights;
 use crate::util::rng::Rng;
 use std::sync::mpsc::channel;
 use std::time::Duration;
@@ -40,7 +52,25 @@ const FAMILIES: [&str; 3] = ["llama-t", "opt-t", "mistral-t"];
 const PAGE_SIZES: [usize; 3] = [1, 4, 16];
 const WORKER_COUNTS: [usize; 2] = [1, 4];
 const FAULT_RATES: [f64; 3] = [0.0, 0.05, 0.2];
+/// The `--kv-ratio` axis: 1.0 pins the identity short-circuit against the
+/// plain [`generate`] oracle, the compressed points against
+/// [`generate_kv`] under the same factors.
+const KV_RATIOS: [f64; 3] = [1.0, 0.5, 0.25];
 const SEEDS: u64 = 32;
+
+/// Build the fuzz case's KV compression for one `kv_ratio` draw: `None`
+/// is the legacy uncompressed server, 1.0 the identity object (same page
+/// layout, literally the uncompressed code path), anything lower a real
+/// whitener-free factorization.
+fn case_kvc(cfg: &ModelConfig, w: &Weights, kv_ratio: Option<f64>) -> Option<KvCompression> {
+    match kv_ratio {
+        None => None,
+        Some(r) if r >= 1.0 => Some(KvCompression::identity(cfg.n_layers)),
+        Some(r) => Some(
+            compress_kv_plain(cfg, w, r, &SvdPolicy::exact()).expect("kv factorization"),
+        ),
+    }
+}
 
 struct FuzzReq {
     prompt: Vec<u8>,
@@ -52,11 +82,19 @@ struct FuzzReq {
 }
 
 /// Run one seeded scenario end to end; `Err` carries the divergence
-/// detail (the caller adds the reproducing triple).
-fn run_case(seed: u64, page_size: usize, workers: usize) -> Result<(), String> {
+/// detail (the caller adds the reproducing tuple).  `kv_ratio` `None`
+/// serves uncompressed; `Some(r)` serves through compressed KV latents
+/// and checks the streams against the compressed sequential oracle.
+fn run_case(
+    seed: u64,
+    page_size: usize,
+    workers: usize,
+    kv_ratio: Option<f64>,
+) -> Result<(), String> {
     let mut rng = Rng::new(seed ^ 0x5EED_F00D);
     let family = FAMILIES[rng.below(FAMILIES.len())];
     let (cfg, w) = super::test_util::tiny(family, 47);
+    let kvc = case_kvc(&cfg, &w, kv_ratio);
     // Base prefixes some requests share (multi-page when the draw is long
     // enough) — the trie only ever sees full pages, so sharing kicks in
     // exactly when a base spans one.
@@ -108,9 +146,15 @@ fn run_case(seed: u64, page_size: usize, workers: usize) -> Result<(), String> {
     };
     let expect: Vec<Vec<u8>> = reqs
         .iter()
-        .map(|r| {
-            generate(&cfg, &w, &NoOverride, &r.prompt, r.max_new, r.sample)
-                .expect("sequential generate")
+        .map(|r| match (&kvc, kv_ratio) {
+            (Some(c), Some(ratio)) if ratio < 1.0 => {
+                generate_kv(&cfg, &w, &NoOverride, Some(c), &r.prompt, r.max_new, r.sample)
+                    .expect("sequential compressed generate")
+            }
+            // Identity (and uncompressed): the PLAIN oracle — kv-ratio
+            // 1.0 must be bit-identical to the uncompressed server.
+            _ => generate(&cfg, &w, &NoOverride, &r.prompt, r.max_new, r.sample)
+                .expect("sequential generate"),
         })
         .collect();
     // Serve on this thread; one client thread per request so hang-ups
@@ -154,7 +198,8 @@ fn run_case(seed: u64, page_size: usize, workers: usize) -> Result<(), String> {
             }));
         }
         drop(tx);
-        let metrics = serve_generation(&cfg, &w, &NoOverride, &gen, rx).expect("serve_generation");
+        let metrics = serve_generation_kv(&cfg, &w, &NoOverride, kvc.as_ref(), &gen, rx)
+            .expect("serve_generation_kv");
         let results: Vec<(Vec<u8>, Option<FinishReason>)> =
             handles.into_iter().map(|h| h.join().expect("client thread")).collect();
         (metrics, results)
@@ -235,10 +280,12 @@ fn run_chaos_case(
     page_size: usize,
     workers: usize,
     fault_rate: f64,
+    kv_ratio: Option<f64>,
 ) -> Result<(), String> {
     let mut rng = Rng::new(seed ^ 0xC4A0_55ED);
     let family = FAMILIES[rng.below(FAMILIES.len())];
     let (cfg, w) = super::test_util::tiny(family, 47);
+    let kvc = case_kvc(&cfg, &w, kv_ratio);
     let n_bases = 1 + rng.below(2);
     let bases: Vec<Vec<u8>> = (0..n_bases)
         .map(|_| {
@@ -302,9 +349,13 @@ fn run_chaos_case(
     };
     let expect: Vec<Vec<u8>> = reqs
         .iter()
-        .map(|r| {
-            generate(&cfg, &w, &NoOverride, &r.prompt, r.max_new, r.sample)
-                .expect("sequential generate")
+        .map(|r| match (&kvc, kv_ratio) {
+            (Some(c), Some(ratio)) if ratio < 1.0 => {
+                generate_kv(&cfg, &w, &NoOverride, Some(c), &r.prompt, r.max_new, r.sample)
+                    .expect("sequential compressed generate")
+            }
+            _ => generate(&cfg, &w, &NoOverride, &r.prompt, r.max_new, r.sample)
+                .expect("sequential generate"),
         })
         .collect();
     let (tx, rx) = channel();
@@ -371,7 +422,8 @@ fn run_chaos_case(
             }));
         }
         drop(tx);
-        let metrics = serve_generation(&cfg, &w, &NoOverride, &gen, rx).expect("serve_generation");
+        let metrics = serve_generation_kv(&cfg, &w, &NoOverride, kvc.as_ref(), &gen, rx)
+            .expect("serve_generation_kv");
         let results: Vec<(Vec<u8>, Option<FinishReason>, usize, usize)> =
             handles.into_iter().map(|h| h.join().expect("client thread")).collect();
         (metrics, results)
@@ -473,11 +525,125 @@ fn run_chaos_case(
 fn serve_fuzz_schedule_parity_quick_grid() {
     for seed in 0..SEEDS {
         let (ps, w) = combo(seed);
-        if let Err(msg) = run_case(seed, ps, w) {
+        if let Err(msg) = run_case(seed, ps, w, None) {
             panic!(
                 "serve fuzz failed: seed={seed} page_size={ps} workers={w}: {msg}\n\
-                 reproduce with serve::fuzz::run_case({seed}, {ps}, {w})"
+                 reproduce with serve::fuzz::run_case({seed}, {ps}, {w}, None)"
             );
+        }
+    }
+}
+
+/// The kv-ratio CI grid: a seed subset with `page_size × workers` combos
+/// round-robined and the kv-ratio cycling through {1.0, 0.5, 0.25} —
+/// every served stream bit-equal to the single-request compressed-KV
+/// [`generate_kv`] oracle (plain [`generate`] at ratio 1.0) through
+/// chunked prefill, prefix sharing, preemption, and cancellation.
+#[test]
+fn serve_fuzz_kv_compress_schedule_parity_quick_grid() {
+    for seed in 0..12u64 {
+        let (ps, w) = combo(seed);
+        let ratio = KV_RATIOS[(seed as usize) % KV_RATIOS.len()];
+        if let Err(msg) = run_case(seed, ps, w, Some(ratio)) {
+            panic!(
+                "serve kv fuzz failed: seed={seed} page_size={ps} workers={w} \
+                 kv_ratio={ratio}: {msg}\n\
+                 reproduce with serve::fuzz::run_case({seed}, {ps}, {w}, Some({ratio}))"
+            );
+        }
+    }
+}
+
+/// Every seed against every `page_size × workers × kv_ratio` cell — the
+/// exhaustive compressed-cache parity battery.  Slow by design; run with
+/// `cargo test -q serve_fuzz_kv_compress -- --ignored`.
+#[test]
+#[ignore = "full 32-seed x {1,4,16} pages x {1,4} workers x {1.0,0.5,0.25} kv-ratios grid"]
+fn serve_fuzz_kv_compress_schedule_parity_full_grid() {
+    for seed in 0..SEEDS {
+        for &ps in &PAGE_SIZES {
+            for &w in &WORKER_COUNTS {
+                for &ratio in &KV_RATIOS {
+                    if let Err(msg) = run_case(seed, ps, w, Some(ratio)) {
+                        panic!(
+                            "serve kv fuzz failed: seed={seed} page_size={ps} \
+                             workers={w} kv_ratio={ratio}: {msg}\n\
+                             reproduce with serve::fuzz::run_case({seed}, {ps}, {w}, Some({ratio}))"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Chaos × compression: injected step faults and allocation failures over
+/// a compressed pool — survivors stay bit-exact against the compressed
+/// oracle, casualties get one correct terminal, watchdog re-execution
+/// reconstructs the same latent bits.
+#[test]
+fn serve_fuzz_kv_compress_chaos_quick() {
+    for seed in 0..9u64 {
+        let (ps, w) = combo(seed);
+        let rate = FAULT_RATES[(seed as usize) % FAULT_RATES.len()];
+        let ratio = KV_RATIOS[(seed as usize + 1) % KV_RATIOS.len()];
+        if let Err(msg) = run_chaos_case(seed, ps, w, rate, Some(ratio)) {
+            panic!(
+                "serve kv chaos fuzz failed: seed={seed} page_size={ps} workers={w} \
+                 fault_rate={rate} kv_ratio={ratio}: {msg}\n\
+                 reproduce with serve::fuzz::run_chaos_case({seed}, {ps}, {w}, {rate}, Some({ratio}))"
+            );
+        }
+    }
+}
+
+/// Int8-quantized KV factors through the whole serving stack: the served
+/// streams must equal the sequential [`generate_kv`] run under the SAME
+/// quantized factors at every `(max_batch, page_size, workers)` — the
+/// PR-7 composition pin (factor GEMMs route through `gemm_i8_nn`, pool
+/// latents stay f32, no silent wrong numbers).
+#[test]
+fn serve_fuzz_kv_compress_int8_serve_matches_sequential() {
+    use crate::bench::drive_preloaded_kv;
+    let (cfg, w) = super::test_util::tiny("llama-t", 47);
+    let mut kvc =
+        compress_kv_plain(&cfg, &w, 0.5, &SvdPolicy::exact()).expect("kv factorization");
+    kvc.quantize(crate::linalg::quant::DEFAULT_GROUP);
+    assert!(kvc.is_quantized(), "fixture must exercise the int8 factor path");
+    let (n_req, prompt_len, max_new) = (4usize, 5usize, 5usize);
+    let prompt =
+        |i: usize| -> Vec<u8> { (0..prompt_len).map(|t| ((t * 31 + i * 7) % 256) as u8).collect() };
+    let sample = |i: usize| SampleConfig { temperature: 0.8, top_k: 16, seed: i as u64 };
+    let expect: Vec<Vec<u8>> = (0..n_req)
+        .map(|i| {
+            generate_kv(&cfg, &w, &NoOverride, Some(&kvc), &prompt(i), max_new, sample(i))
+                .expect("sequential int8-kv generate")
+        })
+        .collect();
+    for &b in &[1usize, 4] {
+        for &page_size in &[1usize, 4] {
+            for &workers in &WORKER_COUNTS {
+                let gen = GenConfig {
+                    max_batch: b,
+                    pages: n_req * (prompt_len + max_new - 1).div_ceil(page_size),
+                    page_size,
+                    prefill_chunk: 2,
+                    prefix_share: true,
+                    workers,
+                    ..GenConfig::default()
+                };
+                let reqs = (0..n_req).map(|i| (prompt(i), max_new, sample(i))).collect();
+                let (outs, metrics) =
+                    drive_preloaded_kv(&cfg, &w, &NoOverride, Some(&kvc), &gen, reqs);
+                assert_eq!(metrics.completed, n_req, "b={b} ps={page_size} w={workers}");
+                for (i, out) in outs.iter().enumerate() {
+                    assert_eq!(
+                        *out, expect[i],
+                        "int8 kv serve parity: b={b} page_size={page_size} \
+                         workers={workers} request {i}"
+                    );
+                }
+            }
         }
     }
 }
@@ -542,11 +708,11 @@ fn serve_chaos_grid_quick() {
     for seed in 0..SEEDS {
         let (ps, w) = combo(seed);
         let rate = FAULT_RATES[(seed as usize) % FAULT_RATES.len()];
-        if let Err(msg) = run_chaos_case(seed, ps, w, rate) {
+        if let Err(msg) = run_chaos_case(seed, ps, w, rate, None) {
             panic!(
                 "serve chaos fuzz failed: seed={seed} page_size={ps} workers={w} \
                  fault_rate={rate}: {msg}\n\
-                 reproduce with serve::fuzz::run_chaos_case({seed}, {ps}, {w}, {rate})"
+                 reproduce with serve::fuzz::run_chaos_case({seed}, {ps}, {w}, {rate}, None)"
             );
         }
     }
@@ -562,11 +728,11 @@ fn serve_chaos_grid_full() {
         for &ps in &PAGE_SIZES {
             for &w in &WORKER_COUNTS {
                 for &rate in &FAULT_RATES {
-                    if let Err(msg) = run_chaos_case(seed, ps, w, rate) {
+                    if let Err(msg) = run_chaos_case(seed, ps, w, rate, None) {
                         panic!(
                             "serve chaos fuzz failed: seed={seed} page_size={ps} \
                              workers={w} fault_rate={rate}: {msg}\n\
-                             reproduce with serve::fuzz::run_chaos_case({seed}, {ps}, {w}, {rate})"
+                             reproduce with serve::fuzz::run_chaos_case({seed}, {ps}, {w}, {rate}, None)"
                         );
                     }
                 }
@@ -583,10 +749,10 @@ fn serve_fuzz_schedule_parity_full_grid() {
     for seed in 0..SEEDS {
         for &ps in &PAGE_SIZES {
             for &w in &WORKER_COUNTS {
-                if let Err(msg) = run_case(seed, ps, w) {
+                if let Err(msg) = run_case(seed, ps, w, None) {
                     panic!(
                         "serve fuzz failed: seed={seed} page_size={ps} workers={w}: {msg}\n\
-                         reproduce with serve::fuzz::run_case({seed}, {ps}, {w})"
+                         reproduce with serve::fuzz::run_case({seed}, {ps}, {w}, None)"
                     );
                 }
             }

@@ -11,18 +11,27 @@
 //! a shared page copies it first (copy-on-write), so sharing can never
 //! corrupt a neighbor's history.
 //!
+//! **Per-layer row widths.**  Each layer stores K rows of `wk[l]` floats and
+//! V rows of `wv[l]` floats.  Uncompressed, every width is `d_model`; under
+//! KV-cache compression ([`crate::model::kvc::KvCompression`], built by
+//! [`KvPool::with_kvc`]) a compressed layer's width is its latent rank `r`,
+//! so pages shrink by ~`r/d` and the same byte budget holds proportionally
+//! more positions.  The pool stores whatever rows the step hands it — it
+//! does not know (or care) whether a row is a full K/V vector or a latent.
+//!
 //! The pool is owned by the scheduler thread
 //! ([`super::batcher::serve_generation`]); it is deliberately not `Sync` —
 //! every refcount and page-table mutation happens *between* decode steps on
 //! that one thread, which is what keeps the whole subsystem lock-free.
 //!
-//! Storage layout: page `p`, layer `l`, in-page position `s` lives at
-//! `k_pages[p][(l * page_size + s) * d_model ..][..d_model]` — contiguous
-//! per `(page, layer)`, so a history gather is one `copy_from_slice` per
-//! page and a history that fits one page is borrowed without copying
-//! ([`KvPool::hist_slices`]).
+//! Storage layout: page `p`, layer `l`, in-page position `s` keeps its K row
+//! at `k_pages[p][k_base[l] + s * wk[l] ..][..wk[l]]` with `k_base[l] =
+//! page_size · Σ_{j<l} wk[j]` (V likewise) — contiguous per `(page, layer)`,
+//! so a history gather is one `copy_from_slice` per page and a history that
+//! fits one page is borrowed without copying ([`KvPool::hist_slices`]).
 
 use crate::model::config::ModelConfig;
+use crate::model::kvc::KvCompression;
 
 /// Index of a page in the pool's backing storage.
 pub type PageId = usize;
@@ -42,12 +51,22 @@ struct SeqState {
 /// Paged K/V storage shared by all concurrent sequences.
 #[derive(Debug)]
 pub struct KvPool {
-    layers: usize,
     page_size: usize,
-    d: usize,
-    /// `[page]` → `[layers * page_size * d_model]` K rows.
+    /// Per-layer K row width (latent rank under compression, else d_model).
+    wk: Vec<usize>,
+    /// Per-layer V row width.
+    wv: Vec<usize>,
+    /// Per-layer K offset within a page: `page_size · Σ_{j<l} wk[j]`.
+    k_base: Vec<usize>,
+    /// Per-layer V offset within a page.
+    v_base: Vec<usize>,
+    /// Elements per K page (`page_size · Σ wk`).
+    k_elems: usize,
+    /// Elements per V page (`page_size · Σ wv`).
+    v_elems: usize,
+    /// `[page]` → `[k_elems]` K rows.
     k_pages: Vec<Vec<f32>>,
-    /// `[page]` → `[layers * page_size * d_model]` V rows.
+    /// `[page]` → `[v_elems]` V rows.
     v_pages: Vec<Vec<f32>>,
     /// Reference count per page (sequences + trie entries).
     refs: Vec<u32>,
@@ -59,21 +78,54 @@ pub struct KvPool {
 }
 
 impl KvPool {
-    /// Pool with `pages` fixed-size pages of `page_size` positions each.
-    /// Allocates everything up front: `2 · pages · layers · page_size ·
-    /// d_model` f32s; the hot loop never allocates page storage.
+    /// Pool with `pages` fixed-size pages of `page_size` positions each,
+    /// uniform `d_model`-wide rows (the uncompressed cache).  Allocates
+    /// everything up front: `2 · pages · layers · page_size · d_model`
+    /// f32s; the hot loop never allocates page storage.
     pub fn new(cfg: &ModelConfig, pages: usize, page_size: usize) -> KvPool {
+        KvPool::with_kvc(cfg, pages, page_size, None)
+    }
+
+    /// Pool whose per-layer row widths follow `kvc`: compressed layers
+    /// store rank-wide latents, identity layers full `d_model` rows.
+    /// `None` (and the all-identity compression) is exactly [`KvPool::new`].
+    pub fn with_kvc(
+        cfg: &ModelConfig,
+        pages: usize,
+        page_size: usize,
+        kvc: Option<&KvCompression>,
+    ) -> KvPool {
         assert!(pages > 0, "KvPool needs at least one page");
         assert!(page_size > 0, "KvPool needs at least one position per page");
         let d = cfg.d_model;
         let layers = cfg.n_layers;
-        let page_elems = layers * page_size * d;
+        let wk: Vec<usize> =
+            (0..layers).map(|l| kvc.map_or(d, |c| c.width_k(l, d))).collect();
+        let wv: Vec<usize> =
+            (0..layers).map(|l| kvc.map_or(d, |c| c.width_v(l, d))).collect();
+        let base = |ws: &[usize]| -> Vec<usize> {
+            let mut acc = 0usize;
+            ws.iter()
+                .map(|w| {
+                    let b = acc * page_size;
+                    acc += w;
+                    b
+                })
+                .collect()
+        };
+        let (k_base, v_base) = (base(&wk), base(&wv));
+        let k_elems = page_size * wk.iter().sum::<usize>();
+        let v_elems = page_size * wv.iter().sum::<usize>();
         KvPool {
-            layers,
             page_size,
-            d,
-            k_pages: (0..pages).map(|_| vec![0.0f32; page_elems]).collect(),
-            v_pages: (0..pages).map(|_| vec![0.0f32; page_elems]).collect(),
+            wk,
+            wv,
+            k_base,
+            v_base,
+            k_elems,
+            v_elems,
+            k_pages: (0..pages).map(|_| vec![0.0f32; k_elems]).collect(),
+            v_pages: (0..pages).map(|_| vec![0.0f32; v_elems]).collect(),
             refs: vec![0; pages],
             free: (0..pages).rev().collect(),
             seqs: Vec::new(),
@@ -94,6 +146,23 @@ impl KvPool {
     /// Total positions the pool can hold (`pages · page_size`).
     pub fn capacity(&self) -> usize {
         self.pages() * self.page_size
+    }
+
+    /// Stored K row width of `layer` (latent rank under compression).
+    pub fn width_k(&self, layer: usize) -> usize {
+        self.wk[layer]
+    }
+
+    /// Stored V row width of `layer`.
+    pub fn width_v(&self, layer: usize) -> usize {
+        self.wv[layer]
+    }
+
+    /// Bytes of K+V storage per page — the slots-per-GB denominator.
+    /// Compression shrinks exactly this number (`Σ(wk+wv) · page_size ·
+    /// 4` bytes); page count and table overheads are unchanged.
+    pub fn page_bytes(&self) -> usize {
+        4 * (self.k_elems + self.v_elems)
     }
 
     /// Pages currently on the free list.
@@ -250,11 +319,14 @@ impl KvPool {
         Some(())
     }
 
-    /// Write the K/V rows of `(seq, layer)` at position `pos`.  The page
-    /// must have been made writable by [`KvPool::prepare`].
+    /// Write the K/V rows of `(seq, layer)` at position `pos` — `k_row` is
+    /// `wk[layer]` wide, `v_row` `wv[layer]` wide (latents under
+    /// compression).  The page must have been made writable by
+    /// [`KvPool::prepare`].
     pub fn push_row(&mut self, seq: SeqId, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
-        debug_assert_eq!(k_row.len(), self.d);
-        debug_assert_eq!(v_row.len(), self.d);
+        let (wk, wv) = (self.wk[layer], self.wv[layer]);
+        debug_assert_eq!(k_row.len(), wk);
+        debug_assert_eq!(v_row.len(), wv);
         let idx = pos / self.page_size;
         assert!(
             idx < self.seqs[seq].table.len(),
@@ -265,9 +337,11 @@ impl KvPool {
             self.refs[page], 1,
             "write into shared page {page} (prepare() skipped the CoW?)"
         );
-        let off = (layer * self.page_size + pos % self.page_size) * self.d;
-        self.k_pages[page][off..off + self.d].copy_from_slice(k_row);
-        self.v_pages[page][off..off + self.d].copy_from_slice(v_row);
+        let s = pos % self.page_size;
+        let ko = self.k_base[layer] + s * wk;
+        self.k_pages[page][ko..ko + wk].copy_from_slice(k_row);
+        let vo = self.v_base[layer] + s * wv;
+        self.v_pages[page][vo..vo + wv].copy_from_slice(v_row);
     }
 
     /// Commit `seq`'s valid-position count.  Growth requires the covering
@@ -294,10 +368,13 @@ impl KvPool {
     /// Borrow the K/V rows for positions `[base, t_now)` of `(seq, layer)`
     /// when they live in ONE page (`base` page-aligned) — the no-copy fast
     /// path the decode step takes for short histories and narrow attention
-    /// windows.  `None` when the span crosses a page boundary.
+    /// windows.  `None` when the span crosses a page boundary.  Row widths
+    /// are `wk[layer]`/`wv[layer]`.
     pub fn hist_slices(&self, seq: SeqId, layer: usize, base: usize, t_now: usize) -> Option<(&[f32], &[f32])> {
         debug_assert_eq!(base % self.page_size, 0, "base must be page-aligned");
-        debug_assert!(base < t_now && t_now <= self.seqs[seq].len);
+        // Mid-step reads run ahead of the committed length (set_len lands
+        // at the very end of the step), so bound against tabled pages.
+        debug_assert!(base < t_now && t_now <= self.seqs[seq].table.len() * self.page_size);
         if t_now - base > self.page_size {
             return None;
         }
@@ -306,11 +383,12 @@ impl KvPool {
             return None;
         }
         let page = self.seqs[seq].table[idx];
-        let off = layer * self.page_size * self.d;
-        let n = (t_now - base) * self.d;
+        let rows = t_now - base;
+        let ko = self.k_base[layer];
+        let vo = self.v_base[layer];
         Some((
-            &self.k_pages[page][off..off + n],
-            &self.v_pages[page][off..off + n],
+            &self.k_pages[page][ko..ko + rows * self.wk[layer]],
+            &self.v_pages[page][vo..vo + rows * self.wv[layer]],
         ))
     }
 
@@ -328,20 +406,22 @@ impl KvPool {
         v_out: &mut Vec<f32>,
     ) {
         debug_assert_eq!(base % self.page_size, 0, "base must be page-aligned");
-        debug_assert!(base < t_now && t_now <= self.seqs[seq].len);
+        debug_assert!(base < t_now && t_now <= self.seqs[seq].table.len() * self.page_size);
+        let (wk, wv) = (self.wk[layer], self.wv[layer]);
         k_out.clear();
         v_out.clear();
-        k_out.reserve((t_now - base) * self.d);
-        v_out.reserve((t_now - base) * self.d);
+        k_out.reserve((t_now - base) * wk);
+        v_out.reserve((t_now - base) * wv);
         let mut pos = base;
         while pos < t_now {
             let idx = pos / self.page_size;
             let page = self.seqs[seq].table[idx];
             let take = ((idx + 1) * self.page_size).min(t_now) - pos;
-            let off = (layer * self.page_size + pos % self.page_size) * self.d;
-            let n = take * self.d;
-            k_out.extend_from_slice(&self.k_pages[page][off..off + n]);
-            v_out.extend_from_slice(&self.v_pages[page][off..off + n]);
+            let s = pos % self.page_size;
+            let ko = self.k_base[layer] + s * wk;
+            let vo = self.v_base[layer] + s * wv;
+            k_out.extend_from_slice(&self.k_pages[page][ko..ko + take * wk]);
+            v_out.extend_from_slice(&self.v_pages[page][vo..vo + take * wv]);
             pos += take;
         }
     }
@@ -362,6 +442,7 @@ fn two_pages(pages: &mut [Vec<f32>], src: usize, dst: usize) -> (&[f32], &mut [f
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::kvc::KvProj;
 
     fn cfg() -> ModelConfig {
         let mut cfg = ModelConfig::builtin("llama-t").unwrap();
@@ -557,5 +638,113 @@ mod tests {
         let s = pool.new_seq();
         let r = row(d, 0.0);
         pool.push_row(s, 0, 0, &r, &r);
+    }
+
+    /// A KvCompression with every layer's K and V at latent rank `r`
+    /// (identity-shaped factors — pool tests care about widths, not math).
+    fn uniform_kvc(layers: usize, d: usize, r: usize) -> KvCompression {
+        let mut kvc = KvCompression::identity(layers);
+        for l in 0..layers {
+            kvc.layers[l].k = Some(KvProj::new(d, r, d, vec![0.0; d * r], vec![0.0; r * d]));
+            kvc.layers[l].v = Some(KvProj::new(d, r, d, vec![0.0; d * r], vec![0.0; r * d]));
+        }
+        kvc
+    }
+
+    /// Admit fixed-length sequences until the free list runs dry; each
+    /// needs `ceil(len/page_size)` pages.
+    fn admit_until_full(pool: &mut KvPool, seq_len: usize) -> usize {
+        let mut admitted = 0usize;
+        loop {
+            let s = pool.new_seq();
+            for pos in 0..seq_len {
+                if pool.prepare(s, pos).is_none() {
+                    pool.release_seq(s);
+                    return admitted;
+                }
+                pool.set_len(s, pos + 1);
+            }
+            admitted += 1;
+        }
+    }
+
+    /// Satellite regression: at kv-ratio r/d = 1/4 the SAME byte budget
+    /// admits ≥ 4× the sequences before first exhaustion, and the
+    /// page-byte accounting agrees with the actual backing allocations.
+    #[test]
+    fn kv_compress_pool_admits_more_sequences_at_equal_bytes() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let (page_size, seq_len) = (4usize, 8usize);
+        let dense_pages = 6usize;
+        let dense = KvPool::new(&cfg, dense_pages, page_size);
+        let budget = dense_pages * dense.page_bytes();
+        let kvc = uniform_kvc(cfg.n_layers, d, d / 4);
+        // Same byte budget, quarter-width rows → 4× the page count.
+        let probe = KvPool::with_kvc(&cfg, 1, page_size, Some(&kvc));
+        let compressed_pages = budget / probe.page_bytes();
+        assert_eq!(compressed_pages, 4 * dense_pages);
+        let mut dense = dense;
+        let mut compressed = KvPool::with_kvc(&cfg, compressed_pages, page_size, Some(&kvc));
+        let base = admit_until_full(&mut dense, seq_len);
+        let more = admit_until_full(&mut compressed, seq_len);
+        assert!(base > 0);
+        assert!(
+            more >= 4 * base,
+            "equal-memory admission: {more} compressed vs {base} dense (need ≥ 4×)"
+        );
+        // Accounting agrees with the real allocations, both dtypes.
+        for pool in [&dense, &compressed] {
+            let actual: usize = pool
+                .k_pages
+                .iter()
+                .chain(pool.v_pages.iter())
+                .map(|p| 4 * p.len())
+                .sum();
+            assert_eq!(pool.page_bytes() * pool.pages(), actual);
+        }
+        for l in 0..cfg.n_layers {
+            assert_eq!(compressed.width_k(l), d / 4);
+            assert_eq!(compressed.width_v(l), d / 4);
+            assert_eq!(dense.width_k(l), d);
+        }
+    }
+
+    /// Mixed per-layer widths: layer 0 compressed (K only), layer 1 dense.
+    /// Rows land at their layer's base offsets and round-trip intact.
+    #[test]
+    fn kv_compress_pool_mixed_widths_round_trip() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let r = d / 2;
+        let mut kvc = KvCompression::identity(cfg.n_layers);
+        kvc.layers[0].k = Some(KvProj::new(d, r, d, vec![0.0; d * r], vec![0.0; r * d]));
+        let mut pool = KvPool::with_kvc(&cfg, 2, 2, Some(&kvc));
+        assert_eq!(pool.width_k(0), r);
+        assert_eq!(pool.width_v(0), d);
+        assert_eq!(pool.width_k(1), d);
+        assert_eq!(pool.page_bytes(), 4 * 2 * (r + 3 * d));
+        let s = pool.new_seq();
+        for pos in 0..3 {
+            pool.prepare(s, pos).unwrap();
+            let fill = 10.0 * pos as f32;
+            pool.push_row(s, 0, pos, &row(r, fill), &row(d, -fill));
+            pool.push_row(s, 1, pos, &row(d, fill + 1.0), &row(d, -fill - 1.0));
+            pool.set_len(s, pos + 1);
+        }
+        // Single-page span widths follow the layer.
+        let (k0, v0) = pool.hist_slices(s, 0, 2, 3).unwrap();
+        assert_eq!(k0, &row(r, 20.0)[..]);
+        assert_eq!(v0, &row(d, -20.0)[..]);
+        let (k1, _) = pool.hist_slices(s, 1, 2, 3).unwrap();
+        assert_eq!(k1, &row(d, 21.0)[..]);
+        // Cross-page gather keeps per-layer stride.
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        pool.gather_hist(s, 0, 0, 3, &mut k, &mut v);
+        assert_eq!(k.len(), 3 * r);
+        assert_eq!(v.len(), 3 * d);
+        assert_eq!(&k[r..2 * r], &row(r, 10.0)[..]);
+        assert_eq!(&v[d..2 * d], &row(d, -10.0)[..]);
     }
 }

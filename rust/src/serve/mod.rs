@@ -50,6 +50,14 @@
 //! whether its prefix came from the trie, or how often it was preempted
 //! (pinned by the parity tests in [`batcher`] and [`step`], and by the
 //! randomized schedule fuzz harness in `fuzz`).
+//!
+//! The contract extends to the **compressed KV cache**
+//! ([`crate::model::kvc::KvCompression`], `--kv-ratio`): pages store
+//! rank-wide latents, the step fuses the down-projection into the K/V
+//! GEMM and up-projects at attention time, and the served bits equal a
+//! single-request [`crate::model::generate::generate_kv`] run under the
+//! same factors — the fuzz grid sweeps kv-ratio alongside page size,
+//! workers, preemption, and chaos.
 
 pub mod batcher;
 pub mod chaos;
@@ -74,9 +82,9 @@ pub(crate) mod test_util {
     }
 }
 
-pub use batcher::{serve_generation, ClockMode, GenConfig, GenRequest};
+pub use batcher::{serve_generation, serve_generation_kv, ClockMode, GenConfig, GenRequest};
 pub use chaos::ChaosConfig;
 pub use kv_pool::KvPool;
 pub use prefix::PrefixTrie;
-pub use step::{decode_step_batched, StepRow};
+pub use step::{decode_step_batched, decode_step_batched_kv, StepRow};
 pub use stream::{collect_stream, stream_channel, DoneStats, FinishReason, StreamEvent, TokenStream};

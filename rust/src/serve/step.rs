@@ -70,6 +70,7 @@ use crate::linalg::gemm;
 use crate::model::config::{Family, ModelConfig};
 use crate::model::forward::{matmul_f32, LinearOverride};
 use crate::model::generate::{attend_row, layernorm_row, rmsnorm_row, rope_row};
+use crate::model::kvc::KvCompression;
 use crate::model::weights::Weights;
 use anyhow::Result;
 
@@ -131,6 +132,37 @@ pub fn decode_step_batched(
     cfg: &ModelConfig,
     weights: &Weights,
     overrides: &dyn LinearOverride,
+    pool: &mut KvPool,
+    rows: &[StepRow],
+    workers: usize,
+) -> Result<Vec<f32>> {
+    decode_step_batched_kv(cfg, weights, overrides, None, pool, rows, workers)
+}
+
+/// [`decode_step_batched`] with optional KV-cache compression
+/// ([`KvCompression`]): a compressed layer's K/V projection GEMM is
+/// REPLACED by the fused down-projection (one stacked GEMM of width `r`
+/// instead of `d_model` — [`crate::model::kvc::KvProj::project`]), the
+/// pool pages store the rank-wide latents **pre-RoPE**, and each row's
+/// attention up-projects its gathered latent span
+/// ([`crate::model::kvc::KvProj::reconstruct`], one extra small GEMM) then
+/// RoPE-rotates the K rows at their absolute positions before the
+/// unchanged `attend_row`.  `pool` must have been built with the same
+/// compression ([`KvPool::with_kvc`]).
+///
+/// The bit-identity contract extends through compression: both factor
+/// GEMMs are row-independent at every worker count, so a latent written
+/// once reconstructs to the same bits whether this batched path
+/// up-projects a per-page span or the sequential oracle
+/// ([`crate::model::generate::decode_step_kv`]) up-projects the full
+/// history — pinned per family/page-size/worker-count by the tests below
+/// and the serve fuzz battery.  Identity layers (and `kvc` `None`) take
+/// literally the uncompressed code path.
+pub fn decode_step_batched_kv(
+    cfg: &ModelConfig,
+    weights: &Weights,
+    overrides: &dyn LinearOverride,
+    kvc: Option<&KvCompression>,
     pool: &mut KvPool,
     rows: &[StepRow],
     workers: usize,
@@ -221,9 +253,23 @@ pub fn decode_step_batched(
             _ => None,
         };
         norm_rows(&mut h, d, nw, nb);
+        let kp = kvc.and_then(|c| c.layers.get(i)).and_then(|l| l.k.as_ref());
+        let vp = kvc.and_then(|c| c.layers.get(i)).and_then(|l| l.v.as_ref());
+        let (wk_i, wv_i) = (kp.map_or(d, |p| p.rank), vp.map_or(d, |p| p.rank));
+        debug_assert_eq!(pool.width_k(i), wk_i, "pool built with a different compression");
+        debug_assert_eq!(pool.width_v(i), wv_i, "pool built with a different compression");
         let mut q = lin(&format!("blocks.{i}.attn.wq"), &h, d)?;
-        let mut k = lin(&format!("blocks.{i}.attn.wk"), &h, d)?;
-        let v = lin(&format!("blocks.{i}.attn.wv"), &h, d)?;
+        // Fused down-projection: for a compressed layer the latent GEMM
+        // replaces the dense K/V projection (and any weight-compression
+        // override of it); latents are stored pre-RoPE.
+        let mut k = match kp {
+            Some(p) => p.project(&h, b),
+            None => lin(&format!("blocks.{i}.attn.wk"), &h, d)?,
+        };
+        let v = match vp {
+            Some(p) => p.project(&h, b),
+            None => lin(&format!("blocks.{i}.attn.wv"), &h, d)?,
+        };
         // Push EVERY write row's K/V before any attention: a later chunk
         // row must see its predecessors' history (replay rows skip the
         // write — their position's bits are already in a shared page).
@@ -232,15 +278,25 @@ pub fn decode_step_batched(
                 rope_row(&mut q[r * d..(r + 1) * d], heads, hd, row.pos);
             }
             if row.write_kv {
-                if cfg.family.uses_rope() {
+                if cfg.family.uses_rope() && kp.is_none() {
                     rope_row(&mut k[r * d..(r + 1) * d], heads, hd, row.pos);
                 }
-                pool.push_row(row.seq, i, row.pos, &k[r * d..(r + 1) * d], &v[r * d..(r + 1) * d]);
+                pool.push_row(
+                    row.seq,
+                    i,
+                    row.pos,
+                    &k[r * wk_i..(r + 1) * wk_i],
+                    &v[r * wv_i..(r + 1) * wv_i],
+                );
             }
         }
         // Attention stays per row: each sequence attends over its own paged
         // history (identical float-op order to the sequential path via
         // attend_row; `lo`/`t_now` are rebased onto the presented span).
+        // Compressed layers up-project the span's latents first and RoPE
+        // the K rows at their absolute positions — row-independent GEMMs,
+        // so the reconstructed bits match the sequential oracle's
+        // full-history reconstruction row for row.
         let mut att = vec![0.0f32; b * d];
         for (r, row) in rows.iter().enumerate() {
             let t_now = row.pos + 1;
@@ -248,17 +304,40 @@ pub fn decode_step_batched(
             let base = (lo / page) * page;
             let q_row = &q[r * d..(r + 1) * d];
             let att_row = &mut att[r * d..(r + 1) * d];
-            match pool.hist_slices(row.seq, i, base, t_now) {
-                Some((kh, vh)) => attend_row(
-                    q_row, kh, vh, heads, hd, scale, lo - base, t_now - base, att_row,
-                ),
-                None => {
-                    pool.gather_hist(row.seq, i, base, t_now, &mut k_buf, &mut v_buf);
-                    attend_row(
-                        q_row, &k_buf, &v_buf, heads, hd, scale, lo - base, t_now - base, att_row,
-                    );
+            let (kh_raw, vh_raw): (&[f32], &[f32]) =
+                match pool.hist_slices(row.seq, i, base, t_now) {
+                    Some((kh, vh)) => (kh, vh),
+                    None => {
+                        pool.gather_hist(row.seq, i, base, t_now, &mut k_buf, &mut v_buf);
+                        (&k_buf, &v_buf)
+                    }
+                };
+            let span = t_now - base;
+            let k_store: Vec<f32>;
+            let v_store: Vec<f32>;
+            let kh: &[f32] = match kp {
+                Some(p) => {
+                    debug_assert_eq!(p.d_out, d, "K up-projection must restore d_model");
+                    let mut full = p.reconstruct(kh_raw, span);
+                    if cfg.family.uses_rope() {
+                        for (j, krow) in full.chunks_mut(d).enumerate() {
+                            rope_row(krow, heads, hd, base + j);
+                        }
+                    }
+                    k_store = full;
+                    &k_store
                 }
-            }
+                None => kh_raw,
+            };
+            let vh: &[f32] = match vp {
+                Some(p) => {
+                    debug_assert_eq!(p.d_out, d, "V up-projection must restore d_model");
+                    v_store = p.reconstruct(vh_raw, span);
+                    &v_store
+                }
+                None => vh_raw,
+            };
+            attend_row(q_row, kh, vh, heads, hd, scale, lo - base, t_now - base, att_row);
         }
         let o = lin(&format!("blocks.{i}.attn.wo"), &att, d)?;
         for (xv, ov) in x.iter_mut().zip(&o) {
@@ -670,5 +749,174 @@ mod tests {
         let mut pool = KvPool::new(&cfg, 1, 4);
         let out = decode_step_batched(&cfg, &w, &NoOverride, &mut pool, &[], 1).unwrap();
         assert!(out.is_empty());
+    }
+
+    // ---- compressed-KV parity ------------------------------------------
+
+    use crate::compress::kv::compress_kv_plain;
+    use crate::linalg::rsvd::SvdPolicy;
+    use crate::model::generate::decode_step_kv;
+
+    /// Lockstep batched decode with compressed KV latents vs B independent
+    /// sequential compressed-KV decoders: bit-identical per row for every
+    /// family, page size, and worker count.  The batched path up-projects
+    /// per-page latent spans, the oracle the full history — row-independent
+    /// GEMMs make the reconstructed bits equal.
+    #[test]
+    fn kv_compress_batched_step_matches_sequential_oracle() {
+        for name in ["llama-t", "opt-t", "mistral-t"] {
+            let (cfg, w) = tiny(name);
+            let kvc = compress_kv_plain(&cfg, &w, 0.5, &SvdPolicy::exact()).unwrap();
+            assert!(!kvc.is_identity(), "{name}: ratio 0.5 must compress");
+            for &page_size in &[1usize, 4] {
+                for &workers in &[1usize, 4] {
+                    let b = 3usize;
+                    let mut pool = KvPool::with_kvc(
+                        &cfg,
+                        8usize.div_ceil(page_size) * b,
+                        page_size,
+                        Some(&kvc),
+                    );
+                    let seqs_id: Vec<usize> = (0..b).map(|_| pool.new_seq()).collect();
+                    let mut caches: Vec<KvCache> = (0..b)
+                        .map(|_| KvCache::with_kvc(&cfg, cfg.max_seq, Some(&kvc)))
+                        .collect();
+                    let seqs: Vec<Vec<u8>> = (0..b)
+                        .map(|s| (0..8).map(|t| ((s * 91 + t * 37) % 251) as u8).collect())
+                        .collect();
+                    for pos in 0..8 {
+                        let rows: Vec<StepRow> = (0..b)
+                            .map(|s| write_row(seqs_id[s], seqs[s][pos], pos, true))
+                            .collect();
+                        prep(&mut pool, &rows);
+                        let batched = decode_step_batched_kv(
+                            &cfg, &w, &NoOverride, Some(&kvc), &mut pool, &rows, workers,
+                        )
+                        .unwrap();
+                        for s in 0..b {
+                            let seq = decode_step_kv(
+                                &cfg,
+                                &w,
+                                &NoOverride,
+                                Some(&kvc),
+                                &mut caches[s],
+                                seqs[s][pos],
+                                pos,
+                            )
+                            .unwrap();
+                            assert_bits_eq(
+                                &batched[s * cfg.vocab..(s + 1) * cfg.vocab],
+                                &seq,
+                                &format!("{name} ps={page_size} w={workers} seq {s} pos {pos}"),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// kv-ratio 1.0 (identity compression) on a `with_kvc` pool is
+    /// bit-identical to today's uncompressed path on a plain pool — the
+    /// identity layers take literally the legacy code path.
+    #[test]
+    fn kv_compress_identity_batched_step_bit_identical() {
+        for name in ["llama-t", "opt-t"] {
+            let (cfg, w) = tiny(name);
+            let kvc = KvCompression::identity(cfg.n_layers);
+            let mut plain_pool = KvPool::new(&cfg, 6, 2);
+            let mut id_pool = KvPool::with_kvc(&cfg, 6, 2, Some(&kvc));
+            assert_eq!(plain_pool.page_bytes(), id_pool.page_bytes());
+            let sp = plain_pool.new_seq();
+            let si = id_pool.new_seq();
+            for pos in 0..6 {
+                let token = ((pos * 73 + 19) % 251) as u8;
+                let rp = [write_row(sp, token, pos, true)];
+                let ri = [write_row(si, token, pos, true)];
+                prep(&mut plain_pool, &rp);
+                prep(&mut id_pool, &ri);
+                let plain =
+                    decode_step_batched(&cfg, &w, &NoOverride, &mut plain_pool, &rp, 2).unwrap();
+                let ident = decode_step_batched_kv(
+                    &cfg, &w, &NoOverride, Some(&kvc), &mut id_pool, &ri, 2,
+                )
+                .unwrap();
+                assert_bits_eq(&ident, &plain, &format!("{name} identity kvc pos {pos}"));
+            }
+        }
+    }
+
+    /// A whole prompt as ONE multi-row chunk under compression matches the
+    /// position-by-position sequential compressed oracle — including the
+    /// sliding-window family, where the span base moves off zero.
+    #[test]
+    fn kv_compress_chunked_prefill_matches_oracle() {
+        for name in ["llama-t", "mistral-t"] {
+            let (cfg, w) = tiny(name);
+            let kvc = compress_kv_plain(&cfg, &w, 0.5, &SvdPolicy::exact()).unwrap();
+            let prompt: Vec<u8> = (0..7).map(|t| (t * 41 + 3) as u8).collect();
+            let mut reference = Vec::new();
+            let mut cache = KvCache::with_kvc(&cfg, cfg.max_seq, Some(&kvc));
+            for (pos, &t) in prompt.iter().enumerate() {
+                reference =
+                    decode_step_kv(&cfg, &w, &NoOverride, Some(&kvc), &mut cache, t, pos)
+                        .unwrap();
+            }
+            for &page_size in &[1usize, 2, 16] {
+                let mut pool = KvPool::with_kvc(
+                    &cfg,
+                    prompt.len().div_ceil(page_size),
+                    page_size,
+                    Some(&kvc),
+                );
+                let s = pool.new_seq();
+                let rows: Vec<StepRow> = prompt
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, &t)| write_row(s, t, pos, pos + 1 == prompt.len()))
+                    .collect();
+                prep(&mut pool, &rows);
+                let logits = decode_step_batched_kv(
+                    &cfg, &w, &NoOverride, Some(&kvc), &mut pool, &rows, 2,
+                )
+                .unwrap();
+                let v = cfg.vocab;
+                assert_bits_eq(
+                    &logits[(prompt.len() - 1) * v..],
+                    &reference,
+                    &format!("{name} ps={page_size} compressed one-chunk prefill"),
+                );
+            }
+        }
+    }
+
+    /// Int8-quantized KV factors (PR 7 composition): the batched step and
+    /// the sequential oracle share the quantized projection path through
+    /// `gemm_i8_nn`, so per-row bits still match at every worker count —
+    /// no silent wrong numbers.
+    #[test]
+    fn kv_compress_int8_factors_match_sequential_oracle() {
+        let (cfg, w) = tiny("llama-t");
+        let mut kvc = compress_kv_plain(&cfg, &w, 0.5, &SvdPolicy::exact()).unwrap();
+        kvc.quantize(crate::linalg::quant::DEFAULT_GROUP);
+        assert!(kvc.is_quantized());
+        for &workers in &[1usize, 4] {
+            let mut pool = KvPool::with_kvc(&cfg, 8, 2, Some(&kvc));
+            let s = pool.new_seq();
+            let mut cache = KvCache::with_kvc(&cfg, cfg.max_seq, Some(&kvc));
+            for pos in 0..8 {
+                let token = ((pos * 57 + 5) % 251) as u8;
+                let rows = [write_row(s, token, pos, true)];
+                prep(&mut pool, &rows);
+                let batched = decode_step_batched_kv(
+                    &cfg, &w, &NoOverride, Some(&kvc), &mut pool, &rows, workers,
+                )
+                .unwrap();
+                let seq =
+                    decode_step_kv(&cfg, &w, &NoOverride, Some(&kvc), &mut cache, token, pos)
+                        .unwrap();
+                assert_bits_eq(&batched, &seq, &format!("int8 kvc w={workers} pos {pos}"));
+            }
+        }
     }
 }
