@@ -85,6 +85,26 @@
 #                                     parity at kv-ratio 0.5 and the
 #                                     >= 1.8x slots-at-equal-memory
 #                                     admission assertion)
+#   4j. observability smoke         — the obs tests run by name (span
+#                                     nesting + parent linkage across
+#                                     spawns, registry merge/replace
+#                                     algebra, Prometheus + Chrome-trace
+#                                     exporters, disabled-path inertness,
+#                                     obs-on/off serve bit-identity) plus
+#                                     the trace-export end-to-end smoke
+#                                     (emitted JSON must round-trip
+#                                     through util/json.rs with spans
+#                                     from engine, kernel, and serve)
+#   4k. bench regression gate       — BENCH_*.json baselines committed at
+#                                     HEAD are extracted and compared
+#                                     against the working tree's copies by
+#                                     the bench_gate binary; any
+#                                     higher-is-better metric down > 10%
+#                                     (or lower-is-better up > 10%) fails.
+#                                     Placeholder files (note contains
+#                                     PLACEHOLDER, or empty results) are
+#                                     skipped, so the gate arms itself only
+#                                     once real numbers are committed
 #   5. cargo doc --no-deps          — rustdoc builds with warnings DENIED,
 #                                     so README/ARCHITECTURE/module docs
 #                                     and intra-doc links can never rot
@@ -152,6 +172,22 @@ cargo test -q watchdog
 step "compressed-KV-cache smoke (kv_compress tests + perf_serve kv --quick)"
 cargo test -q kv_compress
 cargo bench --bench perf_serve -- kv --quick
+
+step "observability smoke (obs tests + trace-export end-to-end)"
+cargo test -q obs
+cargo test -q trace_export
+
+step "bench regression gate (bench_gate vs HEAD baselines)"
+BASELINE_DIR=target/bench_baseline
+rm -rf "$BASELINE_DIR"
+mkdir -p "$BASELINE_DIR"
+for f in BENCH_*.json; do
+    [ -e "$f" ] || continue
+    # Compare against the committed baseline; a file not yet tracked at
+    # HEAD (new suite) simply has no baseline and is skipped by the gate.
+    git show "HEAD:$f" > "$BASELINE_DIR/$f" 2>/dev/null || rm -f "$BASELINE_DIR/$f"
+done
+cargo run -q --bin bench_gate -- "$BASELINE_DIR" . 0.10
 
 step "cargo doc --no-deps (deny warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -27,6 +27,7 @@
 //!   cargo bench --bench perf_serve -- parity --quick   # ci.sh smoke
 //!   cargo bench --bench perf_serve -- paged --quick    # ci.sh gate 4f
 //!   cargo bench --bench perf_serve -- kv --quick       # ci.sh gate 4i
+//!   cargo bench --bench perf_serve -- obs --quick      # obs overhead report
 
 use nsvd::bench::{
     drive_concurrent, drive_concurrent_kv, drive_open_loop, drive_preloaded, drive_preloaded_kv,
@@ -356,6 +357,51 @@ fn main() {
             suite.record_metric("serve_kv_equal_mem_r05", "tokens_per_s", k.tokens_per_s());
             suite.record_metric("serve_kv_equal_mem_r05", "mean_concurrent", k.mean_batch_fill());
             suite.record_metric("serve_kv_equal_mem_r05", "slots_per_gb", k.kv_slots_per_gb());
+        }
+    }
+
+    // ---- observability overhead: obs off vs on, same tiny serve ----
+    // Report-only (timing noise at this scale would make a hard threshold
+    // flaky): the contract that matters — disabled obs is one relaxed
+    // atomic load, enabled obs never perturbs the generated bits — is
+    // asserted here (identical outputs) and pinned by the obs-on/off serve
+    // fuzz test; the printed tok/s pair just makes the overhead visible in
+    // CI logs.
+    if suite.enabled("serve_obs_overhead") {
+        let b = 4;
+        let obs_new = if quick { 8 } else { 24 };
+        let mut outs_off = None;
+        suite.bench("serve_obs_overhead_off", 1, || {
+            nsvd::obs::set_enabled(false);
+            let (outs, generated) = run_batch(&cfg, &weights, &cm, b, 1, obs_new, b, 0);
+            assert_eq!(generated, b * obs_new);
+            outs_off = Some(outs);
+        });
+        let mut outs_on = None;
+        let mut spans = 0usize;
+        suite.bench("serve_obs_overhead_on", 1, || {
+            nsvd::obs::reset();
+            nsvd::obs::set_enabled(true);
+            let (outs, generated) = run_batch(&cfg, &weights, &cm, b, 1, obs_new, b, 0);
+            assert_eq!(generated, b * obs_new);
+            spans = nsvd::obs::trace::snapshot_events().len();
+            nsvd::obs::set_enabled(false);
+            nsvd::obs::reset();
+            outs_on = Some(outs);
+        });
+        assert_eq!(outs_off, outs_on, "obs on/off must be bit-identical");
+        if let (Some(off), Some(on)) = (
+            suite.mean_of("serve_obs_overhead_off").filter(|&m| m > 0.0),
+            suite.mean_of("serve_obs_overhead_on").filter(|&m| m > 0.0),
+        ) {
+            let tok = (b * obs_new) as f64;
+            println!(
+                "  obs overhead: off {:.0} tok/s, on {:.0} tok/s ({:+.1}%), {spans} events recorded",
+                tok / off,
+                tok / on,
+                (off / on - 1.0) * 100.0
+            );
+            suite.record_metric("serve_obs_overhead_on", "events_recorded", spans as f64);
         }
     }
 

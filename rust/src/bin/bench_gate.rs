@@ -1,0 +1,277 @@
+//! Bench regression gate: compare committed `BENCH_*.json` baselines
+//! against freshly regenerated results and fail on significant slowdown.
+//!
+//! ```text
+//! bench_gate <baseline_dir> <current_dir> [tolerance]
+//! ```
+//!
+//! Both directories hold `BENCH_*.json` files as written by the perf
+//! benches (`{"suite": ..., "note": ..., "results": [{"name": ...,
+//! <metric>: <number>, ...}, ...]}`).  For every file present in
+//! `current_dir` with a same-named baseline, rows are matched by `name`
+//! and each recognized metric compared:
+//!
+//! - higher-is-better (`gflops`, `*_per_s`, `tok_s`, `speedup*`,
+//!   `throughput*`): fail when `current < baseline * (1 - tolerance)`
+//! - lower-is-better (`mean_s`, `p50_s`, `p95_s`, `p99_s`, `*latency*`,
+//!   `wall_s`): fail when `current > baseline * (1 + tolerance)`
+//!
+//! Files marked as placeholders (a `note` containing `PLACEHOLDER`, or an
+//! empty `results` array) are skipped on either side — the gate only
+//! bites once real numbers are committed.  Unknown metric keys and rows
+//! missing from one side are reported but never fail the gate, so benches
+//! can add rows without breaking CI.  Exit status: 0 clean, 1 regression,
+//! 2 usage/IO error.
+
+use nsvd::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// Metric direction, inferred from the key name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Direction {
+    HigherBetter,
+    LowerBetter,
+    Ignore,
+}
+
+fn direction(key: &str) -> Direction {
+    // Higher-better patterns first: "per_s" must win over the bare "_s"
+    // suffix check below.
+    const HIGHER: &[&str] = &["gflops", "per_s", "tok_s", "speedup", "throughput"];
+    const LOWER: &[&str] = &["mean_s", "p50_s", "p90_s", "p95_s", "p99_s", "latency", "wall_s"];
+    if HIGHER.iter().any(|p| key.contains(p)) {
+        return Direction::HigherBetter;
+    }
+    if LOWER.iter().any(|p| key.contains(p)) {
+        return Direction::LowerBetter;
+    }
+    Direction::Ignore
+}
+
+/// A single metric regression (or note) found while comparing one file.
+#[derive(Debug)]
+struct Finding {
+    row: String,
+    key: String,
+    baseline: f64,
+    current: f64,
+    regressed: bool,
+}
+
+/// True when a parsed BENCH document should be skipped by the gate.
+fn is_placeholder(doc: &Json) -> bool {
+    let noted = doc
+        .get("note")
+        .and_then(|n| n.as_str())
+        .map_or(false, |n| n.contains("PLACEHOLDER"));
+    let empty = doc
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .map_or(true, |r| r.is_empty());
+    noted || empty
+}
+
+fn row_name(row: &Json) -> Option<&str> {
+    row.get("name").and_then(|n| n.as_str())
+}
+
+/// Compare two parsed BENCH documents; returns per-metric findings for
+/// every row name present in both `results` arrays.
+fn compare_docs(baseline: &Json, current: &Json, tolerance: f64) -> Vec<Finding> {
+    let empty: &[Json] = &[];
+    let base_rows = baseline.get("results").and_then(|r| r.as_arr()).unwrap_or(empty);
+    let cur_rows = current.get("results").and_then(|r| r.as_arr()).unwrap_or(empty);
+    let mut findings = Vec::new();
+    for b in base_rows {
+        let Some(name) = row_name(b) else { continue };
+        let Some(c) = cur_rows.iter().find(|r| row_name(r) == Some(name)) else {
+            continue; // row dropped or renamed: reported by the caller, not a failure
+        };
+        let Json::Obj(bm) = b else { continue };
+        for (key, bv) in bm {
+            let dir = direction(key);
+            if dir == Direction::Ignore {
+                continue;
+            }
+            let (Some(bx), Some(cx)) = (bv.as_f64(), c.get(key).and_then(|v| v.as_f64())) else {
+                continue;
+            };
+            if !(bx.is_finite() && cx.is_finite()) || bx <= 0.0 {
+                continue; // zero/absent baselines carry no signal
+            }
+            let regressed = match dir {
+                Direction::HigherBetter => cx < bx * (1.0 - tolerance),
+                Direction::LowerBetter => cx > bx * (1.0 + tolerance),
+                Direction::Ignore => unreachable!(),
+            };
+            findings.push(Finding {
+                row: name.to_string(),
+                key: key.clone(),
+                baseline: bx,
+                current: cx,
+                regressed,
+            });
+        }
+    }
+    findings
+}
+
+fn load(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: read failed: {e}", path.display()))?;
+    json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn bench_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("{}: read_dir failed: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            out.push(entry.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn run(baseline_dir: &Path, current_dir: &Path, tolerance: f64) -> Result<bool, String> {
+    let files = bench_files(current_dir)?;
+    if files.is_empty() {
+        println!("bench_gate: no BENCH_*.json in {}", current_dir.display());
+        return Ok(true);
+    }
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    for cur_path in &files {
+        let file_name = cur_path.file_name().unwrap().to_string_lossy().to_string();
+        let base_path = baseline_dir.join(&file_name);
+        if !base_path.exists() {
+            println!("  {file_name}: no baseline — skipped (new suite)");
+            continue;
+        }
+        let cur = load(cur_path)?;
+        let base = load(&base_path)?;
+        if is_placeholder(&base) || is_placeholder(&cur) {
+            println!("  {file_name}: placeholder — skipped");
+            continue;
+        }
+        let findings = compare_docs(&base, &cur, tolerance);
+        if findings.is_empty() {
+            println!("  {file_name}: no comparable metrics — skipped");
+            continue;
+        }
+        compared += findings.len();
+        for f in findings.iter().filter(|f| f.regressed) {
+            regressions += 1;
+            println!(
+                "  REGRESSION {file_name} {}/{}: baseline {:.4} -> current {:.4} ({:+.1}%)",
+                f.row,
+                f.key,
+                f.baseline,
+                f.current,
+                (f.current / f.baseline - 1.0) * 100.0
+            );
+        }
+        let ok = findings.iter().filter(|f| !f.regressed).count();
+        println!("  {file_name}: {ok}/{} metrics within {:.0}%", findings.len(), tolerance * 100.0);
+    }
+    if regressions > 0 {
+        println!("bench_gate: {regressions} regression(s) across {compared} compared metrics");
+        Ok(false)
+    } else {
+        println!("bench_gate: OK ({compared} metrics compared)");
+        Ok(true)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() < 2 || args.len() > 3 {
+        eprintln!("usage: bench_gate <baseline_dir> <current_dir> [tolerance]");
+        return ExitCode::from(2);
+    }
+    let tolerance = match args.get(2) {
+        Some(t) => match t.parse::<f64>() {
+            Ok(x) if x >= 0.0 && x < 1.0 => x,
+            _ => {
+                eprintln!("bench_gate: tolerance must be a fraction in [0, 1), got {t:?}");
+                return ExitCode::from(2);
+            }
+        },
+        None => DEFAULT_TOLERANCE,
+    };
+    println!(
+        "bench_gate: {} vs {} (tolerance {:.0}%)",
+        Path::new(&args[0]).display(),
+        Path::new(&args[1]).display(),
+        tolerance * 100.0
+    );
+    match run(Path::new(&args[0]), Path::new(&args[1]), tolerance) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(msg) => {
+            eprintln!("bench_gate: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(note: &str, rows: &str) -> Json {
+        json::parse(&format!(r#"{{"suite": "s", "note": "{note}", "results": {rows}}}"#)).unwrap()
+    }
+
+    #[test]
+    fn direction_classifies_metric_keys() {
+        assert_eq!(direction("gflops"), Direction::HigherBetter);
+        assert_eq!(direction("tokens_per_s"), Direction::HigherBetter);
+        assert_eq!(direction("speedup_vs_naive"), Direction::HigherBetter);
+        assert_eq!(direction("mean_s"), Direction::LowerBetter);
+        assert_eq!(direction("p99_s"), Direction::LowerBetter);
+        assert_eq!(direction("ttft_latency_ms"), Direction::LowerBetter);
+        assert_eq!(direction("n"), Direction::Ignore);
+        assert_eq!(direction("workers"), Direction::Ignore);
+    }
+
+    #[test]
+    fn placeholder_detection_note_and_empty_results() {
+        assert!(is_placeholder(&doc("PLACEHOLDER — pending", r#"[{"name": "a", "gflops": 1}]"#)));
+        assert!(is_placeholder(&doc("real", "[]")));
+        assert!(!is_placeholder(&doc("real", r#"[{"name": "a", "gflops": 1}]"#)));
+    }
+
+    #[test]
+    fn regression_detection_in_both_directions() {
+        let base = doc("real", r#"[{"name": "a", "gflops": 100.0, "mean_s": 1.0, "n": 512}]"#);
+        // gflops down 20% (fail), mean_s up 20% (fail).
+        let bad = doc("real", r#"[{"name": "a", "gflops": 80.0, "mean_s": 1.2, "n": 512}]"#);
+        let findings = compare_docs(&base, &bad, 0.10);
+        assert_eq!(findings.len(), 2, "n must be ignored: {findings:?}");
+        assert!(findings.iter().all(|f| f.regressed));
+        // Within tolerance both ways passes.
+        let ok = doc("real", r#"[{"name": "a", "gflops": 95.0, "mean_s": 1.05, "n": 512}]"#);
+        assert!(compare_docs(&base, &ok, 0.10).iter().all(|f| !f.regressed));
+        // Improvements never fail.
+        let fast = doc("real", r#"[{"name": "a", "gflops": 200.0, "mean_s": 0.5}]"#);
+        assert!(compare_docs(&base, &fast, 0.10).iter().all(|f| !f.regressed));
+    }
+
+    #[test]
+    fn missing_rows_and_zero_baselines_are_skipped() {
+        let base = doc("real", r#"[{"name": "a", "gflops": 0.0}, {"name": "b", "gflops": 10.0}]"#);
+        let cur = doc("real", r#"[{"name": "a", "gflops": 5.0}]"#);
+        // Row "b" absent from current and row "a" has a zero baseline:
+        // nothing comparable, nothing failed.
+        assert!(compare_docs(&base, &cur, 0.10).is_empty());
+    }
+}

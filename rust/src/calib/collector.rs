@@ -66,6 +66,10 @@ impl TapStats {
     /// Flush every tap's pending rows and mirror the SYRK-built upper
     /// triangles into full symmetric Grams.  Idempotent.
     pub fn finalize(&mut self) {
+        let mut sp = crate::obs::span("calib.finalize");
+        if sp.is_recording() {
+            sp.arg_u64("taps", self.taps.len() as u64);
+        }
         for stats in self.taps.values_mut() {
             stats.finalize();
         }
@@ -104,6 +108,10 @@ pub fn collect_native(
     weights: &Weights,
     batches: &[crate::data::batch::TokenBatch],
 ) -> Result<TapStats> {
+    let mut outer_sp = crate::obs::span("calib.collect");
+    if outer_sp.is_recording() {
+        outer_sp.arg_u64("batches", batches.len() as u64);
+    }
     let mut stats = TapStats::default();
     for tb in batches {
         // Note: padding rows would pollute the Gram; calibration batches are

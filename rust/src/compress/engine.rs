@@ -165,6 +165,10 @@ impl CompressionEngine {
         let (outer, inner) = budget.split(missing.len());
         let built = parallel_map_dynamic(&missing, outer, |_, pair| {
             let _gemm_threads = gemm::scoped_workers(inner);
+            let mut sp = crate::obs::span("engine.whiten");
+            if sp.is_recording() {
+                sp.arg_str("tap", &pair.0);
+            }
             Arc::new(method.stage1_whitener(pair.1))
         });
         for ((tap, _), whitener) in missing.into_iter().zip(built) {
@@ -207,6 +211,12 @@ impl CompressionEngine {
             model_cfg.linear_shapes.len()
         );
         let budget = self.config.thread_budget();
+        let mut outer_sp = crate::obs::span("engine.compress_model");
+        if outer_sp.is_recording() {
+            outer_sp
+                .arg_u64("layers", model_cfg.linear_shapes.len() as u64)
+                .arg_u64("workers", budget.total() as u64);
+        }
         self.ensure_whiteners(model_cfg, stats, spec, cache)?;
 
         // ---- Phase 2: shard the layer jobs across the workers ----
@@ -225,6 +235,12 @@ impl CompressionEngine {
         let (outer, inner) = budget.split(jobs.len());
         let results = parallel_map_dynamic(&jobs, outer, |_, job| {
             let _gemm_threads = gemm::scoped_workers(inner);
+            let mut sp = crate::obs::span("engine.decompose_layer");
+            if sp.is_recording() {
+                sp.arg_str("layer", job.name)
+                    .arg_u64("k1", job.plan.k1 as u64)
+                    .arg_u64("k2", job.plan.k2 as u64);
+            }
             compress_layer_with_policy(job.tensor, &job.whitener, &spec, &job.plan, svd)
                 .with_context(|| format!("compressing {}", job.name))
         });
@@ -262,9 +278,17 @@ impl CompressionEngine {
                 *n_in,  // paper-convention n
             ));
         }
+        let mut outer_sp = crate::obs::span("engine.profile_spectra");
+        if outer_sp.is_recording() {
+            outer_sp.arg_u64("layers", jobs.len() as u64);
+        }
         let (outer, inner) = budget.split(jobs.len());
         let spectra = parallel_map_dynamic(&jobs, outer, |_, job| {
             let _gemm_threads = gemm::scoped_workers(inner);
+            let mut sp = crate::obs::span("engine.profile");
+            if sp.is_recording() {
+                sp.arg_str("layer", job.0);
+            }
             allocate::whitened_spectrum(job.1, &job.2)
         });
         Ok(jobs
@@ -316,6 +340,7 @@ impl CompressionEngine {
         cache: &mut WhitenerCache,
     ) -> Result<Vec<RankPlan>> {
         let budget = self.config.thread_budget();
+        let _alloc_sp = crate::obs::span("engine.allocate");
         self.ensure_whiteners(model_cfg, stats, spec, cache)?;
         let ks: Vec<usize> = match alloc.strategy {
             AllocStrategy::Uniform => model_cfg
@@ -346,6 +371,10 @@ impl CompressionEngine {
         let (method, ratio) = (spec.method, spec.ratio);
         let tuned = parallel_map_dynamic(&jobs, outer, |_, job| {
             let _gemm_threads = gemm::scoped_workers(inner);
+            let mut sp = crate::obs::span("engine.tune_alpha");
+            if sp.is_recording() {
+                sp.arg_str("layer", job.0).arg_u64("k", job.3 as u64);
+            }
             allocate::tune_alpha(job.1, &job.2, method, ratio, job.3, svd)
                 .with_context(|| format!("tuning α for {}", job.0))
         });

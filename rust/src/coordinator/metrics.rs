@@ -5,7 +5,15 @@
 //! Both keep full sample buffers and report latency percentiles
 //! (p50/p95/p99 via [`Stats`], which sorts the buffer) rather than means:
 //! serving tails are what capacity planning cares about, and a mean hides
-//! the convoy effects dynamic batching can introduce.
+//! the convoy effects dynamic batching can introduce.  Every percentile
+//! family goes through the same [`Stats`] type and every summary line
+//! reports p99 — TTFT included.
+//!
+//! Both structs also export to the observability registry
+//! (`to_registry`): canonical `serve.*` metric names shared with the
+//! scheduler's live instrumentation, so a final exact summary can replace
+//! the live snapshot's entries via `Registry::replace_from` before a
+//! Prometheus dump.
 
 use crate::serve::stream::FinishReason;
 use crate::util::timer::Stats;
@@ -67,6 +75,24 @@ impl ServerMetrics {
             lat.p99 * 1e3,
             lat.max * 1e3,
         )
+    }
+
+    /// Fold these metrics into an observability registry for Prometheus
+    /// export ([`crate::obs::export::prometheus_text`]).
+    pub fn to_registry(&self) -> crate::obs::Registry {
+        let mut r = crate::obs::Registry::default();
+        r.counter_add("serve.requests.completed", self.completed as u64);
+        r.counter_add("serve.batches", self.batches as u64);
+        r.gauge_set("serve.throughput_rps", self.throughput_rps());
+        r.gauge_set("serve.batch_fill_mean", self.mean_batch_fill());
+        r.gauge_set("serve.wall_seconds", self.wall_s);
+        for &v in &self.latency_s {
+            r.observe("serve.latency_seconds", v);
+        }
+        for &v in &self.queue_wait_s {
+            r.observe("serve.queue_wait_seconds", v);
+        }
+        r
     }
 }
 
@@ -312,7 +338,7 @@ impl GenServerMetrics {
              deadline={} faulted={} tokens={} \
              steps={} tok/s={:.1} mean_fill={:.2} peak_active={} \
              occupancy={:.2} prefix_hit={:.2} latency p50={:.1}ms \
-             p95={:.1}ms p99={:.1}ms ttft p50={:.1}ms p95={:.1}ms",
+             p95={:.1}ms p99={:.1}ms ttft p50={:.1}ms p95={:.1}ms p99={:.1}ms",
             self.completed,
             self.rejected,
             self.cancelled,
@@ -332,7 +358,58 @@ impl GenServerMetrics {
             lat.p99 * 1e3,
             ttft.p50 * 1e3,
             ttft.p95 * 1e3,
+            ttft.p99 * 1e3,
         )
+    }
+
+    /// Fold the full serving window into an observability registry.  The
+    /// canonical names match the scheduler's live instrumentation, so
+    /// stamping these exact end-state values over a live snapshot
+    /// (`Registry::replace_from`) de-duplicates the final export; the
+    /// histograms are rebuilt from the bounded sample rings.
+    pub fn to_registry(&self) -> crate::obs::Registry {
+        let mut r = crate::obs::Registry::default();
+        let completed_full: usize = self.tenants.values().map(|t| t.completed).sum();
+        r.counter_add("serve.requests.completed", completed_full as u64);
+        r.counter_add("serve.requests.served", self.completed as u64);
+        r.counter_add("serve.requests.cancelled", self.cancelled as u64);
+        r.counter_add("serve.requests.rejected", self.rejected as u64);
+        r.counter_add("serve.requests.shed", self.shed as u64);
+        r.counter_add("serve.requests.deadline_exceeded", self.deadline_exceeded as u64);
+        r.counter_add("serve.requests.faulted", self.faulted as u64);
+        r.counter_add("serve.sched.preemptions", self.preemptions as u64);
+        r.counter_add("serve.steps", self.steps as u64);
+        r.counter_add("serve.tokens.generated", self.generated as u64);
+        r.counter_add("serve.prefill.rows", self.prefill_rows as u64);
+        r.counter_add("serve.prefix.hit_tokens", self.prefix_hit_tokens);
+        r.counter_add("serve.prefix.miss_tokens", self.prefix_miss_tokens);
+        for (t, tm) in &self.tenants {
+            r.counter_add(&format!("serve.tenant.requests{{tenant=\"{t}\"}}"), tm.requests as u64);
+            r.counter_add(&format!("serve.tenant.generated{{tenant=\"{t}\"}}"), tm.generated);
+        }
+        r.gauge_set("serve.queue.peak", self.peak_queue as f64);
+        r.gauge_set("serve.active.peak", self.peak_active as f64);
+        r.gauge_set("serve.pool.kv_slot_bytes", self.kv_slot_bytes);
+        r.gauge_set("serve.pool.kv_factor_bytes", self.kv_factor_bytes as f64);
+        r.gauge_set("serve.prefix.hit_rate", self.prefix_hit_rate());
+        r.gauge_set("serve.tokens_per_s", self.tokens_per_s());
+        r.gauge_set("serve.wall_seconds", self.wall_s);
+        for &v in &self.latency_s {
+            r.observe("serve.latency_seconds", v);
+        }
+        for &v in &self.ttft_s {
+            r.observe("serve.ttft_seconds", v);
+        }
+        for &v in &self.step_s {
+            r.observe("serve.step_seconds", v);
+        }
+        for &v in &self.batch_fill {
+            r.observe("serve.batch_fill", v);
+        }
+        for &v in &self.page_occupancy {
+            r.observe("serve.pool.occupancy_ratio", v);
+        }
+        r
     }
 }
 
@@ -478,6 +555,65 @@ mod tests {
         let mut c = m.clone();
         c.kv_slot_bytes = 512.0;
         assert_eq!(c.kv_slots_per_gb() / m.kv_slots_per_gb(), 4.0);
+    }
+
+    #[test]
+    fn to_registry_exports_counters_gauges_and_hists() {
+        let mut m = GenServerMetrics::default();
+        m.record_finish(0.010, 0.004);
+        m.record_finish(0.030, 0.008);
+        m.record_step(0.002, 2.0, 0.5);
+        m.record_terminal(7, FinishReason::Completed, 12);
+        m.record_terminal(7, FinishReason::Shed, 3);
+        m.preemptions = 4;
+        m.generated = 15;
+        m.wall_s = 1.5;
+        let r = m.to_registry();
+        assert_eq!(r.counter("serve.requests.served"), 2);
+        assert_eq!(r.counter("serve.requests.completed"), 1);
+        assert_eq!(r.counter("serve.requests.shed"), 1);
+        assert_eq!(r.counter("serve.sched.preemptions"), 4);
+        assert_eq!(r.counter("serve.tenant.requests{tenant=\"7\"}"), 2);
+        assert_eq!(r.counter("serve.tenant.generated{tenant=\"7\"}"), 15);
+        assert_eq!(r.gauge("serve.wall_seconds"), Some(1.5));
+        assert_eq!(r.hist("serve.latency_seconds").map(|h| h.count()), Some(2));
+        assert_eq!(r.hist("serve.ttft_seconds").map(|h| h.count()), Some(2));
+        assert_eq!(r.hist("serve.step_seconds").map(|h| h.count()), Some(1));
+        // Replacing a live snapshot's entries with these exact values
+        // must overwrite, not add (the de-duplication contract).
+        let mut live = crate::obs::Registry::default();
+        live.counter_add("serve.requests.served", 99);
+        live.counter_add("kernel.gemm.flops", 1000);
+        live.replace_from(&r);
+        assert_eq!(live.counter("serve.requests.served"), 2);
+        assert_eq!(live.counter("kernel.gemm.flops"), 1000);
+    }
+
+    #[test]
+    fn scoring_metrics_to_registry() {
+        let m = ServerMetrics {
+            latency_s: vec![0.01, 0.02],
+            queue_wait_s: vec![0.001],
+            batch_fill: vec![8.0],
+            completed: 2,
+            batches: 1,
+            wall_s: 1.0,
+        };
+        let r = m.to_registry();
+        assert_eq!(r.counter("serve.requests.completed"), 2);
+        assert_eq!(r.gauge("serve.throughput_rps"), Some(2.0));
+        assert_eq!(r.hist("serve.queue_wait_seconds").map(|h| h.count()), Some(1));
+    }
+
+    #[test]
+    fn gen_summary_reports_ttft_p99() {
+        let mut m = GenServerMetrics::default();
+        for i in 0..100 {
+            m.record_finish(0.010 + i as f64 * 1e-4, 0.004);
+        }
+        let s = m.summary();
+        let ttft_part = s.split("ttft").nth(1).unwrap();
+        assert!(ttft_part.contains("p99="), "ttft segment must report p99: {s}");
     }
 
     #[test]

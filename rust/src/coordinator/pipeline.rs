@@ -223,6 +223,7 @@ impl Pipeline {
     /// Calibration stats (computed once, cached).
     pub fn calibrate(&mut self) -> Result<&TapStats> {
         if self.calib.is_none() {
+            let _sp = crate::obs::span("pipeline.calibrate");
             let corpus = self.registry.calibration()?;
             let stats = self.collect_stats(&corpus, self.config.calib_samples, true)?;
             self.calib = Some(stats);
@@ -274,6 +275,10 @@ impl Pipeline {
     /// `config.workers` threads with the configured SVD policy.  With
     /// `--factor-dtype int8` the factors come back quantized.
     pub fn compress(&mut self, spec: &CompressionSpec) -> Result<CompressedModel> {
+        let mut sp = crate::obs::span("pipeline.compress");
+        if sp.is_recording() {
+            sp.arg_str("method", spec.method.label()).arg_f64("ratio", spec.ratio);
+        }
         let cm = self.compress_f32(spec)?;
         Ok(match self.config.factor_dtype {
             FactorDtype::F32 => cm,
@@ -375,6 +380,10 @@ impl Pipeline {
 
     /// Evaluate a (possibly compressed) model on all eight test sets.
     pub fn evaluate_all(&self, cm: Option<&CompressedModel>) -> Result<Vec<PerplexityResult>> {
+        let mut sp = crate::obs::span("pipeline.evaluate");
+        if sp.is_recording() {
+            sp.arg_str("what", if cm.is_some() { "compressed" } else { "dense" });
+        }
         let batch = self.batch();
         let seq = self.seq();
         let mut out = Vec::new();

@@ -184,6 +184,65 @@ pub fn render_tenant_block(
     table
 }
 
+/// Render per-request lifecycle timelines from a trace snapshot: one row
+/// per request id seen in `serve.request.*` instants, with millisecond
+/// offsets since the obs epoch, scheduler churn counts, and the terminal
+/// reason.  The human-readable companion to `--trace-out` in `serve-gen`.
+pub fn render_request_timeline(title: &str, events: &[crate::obs::TraceEvent]) -> Table {
+    #[derive(Default)]
+    struct Life {
+        queued: Option<u64>,
+        admitted: Option<u64>,
+        preempts: u64,
+        resumes: u64,
+        done: Option<u64>,
+        reason: String,
+        generated: u64,
+    }
+    let mut lives: std::collections::BTreeMap<u64, Life> = Default::default();
+    for e in events {
+        if !e.instant || !e.name.starts_with("serve.request.") {
+            continue;
+        }
+        let Some(req) = e.arg_u64("req") else { continue };
+        let l = lives.entry(req).or_default();
+        match e.name {
+            "serve.request.queued" => l.queued = Some(e.ts_us),
+            // A preempted request is re-admitted via `resumed`; keep the
+            // first admission as THE admission instant.
+            "serve.request.admitted" => l.admitted = l.admitted.or(Some(e.ts_us)),
+            "serve.request.preempted" => l.preempts += 1,
+            "serve.request.resumed" => l.resumes += 1,
+            "serve.request.done" => {
+                l.done = Some(e.ts_us);
+                l.reason = e.arg_str("reason").unwrap_or("?").to_string();
+                l.generated = e.arg_u64("generated").unwrap_or(0);
+            }
+            _ => {}
+        }
+    }
+    let headers =
+        ["Request", "queued ms", "admitted ms", "preempts", "resumes", "done ms", "reason", "tokens"]
+            .iter()
+            .map(|h| h.to_string())
+            .collect();
+    let mut table = Table::new(title, headers);
+    let ms = |t: Option<u64>| t.map_or("-".to_string(), |us| format!("{:.2}", us as f64 / 1e3));
+    for (req, l) in &lives {
+        table.push_row(vec![
+            req.to_string(),
+            ms(l.queued),
+            ms(l.admitted),
+            l.preempts.to_string(),
+            l.resumes.to_string(),
+            ms(l.done),
+            if l.reason.is_empty() { "-".to_string() } else { l.reason.clone() },
+            l.generated.to_string(),
+        ]);
+    }
+    table
+}
+
 /// Write a table to `target/reports/<slug>.md` and `.json`.
 pub fn save_table(table: &Table, slug: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::Path::new("target/reports");
@@ -264,6 +323,42 @@ mod tests {
         assert_eq!(t.rows.len(), 2, "md:\n{md}");
         assert!(md.contains("| 1 | 2 | 1 | 0 | 0 | 1 | 0 | 0 | 7 | 0.0 |"), "md:\n{md}");
         assert!(md.contains("| 3 | 1 | 0 | 0 | 0 | 0 | 1 | 0 | 0 | 0.0 |"), "md:\n{md}");
+    }
+
+    #[test]
+    fn request_timeline_folds_lifecycle_instants() {
+        use crate::obs::{ArgValue, TraceEvent};
+        let ev = |name: &'static str, ts_us: u64, args: Vec<(&'static str, ArgValue)>| TraceEvent {
+            name,
+            ts_us,
+            dur_us: 0,
+            instant: true,
+            tid: 1,
+            id: ts_us,
+            parent: 0,
+            args,
+        };
+        let events = vec![
+            ev("serve.request.queued", 1000, vec![("req", ArgValue::U64(7))]),
+            ev("serve.request.admitted", 2000, vec![("req", ArgValue::U64(7))]),
+            ev("serve.request.preempted", 3000, vec![("req", ArgValue::U64(7))]),
+            ev("serve.request.resumed", 4000, vec![("req", ArgValue::U64(7))]),
+            ev(
+                "serve.request.done",
+                9000,
+                vec![
+                    ("req", ArgValue::U64(7)),
+                    ("reason", ArgValue::Str("completed".into())),
+                    ("generated", ArgValue::U64(5)),
+                ],
+            ),
+            ev("serve.request.queued", 1500, vec![("req", ArgValue::U64(8))]),
+        ];
+        let t = render_request_timeline("Request timeline", &events);
+        let md = t.to_markdown();
+        assert_eq!(t.rows.len(), 2, "md:\n{md}");
+        assert!(md.contains("| 7 | 1.00 | 2.00 | 1 | 1 | 9.00 | completed | 5 |"), "md:\n{md}");
+        assert!(md.contains("| 8 | 1.50 | - | 0 | 0 | - | - | 0 |"), "md:\n{md}");
     }
 
     #[test]

@@ -55,7 +55,13 @@ pub fn run_jobs(pipeline: &mut Pipeline, jobs: &[Job]) -> Vec<JobOutcome> {
             job.name,
             pipeline.config.model
         );
-        let result = pipeline.run(&job.spec);
+        let result = {
+            let mut sp = crate::obs::span("pipeline.job");
+            if sp.is_recording() {
+                sp.arg_str("job", &job.name);
+            }
+            pipeline.run(&job.spec)
+        };
         let elapsed_s = t.elapsed_s();
         if let Err(e) = &result {
             crate::warnln!("scheduler", "{} FAILED: {e:#}", job.name);

@@ -145,6 +145,13 @@ pub fn evaluate_with_workers(
     if backend.pjrt_full_batches_only() {
         batches.retain(|tb| tb.valid_rows == tb.batch);
     }
+    let mut outer_sp = crate::obs::span("eval.perplexity");
+    if outer_sp.is_recording() {
+        outer_sp
+            .arg_str("dataset", &corpus.name)
+            .arg_u64("batches", batches.len() as u64)
+            .arg_u64("workers", workers as u64);
+    }
     let mut out = PerplexityResult { dataset: corpus.name.clone(), sum_nll: 0.0, tokens: 0.0 };
     match backend {
         EvalBackend::Native { cfg, weights, compressed } => {
@@ -154,8 +161,12 @@ pub fn evaluate_with_workers(
             let (cfg, weights, compressed) = (*cfg, *weights, *compressed);
             let budget = ThreadBudget::new(workers); // 0 = all cores
             let (outer, inner) = budget.split(batches.len());
-            let partials = parallel_map(&batches, outer, |_, tb| {
+            let partials = parallel_map(&batches, outer, |bi, tb| {
                 let _gemm_threads = gemm::scoped_workers(inner);
+                let mut sp = crate::obs::span("eval.batch");
+                if sp.is_recording() {
+                    sp.arg_u64("batch", bi as u64).arg_u64("rows", tb.valid_rows as u64);
+                }
                 let ov: &dyn LinearOverride = match compressed {
                     Some(c) => c,
                     None => &NoOverride,

@@ -31,6 +31,9 @@
 //!   pool, step-level batch scheduler, batched decode through the GEMM
 //!   layer, per-request token streaming.
 //! * [`bench`] — the criterion-free benchmark harness used by `cargo bench`.
+//! * [`obs`] — zero-dependency observability: tracing spans, the metrics
+//!   registry, Chrome-trace / Prometheus export (disabled by default,
+//!   gated on one relaxed atomic).
 //!
 //! New readers: start with the repo-root `README.md` (quickstart, layout),
 //! `ARCHITECTURE.md` (layering, data flow, where the engine and rsvd fast
@@ -46,6 +49,7 @@ pub mod data;
 pub mod eval;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod util;

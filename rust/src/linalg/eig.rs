@@ -47,6 +47,10 @@ pub fn sym_eig(a: &Matrix) -> SymEig {
 /// round over them with a worker-count-independent result).
 pub fn sym_eig_ordered(a: &Matrix, ordering: JacobiOrdering, workers: usize) -> SymEig {
     assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let mut sp = crate::obs::span("kernel.jacobi_eig");
+    if sp.is_recording() {
+        sp.arg_u64("n", a.rows as u64).arg_u64("workers", workers as u64);
+    }
     let n = a.rows;
     let mut m = a.clone();
     m.symmetrize();

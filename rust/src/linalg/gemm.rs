@@ -339,6 +339,22 @@ pub fn gemm<T: Scalar>(
     // the caller governs the worker threads spawned below too) and passed
     // down by value into the microkernel dispatch.
     let isa = active_isa();
+    let mut sp = crate::obs::span("kernel.gemm");
+    if sp.is_recording() {
+        sp.arg_u64("m", m as u64)
+            .arg_u64("k", k as u64)
+            .arg_u64("n", n as u64)
+            .arg_u64("workers", workers as u64)
+            .arg_str("isa", isa.label());
+        crate::obs::metrics::counter_add(
+            "kernel.gemm.flops",
+            2 * (m as u64) * (k as u64) * (n as u64),
+        );
+        crate::obs::metrics::counter_add(
+            "kernel.gemm.bytes",
+            ((m * k + k * n + m * n) * std::mem::size_of::<T>()) as u64,
+        );
+    }
     // Pack buffers sized to the actual problem (capped at one full tile):
     // small products — rSVD sketches, low-rank factors — shouldn't pay a
     // full-tile zeroed allocation per call.
@@ -420,6 +436,22 @@ pub fn syrk_tn<T: Scalar>(n: usize, k: usize, a: &[T], c: &mut [T], workers: usi
         .collect();
     let workers = workers.max(1).min(tasks.len());
     let isa = active_isa();
+    let mut sp = crate::obs::span("kernel.syrk");
+    if sp.is_recording() {
+        sp.arg_u64("n", n as u64)
+            .arg_u64("k", k as u64)
+            .arg_u64("workers", workers as u64)
+            .arg_str("isa", isa.label());
+        // Upper-triangle update ≈ n(n+1)k MACs → count n²k flops.
+        crate::obs::metrics::counter_add(
+            "kernel.syrk.flops",
+            (n as u64) * (n as u64) * (k as u64),
+        );
+        crate::obs::metrics::counter_add(
+            "kernel.syrk.bytes",
+            ((k * n + n * n) * std::mem::size_of::<T>()) as u64,
+        );
+    }
     if workers <= 1 {
         for &(jc, nc) in &tasks {
             let stripe = syrk_stripe(n, k, a, jc, nc, isa);
@@ -847,6 +879,22 @@ pub fn gemm_i8_nn(
     let isa = active_isa();
     let row_blocks = m.div_ceil(MR);
     let workers = workers.max(1).min(row_blocks);
+    let mut sp = crate::obs::span("kernel.gemm_i8");
+    if sp.is_recording() {
+        sp.arg_u64("m", m as u64)
+            .arg_u64("k", k as u64)
+            .arg_u64("n", n as u64)
+            .arg_u64("workers", workers as u64)
+            .arg_str("isa", isa.label());
+        crate::obs::metrics::counter_add(
+            "kernel.gemm_i8.flops",
+            2 * (m as u64) * (k as u64) * (n as u64),
+        );
+        crate::obs::metrics::counter_add(
+            "kernel.gemm_i8.bytes",
+            (m * k + k * n + 4 * m * n) as u64,
+        );
+    }
     let kc2_cap = group.div_ceil(2);
     let nc_cap = NC.min(n.div_ceil(NR) * NR);
     let mut bpack = vec![0i8; kc2_cap * 2 * nc_cap];

@@ -203,6 +203,10 @@ fn form_q_blocked(varena: &[f64], taus: &[f64], m: usize, r: usize) -> Matrix {
 /// compact-WY: see the module docs.
 pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
     let (m, n) = (a.rows, a.cols);
+    let mut sp = crate::obs::span("kernel.qr_thin");
+    if sp.is_recording() {
+        sp.arg_u64("m", m as u64).arg_u64("n", n as u64);
+    }
     let r = m.min(n);
     let mut work = a.clone();
     // Normalized Householder arena (stride m; reflector k uses the first
@@ -332,6 +336,10 @@ pub fn qr_thin_unblocked(a: &Matrix) -> (Matrix, Matrix) {
 /// LQ decomposition: `A (m×n) = L (m×r) Q (r×n)` with L lower-triangular and
 /// Q having orthonormal rows; computed via QR of `Aᵀ`.
 pub fn lq(a: &Matrix) -> (Matrix, Matrix) {
+    let mut sp = crate::obs::span("kernel.lq");
+    if sp.is_recording() {
+        sp.arg_u64("m", a.rows as u64).arg_u64("n", a.cols as u64);
+    }
     let (q, r) = qr_thin(&a.transpose());
     (r.transpose(), q.transpose())
 }
@@ -349,6 +357,10 @@ pub fn lq(a: &Matrix) -> (Matrix, Matrix) {
 /// [`qr_pivoted_unblocked`].  Q is formed through the blocked compact-WY
 /// apply ([`form_q_blocked`]), which is where the level-3 speedup lives.
 pub fn qr_pivoted(a: &Matrix) -> (Matrix, Matrix, Vec<usize>) {
+    let mut sp = crate::obs::span("kernel.qr_pivoted");
+    if sp.is_recording() {
+        sp.arg_u64("m", a.rows as u64).arg_u64("n", a.cols as u64);
+    }
     let (work, varena, vnorm2s, perm) = qr_pivoted_factor(a);
     let (m, n) = (a.rows, a.cols);
     let r = m.min(n);

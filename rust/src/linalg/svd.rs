@@ -105,6 +105,12 @@ pub fn svd_thin(a: &Matrix) -> Svd {
 /// [`gemm::workers`](super::gemm::workers) share) with a bit-identical
 /// result at every worker count.
 pub fn svd_thin_ordered(a: &Matrix, ordering: JacobiOrdering, workers: usize) -> Svd {
+    let mut sp = crate::obs::span("kernel.jacobi_svd");
+    if sp.is_recording() {
+        sp.arg_u64("m", a.rows as u64)
+            .arg_u64("n", a.cols as u64)
+            .arg_u64("workers", workers as u64);
+    }
     if a.rows >= a.cols {
         svd_tall(a, ordering, workers)
     } else {

@@ -8,7 +8,8 @@ use nsvd::compress::methods::{CompressionSpec, Method};
 use nsvd::coordinator::pipeline::{Pipeline, PipelineConfig};
 use nsvd::bench::{drive_concurrent_kv, drive_open_loop_kv, goodput_tokens_per_s, OpenLoopTenant};
 use nsvd::coordinator::reports::{
-    render_latency_block, render_method_block, render_tenant_block, save_table, MethodRow, Table,
+    render_latency_block, render_method_block, render_request_timeline, render_tenant_block,
+    save_table, MethodRow, Table,
 };
 use nsvd::coordinator::scheduler::{run_jobs, sweeps, Job};
 use nsvd::coordinator::server;
@@ -68,6 +69,8 @@ fn build_cli() -> Cli {
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
                 .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic"))
+                .flag("trace-out", "write a Chrome trace-event JSON of the run (Perfetto-loadable)", None)
+                .flag("metrics-out", "write the metrics registry as Prometheus text", None)
                 .switch("native", "use the native forward instead of PJRT"),
         )
         .command(
@@ -138,6 +141,9 @@ fn build_cli() -> Cli {
             .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
             .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
             .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic"))
+            .flag("trace-out", "write a Chrome trace-event JSON of the run (Perfetto-loadable)", None)
+            .flag("metrics-out", "write the metrics registry as Prometheus text", None)
+            .flag("metrics-port", "serve a live /metrics scrape endpoint on 127.0.0.1:<port> during the run (0 = off)", Some("0"))
             .switch("native", "calibrate/compress through the native forward instead of PJRT (generation itself is always native)"),
         )
         .command(
@@ -157,8 +163,40 @@ fn build_cli() -> Cli {
                 .switch("rsvd", "randomized-SVD fast path (auto-selected per layer)")
                 .flag("rsvd-tol", "rsvd certificate: max relative excess error (needs --rsvd)", Some("0.02"))
                 .flag("jacobi", "exact-SVD sweep ordering: cyclic | tournament (parallel rounds)", Some("cyclic"))
+                .flag("trace-out", "write a Chrome trace-event JSON of the run (Perfetto-loadable)", None)
+                .flag("metrics-out", "write the metrics registry as Prometheus text", None)
                 .switch("native", "use the native forward instead of PJRT"),
         )
+}
+
+/// Turn observability on when any export flag is present; returns the
+/// requested `--trace-out` / `--metrics-out` paths.
+fn obs_from(args: &nsvd::util::cli::Args) -> (Option<PathBuf>, Option<PathBuf>) {
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    if trace_out.is_some() || metrics_out.is_some() {
+        nsvd::obs::set_enabled(true);
+    }
+    (trace_out, metrics_out)
+}
+
+/// Write the requested observability artifacts at the end of a run.
+/// `extra` (an exact end-of-run summary registry) replaces same-named
+/// live entries in the Prometheus dump.
+fn write_obs_outputs(
+    trace_out: &Option<PathBuf>,
+    metrics_out: &Option<PathBuf>,
+    extra: Option<&nsvd::obs::Registry>,
+) -> Result<()> {
+    if let Some(p) = trace_out {
+        nsvd::obs::export::write_chrome_trace(p)?;
+        println!("trace written to {}", p.display());
+    }
+    if let Some(p) = metrics_out {
+        nsvd::obs::export::write_prometheus(p, extra)?;
+        println!("metrics written to {}", p.display());
+    }
+    Ok(())
 }
 
 fn pipeline_from(args: &nsvd::util::cli::Args, model: &str) -> Result<Pipeline> {
@@ -247,6 +285,7 @@ fn cmd_info(args: &nsvd::util::cli::Args) -> Result<()> {
 }
 
 fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
+    let (trace_out, metrics_out) = obs_from(args);
     let model = args.get_or("model", "llama-t").to_string();
     let mut pipeline = pipeline_from(args, &model)?;
     let spec = CompressionSpec {
@@ -285,7 +324,7 @@ fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
             );
         }
         println!("({} points in {:.1}s)", points.len(), t.elapsed_s());
-        return Ok(());
+        return write_obs_outputs(&trace_out, &metrics_out, None);
     }
     let t = Timer::start();
     let report = pipeline.run(&spec)?;
@@ -320,7 +359,7 @@ fn cmd_compress(args: &nsvd::util::cli::Args) -> Result<()> {
             kvc.factor_bytes()
         );
     }
-    Ok(())
+    write_obs_outputs(&trace_out, &metrics_out, None)
 }
 
 /// Format job outcomes into table rows (one per method job).
@@ -520,7 +559,39 @@ fn cmd_serve(args: &nsvd::util::cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// End-of-run observability for `serve-gen`: request timeline + Chrome
+/// trace when tracing, Prometheus text stamped with the exact serving
+/// summary, endpoint shutdown.
+fn finish_obs_serve(
+    trace_out: &Option<PathBuf>,
+    metrics_out: &Option<PathBuf>,
+    endpoint: &mut Option<nsvd::obs::export::MetricsEndpoint>,
+    metrics: &nsvd::coordinator::metrics::GenServerMetrics,
+) -> Result<()> {
+    if nsvd::obs::enabled() && trace_out.is_some() {
+        let events = nsvd::obs::trace::snapshot_events();
+        println!("{}", render_request_timeline("Request timeline", &events).to_markdown());
+    }
+    write_obs_outputs(trace_out, metrics_out, Some(&metrics.to_registry()))?;
+    if let Some(mut ep) = endpoint.take() {
+        ep.stop();
+    }
+    Ok(())
+}
+
 fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
+    let (trace_out, metrics_out) = obs_from(args);
+    let metrics_port = args.get_usize("metrics-port").unwrap_or(0);
+    if metrics_port > 0 {
+        nsvd::obs::set_enabled(true);
+    }
+    let mut endpoint = if metrics_port > 0 {
+        let ep = nsvd::obs::export::MetricsEndpoint::start(metrics_port as u16)?;
+        println!("metrics endpoint: http://{}/metrics", ep.addr());
+        Some(ep)
+    } else {
+        None
+    };
     let model = args.get_or("model", "llama-t").to_string();
     let mut pipeline = pipeline_from(args, &model)?;
     let spec = CompressionSpec {
@@ -652,7 +723,7 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
             ],
         );
         println!("{}", table.to_markdown());
-        return Ok(());
+        return finish_obs_serve(&trace_out, &metrics_out, &mut endpoint, &metrics);
     }
 
     let registry = Registry::new(&PathBuf::from(args.get_or("artifacts", "artifacts")));
@@ -705,7 +776,7 @@ fn cmd_serve_gen(args: &nsvd::util::cli::Args) -> Result<()> {
         ],
     );
     println!("{}", table.to_markdown());
-    Ok(())
+    finish_obs_serve(&trace_out, &metrics_out, &mut endpoint, &metrics)
 }
 
 fn cmd_e2e(args: &nsvd::util::cli::Args) -> Result<()> {

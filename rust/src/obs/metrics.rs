@@ -1,0 +1,499 @@
+//! The typed metrics registry: counters, gauges, and log-bucketed
+//! mergeable histograms.
+//!
+//! A [`Registry`] is a value — [`Registry::merge`] folds one into another,
+//! and merging is associative and commutative (counter adds, gauge
+//! last-write-wins with the right operand winning, histogram bucket adds;
+//! histogram `sum` is an f64 accumulation, associative to rounding).  The
+//! process keeps one global registry plus a buffered per-thread registry
+//! for hot-path updates ([`counter_add`] / [`observe`]): threads fold
+//! their buffer into the global one when they exit, and [`snapshot`]
+//! folds the calling thread's buffer and returns a copy of the global
+//! state.  Gauges ([`gauge_set`]) write straight to the global registry —
+//! they are low-frequency and last-write-wins buffering across threads
+//! would be ill-defined.
+//!
+//! All update entry points are gated on [`super::enabled`]: disabled, each
+//! is one relaxed atomic load.
+//!
+//! Key convention: dotted lowercase (`kernel.gemm.flops`), with optional
+//! Prometheus-style labels appended verbatim (`serve.tenant.requests{tenant="3"}`)
+//! which the exporter passes through.
+
+use crate::util::timer::Stats;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Number of log-spaced histogram buckets.
+pub const HIST_BUCKETS: usize = 64;
+
+/// A log-bucketed histogram: bucket `i` counts observations `v` with
+/// `v <= 2^(i-31)` (and above the previous bound), covering `~5e-10` to
+/// `~4e9` — microseconds to hours when observing seconds.  Merging adds
+/// bucket counts, so per-thread histograms fold losslessly; quantiles are
+/// upper-bounded by the matched bucket's bound and clamped to the exact
+/// observed `[min, max]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Upper bound of bucket `i`: `2^(i-31)`.
+fn bucket_bound(i: usize) -> f64 {
+    (i as f64 - 31.0).exp2()
+}
+
+fn bucket_index(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    // Smallest i with v <= 2^(i-31): ceil(log2 v) + 31.
+    (v.log2().ceil() as i64 + 31).clamp(0, HIST_BUCKETS as i64 - 1) as usize
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold `other` into `self` (bucket-wise add).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0 {
+            self.sum / self.count as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Nearest-rank quantile over the buckets: the bound of the bucket
+    /// holding the `ceil(q·count)`-th observation, clamped to the observed
+    /// `[min, max]` so small samples do not report a wildly padded bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_bound(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Cumulative `(upper_bound, count)` pairs for non-empty prefixes —
+    /// the Prometheus `_bucket{le=...}` series (trailing all-zero buckets
+    /// collapsed into the final `+Inf`, which the exporter adds).
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if c > 0 {
+                out.push((bucket_bound(i), cum));
+            }
+        }
+        out
+    }
+
+    /// Summary [`Stats`] over the histogram (percentiles at bucket
+    /// resolution) — the one display shape every latency table uses.
+    pub fn stats(&self) -> Stats {
+        if self.count == 0 {
+            return Stats::default();
+        }
+        let mean = self.mean();
+        let var = (self.sum_sq / self.count as f64 - mean * mean).max(0.0);
+        Stats {
+            n: self.count as usize,
+            mean,
+            std: var.sqrt(),
+            min: self.min,
+            max: self.max,
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// A typed registry of named counters, gauges, and histograms.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `v` to counter `name` (created at 0).
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        match self.counters.get_mut(name) {
+            Some(c) => *c += v,
+            None => {
+                self.counters.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Set gauge `name` to `v` (last write wins).
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        match self.gauges.get_mut(name) {
+            Some(g) => *g = v,
+            None => {
+                self.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Record `v` into histogram `name`.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self.hists.get_mut(name) {
+            Some(h) => h.observe(v),
+            None => {
+                let mut h = Histogram::default();
+                h.observe(v);
+                self.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Fold `other` into `self`: counters add, gauges take `other`'s value
+    /// (right-biased last-write-wins), histograms merge bucket-wise.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            self.counter_add(k, *v);
+        }
+        for (k, v) in &other.gauges {
+            self.gauge_set(k, *v);
+        }
+        for (k, h) in &other.hists {
+            match self.hists.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.hists.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// Right-biased overwrite: every entry of `other` replaces any entry
+    /// of the same name here — counters and histograms included, unlike
+    /// [`Registry::merge`], which adds/folds.  Used to stamp a final,
+    /// exact summary (e.g. `GenServerMetrics::to_registry`) over the live
+    /// approximations collected under the same canonical names.
+    pub fn replace_from(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            self.counters.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            self.hists.insert(k.clone(), h.clone());
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Iterate counters in key order (the exporter's traversal).
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate gauges in key order.
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate histograms in key order.
+    pub fn hists(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.hists.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+}
+
+fn global() -> &'static Mutex<Registry> {
+    static GLOBAL: std::sync::OnceLock<Mutex<Registry>> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+fn lock_global() -> std::sync::MutexGuard<'static, Registry> {
+    match global().lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    }
+}
+
+/// Per-thread buffered registry; folds into the global one on thread exit.
+struct LocalReg {
+    reg: Registry,
+}
+
+impl Drop for LocalReg {
+    fn drop(&mut self) {
+        if !self.reg.is_empty() {
+            lock_global().merge(&self.reg);
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalReg> = RefCell::new(LocalReg { reg: Registry::default() });
+}
+
+/// Hot-path counter bump (buffers in the thread-local registry).  One
+/// relaxed atomic load when recording is disabled.
+#[inline]
+pub fn counter_add(name: &str, v: u64) {
+    if !super::enabled() {
+        return;
+    }
+    LOCAL.with(|l| l.borrow_mut().reg.counter_add(name, v));
+}
+
+/// Hot-path histogram observation (thread-local buffer).
+#[inline]
+pub fn observe(name: &str, v: f64) {
+    if !super::enabled() {
+        return;
+    }
+    LOCAL.with(|l| l.borrow_mut().reg.observe(name, v));
+}
+
+/// Gauge write — straight to the global registry (low-frequency;
+/// last-write-wins needs one authoritative copy).
+#[inline]
+pub fn gauge_set(name: &str, v: f64) {
+    if !super::enabled() {
+        return;
+    }
+    lock_global().gauge_set(name, v);
+}
+
+/// Fold the calling thread's buffer into the global registry and return a
+/// copy of the global state.  Buffers of other live threads fold in when
+/// those threads exit (scoped workers already have by the time their
+/// fan-out returns).
+pub fn snapshot() -> Registry {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if !l.reg.is_empty() {
+            let drained = std::mem::take(&mut l.reg);
+            lock_global().merge(&drained);
+        }
+    });
+    lock_global().clone()
+}
+
+/// Copy of the global registry WITHOUT touching any thread-local buffer —
+/// safe to call from the `/metrics` endpoint thread.
+pub fn global_snapshot() -> Registry {
+    lock_global().clone()
+}
+
+/// Drop the calling thread's buffer and the global registry.
+pub fn clear() {
+    LOCAL.with(|l| l.borrow_mut().reg = Registry::default());
+    *lock_global() = Registry::default();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn obs_histogram_quantiles_and_stats() {
+        let mut h = Histogram::default();
+        for i in 1..=100u32 {
+            h.observe(i as f64 / 1000.0); // 1ms..100ms
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-12);
+        let s = h.stats();
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 0.001);
+        assert_eq!(s.max, 0.1);
+        // Bucket-resolution percentiles are upper bounds within a 2x
+        // bracket of the exact value, clamped to [min, max].
+        assert!(s.p50 >= 0.050 && s.p50 <= 0.1, "p50 {}", s.p50);
+        assert!(s.p99 >= 0.099 && s.p99 <= 0.1, "p99 {}", s.p99);
+        assert!(h.quantile(0.0) >= h.min());
+        // Non-finite and non-positive observations are safe.
+        h.observe(f64::NAN);
+        h.observe(0.0);
+        assert_eq!(h.count(), 101);
+    }
+
+    impl Histogram {
+        fn min(&self) -> f64 {
+            self.min
+        }
+    }
+
+    #[test]
+    fn obs_histogram_cumulative_buckets_are_monotone() {
+        let mut h = Histogram::default();
+        for v in [0.5, 1.0, 2.0, 2.0, 1000.0] {
+            h.observe(v);
+        }
+        let buckets = h.cumulative_buckets();
+        assert!(!buckets.is_empty());
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0, "bounds ascend");
+            assert!(w[0].1 <= w[1].1, "counts are cumulative");
+        }
+        assert_eq!(buckets.last().unwrap().1, 5);
+    }
+
+    fn random_registry(rng: &mut Rng) -> Registry {
+        let mut r = Registry::new();
+        let names = ["kernel.gemm.flops", "serve.steps", "serve.shed"];
+        for _ in 0..rng.below(6) {
+            r.counter_add(names[rng.below(names.len())], rng.below(1000) as u64);
+        }
+        for _ in 0..rng.below(4) {
+            r.gauge_set(
+                ["serve.pool.occupancy", "serve.queue.depth"][rng.below(2)],
+                rng.below(100) as f64 / 4.0,
+            );
+        }
+        for _ in 0..rng.below(12) {
+            // Exactly-representable values (k/256 with k < 2^20) keep the
+            // f64 sums exact, so merge order cannot perturb them and the
+            // associativity check below is an exact equality.
+            r.observe(
+                ["serve.latency_seconds", "serve.step_seconds"][rng.below(2)],
+                rng.below(1 << 20) as f64 / 256.0,
+            );
+        }
+        r
+    }
+
+    #[test]
+    fn obs_registry_merge_is_associative_property() {
+        let mut rng = Rng::new(0x0B5_0B5);
+        for _ in 0..200 {
+            let a = random_registry(&mut rng);
+            let b = random_registry(&mut rng);
+            let c = random_registry(&mut rng);
+            // (a ⊕ b) ⊕ c
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            // a ⊕ (b ⊕ c)
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_eq!(left, right, "merge must be associative");
+        }
+        // Identity: merging an empty registry changes nothing.
+        let a = random_registry(&mut rng);
+        let mut withid = a.clone();
+        withid.merge(&Registry::new());
+        assert_eq!(withid, a);
+    }
+
+    #[test]
+    fn obs_registry_thread_buffers_fold_into_snapshot() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        clear();
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                scope.spawn(|| {
+                    counter_add("kernel.gemm.flops", 100);
+                    observe("serve.step_seconds", 0.25);
+                });
+            }
+        });
+        counter_add("kernel.gemm.flops", 1);
+        gauge_set("serve.pool.occupancy", 0.5);
+        crate::obs::set_enabled(false);
+        let snap = snapshot();
+        clear();
+        assert_eq!(snap.counter("kernel.gemm.flops"), 301);
+        assert_eq!(snap.gauge("serve.pool.occupancy"), Some(0.5));
+        assert_eq!(snap.hist("serve.step_seconds").unwrap().count(), 3);
+    }
+
+    #[test]
+    fn obs_registry_updates_are_noops_when_disabled() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(false);
+        clear();
+        counter_add("kernel.gemm.flops", 7);
+        gauge_set("serve.pool.occupancy", 0.9);
+        observe("serve.latency_seconds", 1.0);
+        assert!(snapshot().is_empty());
+    }
+}

@@ -1,0 +1,470 @@
+//! Span recording: per-thread rings, parent linkage, global collection.
+//!
+//! Every thread that records owns a private ring of finished events —
+//! pushing is lock-free (a `thread_local` `RefCell`, no atomics beyond the
+//! [`super::enabled`] gate and the span-id counter).  When a thread exits
+//! (scoped workers join at the end of their fan-out) its ring folds into
+//! the global sink under one short lock; [`snapshot_events`] folds the
+//! calling thread's ring the same way and returns the merged, time-sorted
+//! event list.
+//!
+//! Parent linkage: each thread keeps a stack of open span ids — a new span
+//! parents under the top of the stack.  Crossing a scoped spawn, the
+//! spawner captures [`current_context`] and the worker installs it with
+//! [`adopt_context`]; an adopted parent seeds the worker's otherwise-empty
+//! stack, so `engine.decompose_layer` spans on worker threads still nest
+//! under the `engine.compress_model` span of the caller.
+//!
+//! Rings are bounded ([`THREAD_RING_CAP`] events per thread, overwriting
+//! the oldest; [`GLOBAL_CAP`] events in the merged sink, dropping beyond)
+//! so tracing a long serve run holds bounded memory; [`dropped_events`]
+//! counts what was lost.
+
+use crate::util::timer::monotonic_us;
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Per-thread finished-event ring capacity (oldest overwritten beyond it).
+pub const THREAD_RING_CAP: usize = 1 << 16;
+
+/// Global merged-sink capacity (events beyond it are counted, not kept).
+pub const GLOBAL_CAP: usize = 1 << 20;
+
+/// One typed span/event argument (kept out of `String` unless it is one,
+/// so recording an integer arg never allocates).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+/// One finished trace event: a span (`dur_us` wall-clock) or an instant
+/// marker (`instant == true`, `dur_us == 0`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Dotted name; the prefix before the first `.` is the export category
+    /// (`engine.decompose_layer` → cat `engine`).
+    pub name: &'static str,
+    /// Start, microseconds since the process epoch.
+    pub ts_us: u64,
+    /// Span duration in microseconds (0 for instants).
+    pub dur_us: u64,
+    /// Instant marker instead of a duration span?
+    pub instant: bool,
+    /// Small per-process thread id (assigned on a thread's first record).
+    pub tid: u64,
+    /// Process-unique span id (instants get one too).
+    pub id: u64,
+    /// Id of the enclosing span, possibly on another thread; 0 = root.
+    pub parent: u64,
+    /// Typed arguments (dims, flops, request ids, …).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+impl TraceEvent {
+    /// Export category: the name's first dotted segment.
+    pub fn cat(&self) -> &'static str {
+        match self.name.split_once('.') {
+            Some((cat, _)) => cat,
+            None => "misc",
+        }
+    }
+
+    /// Look up an integer argument by key.
+    pub fn arg_u64(&self, key: &str) -> Option<u64> {
+        self.args.iter().find_map(|(k, v)| match v {
+            ArgValue::U64(n) if *k == key => Some(*n),
+            _ => None,
+        })
+    }
+
+    /// Look up a string argument by key.
+    pub fn arg_str(&self, key: &str) -> Option<&str> {
+        self.args.iter().find_map(|(k, v)| match v {
+            ArgValue::Str(s) if *k == key => Some(s.as_str()),
+            _ => None,
+        })
+    }
+}
+
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+struct GlobalSink {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+fn global() -> &'static Mutex<GlobalSink> {
+    static GLOBAL: std::sync::OnceLock<Mutex<GlobalSink>> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(GlobalSink { events: Vec::new(), dropped: 0 }))
+}
+
+/// The calling thread's ring.  Dropping it (thread exit) folds the ring
+/// into the global sink, so scoped workers publish automatically.
+struct ThreadSink {
+    tid: u64,
+    ring: Vec<TraceEvent>,
+    pushed: usize,
+    dropped: u64,
+}
+
+impl ThreadSink {
+    fn new() -> ThreadSink {
+        ThreadSink {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            ring: Vec::new(),
+            pushed: 0,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.ring.len() < THREAD_RING_CAP {
+            self.ring.push(ev);
+        } else {
+            self.ring[self.pushed % THREAD_RING_CAP] = ev;
+            self.dropped += 1;
+        }
+        self.pushed += 1;
+    }
+
+    fn flush_into_global(&mut self) {
+        if self.ring.is_empty() && self.dropped == 0 {
+            return;
+        }
+        let mut g = match global().lock() {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        };
+        g.dropped += self.dropped;
+        self.dropped = 0;
+        for ev in self.ring.drain(..) {
+            if g.events.len() < GLOBAL_CAP {
+                g.events.push(ev);
+            } else {
+                g.dropped += 1;
+            }
+        }
+        self.pushed = 0;
+    }
+}
+
+impl Drop for ThreadSink {
+    fn drop(&mut self) {
+        self.flush_into_global();
+    }
+}
+
+thread_local! {
+    static SINK: RefCell<ThreadSink> = RefCell::new(ThreadSink::new());
+    /// Ids of this thread's open spans, innermost last.
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    /// Parent adopted from another thread ([`adopt_context`]); seeds the
+    /// stack-empty case so cross-thread children still nest.
+    static ADOPTED: Cell<u64> = const { Cell::new(0) };
+}
+
+fn current_parent() -> u64 {
+    STACK
+        .with(|s| s.borrow().last().copied())
+        .unwrap_or_else(|| ADOPTED.with(|a| a.get()))
+}
+
+/// A recording guard: created by [`span`] / [`instant`], records its event
+/// on drop.  When recording is disabled the guard is an inert `None` and
+/// every method is a no-op on an already-taken branch.
+pub struct Span {
+    rec: Option<SpanRec>,
+}
+
+struct SpanRec {
+    name: &'static str,
+    id: u64,
+    parent: u64,
+    ts_us: u64,
+    instant: bool,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+impl Span {
+    /// Is this guard actually recording?  Gate argument formatting on it
+    /// so the disabled path never allocates.
+    #[inline(always)]
+    pub fn is_recording(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// This span's id (0 when not recording) — what children reference.
+    pub fn id(&self) -> u64 {
+        self.rec.as_ref().map_or(0, |r| r.id)
+    }
+
+    /// Attach an integer argument.
+    #[inline]
+    pub fn arg_u64(&mut self, key: &'static str, v: u64) -> &mut Span {
+        if let Some(r) = &mut self.rec {
+            r.args.push((key, ArgValue::U64(v)));
+        }
+        self
+    }
+
+    /// Attach a float argument.
+    #[inline]
+    pub fn arg_f64(&mut self, key: &'static str, v: f64) -> &mut Span {
+        if let Some(r) = &mut self.rec {
+            r.args.push((key, ArgValue::F64(v)));
+        }
+        self
+    }
+
+    /// Attach a string argument (allocates only while recording).
+    #[inline]
+    pub fn arg_str(&mut self, key: &'static str, v: &str) -> &mut Span {
+        if let Some(r) = &mut self.rec {
+            r.args.push((key, ArgValue::Str(v.to_string())));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(rec) = self.rec.take() else { return };
+        if !rec.instant {
+            STACK.with(|s| {
+                let mut s = s.borrow_mut();
+                // Well-formed guards drop LIFO; a mem::forget'ed sibling
+                // would desync the top, so remove by id to stay robust.
+                if let Some(pos) = s.iter().rposition(|&id| id == rec.id) {
+                    s.remove(pos);
+                }
+            });
+        }
+        let now = monotonic_us();
+        let ev = TraceEvent {
+            name: rec.name,
+            ts_us: rec.ts_us,
+            dur_us: if rec.instant { 0 } else { now.saturating_sub(rec.ts_us) },
+            instant: rec.instant,
+            tid: SINK.with(|s| s.borrow().tid),
+            id: rec.id,
+            parent: rec.parent,
+            args: rec.args,
+        };
+        SINK.with(|s| s.borrow_mut().push(ev));
+    }
+}
+
+fn open(name: &'static str, instant: bool) -> Span {
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = current_parent();
+    if !instant {
+        STACK.with(|s| s.borrow_mut().push(id));
+    }
+    Span {
+        rec: Some(SpanRec { name, id, parent, ts_us: monotonic_us(), instant, args: Vec::new() }),
+    }
+}
+
+/// Open a span named `name` (dotted; prefix = export category).  Disabled
+/// recording costs one relaxed atomic load and returns an inert guard.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !super::enabled() {
+        return Span { rec: None };
+    }
+    open(name, false)
+}
+
+/// Record an instant event (request lifecycle markers and the like).  The
+/// guard records on drop, so attach args before letting it go.
+#[inline]
+pub fn instant(name: &'static str) -> Span {
+    if !super::enabled() {
+        return Span { rec: None };
+    }
+    open(name, true)
+}
+
+/// A capture of "what span is the caller inside" — hand it to a spawned
+/// worker so its spans parent correctly across the thread boundary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Context {
+    parent: u64,
+}
+
+/// Capture the calling thread's innermost open span (or its own adopted
+/// parent) for propagation into a spawn.
+#[inline]
+pub fn current_context() -> Context {
+    if !super::enabled() {
+        return Context { parent: 0 };
+    }
+    Context { parent: current_parent() }
+}
+
+/// Guard restoring the previously adopted parent on drop.
+pub struct ContextGuard {
+    prev: u64,
+}
+
+/// Install `ctx` as the calling thread's fallback parent for the guard's
+/// lifetime.  Cheap enough to run unconditionally at spawn sites (one
+/// thread-local cell swap — no atomics, no allocation).
+#[inline]
+pub fn adopt_context(ctx: Context) -> ContextGuard {
+    let prev = ADOPTED.with(|a| a.replace(ctx.parent));
+    ContextGuard { prev }
+}
+
+impl Drop for ContextGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        ADOPTED.with(|a| a.set(prev));
+    }
+}
+
+/// Fold the calling thread's ring into the global sink and return every
+/// collected event, sorted by `(ts_us, id)`.  Events recorded by OTHER
+/// still-running threads surface only after those threads exit.
+pub fn snapshot_events() -> Vec<TraceEvent> {
+    SINK.with(|s| s.borrow_mut().flush_into_global());
+    let mut g = match global().lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    };
+    let mut events = g.events.clone();
+    drop(g);
+    events.sort_by_key(|e| (e.ts_us, e.id));
+    events
+}
+
+/// Events lost to ring/sink caps so far (flushed threads only).
+pub fn dropped_events() -> u64 {
+    match global().lock() {
+        Ok(g) => g.dropped,
+        Err(e) => e.into_inner().dropped,
+    }
+}
+
+/// Drop the calling thread's ring and the global sink (see
+/// [`super::reset`] for the caveats about other live threads).
+pub fn clear() {
+    SINK.with(|s| {
+        let mut s = s.borrow_mut();
+        s.ring.clear();
+        s.pushed = 0;
+        s.dropped = 0;
+    });
+    let mut g = match global().lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    };
+    g.events.clear();
+    g.dropped = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_span_records_nesting_and_args() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        clear();
+        {
+            let mut outer = crate::obs::span("engine.compress_model");
+            outer.arg_str("model", "tiny");
+            {
+                let mut inner = crate::obs::span("kernel.gemm");
+                inner.arg_u64("m", 8).arg_u64("k", 4).arg_u64("n", 8);
+            }
+            let mut mark = crate::obs::instant("serve.request.queued");
+            mark.arg_u64("req", 7);
+        }
+        crate::obs::set_enabled(false);
+        let evs = snapshot_events();
+        clear();
+        assert_eq!(evs.len(), 3);
+        let outer = evs.iter().find(|e| e.name == "engine.compress_model").unwrap();
+        let inner = evs.iter().find(|e| e.name == "kernel.gemm").unwrap();
+        let mark = evs.iter().find(|e| e.name == "serve.request.queued").unwrap();
+        assert_eq!(outer.parent, 0);
+        assert_eq!(inner.parent, outer.id, "inner span must parent under the open outer");
+        assert_eq!(mark.parent, outer.id, "instants parent under the open span too");
+        assert!(mark.instant && mark.dur_us == 0);
+        assert_eq!(outer.cat(), "engine");
+        assert_eq!(inner.cat(), "kernel");
+        assert_eq!(inner.arg_u64("m"), Some(8));
+        assert_eq!(outer.arg_str("model"), Some("tiny"));
+        // The child's window nests inside the parent's.
+        assert!(inner.ts_us >= outer.ts_us);
+        assert!(inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us);
+    }
+
+    #[test]
+    fn obs_context_carries_parent_across_threads() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        clear();
+        let outer_id;
+        {
+            let outer = crate::obs::span("engine.outer");
+            outer_id = outer.id();
+            let ctx = current_context();
+            std::thread::scope(|scope| {
+                scope.spawn(move || {
+                    let _adopt = adopt_context(ctx);
+                    let _child = crate::obs::span("engine.worker_job");
+                });
+            });
+        }
+        crate::obs::set_enabled(false);
+        let evs = snapshot_events();
+        clear();
+        let child = evs.iter().find(|e| e.name == "engine.worker_job").unwrap();
+        assert_eq!(child.parent, outer_id, "cross-thread child must adopt the spawner's span");
+        let outer = evs.iter().find(|e| e.name == "engine.outer").unwrap();
+        assert_ne!(child.tid, outer.tid, "the worker recorded on its own ring");
+    }
+
+    #[test]
+    fn obs_thread_ring_is_bounded() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        clear();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                for _ in 0..THREAD_RING_CAP + 10 {
+                    let _sp = crate::obs::instant("serve.tick");
+                }
+            });
+        });
+        crate::obs::set_enabled(false);
+        let evs = snapshot_events();
+        let dropped = dropped_events();
+        clear();
+        let ticks = evs.iter().filter(|e| e.name == "serve.tick").count();
+        assert_eq!(ticks, THREAD_RING_CAP, "ring keeps exactly its capacity");
+        assert!(dropped >= 10, "overwritten events must be counted, got {dropped}");
+    }
+
+    #[test]
+    fn obs_disabled_spans_record_nothing() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(false);
+        clear();
+        {
+            let mut sp = crate::obs::span("kernel.gemm");
+            assert!(!sp.is_recording());
+            assert_eq!(sp.id(), 0);
+            sp.arg_u64("m", 3);
+            let _mark = crate::obs::instant("serve.request.queued");
+        }
+        assert!(snapshot_events().is_empty());
+    }
+}

@@ -325,6 +325,36 @@ fn send_done(
         metrics.record_finish(latency, ttft);
     }
     metrics.record_terminal(req.tenant, finish, generated);
+    if crate::obs::enabled() {
+        crate::obs::instant("serve.request.done")
+            .arg_u64("req", req.id)
+            .arg_str("reason", finish.label())
+            .arg_u64("generated", generated as u64);
+        let key = match finish {
+            FinishReason::Completed => "serve.requests.completed",
+            FinishReason::Cancelled => "serve.requests.cancelled",
+            FinishReason::Rejected => "serve.requests.rejected",
+            FinishReason::Shed => "serve.requests.shed",
+            FinishReason::DeadlineExceeded => "serve.requests.deadline_exceeded",
+            FinishReason::Faulted => "serve.requests.faulted",
+        };
+        crate::obs::metrics::counter_add(key, 1);
+        crate::obs::metrics::counter_add("serve.tokens.generated", generated as u64);
+        if served {
+            crate::obs::metrics::observe("serve.latency_seconds", latency);
+            crate::obs::metrics::observe("serve.ttft_seconds", ttft);
+        }
+    }
+    if finish != FinishReason::Completed {
+        crate::debugln!(
+            "serve",
+            "req {} retired: {} after {} tokens ({:.1} ms)",
+            req.id,
+            finish.label(),
+            generated,
+            latency * 1e3
+        );
+    }
     let _ = req.stream.send(StreamEvent::Done(DoneStats {
         id: req.id,
         generated,
@@ -332,6 +362,16 @@ fn send_done(
         latency_s: latency,
         ttft_s: ttft,
     }));
+}
+
+/// Trace/metric/log hook for a preemption decision (the victim's pages
+/// were just released; it re-enters the preempted queue after the step).
+fn note_preempted(a: &Active) {
+    if crate::obs::enabled() {
+        crate::obs::instant("serve.request.preempted").arg_u64("req", a.req.id);
+        crate::obs::metrics::counter_add("serve.sched.preemptions", 1);
+    }
+    crate::debugln!("serve", "req {} preempted (pool pressure)", a.req.id);
 }
 
 /// Give `a` a pool sequence: fork over the trie's longest registered
@@ -517,6 +557,12 @@ pub fn serve_generation_kv(
                     }
                 }
             }
+            if crate::obs::enabled() {
+                crate::obs::instant("serve.request.queued")
+                    .arg_u64("req", req.id)
+                    .arg_u64("tenant", req.tenant as u64)
+                    .arg_u64("prompt", req.prompt.len() as u64);
+            }
             queue.push_back(Queued { req, arrival: arrivals, deadline_at });
             arrivals += 1;
             metrics.peak_queue = metrics.peak_queue.max(queue.len());
@@ -568,6 +614,9 @@ pub fn serve_generation_kv(
             }
             let Some(mut a) = preempted.pop_front() else { break };
             attach_seq(&mut a, &mut pool, &mut trie, gen.prefix_share);
+            if crate::obs::enabled() {
+                crate::obs::instant("serve.request.resumed").arg_u64("req", a.req.id);
+            }
             active.push(a);
         }
         // ---- admit queued requests, most urgent first ----
@@ -592,6 +641,11 @@ pub fn serve_generation_kv(
                 trie_chunks: 0,
             };
             attach_seq(&mut a, &mut pool, &mut trie, gen.prefix_share);
+            if crate::obs::enabled() {
+                crate::obs::instant("serve.request.admitted")
+                    .arg_u64("req", a.req.id)
+                    .arg_u64("shared_pages", a.trie_chunks as u64);
+            }
             active.push(a);
         }
         if active.is_empty() {
@@ -605,6 +659,10 @@ pub fn serve_generation_kv(
         }
         // ---- plan one step: QoS order, chunked prefill, fault-in ----
         let step_no = metrics.steps as u64;
+        let mut plan_sp = crate::obs::span("serve.plan");
+        if plan_sp.is_recording() {
+            plan_sp.arg_u64("step", step_no).arg_u64("batch", active.len() as u64);
+        }
         let mut order: Vec<usize> = (0..active.len()).collect();
         order.sort_by_key(|&i| active[i].key());
         let mut rank: Vec<usize> = vec![0; active.len()];
@@ -665,6 +723,7 @@ pub fn serve_generation_kv(
                             pool.release_seq(active[v].seq);
                             evicted.push(v);
                             metrics.preemptions += 1;
+                            note_preempted(&active[v]);
                         }
                     }
                     continue;
@@ -690,6 +749,7 @@ pub fn serve_generation_kv(
                         pool.release_seq(active[v].seq);
                         evicted.push(v);
                         metrics.preemptions += 1;
+                        note_preempted(&active[v]);
                     }
                     None => end = pos, // nothing left to shed: feed a short
                                        // (possibly empty) chunk this step
@@ -715,6 +775,13 @@ pub fn serve_generation_kv(
                 groups.push((i, row_start..rows.len()));
             }
         }
+        if plan_sp.is_recording() {
+            plan_sp
+                .arg_u64("rows", rows.len() as u64)
+                .arg_u64("prefill_rows", rows.iter().filter(|r| r.write_kv).count() as u64)
+                .arg_u64("evictions", evicted.len() as u64);
+        }
+        drop(plan_sp);
         // ---- one batched decode step, guarded by the watchdog ----
         let vocab = cfg.vocab;
         let injected: Vec<bool> = {
@@ -729,6 +796,13 @@ pub fn serve_generation_kv(
         let inject_any = injected.iter().any(|&b| b);
         let mut fault_flags: Vec<bool> = vec![false; active.len()];
         let step_t = Timer::start();
+        let mut decode_sp = crate::obs::span("serve.decode");
+        if decode_sp.is_recording() {
+            decode_sp
+                .arg_u64("step", step_no)
+                .arg_u64("rows", rows.len() as u64)
+                .arg_u64("workers", step_workers as u64);
+        }
         // &mut KvPool is not UnwindSafe by default; the wrap is sound
         // because a failed attempt leaves the pool in a re-executable
         // state — committed lengths are untouched (the step calls
@@ -768,17 +842,30 @@ pub fn serve_generation_kv(
                         Ok(Ok(l)) => {
                             merged[range.start * vocab..range.end * vocab].copy_from_slice(&l);
                         }
-                        _ => fault_flags[*i] = true,
+                        _ => {
+                            fault_flags[*i] = true;
+                            crate::warnln!(
+                                "serve",
+                                "watchdog: req {} faulted at step {step_no}; retiring it alone",
+                                active[*i].req.id
+                            );
+                        }
                     }
                 }
                 merged
             }
         };
-        metrics.record_step(
-            step_t.elapsed_s(),
-            (active.len() - evicted.len()) as f64,
-            pool.pages_in_use() as f64 / pool.pages() as f64,
-        );
+        drop(decode_sp);
+        let step_s = step_t.elapsed_s();
+        let occupancy = pool.pages_in_use() as f64 / pool.pages() as f64;
+        metrics.record_step(step_s, (active.len() - evicted.len()) as f64, occupancy);
+        if crate::obs::enabled() {
+            crate::obs::metrics::counter_add("serve.steps", 1);
+            crate::obs::metrics::observe("serve.step_seconds", step_s);
+            crate::obs::metrics::gauge_set("serve.pool.occupancy", occupancy);
+            crate::obs::metrics::gauge_set("serve.queue.depth", queue.len() as f64);
+            crate::obs::metrics::gauge_set("serve.trie.entries", trie.entries() as f64);
+        }
         // ---- sample / stream for every sequence whose logits we read ----
         let mut fate: Vec<Fate> = (0..active.len()).map(|_| Fate::Continue).collect();
         for &v in &evicted {

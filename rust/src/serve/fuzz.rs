@@ -741,6 +741,38 @@ fn serve_chaos_grid_full() {
     }
 }
 
+/// Observability on/off bit-identity: a slice of the same fuzz grid
+/// (which pins every served stream to the sequential oracle) must pass
+/// with tracing and metrics RECORDING — instrumentation wraps timing and
+/// metadata only and can never reorder a float op.  Also asserts the run
+/// actually recorded kernel- and serve-layer spans, so the pin cannot rot
+/// into a no-op if span sites move.
+#[test]
+fn serve_obs_on_off_bit_identity_quick() {
+    let _guard = crate::obs::test_lock();
+    crate::obs::reset();
+    crate::obs::set_enabled(true);
+    let result = (0..4u64).try_for_each(|seed| {
+        let (ps, w) = combo(seed);
+        let ratio = [None, Some(0.5)][(seed as usize) % 2];
+        run_case(seed, ps, w, ratio).map_err(|msg| {
+            format!(
+                "obs-enabled serve fuzz failed: seed={seed} page_size={ps} \
+                 workers={w} kv_ratio={ratio:?}: {msg}"
+            )
+        })
+    });
+    let events = crate::obs::trace::snapshot_events();
+    let cats: std::collections::BTreeSet<&str> = events.iter().map(|e| e.cat()).collect();
+    crate::obs::set_enabled(false);
+    crate::obs::reset();
+    if let Err(msg) = result {
+        panic!("{msg}");
+    }
+    assert!(cats.contains("kernel"), "expected kernel spans, got {cats:?}");
+    assert!(cats.contains("serve"), "expected serve spans, got {cats:?}");
+}
+
 /// Every seed against every combo — 192 served scenarios.  Slow by
 /// design; run explicitly with `cargo test -q serve_fuzz -- --ignored`.
 #[test]

@@ -297,6 +297,10 @@ pub fn decode_step_batched_kv(
         // the K rows at their absolute positions — row-independent GEMMs,
         // so the reconstructed bits match the sequential oracle's
         // full-history reconstruction row for row.
+        let mut att_sp = crate::obs::span("serve.attention");
+        if att_sp.is_recording() {
+            att_sp.arg_u64("layer", i as u64).arg_u64("rows", b as u64);
+        }
         let mut att = vec![0.0f32; b * d];
         for (r, row) in rows.iter().enumerate() {
             let t_now = row.pos + 1;
@@ -339,6 +343,7 @@ pub fn decode_step_batched_kv(
             };
             attend_row(q_row, kh, vh, heads, hd, scale, lo - base, t_now - base, att_row);
         }
+        drop(att_sp);
         let o = lin(&format!("blocks.{i}.attn.wo"), &att, d)?;
         for (xv, ov) in x.iter_mut().zip(&o) {
             *xv += ov;

@@ -40,6 +40,21 @@ pub enum FinishReason {
     Faulted,
 }
 
+impl FinishReason {
+    /// Stable lower-snake label used in trace events, metric names, and
+    /// log lines (`serve.requests.<label>` counters).
+    pub fn label(self) -> &'static str {
+        match self {
+            FinishReason::Completed => "completed",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Rejected => "rejected",
+            FinishReason::Shed => "shed",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
+            FinishReason::Faulted => "faulted",
+        }
+    }
+}
+
 /// Final per-request summary, sent after the last token.
 #[derive(Clone, Debug)]
 pub struct DoneStats {

@@ -1,6 +1,18 @@
-//! Leveled stderr logging with a global verbosity switch.
+//! Leveled stderr logging with monotonic-elapsed timestamps and per-tag
+//! filtering.
+//!
+//! Every line carries seconds since the process epoch (the same
+//! [`crate::util::timer`] monotonic clock the tracer stamps spans with),
+//! so interleaved subsystem logs line up with `--trace-out` timelines.
+//! Verbosity is the global level ([`set_level`]) refined by the
+//! `NSVD_LOG` environment variable — a comma list of `tag=level` entries
+//! plus an optional bare default, e.g. `NSVD_LOG=debug` or
+//! `NSVD_LOG=serve=debug,gemm=warn`.  A tag entry matches every tag it
+//! prefixes; the longest match wins.
 
+use crate::util::timer;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Log levels, ordered by verbosity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -13,12 +25,73 @@ pub enum Level {
 
 static VERBOSITY: AtomicU8 = AtomicU8::new(2); // default: Info
 
-/// Set the global verbosity (messages above this level are dropped).
+fn parse_level(s: &str) -> Option<Level> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "error" | "e" => Some(Level::Error),
+        "warn" | "warning" | "w" => Some(Level::Warn),
+        "info" | "i" => Some(Level::Info),
+        "debug" | "d" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+/// A parsed `NSVD_LOG` filter: optional default level plus per-tag
+/// overrides (checked by prefix, longest match wins).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Filter {
+    pub default: Option<Level>,
+    pub tags: Vec<(String, Level)>,
+}
+
+/// Parse a filter spec: comma-separated `tag=level` entries, bare entries
+/// set the default level, malformed entries are ignored.
+pub fn parse_spec(spec: &str) -> Filter {
+    let mut f = Filter::default();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('=') {
+            Some((tag, lvl)) => {
+                if let Some(l) = parse_level(lvl) {
+                    f.tags.push((tag.trim().to_string(), l));
+                }
+            }
+            None => {
+                if let Some(l) = parse_level(part) {
+                    f.default = Some(l);
+                }
+            }
+        }
+    }
+    f
+}
+
+fn filter() -> &'static Mutex<Filter> {
+    static FILTER: OnceLock<Mutex<Filter>> = OnceLock::new();
+    FILTER.get_or_init(|| {
+        let spec = std::env::var("NSVD_LOG").unwrap_or_default();
+        Mutex::new(parse_spec(&spec))
+    })
+}
+
+/// Replace the active tag filter (CLI overrides and tests; the initial
+/// filter comes from `NSVD_LOG`).
+pub fn set_filter(f: Filter) {
+    match filter().lock() {
+        Ok(mut g) => *g = f,
+        Err(e) => *e.into_inner() = f,
+    }
+}
+
+/// Set the global verbosity (messages above this level are dropped unless
+/// an `NSVD_LOG` entry raises their tag).
 pub fn set_level(level: Level) {
     VERBOSITY.store(level as u8, Ordering::Relaxed);
 }
 
-/// Current verbosity level.
+/// Current global verbosity level.
 pub fn level() -> Level {
     match VERBOSITY.load(Ordering::Relaxed) {
         0 => Level::Error,
@@ -28,17 +101,35 @@ pub fn level() -> Level {
     }
 }
 
-/// Emit a message at `level` (module-qualified tag recommended).
-pub fn log(lvl: Level, tag: &str, msg: &str) {
-    if lvl <= level() {
-        let prefix = match lvl {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-        };
-        eprintln!("[{prefix}] {tag}: {msg}");
+/// Effective verbosity for `tag`: the longest matching filter entry, else
+/// the filter's default, else the global level.
+pub fn tag_level(tag: &str) -> Level {
+    let f = match filter().lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    };
+    let mut best: Option<(usize, Level)> = None;
+    for (t, l) in &f.tags {
+        if tag.starts_with(t.as_str()) && best.map_or(true, |(n, _)| t.len() >= n) {
+            best = Some((t.len(), *l));
+        }
     }
+    best.map(|(_, l)| l).or(f.default).unwrap_or_else(level)
+}
+
+/// Emit a message at `lvl` (module-qualified tag recommended).  Lines
+/// carry monotonic seconds since the process epoch.
+pub fn log(lvl: Level, tag: &str, msg: &str) {
+    if lvl > tag_level(tag) {
+        return;
+    }
+    let prefix = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    eprintln!("[{:9.3}s {prefix}] {tag}: {msg}", timer::monotonic_s());
 }
 
 #[macro_export]
@@ -72,5 +163,32 @@ mod tests {
         assert_eq!(level(), Level::Debug);
         set_level(Level::Info);
         assert_eq!(level(), Level::Info);
+    }
+
+    #[test]
+    fn parse_spec_tags_default_and_garbage() {
+        let f = parse_spec("serve=debug, gemm=warn ,warn,nonsense,oops=loud");
+        assert_eq!(f.default, Some(Level::Warn));
+        assert_eq!(
+            f.tags,
+            vec![("serve".to_string(), Level::Debug), ("gemm".to_string(), Level::Warn)]
+        );
+        assert_eq!(parse_spec(""), Filter::default());
+    }
+
+    #[test]
+    fn tag_filter_overrides_resolve_by_longest_prefix() {
+        // One test mutates the global filter end to end (parallel tests
+        // would race a split version of this).
+        set_filter(parse_spec("serve=debug,serve.step=error,gemm=warn"));
+        assert_eq!(tag_level("serve"), Level::Debug);
+        assert_eq!(tag_level("serve.batcher"), Level::Debug);
+        assert_eq!(tag_level("serve.step"), Level::Error);
+        assert_eq!(tag_level("gemm"), Level::Warn);
+        // Unmatched tags fall back to the spec default, then the global.
+        set_filter(parse_spec("info,serve=debug"));
+        assert_eq!(tag_level("scheduler"), Level::Info);
+        set_filter(Filter::default());
+        assert_eq!(tag_level("scheduler"), level());
     }
 }

@@ -3,6 +3,11 @@
 //! The testbed is single-core, so these helpers degrade gracefully: with one
 //! hardware thread the chunked map runs inline with zero spawn overhead.  On
 //! multi-core machines the same API fans out over scoped threads.
+//!
+//! Every spawn site captures the caller's [`crate::obs`] trace context and
+//! adopts it on the worker, so spans recorded inside a fan-out nest under
+//! the span that was open at the call site — one cell swap per worker,
+//! whether or not recording is enabled.
 
 /// Number of worker threads to use for data-parallel sections.
 pub fn default_workers() -> usize {
@@ -87,10 +92,14 @@ where
         return;
     }
     let rows_per = rows.div_ceil(workers);
+    let ctx = crate::obs::current_context();
     std::thread::scope(|scope| {
         for chunk in data.chunks_mut(rows_per * width) {
             let f = &f;
-            scope.spawn(move || f(chunk));
+            scope.spawn(move || {
+                let _obs = crate::obs::adopt_context(ctx);
+                f(chunk)
+            });
         }
     });
 }
@@ -110,10 +119,12 @@ where
         return;
     }
     let chunk = n.div_ceil(workers);
+    let ctx = crate::obs::current_context();
     std::thread::scope(|scope| {
         for (ci, slice) in items.chunks_mut(chunk).enumerate() {
             let f = &f;
             scope.spawn(move || {
+                let _obs = crate::obs::adopt_context(ctx);
                 for (j, item) in slice.iter_mut().enumerate() {
                     f(ci * chunk + j, item);
                 }
@@ -135,12 +146,14 @@ where
     }
     let chunk = n.div_ceil(workers);
     let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let ctx = crate::obs::current_context();
     std::thread::scope(|scope| {
         for (ci, (in_chunk, out_chunk)) in
             items.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
         {
             let f = &f;
             scope.spawn(move || {
+                let _obs = crate::obs::adopt_context(ctx);
                 for (j, (t, slot)) in in_chunk.iter().zip(out_chunk.iter_mut()).enumerate() {
                     *slot = Some(f(ci * chunk + j, t));
                 }
@@ -170,9 +183,11 @@ where
     let next = std::sync::atomic::AtomicUsize::new(0);
     let done: std::sync::Mutex<Vec<(usize, U)>> =
         std::sync::Mutex::new(Vec::with_capacity(n));
+    let ctx = crate::obs::current_context();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
+                let _obs = crate::obs::adopt_context(ctx);
                 let mut local: Vec<(usize, U)> = Vec::new();
                 loop {
                     let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -218,12 +233,17 @@ impl WorkerPool {
         WorkerPool { sender: Some(tx), handles }
     }
 
-    /// Submit a job; it runs on some worker thread.
+    /// Submit a job; it runs on some worker thread (adopting the
+    /// submitter's trace context, so job spans nest under the caller).
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let ctx = crate::obs::current_context();
         self.sender
             .as_ref()
             .expect("pool already shut down")
-            .send(Box::new(job))
+            .send(Box::new(move || {
+                let _obs = crate::obs::adopt_context(ctx);
+                job()
+            }))
             .expect("worker pool channel closed");
     }
 

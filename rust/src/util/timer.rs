@@ -2,6 +2,25 @@
 
 use std::time::Instant;
 
+/// The process-wide monotonic epoch: the first call stamps `Instant::now()`
+/// and every later call returns the same instant.  [`crate::obs`] trace
+/// timestamps and [`crate::util::log`] message stamps both measure from it,
+/// so log lines and trace spans of one run share a time axis.
+pub fn epoch() -> Instant {
+    static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds elapsed since [`epoch`] (monotonic, starts near 0).
+pub fn monotonic_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Seconds elapsed since [`epoch`] (monotonic, starts near 0).
+pub fn monotonic_s() -> f64 {
+    epoch().elapsed().as_secs_f64()
+}
+
 /// A simple stopwatch.
 pub struct Timer {
     start: Instant,
@@ -102,6 +121,15 @@ mod tests {
         assert_eq!(s.mean, 3.0);
         assert_eq!(s.p99, 3.0);
         assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn monotonic_epoch_is_stable_and_advances() {
+        let a = monotonic_us();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = monotonic_us();
+        assert!(b > a, "monotonic clock went backwards ({a} -> {b})");
+        assert_eq!(epoch(), epoch(), "epoch must be stamped exactly once");
     }
 
     #[test]
